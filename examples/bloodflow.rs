@@ -1,0 +1,47 @@
+//! The distributed multiscale bloodflow run (paper §1.2.2, Fig 3): a 1-D
+//! arterial model and a 3-D solver — each on its own PJRT runtime —
+//! coupled through a real user-space Forwarder that injects the paper's
+//! 11 ms round trip, with and without `MPW_ISendRecv` latency hiding.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example bloodflow
+//! ```
+
+use mpwide::bloodflow::{run_coupled, CouplingConfig};
+
+fn main() -> anyhow::Result<()> {
+    let base = CouplingConfig { exchanges: 60, substeps: 12, substeps_1d: 24, ..Default::default() };
+    anyhow::ensure!(
+        base.artifacts_dir.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    println!(
+        "topology: 1-D (desktop) <-> forwarder (+{:.1} ms/hop) <-> 3-D (compute nodes)",
+        base.hop_delay.unwrap().as_secs_f64() * 1e3
+    );
+
+    println!("\n== with latency hiding (MPW_ISendRecv) ==");
+    let hidden = run_coupled(&base)?;
+    report(&hidden);
+
+    println!("\n== blocking exchanges (ablation) ==");
+    let blocking = run_coupled(&CouplingConfig { latency_hiding: false, ..base })?;
+    report(&blocking);
+
+    println!(
+        "\nlatency hiding cut the per-exchange overhead {:.1}x (paper: 11 ms RTT -> 6 ms overhead, 1.2% of runtime)",
+        blocking.overhead_per_exchange / hidden.overhead_per_exchange.max(1e-9)
+    );
+    Ok(())
+}
+
+fn report(r: &mpwide::bloodflow::CouplingReport) {
+    println!(
+        "{} exchanges in {:.2}s | overhead {:.2} ms/exchange | {:.2}% of runtime | outlet {:.4}",
+        r.exchanges,
+        r.total_seconds,
+        r.overhead_per_exchange * 1e3,
+        r.overhead_fraction * 100.0,
+        r.final_outlet
+    );
+}

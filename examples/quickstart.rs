@@ -1,0 +1,66 @@
+//! Quickstart: create a 4-stream MPWide path over loopback, exchange a
+//! message, synchronize, and print the measured throughput.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The same API works across real WANs: run the accepting side on one
+//! machine (`PathListener::bind(port, cfg)`) and point
+//! `Path::connect(host, port, cfg)` at it, with `cfg.nstreams >= 32` for
+//! long-distance links (paper §1.3.1).
+
+use std::time::Instant;
+
+use mpwide::mpwide::{Path, PathConfig, PathListener};
+use mpwide::util::{human_rate, Rng};
+
+fn main() -> anyhow::Result<()> {
+    // configuration: 4 parallel tcp streams, autotuner on (the default)
+    let cfg = PathConfig::with_streams(4);
+
+    // accepting side (in a thread here; normally another machine)
+    let mut listener = PathListener::bind(0, cfg.clone())?;
+    let port = listener.port();
+    let server = std::thread::spawn(move || -> anyhow::Result<Vec<u8>> {
+        let path = listener.accept_path()?; // runs autotune slave
+        let mut buf = vec![0u8; MSG];
+        path.recv(&mut buf)?; // sizes agreed upon by both ends, like MPI
+        path.send(&buf)?; // echo back
+        path.barrier()?; // MPW_Barrier
+        Ok(buf)
+    });
+
+    const MSG: usize = 16 << 20;
+
+    // connecting side — MPW_CreatePath
+    let path = Path::connect("127.0.0.1", port, cfg)?;
+    println!(
+        "path up: {} streams to {}, chunk {} bytes (autotuned)",
+        path.nstreams(),
+        path.peer(),
+        path.config().chunk_size
+    );
+
+    let mut msg = vec![0u8; MSG];
+    Rng::new(1).fill_bytes(&mut msg);
+    let mut back = vec![0u8; MSG];
+
+    let t0 = Instant::now();
+    path.send(&msg)?; // MPW_Send
+    path.recv(&mut back)?; // MPW_Recv
+    let dt = t0.elapsed().as_secs_f64();
+    path.barrier()?;
+
+    assert_eq!(msg, back, "echo mismatch");
+    println!(
+        "echoed {} MB in {:.3}s = {} per direction",
+        MSG >> 20,
+        dt,
+        human_rate(MSG as f64 / dt)
+    );
+
+    server.join().expect("server thread")?;
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT compile path: lower the L2 models to HLO **text** + a manifest.
+
+HLO text — NOT ``lowered.compile()`` or proto ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with ``return_tuple=True`` so the Rust side
+uniformly unwraps a tuple. The manifest records input/output shapes plus
+a full validation vector (seeded inputs and the jax-computed outputs) so
+``rust/tests/runtime_artifacts.rs`` can verify the PJRT round-trip
+numerically without invoking Python.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, specs):
+    """Lower a jitted function to XLA HLO text via StableHLO."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _example_inputs(specs, seed):
+    rng = np.random.RandomState(seed)
+    out = []
+    for s in specs:
+        arr = rng.uniform(-1.0, 1.0, size=s.shape).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+# Artifact registry: name -> (fn, specs, validation seed, input tweak)
+def _registry():
+    def positive_mass(inputs):
+        # masses must be positive for a physical validation case
+        tweaked = list(inputs)
+        tweaked[-1] = np.abs(tweaked[-1]) + 0.1
+        return tweaked
+
+    def positive_dt(inputs):
+        tweaked = list(inputs)
+        tweaked[3] = np.array([0.01], dtype=np.float32)
+        return tweaked
+
+    return {
+        "nbody_accel": (model.nbody_accel_model, model.nbody_accel_specs(), 101, positive_mass),
+        "nbody_kick_drift": (model.nbody_kick_drift, model.nbody_kick_drift_specs(), 102, positive_dt),
+        "nbody_kinetic": (model.nbody_kinetic, model.nbody_kinetic_specs(), 103, positive_mass),
+        "flow1d_step": (model.flow1d_step, model.flow1d_specs(), 104, None),
+        "flow3d_step": (model.flow3d_step, model.flow3d_specs(), 105, None),
+    }
+
+
+def build(out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "config": {
+            "nbody_n": model.NBODY_N,
+            "flow1d_m": model.FLOW1D_M,
+            "flow3d_d": model.FLOW3D_D,
+            "flow1d_dt": model.FLOW1D_DT,
+            "stencil_omega": model.STENCIL_OMEGA,
+        },
+        "artifacts": {},
+    }
+    for name, (fn, specs, seed, tweak) in _registry().items():
+        hlo = to_hlo_text(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+
+        inputs = _example_inputs(specs, seed)
+        if tweak is not None:
+            inputs = tweak(inputs)
+        outputs = jax.jit(fn)(*[np.asarray(a) for a in inputs])
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [{"shape": list(s.shape), "dtype": "f32"} for s in specs],
+            "outputs": [
+                {"shape": list(np.asarray(o).shape), "dtype": "f32"} for o in outputs
+            ],
+            "validation": {
+                "inputs": [np.asarray(a).ravel().tolist() for a in inputs],
+                "outputs": [np.asarray(o).ravel().astype(float).tolist() for o in outputs],
+                "rtol": 2e-3,
+                "atol": 1e-4,
+            },
+        }
+        print(f"wrote {fname} ({len(hlo)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels and their pure-jnp oracles."""
+
+from .nbody import nbody_accel
+from .ref import nbody_accel_ref, stencil3d_ref, DEFAULT_EPS
+from .stencil3d import stencil3d
+
+__all__ = [
+    "nbody_accel",
+    "nbody_accel_ref",
+    "stencil3d",
+    "stencil3d_ref",
+    "DEFAULT_EPS",
+]

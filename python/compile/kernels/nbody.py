@@ -1,0 +1,91 @@
+"""Pallas kernel: tiled all-pairs softened gravity (the GreeM-analog
+compute hot-spot of the CosmoGrid application, DESIGN.md §3).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is 2-D over
+(target blocks, source blocks). Each program holds one (BT, 3) target
+block and one (BS, 3) source block in VMEM — `2*(BT+BS)*3*4` bytes plus
+the (BT, BS) distance tile, far under the ~16 MiB VMEM budget for the
+default BT=BS=128 (tile ≈ 64 KiB f32). The (BT, BS) pairwise reduction is
+the MXU-shaped inner product; accumulation over source blocks happens in
+the output ref across grid dimension 1 (revisiting semantics), which is
+the standard Pallas reduction idiom. Lowered with ``interpret=True`` —
+the CPU PJRT client cannot run Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import DEFAULT_EPS
+
+
+def _accel_kernel(pt_ref, ps_ref, ms_ref, acc_ref, *, eps2):
+    """One (target-block, source-block) tile of the all-pairs sum."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pt = pt_ref[...]  # (BT, 3)
+    ps = ps_ref[...]  # (BS, 3)
+    ms = ms_ref[...]  # (BS,)
+    d = ps[None, :, :] - pt[:, None, :]  # (BT, BS, 3)
+    r2 = jnp.sum(d * d, axis=-1) + eps2  # (BT, BS)
+    inv_r = jax.lax.rsqrt(r2)
+    inv_r3 = inv_r * inv_r * inv_r
+    w = ms[None, :] * inv_r3  # (BT, BS)
+    acc_ref[...] += jnp.sum(d * w[..., None], axis=1)
+
+
+def _pad_to(x, n, axis=0):
+    pad = n - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_s", "eps"))
+def nbody_accel(pos_t, pos_s, mass_s, *, eps=DEFAULT_EPS, block_t=128, block_s=128):
+    """Tiled Pallas version of :func:`..kernels.ref.nbody_accel_ref`.
+
+    Arbitrary Nt/Ns are supported by zero-padding: padded *sources* carry
+    zero mass (contribute nothing), padded *targets* are sliced off.
+
+    Args:
+        pos_t: (Nt, 3) target positions.
+        pos_s: (Ns, 3) source positions.
+        mass_s: (Ns,) source masses.
+        eps: softening length (baked into the kernel).
+        block_t / block_s: VMEM tile sizes.
+
+    Returns:
+        (Nt, 3) accelerations, matching the reference to f32 tolerance.
+    """
+    nt, ns = pos_t.shape[0], pos_s.shape[0]
+    bt = min(block_t, max(nt, 1))
+    bs = min(block_s, max(ns, 1))
+    nt_pad = -(-nt // bt) * bt
+    ns_pad = -(-ns // bs) * bs
+    pt = _pad_to(pos_t.astype(jnp.float32), nt_pad)
+    ps = _pad_to(pos_s.astype(jnp.float32), ns_pad)
+    ms = _pad_to(mass_s.astype(jnp.float32), ns_pad)
+
+    grid = (nt_pad // bt, ns_pad // bs)
+    acc = pl.pallas_call(
+        functools.partial(_accel_kernel, eps2=float(eps) * float(eps)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 3), lambda i, j: (i, 0)),
+            pl.BlockSpec((bs, 3), lambda i, j: (j, 0)),
+            pl.BlockSpec((bs,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bt, 3), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt_pad, 3), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(pt, ps, ms)
+    return acc[:nt]

@@ -1,0 +1,79 @@
+"""Pallas kernel: damped-Jacobi 7-point relaxation (the HemeLB-analog 3-D
+bloodflow solver's inner sweep, DESIGN.md §3).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is 1-D over
+z-slabs; each program produces one (X, Y, BZ) output slab. The input is
+presented as a full-array block and the program slices its
+(X+2, Y+2, BZ+2) halo'd working set with ``lax.dynamic_slice`` — on a
+real TPU this becomes the HBM→VMEM halo DMA; with the default slab size
+the working set is a few hundred KiB, comfortably inside VMEM. Dirichlet
+boundaries are enforced by masking with the global cell coordinates.
+Lowered with ``interpret=True`` (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _relax_kernel(u_ref, o_ref, *, omega, bz, dims):
+    x, y, z = dims
+    k = pl.program_id(0)
+    u = u_ref[...]  # full (X, Y, Z) — sliced below; see module docstring
+    up = jnp.pad(u, 1, mode="edge")  # (X+2, Y+2, Z+2)
+    z0 = k * bz
+    blk = jax.lax.dynamic_slice(up, (0, 0, z0), (x + 2, y + 2, bz + 2))
+    c = blk[1:-1, 1:-1, 1:-1]  # (X, Y, BZ) — the slab itself
+    nbr = (
+        blk[:-2, 1:-1, 1:-1]
+        + blk[2:, 1:-1, 1:-1]
+        + blk[1:-1, :-2, 1:-1]
+        + blk[1:-1, 2:, 1:-1]
+        + blk[1:-1, 1:-1, :-2]
+        + blk[1:-1, 1:-1, 2:]
+    )
+    cand = (1.0 - omega) * c + (omega / 6.0) * nbr
+    # Dirichlet mask in *global* coordinates.
+    gx = jax.lax.broadcasted_iota(jnp.int32, (x, y, bz), 0)
+    gy = jax.lax.broadcasted_iota(jnp.int32, (x, y, bz), 1)
+    gz = jax.lax.broadcasted_iota(jnp.int32, (x, y, bz), 2) + z0
+    interior = (
+        (gx > 0) & (gx < x - 1) & (gy > 0) & (gy < y - 1) & (gz > 0) & (gz < z - 1)
+    )
+    o_ref[...] = jnp.where(interior, cand, c)
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "block_z"))
+def stencil3d(u, *, omega=0.8, block_z=8):
+    """Tiled Pallas version of :func:`..kernels.ref.stencil3d_ref`.
+
+    Arbitrary Z is supported by choosing the largest slab size that
+    divides the (possibly padded) extent; padding replicates the far
+    boundary plane and is sliced off, which cannot affect interior cells
+    because the pad plane only neighbours boundary cells (held fixed).
+
+    Args:
+        u: (X, Y, Z) field, any float dtype (computed in f32).
+        omega: relaxation factor.
+        block_z: requested z-slab thickness.
+
+    Returns:
+        (X, Y, Z) relaxed field (f32).
+    """
+    x, y, z = u.shape
+    bz = min(block_z, z)
+    z_pad = -(-z // bz) * bz
+    uu = u.astype(jnp.float32)
+    if z_pad != z:
+        uu = jnp.concatenate([uu, jnp.repeat(uu[:, :, -1:], z_pad - z, axis=2)], axis=2)
+    out = pl.pallas_call(
+        functools.partial(_relax_kernel, omega=float(omega), bz=bz, dims=(x, y, z)),
+        grid=(z_pad // bz,),
+        in_specs=[pl.BlockSpec((x, y, z_pad), lambda k: (0, 0, 0))],
+        out_specs=pl.BlockSpec((x, y, bz), lambda k: (0, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((x, y, z_pad), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(uu)
+    return out[:, :, :z]

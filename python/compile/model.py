@@ -1,0 +1,177 @@
+"""L2 JAX models: the compute graphs of the two distributed applications
+the paper couples with MPWide (DESIGN.md §1, §3).
+
+* CosmoGrid analog — softened all-pairs N-body with a kick-drift
+  integrator. The force evaluation calls the L1 Pallas kernel
+  (:mod:`.kernels.nbody`); ``nbody_accel_model`` is exported separately so
+  the Rust coordinator can evaluate *cross-site* forces on boundary
+  particles received over MPWide.
+* Bloodflow analog — a 1-D arterial-network solver (pyNS analog, pure
+  jnp: the 1-D model is tiny by design) and a 3-D relaxation solver
+  (HemeLB analog) whose sweep is the L1 Pallas stencil kernel.
+
+Everything here is build-time only: :mod:`.aot` lowers these functions to
+HLO text once, and the Rust runtime executes the artifacts. Python never
+runs on the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import nbody_accel, DEFAULT_EPS
+from .kernels.stencil3d import stencil3d
+
+# ---------------------------------------------------------------------------
+# Export configuration: the fixed shapes baked into the AOT artifacts.
+# ---------------------------------------------------------------------------
+
+NBODY_N = 1024          # particles per site (CosmoGrid example/benches)
+FLOW1D_M = 64           # 1-D arterial segments
+FLOW3D_D = 24           # 3-D grid extent (cube)
+
+# 1-D solver constants (phenomenological; chosen CFL-stable: c·dt/dx = 0.4)
+FLOW1D_DT = 0.2
+FLOW1D_DX = 1.0
+FLOW1D_C2 = 4.0         # wave speed squared
+FLOW1D_R = 0.1          # resistance (damping)
+
+STENCIL_OMEGA = 0.8
+
+
+# ---------------------------------------------------------------------------
+# CosmoGrid analog (N-body)
+# ---------------------------------------------------------------------------
+
+def nbody_accel_model(pos_t, pos_s, mass_s):
+    """Acceleration of targets due to sources (L1 Pallas kernel).
+
+    Used for both the site-local force evaluation (targets == sources)
+    and cross-site contributions from boundary particles received over
+    MPWide.
+    """
+    return (nbody_accel(pos_t, pos_s, mass_s, eps=DEFAULT_EPS),)
+
+
+def nbody_kick_drift(pos, vel, acc, dt):
+    """Kick-drift update: v += a·dt, then x += v·dt.
+
+    ``dt`` is a (1,)-shaped array so the artifact can be driven with a
+    runtime-chosen step size (XLA scalars round-trip awkwardly through
+    the text interchange; a 1-vector is unambiguous).
+    """
+    v_new = vel + acc * dt[0]
+    p_new = pos + v_new * dt[0]
+    return (p_new, v_new)
+
+
+def nbody_kinetic(vel, mass):
+    """Kinetic energy (diagnostics for the experiment logs)."""
+    ke = 0.5 * jnp.sum(mass * jnp.sum(vel * vel, axis=-1))
+    return (jnp.reshape(ke, (1,)),)
+
+
+# ---------------------------------------------------------------------------
+# Bloodflow analog — 1-D arterial network (pyNS analog)
+# ---------------------------------------------------------------------------
+
+def flow1d_step(p, q, bc):
+    """One explicit step of a linearized 1-D pressure/flow system.
+
+    dp/dt = -c² ∂q/∂x,  dq/dt = -∂p/∂x - R·q
+
+    Args:
+        p: (M,) pressure.
+        q: (M,) flow rate.
+        bc: (2,) boundary values — bc[0] is the inlet pressure (heart
+            model), bc[1] the outlet pressure received from the 3-D code
+            over MPWide (the multiscale coupling of §1.2.2).
+
+    Returns:
+        (p', q', iface) where iface = (2,) holds the values this model
+        sends back to the 3-D code: pressure and flow at the coupling
+        interface (the distal end).
+    """
+    p, q, bc = jnp.asarray(p), jnp.asarray(q), jnp.asarray(bc)
+    pb = p.at[0].set(bc[0]).at[-1].set(bc[1])
+    # Lax–Friedrichs: central differences with neighbour averaging, stable
+    # for c·dt/dx < 1 (here 0.4). Edge replication pads the stencil.
+    pe = jnp.pad(pb, 1, mode="edge")
+    qe = jnp.pad(q, 1, mode="edge")
+    dq = (qe[2:] - qe[:-2]) / (2.0 * FLOW1D_DX)
+    dp = (pe[2:] - pe[:-2]) / (2.0 * FLOW1D_DX)
+    p_avg = 0.5 * (pe[2:] + pe[:-2])
+    q_avg = 0.5 * (qe[2:] + qe[:-2])
+    p_new = p_avg - FLOW1D_DT * FLOW1D_C2 * dq
+    q_new = q_avg - FLOW1D_DT * (dp + FLOW1D_R * q)
+    p_new = p_new.at[0].set(bc[0]).at[-1].set(bc[1])
+    iface = jnp.stack([p_new[-2], q_new[-1]])
+    return (p_new, q_new, iface)
+
+
+# ---------------------------------------------------------------------------
+# Bloodflow analog — 3-D relaxation solver (HemeLB analog)
+# ---------------------------------------------------------------------------
+
+def flow3d_step(u, bc_plane):
+    """One relaxation sweep with inlet boundary injection.
+
+    Args:
+        u: (D, D, D) field (e.g. pressure).
+        bc_plane: (D, D) inlet values applied at the x=0 plane — in the
+            coupled run this is derived from the 1-D model's interface
+            pressure received over MPWide.
+
+    Returns:
+        (u', outlet) where outlet is a (1,) array holding the mean of the
+        x=D-1 plane, sent back to the 1-D model as its outlet pressure.
+    """
+    u, bc_plane = jnp.asarray(u), jnp.asarray(bc_plane)
+    u = u.at[0, :, :].set(bc_plane)
+    u_new = stencil3d(u, omega=STENCIL_OMEGA)
+    outlet = jnp.reshape(jnp.mean(u_new[-1, :, :]), (1,))
+    return (u_new, outlet)
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (shared by aot.py and the tests)
+# ---------------------------------------------------------------------------
+
+def nbody_accel_specs(n=NBODY_N):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, 3), f32),
+        jax.ShapeDtypeStruct((n, 3), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+    )
+
+
+def nbody_kick_drift_specs(n=NBODY_N):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, 3), f32),
+        jax.ShapeDtypeStruct((n, 3), f32),
+        jax.ShapeDtypeStruct((n, 3), f32),
+        jax.ShapeDtypeStruct((1,), f32),
+    )
+
+
+def nbody_kinetic_specs(n=NBODY_N):
+    f32 = jnp.float32
+    return (jax.ShapeDtypeStruct((n, 3), f32), jax.ShapeDtypeStruct((n,), f32))
+
+
+def flow1d_specs(m=FLOW1D_M):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((m,), f32),
+        jax.ShapeDtypeStruct((2,), f32),
+    )
+
+
+def flow3d_specs(d=FLOW3D_D):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((d, d, d), f32),
+        jax.ShapeDtypeStruct((d, d), f32),
+    )

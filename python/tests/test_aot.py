@@ -1,0 +1,91 @@
+"""AOT compile path: artifacts lower, parse, and the manifest's validation
+vectors match a re-execution of the jitted models."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out))
+    with open(out / "manifest.json") as f:
+        manifest = json.load(f)
+    return out, manifest
+
+
+def test_all_artifacts_emitted(built):
+    out, manifest = built
+    expected = {
+        "nbody_accel",
+        "nbody_kick_drift",
+        "nbody_kinetic",
+        "flow1d_step",
+        "flow3d_step",
+    }
+    assert set(manifest["artifacts"]) == expected
+    for name, meta in manifest["artifacts"].items():
+        path = out / meta["file"]
+        assert path.exists(), name
+        text = path.read_text()
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text
+
+
+def test_manifest_shapes_consistent(built):
+    _, manifest = built
+    for name, meta in manifest["artifacts"].items():
+        v = meta["validation"]
+        for spec, flat in zip(meta["inputs"], v["inputs"]):
+            assert int(np.prod(spec["shape"])) == len(flat), name
+        for spec, flat in zip(meta["outputs"], v["outputs"]):
+            assert int(np.prod(spec["shape"])) == len(flat), name
+
+
+def test_validation_vectors_reproduce(built):
+    _, manifest = built
+    fns = {
+        "nbody_accel": model.nbody_accel_model,
+        "nbody_kick_drift": model.nbody_kick_drift,
+        "nbody_kinetic": model.nbody_kinetic,
+        "flow1d_step": model.flow1d_step,
+        "flow3d_step": model.flow3d_step,
+    }
+    for name, meta in manifest["artifacts"].items():
+        v = meta["validation"]
+        inputs = [
+            np.asarray(flat, dtype=np.float32).reshape(spec["shape"])
+            for spec, flat in zip(meta["inputs"], v["inputs"])
+        ]
+        outputs = fns[name](*inputs)
+        for spec, flat, got in zip(meta["outputs"], v["outputs"], outputs):
+            want = np.asarray(flat, dtype=np.float32).reshape(spec["shape"])
+            assert_allclose(np.asarray(got), want, rtol=v["rtol"], atol=v["atol"])
+
+
+def test_config_recorded(built):
+    _, manifest = built
+    cfg = manifest["config"]
+    assert cfg["nbody_n"] == model.NBODY_N
+    assert cfg["flow1d_m"] == model.FLOW1D_M
+    assert cfg["flow3d_d"] == model.FLOW3D_D
+
+
+def test_hlo_text_has_no_64bit_id_problem(built):
+    # The interchange gotcha: text parses on the runtime side because ids
+    # are reassigned. Here we sanity-check the emitted text is plain ASCII
+    # HLO and does not embed a serialized proto.
+    out, manifest = built
+    for meta in manifest["artifacts"].values():
+        head = (out / meta["file"]).read_text()[:200]
+        assert head.isascii()
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,187 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (assert_allclose),
+with hypothesis sweeping shapes, block sizes and dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    nbody_accel,
+    nbody_accel_ref,
+    stencil3d,
+    stencil3d_ref,
+)
+
+RTOL = 2e-4
+ATOL = 1e-5
+
+
+def _particles(rng, nt, ns):
+    pt = rng.uniform(-2, 2, size=(nt, 3)).astype(np.float32)
+    ps = rng.uniform(-2, 2, size=(ns, 3)).astype(np.float32)
+    ms = rng.uniform(0.1, 1.0, size=(ns,)).astype(np.float32)
+    return pt, ps, ms
+
+
+# ---------------------------------------------------------------------------
+# N-body kernel
+# ---------------------------------------------------------------------------
+
+class TestNbodyKernel:
+    def test_matches_ref_basic(self):
+        pt, ps, ms = _particles(np.random.RandomState(0), 64, 64)
+        got = nbody_accel(pt, ps, ms, block_t=32, block_s=16)
+        want = nbody_accel_ref(jnp.asarray(pt), jnp.asarray(ps), jnp.asarray(ms))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        nt=st.integers(1, 97),
+        ns=st.integers(1, 97),
+        bt=st.sampled_from([4, 16, 32, 128]),
+        bs=st.sampled_from([4, 16, 32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shape_sweep(self, nt, ns, bt, bs, seed):
+        pt, ps, ms = _particles(np.random.RandomState(seed), nt, ns)
+        got = nbody_accel(pt, ps, ms, block_t=bt, block_s=bs)
+        want = nbody_accel_ref(jnp.asarray(pt), jnp.asarray(ps), jnp.asarray(ms))
+        assert got.shape == (nt, 3)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(eps=st.floats(0.01, 1.0), seed=st.integers(0, 1000))
+    def test_eps_is_respected(self, eps, seed):
+        pt, ps, ms = _particles(np.random.RandomState(seed), 16, 16)
+        got = nbody_accel(pt, ps, ms, eps=eps, block_t=8, block_s=8)
+        want = nbody_accel_ref(
+            jnp.asarray(pt), jnp.asarray(ps), jnp.asarray(ms), eps=eps
+        )
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+    def test_zero_mass_sources_contribute_nothing(self):
+        pt, ps, ms = _particles(np.random.RandomState(1), 8, 8)
+        a0 = nbody_accel(pt, ps, np.zeros_like(ms), block_t=8, block_s=8)
+        assert_allclose(np.asarray(a0), 0.0, atol=1e-7)
+
+    def test_self_forces_sum_to_zero(self):
+        # Newton's third law: with targets == sources, total momentum
+        # change sum_i m_i a_i vanishes.
+        pt, _, ms = _particles(np.random.RandomState(2), 48, 48)
+        a = np.asarray(nbody_accel(pt, pt, ms, block_t=16, block_s=16))
+        total = (ms[:, None] * a).sum(axis=0)
+        assert_allclose(total, 0.0, atol=5e-4)
+
+    def test_single_particle_pair(self):
+        # Two unit masses 1 apart on x: analytic softened force.
+        pt = np.array([[0.0, 0, 0], [1.0, 0, 0]], dtype=np.float32)
+        ms = np.array([1.0, 1.0], dtype=np.float32)
+        eps = 0.05
+        a = np.asarray(nbody_accel(pt, pt, ms, eps=eps, block_t=2, block_s=2))
+        expected = 1.0 / (1.0 + eps * eps) ** 1.5
+        assert_allclose(a[0], [expected, 0, 0], rtol=1e-5, atol=1e-6)
+        assert_allclose(a[1], [-expected, 0, 0], rtol=1e-5, atol=1e-6)
+
+    def test_block_size_larger_than_n(self):
+        pt, ps, ms = _particles(np.random.RandomState(3), 5, 7)
+        got = nbody_accel(pt, ps, ms, block_t=128, block_s=128)
+        want = nbody_accel_ref(jnp.asarray(pt), jnp.asarray(ps), jnp.asarray(ms))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+    def test_accepts_float64_input(self):
+        pt, ps, ms = _particles(np.random.RandomState(4), 9, 9)
+        got = nbody_accel(pt.astype(np.float64), ps.astype(np.float64), ms.astype(np.float64))
+        assert got.dtype == jnp.float32
+        want = nbody_accel_ref(jnp.asarray(pt), jnp.asarray(ps), jnp.asarray(ms))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# 3-D stencil kernel
+# ---------------------------------------------------------------------------
+
+class TestStencilKernel:
+    def test_matches_ref_basic(self):
+        u = np.random.RandomState(0).randn(16, 16, 16).astype(np.float32)
+        got = stencil3d(u, block_z=4)
+        want = stencil3d_ref(jnp.asarray(u))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        x=st.integers(3, 20),
+        y=st.integers(3, 20),
+        z=st.integers(3, 24),
+        bz=st.sampled_from([1, 2, 4, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_shape_sweep(self, x, y, z, bz, seed):
+        u = np.random.RandomState(seed).randn(x, y, z).astype(np.float32)
+        got = stencil3d(u, block_z=bz)
+        want = stencil3d_ref(jnp.asarray(u))
+        assert got.shape == (x, y, z)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(omega=st.floats(0.1, 1.0), seed=st.integers(0, 1000))
+    def test_omega_is_respected(self, omega, seed):
+        u = np.random.RandomState(seed).randn(8, 8, 8).astype(np.float32)
+        got = stencil3d(u, omega=omega, block_z=4)
+        want = stencil3d_ref(jnp.asarray(u), omega=omega)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=1e-4)
+
+    def test_constant_field_is_fixed_point(self):
+        u = np.full((10, 10, 10), 3.25, dtype=np.float32)
+        got = np.asarray(stencil3d(u, block_z=5))
+        assert_allclose(got, 3.25, rtol=0, atol=1e-6)
+
+    def test_boundary_cells_never_change(self):
+        u = np.random.RandomState(5).randn(12, 11, 10).astype(np.float32)
+        got = np.asarray(stencil3d(u, block_z=4))
+        for sl in [
+            (0, slice(None), slice(None)),
+            (-1, slice(None), slice(None)),
+            (slice(None), 0, slice(None)),
+            (slice(None), -1, slice(None)),
+            (slice(None), slice(None), 0),
+            (slice(None), slice(None), -1),
+        ]:
+            assert_allclose(got[sl], u[sl], atol=1e-7)
+
+    def test_max_principle(self):
+        # Relaxation with omega<=1 cannot create new extrema.
+        u = np.random.RandomState(6).randn(9, 9, 9).astype(np.float32)
+        got = np.asarray(stencil3d(u, block_z=3))
+        assert got.max() <= u.max() + 1e-5
+        assert got.min() >= u.min() - 1e-5
+
+    def test_repeated_relaxation_converges_toward_harmonic(self):
+        # With fixed boundaries, repeated sweeps must monotonically reduce
+        # the residual of the discrete Laplace equation.
+        rng = np.random.RandomState(7)
+        u = rng.randn(8, 8, 8).astype(np.float32)
+        def residual(v):
+            c = v[1:-1, 1:-1, 1:-1]
+            nbr = (
+                v[:-2, 1:-1, 1:-1] + v[2:, 1:-1, 1:-1] + v[1:-1, :-2, 1:-1]
+                + v[1:-1, 2:, 1:-1] + v[1:-1, 1:-1, :-2] + v[1:-1, 1:-1, 2:]
+            )
+            return float(np.abs(nbr / 6.0 - c).max())
+        r0 = residual(u)
+        v = u
+        for _ in range(50):
+            v = np.asarray(stencil3d(v, block_z=4))
+        assert residual(v) < 0.5 * r0
+
+    def test_min_size_grid(self):
+        u = np.random.RandomState(8).randn(3, 3, 3).astype(np.float32)
+        got = stencil3d(u, block_z=1)
+        want = stencil3d_ref(jnp.asarray(u))
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,62 @@
+//! **Experiment E2 — §1.2.2**: coupling overhead of the distributed
+//! multiscale bloodflow run over an 11 ms round trip (real forwarder
+//! with delay injection), with vs without `MPW_ISendRecv` latency
+//! hiding, at two compute regimes:
+//!
+//! * `thin`  — little compute between exchanges: the residual overhead
+//!   per exchange is visible (paper: 6 ms per exchange);
+//! * `paper` — compute per coupling interval ≫ RTT, the paper's regime:
+//!   overhead shrinks to ~0 per exchange and ~1% of runtime
+//!   (paper: 1.2%).
+
+use mpwide::benchlib::{banner, Table};
+use mpwide::bloodflow::{run_coupled, CouplingConfig};
+
+fn main() -> anyhow::Result<()> {
+    let dir = mpwide::runtime::Runtime::default_dir();
+    anyhow::ensure!(
+        dir.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts`"
+    );
+
+    banner("Bloodflow coupling overhead over an 11 ms RTT (paper §1.2.2)");
+    let mut table = Table::new(&[
+        "regime",
+        "hiding",
+        "ms/exchange",
+        "% of runtime",
+        "paper",
+    ]);
+    for (regime, substeps, substeps_1d, exchanges) in
+        [("thin", 12usize, 24usize, 60usize), ("paper", 250, 500, 25)]
+    {
+        for hiding in [false, true] {
+            let cfg = CouplingConfig {
+                exchanges,
+                substeps,
+                substeps_1d,
+                latency_hiding: hiding,
+                artifacts_dir: dir.clone(),
+                ..Default::default()
+            };
+            let r = run_coupled(&cfg)?;
+            let paper = match (regime, hiding) {
+                ("paper", true) => "6 ms, 1.2%",
+                _ => "-",
+            };
+            table.row(&[
+                regime.to_string(),
+                if hiding { "ISendRecv" } else { "blocking" }.to_string(),
+                format!("{:.2}", r.overhead_per_exchange * 1e3),
+                format!("{:.2}", r.overhead_fraction * 100.0),
+                paper.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nShape checks: hiding beats blocking in both regimes; in the paper's\n\
+         regime (compute >> RTT) the overhead fraction drops to ~1%."
+    );
+    Ok(())
+}

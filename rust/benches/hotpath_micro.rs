@@ -1,0 +1,108 @@
+//! **Experiment A3 — hot-path microbenchmarks** for the §Perf pass:
+//! the pure striping math, pacer accounting, path send/recv latency for
+//! small messages, barrier RTT on loopback, PJRT executable dispatch,
+//! and manifest JSON parsing. Before/after numbers live in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use mpwide::benchlib::{banner, sample_metric, sample_seconds};
+use mpwide::mpwide::pacing::Pacer;
+use mpwide::mpwide::{stripe, Path, PathConfig, PathListener};
+
+fn main() {
+    banner("A3: hot-path microbenchmarks");
+
+    // striping math (pure)
+    let s = sample_metric("stripe::segments 64MB x 256 streams (ns/call)", 100, 2000, || {
+        let t0 = Instant::now();
+        let segs = stripe::segments(std::hint::black_box(64 << 20), 256);
+        std::hint::black_box(segs);
+        t0.elapsed().as_nanos() as f64
+    });
+    println!("{}", s.line("ns"));
+
+    let s = sample_metric("stripe::call_count 64MB/32s/1MB (ns/call)", 100, 2000, || {
+        let t0 = Instant::now();
+        std::hint::black_box(stripe::call_count(std::hint::black_box(64 << 20), 32, 1 << 20));
+        t0.elapsed().as_nanos() as f64
+    });
+    println!("{}", s.line("ns"));
+
+    // pacer accounting (unlimited: must be ~free)
+    let s = sample_metric("pacer.acquire unlimited x1000 (ns)", 10, 500, || {
+        let mut p = Pacer::new(None);
+        let t0 = Instant::now();
+        for _ in 0..1000 {
+            p.acquire(1 << 20);
+        }
+        t0.elapsed().as_nanos() as f64 / 1000.0
+    });
+    println!("{}", s.line("ns"));
+
+    // small-message path latency over loopback
+    let mut cfg = PathConfig::with_streams(1);
+    cfg.autotune = false;
+    let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+    let port = listener.port();
+    let echo = std::thread::spawn(move || {
+        let p = listener.accept_path().unwrap();
+        let mut buf = vec![0u8; 64];
+        loop {
+            if p.recv(&mut buf).is_err() {
+                break;
+            }
+            if p.send(&buf).is_err() {
+                break;
+            }
+        }
+    });
+    let p = Path::connect("127.0.0.1", port, cfg).unwrap();
+    let msg = [0u8; 64];
+    let mut buf = [0u8; 64];
+    let s = sample_seconds("64B echo round-trip (loopback)", 100, 2000, || {
+        p.send(&msg).unwrap();
+        p.recv(&mut buf).unwrap();
+    });
+    println!(
+        "{:<38} {:>10.1} µs median",
+        "64B echo round-trip (loopback)",
+        s.median() * 1e6
+    );
+
+    drop(p);
+    let _ = echo.join();
+
+    // PJRT dispatch (needs artifacts)
+    let dir = mpwide::runtime::Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = mpwide::runtime::Runtime::open(&dir).unwrap();
+        let n = rt.manifest().config_usize("nbody_n").unwrap();
+        let kin = rt.load("nbody_kinetic").unwrap();
+        let vel = vec![0.5f32; n * 3];
+        let mass = vec![1.0f32; n];
+        let s = sample_seconds("nbody_kinetic dispatch (PJRT)", 20, 500, || {
+            std::hint::black_box(kin.run_f32(&[&vel, &mass]).unwrap());
+        });
+        println!("{:<38} {:>10.1} µs median", "nbody_kinetic dispatch (PJRT)", s.median() * 1e6);
+
+        let acc = rt.load("nbody_accel").unwrap();
+        let pos = vec![0.1f32; n * 3];
+        let s = sample_seconds("nbody_accel 1024x1024 (PJRT)", 3, 30, || {
+            std::hint::black_box(acc.run_f32(&[&pos, &pos, &mass]).unwrap());
+        });
+        println!(
+            "{:<38} {:>10.2} ms median",
+            "nbody_accel 1024^2 tile eval",
+            s.median() * 1e3
+        );
+
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let s = sample_seconds("manifest JSON parse (1.2 MB)", 3, 30, || {
+            std::hint::black_box(mpwide::runtime::Manifest::parse(&text).unwrap());
+        });
+        println!("{:<38} {:>10.2} ms median", "manifest JSON parse", s.median() * 1e3);
+    } else {
+        println!("(artifacts not built; PJRT micro-numbers skipped)");
+    }
+}

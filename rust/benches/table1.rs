@@ -1,0 +1,112 @@
+//! **Experiment T1 — paper Table 1**: WAN throughput of scp / MPWide /
+//! ZeroMQ / MUSCLE 1 between London–Poznań, Poznań–Gdańsk and
+//! Poznań–Amsterdam, exchanging 64 MB, reported per direction in MB/s.
+//!
+//! The paper averaged ≥20 exchanges per direction; we do the same over
+//! the simulated links (DESIGN.md §2 for the substitution argument).
+//! MPWide is modelled as its own benchmark runs: a full-duplex
+//! `MPW_SendRecv` with 32 autotuned streams — which is why its rows are
+//! symmetric in the paper. Absolute numbers depend on the calibrated
+//! link profiles; who wins, by what factor, and the asymmetry pattern
+//! come from the TCP model.
+
+use mpwide::baselines;
+use mpwide::benchlib::{banner, Table};
+use mpwide::mpwide::PathConfig;
+use mpwide::netsim::{profiles, Direction, SimPath};
+use mpwide::util::stats;
+
+const MB: u64 = 1024 * 1024;
+const MBF: f64 = 1024.0 * 1024.0;
+const BYTES: u64 = 64 * MB;
+const TRIALS: usize = 20;
+
+fn avg_rate<F: FnMut(u64) -> f64>(mut f: F) -> f64 {
+    let samples: Vec<f64> = (0..TRIALS).map(|i| f(1000 + i as u64)).collect();
+    stats::mean(&samples) / MBF
+}
+
+fn mpwide_cell(link: &mpwide::netsim::LinkProfile) -> (f64, f64) {
+    let cfg = PathConfig { nstreams: 32, ..Default::default() }; // autotune on
+    let path = SimPath::new(link.clone(), cfg);
+    let ab = avg_rate(|seed| path.send_recv(BYTES, seed).throughput_ab());
+    let ba = avg_rate(|seed| path.send_recv(BYTES, seed + 777).throughput_ba());
+    (ab, ba)
+}
+
+fn oneway_cell<F>(mut f: F) -> (f64, f64)
+where
+    F: FnMut(Direction, u64) -> f64,
+{
+    let ab = avg_rate(|seed| f(Direction::AtoB, seed));
+    let ba = avg_rate(|seed| f(Direction::BtoA, seed + 777));
+    (ab, ba)
+}
+
+fn main() {
+    banner("Table 1: throughput per direction, 64 MB exchanges (MB/s)");
+    let mut t = Table::new(&[
+        "Endpoint 1",
+        "Endpoint 2",
+        "Tool",
+        "measured A->B/B->A",
+        "paper A->B/B->A",
+    ]);
+
+    struct RowSpec {
+        e1: &'static str,
+        e2: &'static str,
+        link: mpwide::netsim::LinkProfile,
+        paper: &'static [(&'static str, &'static str)],
+    }
+    let rows = [
+        RowSpec {
+            e1: "London, UK",
+            e2: "Poznan, PL",
+            link: profiles::london_poznan(),
+            paper: &[("scp", "11/16"), ("MPWide", "70/70"), ("ZeroMQ", "30/110")],
+        },
+        RowSpec {
+            e1: "Poznan, PL",
+            e2: "Gdansk, PL",
+            link: profiles::poznan_gdansk(),
+            paper: &[("scp", "13/21"), ("MPWide", "115/115"), ("ZeroMQ", "64/-")],
+        },
+        RowSpec {
+            e1: "Poznan, PL",
+            e2: "Amsterdam, NL",
+            link: profiles::poznan_amsterdam(),
+            paper: &[("scp", "32/9.1"), ("MPWide", "55/55"), ("MUSCLE 1", "18/18")],
+        },
+    ];
+
+    for spec in &rows {
+        for &(tool, paper) in spec.paper {
+            let (ab, ba) = match tool {
+                "scp" => oneway_cell(|d, s| {
+                    baselines::scp_transfer(&spec.link, d, BYTES, s).throughput
+                }),
+                "MPWide" => mpwide_cell(&spec.link),
+                "ZeroMQ" => oneway_cell(|d, s| {
+                    baselines::zeromq_transfer(&spec.link, d, BYTES, s).throughput
+                }),
+                "MUSCLE 1" => oneway_cell(|d, s| {
+                    baselines::muscle_transfer(&spec.link, d, BYTES, s).throughput
+                }),
+                _ => unreachable!(),
+            };
+            t.row(&[
+                spec.e1.to_string(),
+                spec.e2.to_string(),
+                tool.to_string(),
+                format!("{ab:.0}/{ba:.0}"),
+                paper.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nShape checks: MPWide symmetric & fastest-or-close per route; scp slowest;\n\
+         single-stream tools asymmetric where per-direction loss/competition differ."
+    );
+}

@@ -1,0 +1,178 @@
+//! Models of the comparator tools in the paper's evaluation (Table 1 and
+//! §1.2.3): scp, ZeroMQ, MUSCLE 1 and Aspera.
+//!
+//! Each model runs on the **same** flow-level TCP simulator and link
+//! profiles as the MPWide [`crate::netsim::SimPath`]; what differs is
+//! only the mechanism the paper credits/blames for each tool's
+//! performance:
+//!
+//! * **scp** — one TCP flow, further throttled by OpenSSH's channel
+//!   window (a protocol-level cap independent of the kernel's) and a
+//!   crypto/cipher CPU ceiling.
+//! * **ZeroMQ** — one TCP flow with default autotuned kernel windows
+//!   (the paper used "default autotuned settings"); fast on a clean
+//!   direction, collapses with loss (single congestion context).
+//! * **MUSCLE 1** — one TCP flow behind a Java serialization pipeline:
+//!   an application-level rate ceiling that binds before the network
+//!   does (its 18/18 row is symmetric because the bottleneck is the CPU).
+//! * **Aspera** — closed-source UDP transfer with delay/loss-insensitive
+//!   rate control: modeled as a ramp to a target rate near the link's
+//!   available capacity, degraded only by the loss fraction itself.
+
+use crate::netsim::link::{Direction, LinkProfile};
+use crate::netsim::network::{transfer_oneway, OneWayResult};
+use crate::netsim::simpath::OS_AUTOSCALE_RWND;
+
+/// OpenSSH channel window (protocol flow control; ~1 MB effective in the
+/// era's releases once application-level draining is accounted for) —
+/// scp's binding window even when kernels would autoscale.
+pub const SSH_CHANNEL_WINDOW: f64 = 768.0 * 1024.0;
+
+/// scp cipher/MAC/disk pipeline ceiling on era hardware, bytes/second
+/// (scp reads from file and encrypts synchronously).
+pub const SCP_CRYPTO_CAP: f64 = 34.0 * 1024.0 * 1024.0;
+
+/// Rounds scp's application layer stays head-of-line blocked after each
+/// TCP loss event (the ssh channel stalls on retransmission).
+pub const SCP_LOSS_STALL: u32 = 4;
+
+/// MUSCLE 1 serialization ceiling, bytes/second (the paper's 18/18 row).
+pub const MUSCLE_SERIALIZE_CAP: f64 = 19.0 * 1024.0 * 1024.0;
+
+/// Aspera's achievable fraction of available capacity (protocol
+/// efficiency of its UDP rate control).
+pub const ASPERA_EFFICIENCY: f64 = 0.90;
+
+/// scp: single flow, SSH channel window + crypto cap + application-level
+/// stall after loss events.
+pub fn scp_transfer(link: &LinkProfile, dir: Direction, bytes: u64, seed: u64) -> OneWayResult {
+    use crate::netsim::network::simulate_oneway;
+    use crate::netsim::tcp_model::TcpFlow;
+    use crate::util::Rng;
+    let mut rng = Rng::new(seed);
+    let mut flows = vec![TcpFlow::new(bytes as f64, SSH_CHANNEL_WINDOW, Some(SCP_CRYPTO_CAP))
+        .with_loss_stall(SCP_LOSS_STALL)];
+    simulate_oneway(&mut flows, link, dir, &mut rng, false)
+}
+
+/// ZeroMQ (default autotuned settings): single flow, kernel-autoscaled
+/// window, no app cap.
+pub fn zeromq_transfer(
+    link: &LinkProfile,
+    dir: Direction,
+    bytes: u64,
+    seed: u64,
+) -> OneWayResult {
+    transfer_oneway(link, dir, bytes as f64, 1, OS_AUTOSCALE_RWND, None, seed)
+}
+
+/// MUSCLE 1: single flow behind the serialization ceiling.
+pub fn muscle_transfer(
+    link: &LinkProfile,
+    dir: Direction,
+    bytes: u64,
+    seed: u64,
+) -> OneWayResult {
+    transfer_oneway(
+        link,
+        dir,
+        bytes as f64,
+        1,
+        OS_AUTOSCALE_RWND,
+        Some(MUSCLE_SERIALIZE_CAP),
+        seed,
+    )
+}
+
+/// Aspera-style UDP transfer: rate-controlled, insensitive to RTT and to
+/// TCP-style loss response; only the lost fraction is retransmitted. Its
+/// UDP blast does not cede fair shares to background TCP the way a TCP
+/// tool must, so the rate tracks raw capacity, not the fair share.
+pub fn aspera_transfer(link: &LinkProfile, dir: Direction, bytes: u64) -> OneWayResult {
+    let rate = link.capacity * ASPERA_EFFICIENCY * (1.0 - link.loss(dir));
+    // short ramp (~1s) while the rate controller locks on
+    let ramp = 1.0;
+    let seconds = ramp * 0.5 + bytes as f64 / rate;
+    OneWayResult {
+        seconds,
+        bytes: bytes as f64,
+        throughput: bytes as f64 / seconds,
+        losses: 0,
+        rounds: 0,
+        timeline: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::profiles;
+
+    const MB: u64 = 1024 * 1024;
+    const MBF: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn scp_is_slowest_tcp_tool_on_wan() {
+        let link = profiles::london_poznan();
+        let scp = scp_transfer(&link, Direction::AtoB, 64 * MB, 1);
+        let zmq = zeromq_transfer(&link, Direction::AtoB, 64 * MB, 1);
+        assert!(
+            scp.throughput <= zmq.throughput * 1.2,
+            "scp {:.1} vs zmq {:.1} MB/s",
+            scp.throughput / MBF,
+            zmq.throughput / MBF
+        );
+    }
+
+    #[test]
+    fn scp_never_beats_crypto_cap() {
+        for link in profiles::all() {
+            let r = scp_transfer(&link, Direction::AtoB, 32 * MB, 2);
+            assert!(r.throughput <= SCP_CRYPTO_CAP * 1.05, "{}", link.name);
+        }
+    }
+
+    #[test]
+    fn muscle_is_symmetric_cpu_bound() {
+        let link = profiles::poznan_amsterdam();
+        let ab = muscle_transfer(&link, Direction::AtoB, 64 * MB, 3);
+        let ba = muscle_transfer(&link, Direction::BtoA, 64 * MB, 3);
+        assert!(ab.throughput <= MUSCLE_SERIALIZE_CAP * 1.05);
+        // A→B is clean enough that the CPU cap binds → near-symmetric
+        let ratio = ab.throughput / ba.throughput.max(1.0);
+        assert!((0.5..3.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn zeromq_asymmetry_follows_loss() {
+        let link = profiles::london_poznan();
+        let lossy = zeromq_transfer(&link, Direction::AtoB, 64 * MB, 4);
+        let clean = zeromq_transfer(&link, Direction::BtoA, 64 * MB, 4);
+        assert!(
+            clean.throughput > 1.5 * lossy.throughput,
+            "clean {:.1} vs lossy {:.1} MB/s",
+            clean.throughput / MBF,
+            lossy.throughput / MBF
+        );
+    }
+
+    #[test]
+    fn aspera_is_loss_and_rtt_insensitive() {
+        let mut near = profiles::ucl_yale();
+        near.rtt = 0.010;
+        let far = profiles::ucl_yale();
+        let a = aspera_transfer(&near, Direction::AtoB, 256 * MB);
+        let b = aspera_transfer(&far, Direction::AtoB, 256 * MB);
+        let ratio = a.throughput / b.throughput;
+        assert!((0.95..1.05).contains(&ratio), "rtt changed aspera rate: {ratio}");
+    }
+
+    #[test]
+    fn aspera_beats_tcp_tools_transatlantic() {
+        // §1.2.3: scp 8 < MPWide 40 < Aspera 48 MB/s.
+        let link = profiles::ucl_yale();
+        let scp = scp_transfer(&link, Direction::AtoB, 256 * MB, 5);
+        let asp = aspera_transfer(&link, Direction::AtoB, 256 * MB);
+        assert!(asp.throughput > 3.0 * scp.throughput);
+    }
+}

@@ -1,0 +1,201 @@
+//! Minimal measurement harness for the `cargo bench` targets (the
+//! `criterion` crate is unavailable in the offline build).
+//!
+//! Provides warmup + repeated sampling with summary statistics, and a
+//! fixed-width table printer used to emit the paper-style rows every
+//! bench target regenerates (DESIGN.md §4). Bench binaries are declared
+//! `harness = false` and call these helpers from `main`.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Summary of repeated measurements of one quantity.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    /// Label of the measured case.
+    pub name: String,
+    /// Raw samples (seconds, MB/s, … — caller-defined unit).
+    pub samples: Vec<f64>,
+}
+
+impl Summary {
+    /// Mean of the samples.
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    /// Median (p50).
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    /// Pretty one-liner: `name  mean ± sd  (median, p95)`.
+    pub fn line(&self, unit: &str) -> String {
+        format!(
+            "{:<38} {:>10.3} ± {:>8.3} {unit}  (p50 {:.3}, p95 {:.3}, n={})",
+            self.name,
+            self.mean(),
+            self.stddev(),
+            self.median(),
+            self.p95(),
+            self.samples.len()
+        )
+    }
+}
+
+/// Measure `f` (which returns its own metric, e.g. seconds or MB/s):
+/// `warmup` throwaway calls, then `samples` recorded calls.
+pub fn sample_metric<F: FnMut() -> f64>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    mut f: F,
+) -> Summary {
+    for _ in 0..warmup {
+        let _ = f();
+    }
+    let mut v = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        v.push(f());
+    }
+    Summary { name: name.to_string(), samples: v }
+}
+
+/// Measure wall-clock seconds of `f` per call.
+pub fn sample_seconds<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    mut f: F,
+) -> Summary {
+    sample_metric(name, warmup, samples, || {
+        let t0 = Instant::now();
+        f();
+        t0.elapsed().as_secs_f64()
+    })
+}
+
+/// Fixed-width table printer for paper-style outputs.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match the header count).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.headers.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], w: &[usize]| -> String {
+            let mut line = String::from("| ");
+            for (c, width) in cells.iter().zip(w) {
+                line.push_str(&format!("{c:<width$} | "));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &w));
+        out.push('\n');
+        out.push_str(&format!(
+            "|{}|",
+            w.iter().map(|x| "-".repeat(x + 2)).collect::<Vec<_>>().join("|")
+        ));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Section banner for bench output.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_stats() {
+        let s = Summary { name: "x".into(), samples: vec![1.0, 2.0, 3.0] };
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.median(), 2.0);
+        assert!(s.line("s").contains('x'));
+    }
+
+    #[test]
+    fn sample_runs_expected_count() {
+        let mut calls = 0;
+        let s = sample_metric("t", 2, 5, || {
+            calls += 1;
+            calls as f64
+        });
+        assert_eq!(s.samples.len(), 5);
+        assert_eq!(calls, 7, "2 warmup + 5 samples");
+        // warmup discarded: samples start at 3
+        assert_eq!(s.samples[0], 3.0);
+    }
+
+    #[test]
+    fn sample_seconds_positive() {
+        let s = sample_seconds("sleepless", 0, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.samples.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "tool"]);
+        t.row(&["1".into(), "mpwide".into()]);
+        t.row(&["22".into(), "scp".into()]);
+        let r = t.render();
+        assert!(r.contains("| a  | tool   |"), "{r}");
+        assert!(r.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+}

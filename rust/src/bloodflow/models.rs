@@ -1,0 +1,91 @@
+//! Model drivers for the two coupled codes, each executing its AOT
+//! artifact on a thread-local PJRT runtime.
+
+use std::path::Path as FsPath;
+
+use anyhow::Result;
+
+use crate::runtime::{Executable, Runtime};
+
+/// The 1-D arterial network (pyNS analog): pressure/flow on a vessel,
+/// inlet driven by a heart waveform, outlet coupled to the 3-D code.
+pub struct Flow1d {
+    /// Pressure along the vessel.
+    pub p: Vec<f32>,
+    /// Flow rate along the vessel.
+    pub q: Vec<f32>,
+    exe: Executable,
+    /// Interface values (coupling payload): [pressure, flow] at the
+    /// distal end after the last step.
+    pub iface: [f32; 2],
+    step_count: u64,
+}
+
+impl Flow1d {
+    /// Load the artifact and start from rest.
+    pub fn new(artifacts_dir: &FsPath) -> Result<Flow1d> {
+        let rt = Runtime::open(artifacts_dir)?;
+        let m = rt.manifest().config_usize("flow1d_m")?;
+        Ok(Flow1d {
+            p: vec![0.0; m],
+            q: vec![0.0; m],
+            exe: rt.load("flow1d_step")?,
+            iface: [0.0; 2],
+            step_count: 0,
+        })
+    }
+
+    /// Heart inlet waveform (periodic pulse).
+    pub fn inlet(&self) -> f32 {
+        let t = self.step_count as f32 * 0.05;
+        1.0 + 0.5 * (t).sin()
+    }
+
+    /// One solver step with the outlet pressure received from the 3-D
+    /// code; updates the interface payload.
+    pub fn step(&mut self, outlet_pressure: f32) -> Result<()> {
+        let bc = [self.inlet(), outlet_pressure];
+        let out = self.exe.run_f32(&[&self.p, &self.q, &bc])?;
+        let mut it = out.into_iter();
+        self.p = it.next().unwrap();
+        self.q = it.next().unwrap();
+        let iface = it.next().unwrap();
+        self.iface = [iface[0], iface[1]];
+        self.step_count += 1;
+        Ok(())
+    }
+}
+
+/// The 3-D flow solver (HemeLB analog): relaxation on a cube with the
+/// inlet plane driven by the 1-D interface pressure.
+pub struct Flow3d {
+    /// The 3-D field, flat (d, d, d).
+    pub u: Vec<f32>,
+    /// Grid extent.
+    pub d: usize,
+    exe: Executable,
+    /// Outlet value (coupling payload) after the last step.
+    pub outlet: f32,
+}
+
+impl Flow3d {
+    /// Load the artifact and start from rest.
+    pub fn new(artifacts_dir: &FsPath) -> Result<Flow3d> {
+        let rt = Runtime::open(artifacts_dir)?;
+        let d = rt.manifest().config_usize("flow3d_d")?;
+        Ok(Flow3d { u: vec![0.0; d * d * d], d, exe: rt.load("flow3d_step")?, outlet: 0.0 })
+    }
+
+    /// One relaxation sweep with the inlet plane set from the received
+    /// 1-D interface pressure.
+    pub fn step(&mut self, inlet_pressure: f32) -> Result<()> {
+        let plane = vec![inlet_pressure; self.d * self.d];
+        let out = self.exe.run_f32(&[&self.u, &plane])?;
+        let mut it = out.into_iter();
+        self.u = it.next().unwrap();
+        self.outlet = it.next().unwrap()[0];
+        Ok(())
+    }
+}
+
+// PJRT-backed tests live in rust/tests/apps_end_to_end.rs.

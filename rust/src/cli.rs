@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (offline substitute for `clap`): positional
+//! arguments plus `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, positionals, options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First token (subcommand).
+    pub command: String,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` and bare `--flag` (value `"true"`) options.
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut it = tokens.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                options.insert(key.to_string(), value);
+            } else {
+                positional.push(tok);
+            }
+        }
+        Args { command, positional, options }
+    }
+
+    /// Parse from the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+
+    /// Option value as string.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Option parsed as `T`, with default.
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Bare flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.opt(key).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_positionals() {
+        let a = parse("cp file.bin localhost");
+        assert_eq!(a.command, "cp");
+        assert_eq!(a.pos(0), Some("file.bin"));
+        assert_eq!(a.pos(1), Some("localhost"));
+        assert_eq!(a.pos(2), None);
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let a = parse("serve --port 6000 --streams 32 --verbose");
+        assert_eq!(a.opt_parse("port", 0u16), 6000);
+        assert_eq!(a.opt_parse("streams", 1usize), 32);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn option_default_applies() {
+        let a = parse("serve");
+        assert_eq!(a.opt_parse("port", 7777u16), 7777);
+    }
+
+    #[test]
+    fn empty_input() {
+        let a = parse("");
+        assert_eq!(a.command, "");
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b 3");
+        assert_eq!(a.opt("a"), Some("true"));
+        assert_eq!(a.opt_parse("b", 0), 3);
+    }
+}

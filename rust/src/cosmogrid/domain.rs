@@ -1,0 +1,229 @@
+//! Domain decomposition and initial conditions for the CosmoGrid run:
+//! slab split by x-coordinate across sites, plus the dynamic
+//! load-balancing rule (the paper's distributed run "also features
+//! dynamic load balancing").
+
+use crate::util::Rng;
+
+/// Particle block owned by one site. Arrays are padded to the artifact
+/// size `n_pad` with zero-mass particles (padded sources contribute no
+/// force; padded targets are ignored on readout), so the fixed-shape AOT
+/// executables accept any ownership count ≤ `n_pad`.
+#[derive(Debug, Clone)]
+pub struct SiteParticles {
+    /// Flat (n_pad, 3) positions.
+    pub pos: Vec<f32>,
+    /// Flat (n_pad, 3) velocities.
+    pub vel: Vec<f32>,
+    /// (n_pad,) masses; zero beyond `n_local`.
+    pub mass: Vec<f32>,
+    /// Number of real particles in this block.
+    pub n_local: usize,
+    /// Padded size (the artifact's N).
+    pub n_pad: usize,
+}
+
+impl SiteParticles {
+    /// Empty block of padded size `n_pad`.
+    pub fn empty(n_pad: usize) -> SiteParticles {
+        SiteParticles {
+            pos: vec![0.0; n_pad * 3],
+            vel: vec![0.0; n_pad * 3],
+            mass: vec![0.0; n_pad],
+            n_local: 0,
+            n_pad,
+        }
+    }
+
+    /// Total momentum of the real particles (diagnostics).
+    pub fn momentum(&self) -> [f32; 3] {
+        let mut p = [0.0f32; 3];
+        for i in 0..self.n_local {
+            for d in 0..3 {
+                p[d] += self.mass[i] * self.vel[i * 3 + d];
+            }
+        }
+        p
+    }
+}
+
+/// Generate initial conditions: `n` particles in a unit cube around the
+/// origin with a cold Hubble-like perturbation (radially outward velocity
+/// plus small noise) — enough structure for slabs and snapshots to be
+/// visually meaningful at laptop scale.
+pub fn generate_ics(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let mut pos = Vec::with_capacity(n * 3);
+    let mut vel = Vec::with_capacity(n * 3);
+    let mut mass = Vec::with_capacity(n);
+    for _ in 0..n {
+        let p: [f64; 3] = [rng.f64() - 0.5, rng.f64() - 0.5, rng.f64() - 0.5];
+        for d in 0..3 {
+            pos.push(p[d] as f32);
+            // mild expansion + noise; kept small so the cube stays bound
+            vel.push((0.05 * p[d] + 0.01 * rng.gauss()) as f32);
+        }
+        mass.push((1.0 / n as f64) as f32);
+    }
+    (pos, vel, mass)
+}
+
+/// Split particles into `counts.len()` slabs by x-coordinate with the
+/// given per-site counts (must sum to the particle count). Returns the
+/// per-site blocks padded to `n_pad`.
+pub fn split_slabs(
+    pos: &[f32],
+    vel: &[f32],
+    mass: &[f32],
+    counts: &[usize],
+    n_pad: usize,
+) -> Vec<SiteParticles> {
+    let n = mass.len();
+    assert_eq!(counts.iter().sum::<usize>(), n, "counts must cover all particles");
+    assert!(counts.iter().all(|&c| c <= n_pad), "count exceeds artifact size");
+    // order by x so slabs are spatially contiguous (Fig 2's colour bands)
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| pos[a * 3].partial_cmp(&pos[b * 3]).unwrap());
+
+    let mut out = Vec::with_capacity(counts.len());
+    let mut cursor = 0;
+    for &c in counts {
+        let mut sp = SiteParticles::empty(n_pad);
+        for (slot, &idx) in order[cursor..cursor + c].iter().enumerate() {
+            for d in 0..3 {
+                sp.pos[slot * 3 + d] = pos[idx * 3 + d];
+                sp.vel[slot * 3 + d] = vel[idx * 3 + d];
+            }
+            sp.mass[slot] = mass[idx];
+        }
+        sp.n_local = c;
+        out.push(sp);
+        cursor += c;
+    }
+    out
+}
+
+/// Dynamic load balancing: given current per-site particle counts and
+/// measured per-step compute times, propose new counts that equalize
+/// time assuming cost ∝ count (all-pairs row cost). Deterministic, sums
+/// preserved, each site keeps at least `min_count` and at most `max_count`.
+pub fn rebalance(
+    counts: &[usize],
+    times: &[f64],
+    min_count: usize,
+    max_count: usize,
+) -> Vec<usize> {
+    assert_eq!(counts.len(), times.len());
+    let total: usize = counts.iter().sum();
+    // per-particle speed of each site; target counts ∝ speed
+    let speeds: Vec<f64> = counts
+        .iter()
+        .zip(times)
+        .map(|(&c, &t)| if t > 1e-12 { c as f64 / t } else { c as f64 })
+        .collect();
+    let speed_sum: f64 = speeds.iter().sum();
+    if speed_sum <= 0.0 {
+        return counts.to_vec();
+    }
+    let mut new: Vec<usize> = speeds
+        .iter()
+        .map(|s| ((s / speed_sum) * total as f64).round() as usize)
+        .map(|c| c.clamp(min_count, max_count))
+        .collect();
+    // fix the sum drift deterministically
+    let mut diff = total as i64 - new.iter().sum::<usize>() as i64;
+    let mut i = 0;
+    while diff != 0 {
+        let idx = i % new.len();
+        if diff > 0 && new[idx] < max_count {
+            new[idx] += 1;
+            diff -= 1;
+        } else if diff < 0 && new[idx] > min_count {
+            new[idx] -= 1;
+            diff += 1;
+        }
+        i += 1;
+        if i > 10 * new.len() * (total + 1) {
+            return counts.to_vec(); // infeasible clamp box; keep as-is
+        }
+    }
+    new
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ics_are_reproducible_and_in_cube() {
+        let (p1, v1, m1) = generate_ics(100, 9);
+        let (p2, _, _) = generate_ics(100, 9);
+        assert_eq!(p1, p2);
+        assert!(p1.iter().all(|x| x.abs() <= 0.5));
+        assert_eq!(v1.len(), 300);
+        assert!((m1.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn slabs_are_ordered_by_x_and_cover_everything() {
+        let (pos, vel, mass) = generate_ics(90, 3);
+        let slabs = split_slabs(&pos, &vel, &mass, &[30, 30, 30], 128);
+        assert_eq!(slabs.len(), 3);
+        let mut total_mass = 0.0f32;
+        for s in &slabs {
+            assert_eq!(s.n_local, 30);
+            total_mass += s.mass.iter().sum::<f32>();
+        }
+        assert!((total_mass - 1.0).abs() < 1e-4);
+        // slab boundaries: max x of slab i <= min x of slab i+1
+        for w in slabs.windows(2) {
+            let max0 = (0..w[0].n_local).map(|i| w[0].pos[i * 3]).fold(f32::MIN, f32::max);
+            let min1 = (0..w[1].n_local).map(|i| w[1].pos[i * 3]).fold(f32::MAX, f32::min);
+            assert!(max0 <= min1);
+        }
+    }
+
+    #[test]
+    fn padding_has_zero_mass() {
+        let (pos, vel, mass) = generate_ics(10, 4);
+        let slabs = split_slabs(&pos, &vel, &mass, &[10], 32);
+        assert!(slabs[0].mass[10..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "counts must cover all particles")]
+    fn split_rejects_bad_counts() {
+        let (pos, vel, mass) = generate_ics(10, 4);
+        split_slabs(&pos, &vel, &mass, &[4, 4], 32);
+    }
+
+    #[test]
+    fn rebalance_moves_work_to_fast_sites() {
+        // site 1 is twice as fast per particle → should gain particles
+        let new = rebalance(&[100, 100], &[2.0, 1.0], 10, 1000);
+        assert_eq!(new.iter().sum::<usize>(), 200);
+        assert!(new[1] > new[0], "{new:?}");
+    }
+
+    #[test]
+    fn rebalance_is_stable_when_balanced() {
+        let new = rebalance(&[100, 100, 100], &[1.0, 1.0, 1.0], 10, 1000);
+        assert_eq!(new, vec![100, 100, 100]);
+    }
+
+    #[test]
+    fn rebalance_respects_bounds_and_sum() {
+        let new = rebalance(&[100, 100], &[100.0, 1.0], 80, 120);
+        assert_eq!(new.iter().sum::<usize>(), 200);
+        assert!(new.iter().all(|&c| (80..=120).contains(&c)), "{new:?}");
+    }
+
+    #[test]
+    fn momentum_diag() {
+        let mut sp = SiteParticles::empty(4);
+        sp.n_local = 1;
+        sp.mass[0] = 2.0;
+        sp.vel[0..3].copy_from_slice(&[1.0, 0.0, -1.0]);
+        assert_eq!(sp.momentum(), [2.0, 0.0, -2.0]);
+    }
+}

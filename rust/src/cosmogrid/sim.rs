@@ -1,0 +1,330 @@
+//! CosmoGrid drivers: the distributed run (sites = threads, real MPWide
+//! ring over loopback TCP, per-step compute/comm accounting — Fig 1's
+//! red and black lines) and the single-site reference (same tile
+//! decomposition, no network, snapshot-write peaks — the teal line).
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::domain::{generate_ics, rebalance, split_slabs, SiteParticles};
+use super::site::Site;
+use crate::mpwide::{Path, PathConfig, PathListener};
+
+/// Configuration of a CosmoGrid run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Number of sites (supercomputers).
+    pub sites: usize,
+    /// Integration steps.
+    pub steps: usize,
+    /// Time step.
+    pub dt: f32,
+    /// Artifacts directory (contains `manifest.json`).
+    pub artifacts_dir: PathBuf,
+    /// TCP streams per inter-site path (paper: ≥32 over real WANs; the
+    /// loopback default keeps tests fast).
+    pub nstreams: usize,
+    /// Steps at which the reference run writes a snapshot to disk (the
+    /// two I/O peaks in Fig 1). Empty = never.
+    pub snapshot_steps: Vec<usize>,
+    /// Rebalance ownership every this many steps (0 = never).
+    pub rebalance_every: usize,
+    /// RNG seed for the initial conditions.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            sites: 3,
+            steps: 20,
+            dt: 1e-3,
+            artifacts_dir: crate::runtime::Runtime::default_dir(),
+            nstreams: 4,
+            snapshot_steps: vec![],
+            rebalance_every: 0,
+            seed: 42,
+        }
+    }
+}
+
+/// Per-step timing record (the quantities Fig 1 plots).
+#[derive(Debug, Clone, Copy)]
+pub struct StepTiming {
+    /// Step index.
+    pub step: usize,
+    /// Seconds in force evaluation + integration.
+    pub compute: f64,
+    /// Seconds in the inter-site exchange (0 for single-site).
+    pub comm: f64,
+    /// Seconds writing snapshots (0 unless a snapshot step).
+    pub io: f64,
+}
+
+impl StepTiming {
+    /// Total wallclock for the step.
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm + self.io
+    }
+}
+
+/// Result of a distributed run.
+#[derive(Debug)]
+pub struct DistributedReport {
+    /// Per-step timings (max across sites — the step completes when the
+    /// slowest site finishes, exactly how Fig 1 measures).
+    pub timings: Vec<StepTiming>,
+    /// Final particle state per site (for snapshots / validation).
+    pub sites: Vec<SiteParticles>,
+    /// Total bytes exchanged over MPWide.
+    pub bytes_exchanged: u64,
+}
+
+/// Sum of per-step totals.
+pub fn total_wallclock(timings: &[StepTiming]) -> f64 {
+    timings.iter().map(|t| t.total()).sum()
+}
+
+/// Communication fraction of the run (§1.2.1 reports ~10%).
+pub fn comm_fraction(timings: &[StepTiming]) -> f64 {
+    let comm: f64 = timings.iter().map(|t| t.comm).sum();
+    let total = total_wallclock(timings);
+    if total > 0.0 {
+        comm / total
+    } else {
+        0.0
+    }
+}
+
+/// Single-site reference: all blocks evaluated in one process with the
+/// identical tile decomposition (site-block × site-block), so the FLOP
+/// count matches the distributed run exactly; `snapshot_steps` incur
+/// real disk writes (the Fig 1 peaks).
+pub fn run_single_site(cfg: &SimConfig) -> Result<(Vec<StepTiming>, Vec<SiteParticles>)> {
+    let rt = crate::runtime::Runtime::open(&cfg.artifacts_dir)?;
+    let n_pad = rt.manifest().config_usize("nbody_n")?;
+    let total_particles = n_pad * cfg.sites;
+    let (pos, vel, mass) = generate_ics(total_particles, cfg.seed);
+    let counts = vec![n_pad; cfg.sites];
+    let blocks = split_slabs(&pos, &vel, &mass, &counts, n_pad);
+
+    let mut sites: Vec<Site> = blocks
+        .into_iter()
+        .enumerate()
+        .map(|(i, b)| Site::new(i, &cfg.artifacts_dir, b))
+        .collect::<Result<_>>()?;
+
+    let snap_dir = std::env::temp_dir().join(format!("cosmogrid-ref-{}", std::process::id()));
+    std::fs::create_dir_all(&snap_dir)?;
+
+    let mut timings = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let t0 = Instant::now();
+        // row i: acceleration of site i's block from every block j
+        let mut accs: Vec<Vec<f32>> = Vec::with_capacity(cfg.sites);
+        for i in 0..cfg.sites {
+            let mut acc = vec![0.0f32; n_pad * 3];
+            for j in 0..cfg.sites {
+                let (src_pos, src_mass) =
+                    (sites[j].particles.pos.clone(), sites[j].particles.mass.clone());
+                let a = sites[i].accel_from(&src_pos, &src_mass)?;
+                for (dst, s) in acc.iter_mut().zip(&a) {
+                    *dst += s;
+                }
+            }
+            accs.push(acc);
+        }
+        for (site, acc) in sites.iter_mut().zip(&accs) {
+            site.step(acc, cfg.dt)?;
+        }
+        let compute = t0.elapsed().as_secs_f64();
+
+        // snapshot peaks: a genuine disk write of the whole state
+        let mut io = 0.0;
+        if cfg.snapshot_steps.contains(&step) {
+            let t_io = Instant::now();
+            let mut blob = Vec::with_capacity(total_particles * 24 * 4);
+            for s in &sites {
+                blob.extend_from_slice(&s.exchange_block());
+                // pad the write up to a meaningful size so the peak is
+                // visible at laptop scale (the paper wrote 160 GB)
+                blob.extend_from_slice(&vec![0u8; 4 << 20]);
+            }
+            std::fs::write(snap_dir.join(format!("snap{step}.dat")), &blob)?;
+            io = t_io.elapsed().as_secs_f64();
+        }
+        timings.push(StepTiming { step, compute, comm: 0.0, io });
+    }
+    let _ = std::fs::remove_dir_all(&snap_dir);
+    Ok((timings, sites.into_iter().map(|s| s.particles).collect()))
+}
+
+/// Distributed run: `cfg.sites` coordinator threads, each owning a PJRT
+/// runtime, connected in a ring of real MPWide paths over loopback. Each
+/// step does a ring all-gather of (pos, mass) blocks (`MPW_SendRecv`
+/// semantics), accumulates cross-site gravity, and integrates.
+pub fn run_distributed(cfg: &SimConfig) -> Result<DistributedReport> {
+    let s = cfg.sites;
+    anyhow::ensure!(s >= 2, "distributed run needs >= 2 sites");
+    let rt = crate::runtime::Runtime::open(&cfg.artifacts_dir)?;
+    let n_pad = rt.manifest().config_usize("nbody_n")?;
+    drop(rt);
+    let total_particles = n_pad * s;
+    let (pos, vel, mass) = generate_ics(total_particles, cfg.seed);
+    let counts = vec![n_pad; s];
+    let blocks = split_slabs(&pos, &vel, &mass, &counts, n_pad);
+
+    // ring wiring: site i listens; site i connects to site (i+1) % s
+    let mut pcfg = PathConfig::with_streams(cfg.nstreams);
+    pcfg.autotune = false; // loopback; keep path creation instant
+    let mut listeners: Vec<PathListener> = (0..s)
+        .map(|_| PathListener::bind(0, pcfg.clone()))
+        .collect::<crate::mpwide::Result<_>>()
+        .context("binding ring listeners")?;
+    let ports: Vec<u16> = listeners.iter().map(|l| l.port()).collect();
+
+    let (tx, rx) = mpsc::channel::<Result<SiteReport>>();
+    std::thread::scope(|scope| {
+        for (rank, (block, mut listener)) in
+            blocks.into_iter().zip(listeners.drain(..)).enumerate()
+        {
+            let tx = tx.clone();
+            let cfg = cfg.clone();
+            let next_port = ports[(rank + 1) % s];
+            scope.spawn(move || {
+                let r = run_site(rank, block, &mut listener, next_port, &cfg, n_pad);
+                let _ = tx.send(r);
+            });
+        }
+        drop(tx);
+    });
+
+    let mut reports: Vec<SiteReport> = Vec::with_capacity(s);
+    for r in rx.iter() {
+        reports.push(r?);
+    }
+    anyhow::ensure!(reports.len() == s, "lost site reports");
+    reports.sort_by_key(|r| r.rank);
+
+    // per-step: the step finishes when the slowest site does
+    let steps = reports[0].timings.len();
+    let mut timings = Vec::with_capacity(steps);
+    for k in 0..steps {
+        let compute =
+            reports.iter().map(|r| r.timings[k].compute).fold(0.0f64, f64::max);
+        let comm = reports.iter().map(|r| r.timings[k].comm).fold(0.0f64, f64::max);
+        timings.push(StepTiming { step: k, compute, comm, io: 0.0 });
+    }
+    let bytes = reports.iter().map(|r| r.bytes).sum();
+    Ok(DistributedReport {
+        timings,
+        sites: reports.into_iter().map(|r| r.particles).collect(),
+        bytes_exchanged: bytes,
+    })
+}
+
+struct SiteReport {
+    rank: usize,
+    timings: Vec<StepTiming>,
+    particles: SiteParticles,
+    bytes: u64,
+}
+
+fn run_site(
+    rank: usize,
+    block: SiteParticles,
+    listener: &mut PathListener,
+    next_port: u16,
+    cfg: &SimConfig,
+    n_pad: usize,
+) -> Result<SiteReport> {
+    let s = cfg.sites;
+    let mut site = Site::new(rank, &cfg.artifacts_dir, block)?;
+
+    // connect to the next site while accepting from the previous — both
+    // concurrently, or the ring deadlocks
+    let mut pcfg = PathConfig::with_streams(cfg.nstreams);
+    pcfg.autotune = false;
+    let (path_next, path_prev) = std::thread::scope(
+        |sc| -> Result<(Path, Path)> {
+            let connect = sc.spawn(|| Path::connect("127.0.0.1", next_port, pcfg.clone()));
+            let prev = listener.accept_path()?;
+            let next = connect.join().expect("connect thread")?;
+            Ok((next, prev))
+        },
+    )?;
+
+    let mut timings = Vec::with_capacity(cfg.steps);
+    let mut bytes = 0u64;
+    let mut times_buf: Vec<f64> = vec![0.0; s];
+
+    for step in 0..cfg.steps {
+        // local gravity
+        let t_c0 = Instant::now();
+        let mut acc = site.self_accel()?;
+        let mut compute = t_c0.elapsed().as_secs_f64();
+
+        // ring all-gather: pass blocks around s-1 times (MPW_SendRecv)
+        let mut block = site.exchange_block();
+        let mut comm = 0.0;
+        for _ in 1..s {
+            let t_x0 = Instant::now();
+            let mut incoming = vec![0u8; block.len()];
+            // send to next while receiving from prev — concurrent, or the
+            // ring deadlocks once blocks outgrow socket buffers
+            std::thread::scope(|sc| -> Result<()> {
+                let tx = sc.spawn(|| path_next.send(&block));
+                path_prev.recv(&mut incoming)?;
+                tx.join().expect("ring send thread")?;
+                Ok(())
+            })?;
+            comm += t_x0.elapsed().as_secs_f64();
+            bytes += block.len() as u64;
+
+            let t_c = Instant::now();
+            let (rpos, rmass) = Site::decode_block(&incoming, n_pad)?;
+            let a = site.accel_from(&rpos, &rmass)?;
+            for (dst, sa) in acc.iter_mut().zip(&a) {
+                *dst += sa;
+            }
+            compute += t_c.elapsed().as_secs_f64();
+            block = incoming;
+        }
+
+        let t_c1 = Instant::now();
+        site.step(&acc, cfg.dt)?;
+        compute += t_c1.elapsed().as_secs_f64();
+
+        // optional load-balance bookkeeping (counts are equal in this
+        // driver, but the rule is exercised and reported)
+        if cfg.rebalance_every > 0 && step % cfg.rebalance_every == cfg.rebalance_every - 1 {
+            times_buf[rank] = compute;
+            let counts = vec![site.particles.n_local; s];
+            let _proposal = rebalance(&counts, &times_buf, 1, n_pad);
+        }
+
+        timings.push(StepTiming { step, compute, comm, io: 0.0 });
+    }
+    Ok(SiteReport { rank, timings, particles: site.particles, bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_fraction_math() {
+        let t = vec![
+            StepTiming { step: 0, compute: 0.9, comm: 0.1, io: 0.0 },
+            StepTiming { step: 1, compute: 0.8, comm: 0.2, io: 0.0 },
+        ];
+        assert!((total_wallclock(&t) - 2.0).abs() < 1e-12);
+        assert!((comm_fraction(&t) - 0.15).abs() < 1e-12);
+        assert_eq!(comm_fraction(&[]), 0.0);
+    }
+
+    // PJRT-backed end-to-end runs live in rust/tests/apps_end_to_end.rs.
+}

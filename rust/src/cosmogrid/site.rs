@@ -1,0 +1,129 @@
+//! Per-site state: one "supercomputer" in the CosmoGrid run — a thread
+//! owning its own PJRT runtime (the xla wrappers are not `Send`), its
+//! particle block, and the compiled AOT executables.
+
+use anyhow::Result;
+
+use super::domain::SiteParticles;
+use crate::runtime::{Executable, Runtime};
+
+/// One site of the distributed run.
+pub struct Site {
+    /// Site index (also its colour in the Fig 2 snapshot).
+    pub rank: usize,
+    /// This site's particles (padded to the artifact size).
+    pub particles: SiteParticles,
+    accel: Executable,
+    kick_drift: Executable,
+    kinetic: Executable,
+}
+
+impl Site {
+    /// Open the runtime and compile the three N-body artifacts.
+    pub fn new(rank: usize, artifacts_dir: &std::path::Path, particles: SiteParticles) -> Result<Site> {
+        let rt = Runtime::open(artifacts_dir)?;
+        let n = rt.manifest().config_usize("nbody_n")?;
+        anyhow::ensure!(
+            particles.n_pad == n,
+            "particle block padded to {} but artifacts expect {n}",
+            particles.n_pad
+        );
+        Ok(Site {
+            rank,
+            particles,
+            accel: rt.load("nbody_accel")?,
+            kick_drift: rt.load("nbody_kick_drift")?,
+            kinetic: rt.load("nbody_kinetic")?,
+        })
+    }
+
+    /// Acceleration of this site's particles due to the given source
+    /// block (local↔local or local↔remote — the superposition property is
+    /// tested in python/tests/test_model.py).
+    pub fn accel_from(&self, src_pos: &[f32], src_mass: &[f32]) -> Result<Vec<f32>> {
+        let out = self.accel.run_f32(&[&self.particles.pos, src_pos, src_mass])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Self-gravity of the local block.
+    pub fn self_accel(&self) -> Result<Vec<f32>> {
+        self.accel_from(&self.particles.pos.clone(), &self.particles.mass.clone())
+    }
+
+    /// Kick-drift update with the accumulated acceleration.
+    pub fn step(&mut self, acc: &[f32], dt: f32) -> Result<()> {
+        let out = self.kick_drift.run_f32(&[
+            &self.particles.pos,
+            &self.particles.vel,
+            acc,
+            &[dt],
+        ])?;
+        let mut it = out.into_iter();
+        self.particles.pos = it.next().unwrap();
+        self.particles.vel = it.next().unwrap();
+        Ok(())
+    }
+
+    /// Kinetic energy of the block (diagnostics; zero-mass padding
+    /// contributes nothing).
+    pub fn kinetic(&self) -> Result<f32> {
+        let out = self.kinetic.run_f32(&[&self.particles.vel, &self.particles.mass])?;
+        Ok(out[0][0])
+    }
+
+    /// Serialize (pos, mass) for the ring exchange: the data another
+    /// site needs to compute our gravity on its particles.
+    pub fn exchange_block(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.particles.pos.len() * 4 + self.particles.mass.len() * 4);
+        for v in &self.particles.pos {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &self.particles.mass {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Deserialize a peer's exchange block into (pos, mass).
+    pub fn decode_block(buf: &[u8], n_pad: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        anyhow::ensure!(buf.len() == n_pad * 16, "exchange block size {} != {}", buf.len(), n_pad * 16);
+        let read = |range: std::ops::Range<usize>| -> Vec<f32> {
+            buf[range]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        Ok((read(0..n_pad * 12), read(n_pad * 12..n_pad * 16)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cosmogrid::domain::SiteParticles;
+
+    #[test]
+    fn exchange_block_roundtrip() {
+        let mut sp = SiteParticles::empty(4);
+        sp.pos[0] = 1.5;
+        sp.pos[11] = -2.25;
+        sp.mass[3] = 0.75;
+        sp.n_local = 4;
+        // fake a Site without PJRT: test the pure serialization directly
+        let mut buf = Vec::new();
+        for v in &sp.pos {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in &sp.mass {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        let (pos, mass) = Site::decode_block(&buf, 4).unwrap();
+        assert_eq!(pos, sp.pos);
+        assert_eq!(mass, sp.mass);
+    }
+
+    #[test]
+    fn decode_rejects_bad_size() {
+        assert!(Site::decode_block(&[0u8; 10], 4).is_err());
+    }
+}

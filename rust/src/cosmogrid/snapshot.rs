@@ -1,0 +1,116 @@
+//! Snapshot rendering (paper Fig 2): project the distributed simulation's
+//! particles to a 2-D image, coloured by the site hosting them — green /
+//! blue / red exactly as the paper colours Espoo / Edinburgh / Amsterdam.
+//! Output is a binary PPM (P6), dependency-free.
+
+use std::io::Write;
+use std::path::Path as FsPath;
+
+use anyhow::Result;
+
+use super::domain::SiteParticles;
+
+/// Site colour palette (paper Fig 2: green, blue, red; extras cycle).
+pub const SITE_COLORS: [[u8; 3]; 6] = [
+    [40, 220, 70],   // green  (Espoo)
+    [70, 110, 255],  // blue   (Edinburgh)
+    [240, 60, 50],   // red    (Amsterdam)
+    [240, 200, 40],  // yellow
+    [200, 60, 220],  // magenta
+    [60, 220, 220],  // cyan
+];
+
+/// Render particle blocks to an RGB buffer of `size`×`size`, projecting
+/// (x, y) over `[-extent, extent]²` with additive brightness.
+pub fn render(blocks: &[SiteParticles], size: usize, extent: f32) -> Vec<u8> {
+    let mut img = vec![0u8; size * size * 3];
+    for (si, b) in blocks.iter().enumerate() {
+        let color = SITE_COLORS[si % SITE_COLORS.len()];
+        for i in 0..b.n_local {
+            let x = b.pos[i * 3];
+            let y = b.pos[i * 3 + 1];
+            let px = ((x / extent + 1.0) * 0.5 * (size as f32 - 1.0)).round();
+            let py = ((1.0 - (y / extent + 1.0) * 0.5) * (size as f32 - 1.0)).round();
+            if px < 0.0 || py < 0.0 || px >= size as f32 || py >= size as f32 {
+                continue;
+            }
+            let idx = (py as usize * size + px as usize) * 3;
+            for c in 0..3 {
+                img[idx + c] = img[idx + c].saturating_add(color[c] / 2);
+            }
+        }
+    }
+    img
+}
+
+/// Write an RGB buffer as binary PPM (P6).
+pub fn write_ppm(path: &FsPath, img: &[u8], size: usize) -> Result<()> {
+    anyhow::ensure!(img.len() == size * size * 3, "image buffer size mismatch");
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{size} {size}\n255\n")?;
+    f.write_all(img)?;
+    Ok(())
+}
+
+/// Convenience: render and write in one call (the Fig 2 artifact).
+pub fn snapshot(blocks: &[SiteParticles], path: &FsPath, size: usize, extent: f32) -> Result<()> {
+    write_ppm(path, &render(blocks, size, extent), size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_particle_block(x: f32, y: f32) -> SiteParticles {
+        let mut b = SiteParticles::empty(4);
+        b.n_local = 1;
+        b.pos[0] = x;
+        b.pos[1] = y;
+        b.mass[0] = 1.0;
+        b
+    }
+
+    #[test]
+    fn particle_lands_on_expected_pixel() {
+        let img = render(&[one_particle_block(0.0, 0.0)], 11, 1.0);
+        // center pixel (5,5) should be coloured with site 0's green
+        let idx = (5 * 11 + 5) * 3;
+        assert!(img[idx + 1] > 0, "green channel set");
+        let lit: usize = img.iter().filter(|&&v| v > 0).count();
+        assert!(lit <= 3, "only one pixel lit");
+    }
+
+    #[test]
+    fn sites_use_distinct_colors() {
+        let b0 = one_particle_block(-0.5, 0.0);
+        let b1 = one_particle_block(0.5, 0.0);
+        let img = render(&[b0, b1], 21, 1.0);
+        // find the two lit pixels and compare dominant channels
+        let mut colors = Vec::new();
+        for p in img.chunks(3) {
+            if p.iter().any(|&v| v > 0) {
+                colors.push([p[0], p[1], p[2]]);
+            }
+        }
+        assert_eq!(colors.len(), 2);
+        assert_ne!(colors[0], colors[1]);
+    }
+
+    #[test]
+    fn out_of_frame_particles_are_skipped() {
+        let img = render(&[one_particle_block(5.0, 5.0)], 8, 1.0);
+        assert!(img.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn ppm_file_has_header_and_size() {
+        let dir = std::env::temp_dir().join(format!("snap-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.ppm");
+        snapshot(&[one_particle_block(0.0, 0.0)], &p, 16, 1.0).unwrap();
+        let data = std::fs::read(&p).unwrap();
+        assert!(data.starts_with(b"P6\n16 16\n255\n"));
+        assert_eq!(data.len(), 13 + 16 * 16 * 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

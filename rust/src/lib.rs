@@ -1,0 +1,35 @@
+//! # MPWide — light-weight message passing over wide area networks
+//!
+//! Reproduction of *MPWide: a light-weight library for efficient message
+//! passing over wide area networks* (Groen, Rieder, Portegies Zwart, JORS
+//! 2013, DOI 10.5334/jors.ah) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * [`mpwide`] — the library itself: communication **paths** made of 1–256
+//!   parallel TCP streams, chunked + paced sends, TCP window tuning, an
+//!   autotuner, dynamic-size messaging, non-blocking operations, relays, and
+//!   a C-style facade mirroring the paper's Table 2 API.
+//! * [`netsim`] — a flow-level discrete-event TCP simulator standing in for
+//!   the paper's wide-area testbeds (see DESIGN.md §2), with link profiles
+//!   named after the paper's endpoint pairs.
+//! * [`baselines`] — models of the comparator tools from the paper's
+//!   evaluation (scp, ZeroMQ, MUSCLE 1, Aspera).
+//! * [`tools`] — the shipped utilities: Forwarder, mpw-cp, DataGather and
+//!   the MPWTest two-endpoint benchmark.
+//! * [`runtime`] — PJRT CPU client loading AOT-compiled JAX/Pallas payloads
+//!   (`artifacts/*.hlo.txt`); python never runs on the request path.
+//! * [`cosmogrid`] / [`bloodflow`] — the paper's two distributed
+//!   applications (§1.2.1, §1.2.2), rebuilt at laptop scale on top of the
+//!   runtime and coordinated over MPWide paths.
+//! * [`benchlib`] — a minimal measurement harness used by `cargo bench`
+//!   targets (one per paper table/figure).
+
+pub mod baselines;
+pub mod benchlib;
+pub mod bloodflow;
+pub mod cli;
+pub mod cosmogrid;
+pub mod mpwide;
+pub mod netsim;
+pub mod runtime;
+pub mod tools;
+pub mod util;

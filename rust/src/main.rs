@@ -1,0 +1,244 @@
+//! `mpwide` — the command-line launcher for the MPWide reproduction.
+//!
+//! Subcommands map to the tools and applications the paper ships:
+//!
+//! ```text
+//! mpwide mpwtest-serve --port P --streams N        MPWTest slave endpoint
+//! mpwide mpwtest HOST --port P --streams N         MPWTest master (benchmark)
+//! mpwide forward --port P --streams N [--delay-ms D]   Forwarder (Fig 3)
+//! mpwide cp-serve --port P --dir DIR --streams N   mpw-cp receiving end
+//! mpwide cp FILE HOST [NAME] --port P --streams N  mpw-cp sender
+//! mpwide gather-serve --port P --dir DIR           DataGather destination
+//! mpwide gather DIR HOST --port P [--watch SECS]   DataGather source
+//! mpwide cosmogrid [--sites S --steps K --snapshot F]  distributed N-body
+//! mpwide bloodflow [--exchanges E --no-hiding]     coupled multiscale run
+//! mpwide dns HOST                                  MPW_DNSResolve
+//! ```
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use mpwide::bloodflow::{run_coupled, CouplingConfig};
+use mpwide::cli::Args;
+use mpwide::cosmogrid::{self, SimConfig};
+use mpwide::mpwide::{Path, PathConfig, PathListener};
+use mpwide::tools::{datagather, forwarder, mpwcp, mpwtest};
+use mpwide::util::{human_rate, Rng};
+
+fn client_cfg(args: &Args) -> PathConfig {
+    let mut cfg = PathConfig::with_streams(args.opt_parse("streams", 1usize));
+    cfg.autotune = !args.flag("no-autotune");
+    if let Some(c) = args.opt("chunk") {
+        cfg.chunk_size = c.parse().unwrap_or(cfg.chunk_size);
+    }
+    if let Some(w) = args.opt("window") {
+        cfg.tcp_window = w.parse().ok();
+    }
+    if let Some(p) = args.opt("pacing") {
+        cfg.pacing_rate = p.parse().ok();
+    }
+    cfg
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.command.as_str() {
+        "mpwtest-serve" => {
+            let port = args.opt_parse("port", 6010u16);
+            let mut listener = PathListener::bind(port, client_cfg(&args))?;
+            eprintln!("MPWTest slave on port {}", listener.port());
+            let path = listener.accept_path()?;
+            mpwtest::run_slave(&path)?;
+        }
+        "mpwtest" => {
+            let host = args.pos(0).context("usage: mpwide mpwtest HOST --port P")?;
+            let port = args.opt_parse("port", 6010u16);
+            let path = Path::connect(host, port, client_cfg(&args))?;
+            let rows = mpwtest::run_master(&path, &mpwtest::SIZES, mpwtest::default_reps)?;
+            println!("{:>12} {:>8} {:>12} {:>14}", "size", "reps", "secs/xchg", "rate/dir");
+            for r in rows {
+                println!(
+                    "{:>12} {:>8} {:>12.5} {:>14}",
+                    r.size,
+                    r.reps,
+                    r.seconds,
+                    human_rate(r.rate)
+                );
+            }
+        }
+        "forward" => {
+            let port = args.opt_parse("port", 6020u16);
+            let streams = args.opt_parse("streams", 1usize);
+            let delay = args
+                .opt("delay-ms")
+                .and_then(|d| d.parse::<f64>().ok())
+                .map(|ms| Duration::from_secs_f64(ms / 1e3));
+            let mut cfg = PathConfig::with_streams(streams);
+            cfg.autotune = false;
+            let mut listener = PathListener::bind(port, cfg)?;
+            eprintln!("forwarder on port {} ({} streams)", listener.port(), streams);
+            let fcfg = forwarder::ForwarderConfig { nstreams: streams, delay, max_bytes: None };
+            let stats = forwarder::run(&mut listener, &fcfg)?;
+            eprintln!("relayed {} + {} bytes", stats.a_to_b, stats.b_to_a);
+        }
+        "cp-serve" => {
+            let port = args.opt_parse("port", 6030u16);
+            let dir = args.opt("dir").unwrap_or(".").to_string();
+            let mut listener = PathListener::bind(port, client_cfg(&args))?;
+            eprintln!("mpw-cp server on port {} -> {dir}", listener.port());
+            let path = listener.accept_path()?;
+            let n = mpwcp::serve(&path, std::path::Path::new(&dir))?;
+            eprintln!("received {n} files");
+        }
+        "cp" => {
+            let file = args.pos(0).context("usage: mpwide cp FILE HOST [NAME]")?;
+            let host = args.pos(1).context("usage: mpwide cp FILE HOST [NAME]")?;
+            let name = args.pos(2).map(str::to_string).unwrap_or_else(|| {
+                std::path::Path::new(file)
+                    .file_name()
+                    .map(|f| f.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| "file".into())
+            });
+            let port = args.opt_parse("port", 6030u16);
+            let path = Path::connect(host, port, client_cfg(&args))?;
+            let stats = mpwcp::send_file(&path, std::path::Path::new(file), &name)?;
+            println!(
+                "{} bytes in {:.3}s = {}",
+                stats.bytes,
+                stats.seconds,
+                human_rate(stats.bytes as f64 / stats.seconds.max(1e-9))
+            );
+        }
+        "gather-serve" => {
+            let port = args.opt_parse("port", 6040u16);
+            let dir = args.opt("dir").unwrap_or("gathered").to_string();
+            let mut cfg = PathConfig::with_streams(args.opt_parse("streams", 1usize));
+            cfg.autotune = false;
+            let mut listener = PathListener::bind(port, cfg)?;
+            eprintln!("DataGather destination on port {} -> {dir}", listener.port());
+            let path = listener.accept_path()?;
+            while let Ok(n) = datagather::serve_once(&path, std::path::Path::new(&dir)) {
+                eprintln!("sync round: {n} files");
+            }
+        }
+        "gather" => {
+            let dir = args.pos(0).context("usage: mpwide gather DIR HOST")?;
+            let host = args.pos(1).context("usage: mpwide gather DIR HOST")?;
+            let port = args.opt_parse("port", 6040u16);
+            let watch = args.opt("watch").and_then(|w| w.parse::<f64>().ok());
+            let mut cfg = PathConfig::with_streams(args.opt_parse("streams", 1usize));
+            cfg.autotune = false;
+            let path = Path::connect(host, port, cfg)?;
+            loop {
+                let stats = datagather::sync_once(&path, std::path::Path::new(dir))?;
+                eprintln!(
+                    "scanned {} shipped {} ({} bytes)",
+                    stats.scanned, stats.shipped, stats.bytes
+                );
+                match watch {
+                    Some(secs) => std::thread::sleep(Duration::from_secs_f64(secs)),
+                    None => break,
+                }
+            }
+        }
+        "cosmogrid" => {
+            let cfg = SimConfig {
+                sites: args.opt_parse("sites", 3usize),
+                steps: args.opt_parse("steps", 20usize),
+                nstreams: args.opt_parse("streams", 4usize),
+                ..Default::default()
+            };
+            eprintln!("distributed CosmoGrid: {} sites × {} steps", cfg.sites, cfg.steps);
+            let report = cosmogrid::run_distributed(&cfg)?;
+            let total = cosmogrid::sim::total_wallclock(&report.timings);
+            let comm = cosmogrid::sim::comm_fraction(&report.timings);
+            println!(
+                "total {:.2}s, comm fraction {:.1}%, {} bytes exchanged",
+                total,
+                comm * 100.0,
+                report.bytes_exchanged
+            );
+            if let Some(snap) = args.opt("snapshot") {
+                cosmogrid::snapshot::snapshot(
+                    &report.sites,
+                    std::path::Path::new(snap),
+                    512,
+                    0.8,
+                )?;
+                println!("snapshot written to {snap}");
+            }
+        }
+        "bloodflow" => {
+            let cfg = CouplingConfig {
+                exchanges: args.opt_parse("exchanges", 50usize),
+                substeps: args.opt_parse("substeps", 12usize),
+                latency_hiding: !args.flag("no-hiding"),
+                ..Default::default()
+            };
+            let report = run_coupled(&cfg)?;
+            println!(
+                "{} exchanges, total {:.2}s, overhead {:.2} ms/exchange ({:.2}% of runtime)",
+                report.exchanges,
+                report.total_seconds,
+                report.overhead_per_exchange * 1e3,
+                report.overhead_fraction * 100.0
+            );
+        }
+        "dns" => {
+            let host = args.pos(0).context("usage: mpwide dns HOST")?;
+            println!("{}", mpwide::mpwide::dns::dns_resolve(host)?);
+        }
+        "selftest" => {
+            // MPWUnitTests analog: a quick in-process functional pass
+            let mut cfg = PathConfig::with_streams(4);
+            cfg.autotune = false;
+            let mut listener = PathListener::bind(0, cfg.clone())?;
+            let port = listener.port();
+            let t = std::thread::spawn(move || -> Result<()> {
+                let p = Path::connect("127.0.0.1", port, cfg)?;
+                let mut msg = vec![0u8; 1 << 20];
+                Rng::new(2).fill_bytes(&mut msg);
+                p.send(&msg)?;
+                p.barrier()?;
+                Ok(())
+            });
+            let p = listener.accept_path()?;
+            let mut buf = vec![0u8; 1 << 20];
+            p.recv(&mut buf)?;
+            p.barrier()?;
+            t.join().expect("client thread")?;
+            let mut want = vec![0u8; 1 << 20];
+            Rng::new(2).fill_bytes(&mut want);
+            anyhow::ensure!(buf == want, "selftest payload mismatch");
+            println!("selftest OK");
+        }
+        "" | "help" | "--help" => {
+            print!("{HELP}");
+        }
+        other => bail!("unknown subcommand '{other}' (try: mpwide help)"),
+    }
+    Ok(())
+}
+
+const HELP: &str = r#"mpwide — light-weight message passing over wide area networks
+(reproduction of Groen, Rieder & Portegies Zwart, JORS 2013)
+
+Usage: mpwide <command> [args] [--options]
+
+Commands:
+  mpwtest-serve --port P --streams N    benchmark slave endpoint
+  mpwtest HOST --port P --streams N     benchmark master (prints table)
+  forward --port P --streams N [--delay-ms D]   user-space forwarder
+  cp-serve --port P --dir DIR           mpw-cp receiving end
+  cp FILE HOST [NAME] --port P --streams N --chunk C   mpw-cp sender
+  gather-serve --port P --dir DIR       DataGather destination
+  gather DIR HOST --port P [--watch S]  DataGather source (one-way sync)
+  cosmogrid [--sites S --steps K --snapshot F.ppm]   distributed N-body
+  bloodflow [--exchanges E --substeps K --no-hiding] coupled multiscale
+  dns HOST                              resolve a hostname locally
+  selftest                              quick functional pass
+
+Common options: --streams N  --chunk BYTES  --window BYTES  --pacing B/S
+                --no-autotune
+"#;

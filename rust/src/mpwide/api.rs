@@ -1,0 +1,327 @@
+//! C-style facade mirroring the paper's Table 2 API.
+//!
+//! The original MPWide exposes free functions over a global connection
+//! table (`MPW_Init`, `MPW_CreatePath`, `MPW_Send`, …). This module
+//! provides the same surface — snake-cased — over a process-global
+//! registry of [`Path`]s and non-blocking handles, so application code can
+//! be ported one-to-one. New Rust code is encouraged to use [`Path`]
+//! directly; this facade exists for API fidelity and for the CLI tools.
+//!
+//! | Paper (Table 2)          | Here                        |
+//! |--------------------------|-----------------------------|
+//! | `MPW_Init`               | [`mpw_init`]                |
+//! | `MPW_Finalize`           | [`mpw_finalize`]            |
+//! | `MPW_CreatePath`         | [`mpw_create_path`] / [`mpw_serve_path`] |
+//! | `MPW_DestroyPath`        | [`mpw_destroy_path`]        |
+//! | `MPW_Send` / `MPW_Recv`  | [`mpw_send`] / [`mpw_recv`] |
+//! | `MPW_SendRecv`           | [`mpw_send_recv`]           |
+//! | `MPW_DSendRecv`          | [`mpw_dsend_recv`]          |
+//! | `MPW_Barrier`            | [`mpw_barrier`]             |
+//! | `MPW_Cycle` / `MPW_DCycle` | [`mpw_cycle`] / [`mpw_dcycle`] |
+//! | `MPW_Relay`              | [`mpw_relay`]               |
+//! | `MPW_ISendRecv`          | [`mpw_isend_recv`]          |
+//! | `MPW_Has_NBE_Finished`   | [`mpw_has_nbe_finished`]    |
+//! | `MPW_Wait`               | [`mpw_wait`]                |
+//! | `MPW_setChunkSize`       | [`mpw_set_chunk_size`]      |
+//! | `MPW_setPacingRate`      | [`mpw_set_pacing_rate`]     |
+//! | `MPW_setWin`             | [`mpw_set_win`]             |
+//! | `MPW_setAutoTuning`      | [`mpw_set_autotuning`]      |
+//! | `MPW_DNSResolve`         | [`mpw_dns_resolve`]         |
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use super::config::PathConfig;
+use super::errors::{MpwError, Result};
+use super::nonblocking::{NbeHandle, NbeOp};
+use super::path::{Path, PathListener};
+use super::relay;
+
+struct Context {
+    paths: HashMap<i32, Arc<Path>>,
+    handles: HashMap<i32, NbeHandle>,
+    listeners: HashMap<u16, PathListener>,
+    next_path: i32,
+    next_handle: i32,
+}
+
+static CTX: Lazy<Mutex<Context>> = Lazy::new(|| {
+    Mutex::new(Context {
+        paths: HashMap::new(),
+        handles: HashMap::new(),
+        listeners: HashMap::new(),
+        next_path: 0,
+        next_handle: 0,
+    })
+});
+
+/// `MPW_Init`: reset the global context (idempotent).
+pub fn mpw_init() {
+    let mut c = CTX.lock().unwrap();
+    c.paths.clear();
+    c.handles.clear();
+    c.listeners.clear();
+    c.next_path = 0;
+    c.next_handle = 0;
+}
+
+/// `MPW_Finalize`: close all paths, listeners and in-flight handles.
+pub fn mpw_finalize() {
+    mpw_init();
+}
+
+fn with_path<T>(id: i32, f: impl FnOnce(&Arc<Path>) -> Result<T>) -> Result<T> {
+    let p = {
+        let c = CTX.lock().unwrap();
+        c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?
+    };
+    f(&p)
+}
+
+/// `MPW_CreatePath` (connecting side): open a path of `nstreams` tcp
+/// streams to `host:port`. Returns the path id.
+pub fn mpw_create_path(host: &str, port: u16, nstreams: usize) -> Result<i32> {
+    mpw_create_path_cfg(host, port, PathConfig::with_streams(nstreams))
+}
+
+/// `MPW_CreatePath` with a full configuration.
+pub fn mpw_create_path_cfg(host: &str, port: u16, cfg: PathConfig) -> Result<i32> {
+    let path = Path::connect(host, port, cfg)?;
+    let mut c = CTX.lock().unwrap();
+    let id = c.next_path;
+    c.next_path += 1;
+    c.paths.insert(id, Arc::new(path));
+    Ok(id)
+}
+
+/// `MPW_CreatePath` (accepting side): listen on `port` and accept one
+/// complete path. The listener stays registered so several paths can be
+/// accepted from the same port (forwarder usage).
+pub fn mpw_serve_path(port: u16, nstreams: usize) -> Result<i32> {
+    mpw_serve_path_cfg(port, PathConfig::with_streams(nstreams))
+}
+
+/// Accepting side with a full configuration.
+pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
+    // Hold the context lock only around registry mutation, not accept().
+    let mut listener = {
+        let mut c = CTX.lock().unwrap();
+        match c.listeners.remove(&port) {
+            Some(l) => l,
+            None => PathListener::bind(port, cfg.clone())?,
+        }
+    };
+    let real_port = listener.port();
+    let path = listener.accept_path()?;
+    let mut c = CTX.lock().unwrap();
+    c.listeners.insert(real_port, listener);
+    let id = c.next_path;
+    c.next_path += 1;
+    c.paths.insert(id, Arc::new(path));
+    Ok(id)
+}
+
+/// `MPW_DestroyPath`: close and unregister a path.
+pub fn mpw_destroy_path(id: i32) -> Result<()> {
+    let mut c = CTX.lock().unwrap();
+    c.paths.remove(&id).map(|_| ()).ok_or(MpwError::UnknownId(id))
+}
+
+/// `MPW_Send`.
+pub fn mpw_send(id: i32, buf: &[u8]) -> Result<usize> {
+    with_path(id, |p| p.send(buf))
+}
+
+/// `MPW_Recv`.
+pub fn mpw_recv(id: i32, buf: &mut [u8]) -> Result<usize> {
+    with_path(id, |p| p.recv(buf))
+}
+
+/// `MPW_SendRecv`.
+pub fn mpw_send_recv(id: i32, sbuf: &[u8], rbuf: &mut [u8]) -> Result<()> {
+    with_path(id, |p| p.send_recv(sbuf, rbuf))
+}
+
+/// `MPW_DSendRecv` (dynamic sizes; returns the received message).
+pub fn mpw_dsend_recv(id: i32, sbuf: &[u8]) -> Result<Vec<u8>> {
+    with_path(id, |p| {
+        let mut cache = Vec::new();
+        let n = p.dsend_recv(sbuf, &mut cache)?;
+        cache.truncate(n);
+        Ok(cache)
+    })
+}
+
+/// `MPW_Barrier`.
+pub fn mpw_barrier(id: i32) -> Result<()> {
+    with_path(id, |p| p.barrier())
+}
+
+/// `MPW_Cycle`: receive `recv_len` bytes from path `recv_id` while sending
+/// `buf` over path `send_id`.
+pub fn mpw_cycle(recv_id: i32, send_id: i32, buf: &[u8], recv_len: usize) -> Result<Vec<u8>> {
+    let (pr, ps) = {
+        let c = CTX.lock().unwrap();
+        (
+            c.paths.get(&recv_id).cloned().ok_or(MpwError::UnknownId(recv_id))?,
+            c.paths.get(&send_id).cloned().ok_or(MpwError::UnknownId(send_id))?,
+        )
+    };
+    relay::cycle(&pr, &ps, buf, recv_len)
+}
+
+/// `MPW_DCycle` (dynamic sizes).
+pub fn mpw_dcycle(recv_id: i32, send_id: i32, buf: &[u8]) -> Result<Vec<u8>> {
+    let (pr, ps) = {
+        let c = CTX.lock().unwrap();
+        (
+            c.paths.get(&recv_id).cloned().ok_or(MpwError::UnknownId(recv_id))?,
+            c.paths.get(&send_id).cloned().ok_or(MpwError::UnknownId(send_id))?,
+        )
+    };
+    let mut cache = Vec::new();
+    let n = relay::dcycle(&pr, &ps, buf, &mut cache)?;
+    cache.truncate(n);
+    Ok(cache)
+}
+
+/// `MPW_Relay`: forward all traffic between two paths until both close.
+pub fn mpw_relay(a: i32, b: i32) -> Result<relay::RelayStats> {
+    let (pa, pb) = {
+        let c = CTX.lock().unwrap();
+        (
+            c.paths.get(&a).cloned().ok_or(MpwError::UnknownId(a))?,
+            c.paths.get(&b).cloned().ok_or(MpwError::UnknownId(b))?,
+        )
+    };
+    relay::relay(&pa, &pb)
+}
+
+/// `MPW_ISendRecv`: start a non-blocking exchange; returns a handle id.
+pub fn mpw_isend_recv(id: i32, op: NbeOp) -> Result<i32> {
+    let p = {
+        let c = CTX.lock().unwrap();
+        c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?
+    };
+    let h = NbeHandle::start(p, op);
+    let mut c = CTX.lock().unwrap();
+    let hid = c.next_handle;
+    c.next_handle += 1;
+    c.handles.insert(hid, h);
+    Ok(hid)
+}
+
+/// `MPW_Has_NBE_Finished`.
+pub fn mpw_has_nbe_finished(hid: i32) -> Result<bool> {
+    let c = CTX.lock().unwrap();
+    c.handles.get(&hid).map(|h| h.is_finished()).ok_or(MpwError::UnknownId(hid))
+}
+
+/// `MPW_Wait`: block on a non-blocking exchange; returns the received
+/// bytes for receiving operations.
+pub fn mpw_wait(hid: i32) -> Result<Option<Vec<u8>>> {
+    let h = {
+        let mut c = CTX.lock().unwrap();
+        c.handles.remove(&hid).ok_or(MpwError::UnknownId(hid))?
+    };
+    h.wait()
+}
+
+/// `MPW_setChunkSize`.
+pub fn mpw_set_chunk_size(id: i32, chunk: usize) -> Result<()> {
+    with_path(id, |p| p.set_chunk_size(chunk))
+}
+
+/// `MPW_setPacingRate` (bytes/second per stream; `None` disables).
+pub fn mpw_set_pacing_rate(id: i32, rate: Option<f64>) -> Result<()> {
+    with_path(id, |p| p.set_pacing_rate(rate))
+}
+
+/// `MPW_setWin`.
+pub fn mpw_set_win(id: i32, bytes: usize) -> Result<Option<usize>> {
+    with_path(id, |p| p.set_window(bytes))
+}
+
+/// `MPW_setAutoTuning`.
+pub fn mpw_set_autotuning(id: i32, on: bool) -> Result<()> {
+    with_path(id, |p| {
+        p.set_autotuning(on);
+        Ok(())
+    })
+}
+
+/// `MPW_DNSResolve`.
+pub fn mpw_dns_resolve(host: &str) -> Result<String> {
+    super::dns::dns_resolve(host)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex as StdMutex;
+
+    // The facade is a process-global; serialize the tests that use it.
+    static API_LOCK: StdMutex<()> = StdMutex::new(());
+
+    #[test]
+    fn unknown_ids_error() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        assert!(matches!(mpw_send(99, b"x"), Err(MpwError::UnknownId(99))));
+        assert!(matches!(mpw_barrier(1), Err(MpwError::UnknownId(1))));
+        assert!(matches!(mpw_wait(0), Err(MpwError::UnknownId(0))));
+        assert!(mpw_destroy_path(3).is_err());
+    }
+
+    #[test]
+    fn end_to_end_over_facade() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        // server thread uses the Path API directly to avoid sharing CTX
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            let p = listener.accept_path().unwrap();
+            let mut buf = vec![0u8; 1000];
+            p.recv(&mut buf).unwrap();
+            p.send(&buf).unwrap();
+        });
+        let id = mpw_create_path_cfg("127.0.0.1", port, cfg).unwrap();
+        mpw_set_chunk_size(id, 128).unwrap();
+        let msg = vec![7u8; 1000];
+        mpw_send(id, &msg).unwrap();
+        let mut back = vec![0u8; 1000];
+        mpw_recv(id, &mut back).unwrap();
+        assert_eq!(back, msg);
+        mpw_destroy_path(id).unwrap();
+        t.join().unwrap();
+        mpw_finalize();
+    }
+
+    #[test]
+    fn nonblocking_over_facade() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        let mut cfg = PathConfig::with_streams(1);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            let p = listener.accept_path().unwrap();
+            let mut buf = vec![0u8; 64];
+            p.recv(&mut buf).unwrap();
+            p.send(&buf).unwrap();
+        });
+        let id = mpw_create_path_cfg("127.0.0.1", port, cfg).unwrap();
+        let hid = mpw_isend_recv(id, NbeOp::SendRecv(vec![1u8; 64], 64)).unwrap();
+        let got = mpw_wait(hid).unwrap().unwrap();
+        assert_eq!(got, vec![1u8; 64]);
+        assert!(mpw_has_nbe_finished(hid).is_err(), "handle consumed by wait");
+        t.join().unwrap();
+        mpw_finalize();
+    }
+}

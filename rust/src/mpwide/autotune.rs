@@ -1,0 +1,184 @@
+//! The MPWide autotuner (§1.3.1).
+//!
+//! Enabled by default, the autotuner probes a small set of chunk sizes at
+//! path-creation time, measures round-trip throughput for each, adopts the
+//! fastest on both ends, and sets the TCP window to a bandwidth-delay
+//! product estimate divided across the streams. The paper's framing —
+//! "useful for obtaining fairly good performance with minimal effort, but
+//! the best performance is obtained by testing different parameters by
+//! hand" — applies verbatim: the A1 bench (`streams_sweep`) compares
+//! autotuned vs hand-tuned vs default configurations.
+//!
+//! Protocol (on stream 0, both sides must have autotuning enabled):
+//! 16-byte control frames `[cmd: u64 BE][value: u64 BE]`. The connecting
+//! side is *master*, the accepting side *slave*.
+
+use std::time::Instant;
+
+use super::errors::{MpwError, Result};
+use super::path::Path;
+
+const CMD_PROBE: u64 = 1; // value = chunk size; exchange PROBE_BYTES each way
+const CMD_ADOPT: u64 = 2; // value = final chunk size
+const CMD_WINDOW: u64 = 3; // value = per-stream window in bytes (0 = skip)
+const CMD_DONE: u64 = 4;
+
+/// Bytes exchanged per probe (each direction). Small enough to keep path
+/// creation cheap, large enough to exercise several chunks.
+pub const PROBE_BYTES: usize = 1 << 20;
+
+/// Candidate chunk sizes probed by the master.
+pub const CANDIDATE_CHUNKS: [usize; 4] = [64 * 1024, 256 * 1024, 1 << 20, 4 << 20];
+
+/// Outcome of an autotuning run.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneResult {
+    /// Chunk size adopted by both ends.
+    pub chunk_size: usize,
+    /// Per-stream TCP window requested (None if left at OS default).
+    pub window: Option<usize>,
+    /// Measured RTT during tuning.
+    pub rtt_seconds: f64,
+    /// Throughput of the best probe, bytes/second.
+    pub best_rate: f64,
+}
+
+fn send_ctrl(path: &Path, cmd: u64, value: u64) -> Result<()> {
+    let slot = &path.streams[0];
+    let mut tx = slot.tx.lock().unwrap();
+    let mut frame = [0u8; 16];
+    frame[..8].copy_from_slice(&cmd.to_be_bytes());
+    frame[8..].copy_from_slice(&value.to_be_bytes());
+    tx.w.write_all(&frame)?;
+    tx.w.flush()?;
+    Ok(())
+}
+
+fn recv_ctrl(path: &Path) -> Result<(u64, u64)> {
+    let slot = &path.streams[0];
+    let mut frame = [0u8; 16];
+    slot.rx.lock().unwrap().read_exact(&mut frame)?;
+    Ok((
+        u64::from_be_bytes(frame[..8].try_into().unwrap()),
+        u64::from_be_bytes(frame[8..].try_into().unwrap()),
+    ))
+}
+
+/// Run the master side (connecting end). Probes candidate chunk sizes,
+/// adopts the best on both ends, and sets a BDP-derived window.
+pub fn tune_master(path: &Path) -> Result<TuneResult> {
+    let rtt = path.measure_rtt()?.as_secs_f64();
+    let mut best = (CANDIDATE_CHUNKS[0], 0.0f64);
+    let probe = vec![0xA5u8; PROBE_BYTES];
+    let mut cache = vec![0u8; PROBE_BYTES];
+    for &chunk in &CANDIDATE_CHUNKS {
+        send_ctrl(path, CMD_PROBE, chunk as u64)?;
+        path.set_chunk_size(chunk)?;
+        let t0 = Instant::now();
+        path.send_recv(&probe, &mut cache)?;
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let rate = (2 * PROBE_BYTES) as f64 / dt;
+        if rate > best.1 {
+            best = (chunk, rate);
+        }
+    }
+    send_ctrl(path, CMD_ADOPT, best.0 as u64)?;
+    path.set_chunk_size(best.0)?;
+
+    // Window: bandwidth-delay product split across streams, clamped to a
+    // sane range; kernels clamp further (the `MPW_setWin` caveat).
+    let window = if rtt > 1e-4 {
+        let bdp = best.1 * rtt;
+        let per_stream =
+            ((bdp / path.nstreams() as f64) as usize).clamp(64 * 1024, 16 << 20);
+        send_ctrl(path, CMD_WINDOW, per_stream as u64)?;
+        path.set_window(per_stream)?;
+        Some(per_stream)
+    } else {
+        send_ctrl(path, CMD_WINDOW, 0)?;
+        None
+    };
+    send_ctrl(path, CMD_DONE, 0)?;
+    path.barrier()?;
+    Ok(TuneResult { chunk_size: best.0, window, rtt_seconds: rtt, best_rate: best.1 })
+}
+
+/// Run the slave side (accepting end): obey the master's probe/adopt
+/// commands until DONE.
+pub fn tune_slave(path: &Path) -> Result<()> {
+    path.barrier()?; // pairs with the master's measure_rtt
+    let mut probe = vec![0u8; PROBE_BYTES];
+    loop {
+        let (cmd, value) = recv_ctrl(path)?;
+        match cmd {
+            CMD_PROBE => {
+                path.set_chunk_size(value as usize)?;
+                // echo: receive the master's probe while sending ours
+                let echo = vec![0x5Au8; PROBE_BYTES];
+                path.send_recv(&echo, &mut probe)?;
+            }
+            CMD_ADOPT => path.set_chunk_size(value as usize)?,
+            CMD_WINDOW => {
+                if value > 0 {
+                    path.set_window(value as usize)?;
+                }
+            }
+            CMD_DONE => {
+                path.barrier()?;
+                return Ok(());
+            }
+            other => {
+                return Err(MpwError::Protocol(format!("unexpected autotune cmd {other}")))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::config::PathConfig;
+    use crate::mpwide::transport::mem_path_pairs;
+
+    #[test]
+    fn master_slave_converge_on_chunk() {
+        let (l, r) = mem_path_pairs(2);
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false; // we drive the tuner manually here
+        let a = Path::from_pairs(l, cfg.clone()).unwrap();
+        let b = Path::from_pairs(r, cfg).unwrap();
+        let t = std::thread::spawn(move || {
+            tune_slave(&b).unwrap();
+            b.config().chunk_size
+        });
+        let res = tune_master(&a).unwrap();
+        let slave_chunk = t.join().unwrap();
+        assert_eq!(res.chunk_size, slave_chunk);
+        assert!(CANDIDATE_CHUNKS.contains(&res.chunk_size));
+        assert!(res.best_rate > 0.0);
+    }
+
+    #[test]
+    fn ctrl_frame_roundtrip() {
+        let (l, r) = mem_path_pairs(1);
+        let mut cfg = PathConfig::with_streams(1);
+        cfg.autotune = false;
+        let a = Path::from_pairs(l, cfg.clone()).unwrap();
+        let b = Path::from_pairs(r, cfg).unwrap();
+        send_ctrl(&a, CMD_ADOPT, 12345).unwrap();
+        assert_eq!(recv_ctrl(&b).unwrap(), (CMD_ADOPT, 12345));
+    }
+
+    #[test]
+    fn slave_rejects_garbage_cmd() {
+        let (l, r) = mem_path_pairs(1);
+        let mut cfg = PathConfig::with_streams(1);
+        cfg.autotune = false;
+        let a = Path::from_pairs(l, cfg.clone()).unwrap();
+        let b = Path::from_pairs(r, cfg).unwrap();
+        let t = std::thread::spawn(move || tune_slave(&b));
+        a.barrier().unwrap(); // satisfy the slave's initial barrier
+        send_ctrl(&a, 999, 0).unwrap();
+        assert!(t.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Path configuration: the user-tunable performance parameters the paper
+//! exposes (§1.3.1) — stream count, chunk size, pacing rate, TCP window
+//! size, and the autotuning switch (enabled by default).
+
+use std::time::Duration;
+
+/// Maximum number of TCP streams per path. The paper reports efficient
+/// operation with up to 256 streams in a single path.
+pub const MAX_STREAMS: usize = 256;
+
+/// Default chunk size: the amount of data handed to each low-level tcp
+/// send/recv call (`MPW_setChunkSize`).
+pub const DEFAULT_CHUNK: usize = 1 << 20; // 1 MiB
+
+/// Configuration for a single communication path.
+#[derive(Debug, Clone)]
+pub struct PathConfig {
+    /// Number of parallel TCP streams (always user-provided per the paper;
+    /// recommended: 1 locally, ≥32 over long-distance networks).
+    pub nstreams: usize,
+    /// Bytes sent/received per low-level call (`MPW_setChunkSize`).
+    pub chunk_size: usize,
+    /// Software pacing rate per stream, bytes/second
+    /// (`MPW_setPacingRate`). `None` disables pacing.
+    pub pacing_rate: Option<f64>,
+    /// Requested TCP window (SO_SNDBUF/SO_RCVBUF), bytes (`MPW_setWin`).
+    /// `None` keeps the OS default; the effective value is constrained by
+    /// the site configuration, exactly as the paper notes.
+    pub tcp_window: Option<usize>,
+    /// Autotune chunk size / window at path creation (`MPW_setAutoTuning`;
+    /// default enabled per the paper).
+    pub autotune: bool,
+    /// How long `Path::connect` keeps retrying before giving up (endpoints
+    /// of a distributed run start in arbitrary order).
+    pub connect_timeout: Duration,
+}
+
+impl Default for PathConfig {
+    fn default() -> Self {
+        PathConfig {
+            nstreams: 1,
+            chunk_size: DEFAULT_CHUNK,
+            pacing_rate: None,
+            tcp_window: None,
+            autotune: true,
+            connect_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+impl PathConfig {
+    /// Config with a given stream count and library defaults otherwise.
+    pub fn with_streams(nstreams: usize) -> Self {
+        PathConfig { nstreams, ..Default::default() }
+    }
+
+    /// Validate the configuration, mirroring MPWide's constraints.
+    pub fn validate(&self) -> crate::mpwide::Result<()> {
+        if self.nstreams == 0 {
+            return Err(crate::mpwide::MpwError::Config("nstreams must be >= 1".into()));
+        }
+        if self.nstreams > MAX_STREAMS {
+            return Err(crate::mpwide::MpwError::Config(format!(
+                "nstreams {} exceeds maximum {MAX_STREAMS}",
+                self.nstreams
+            )));
+        }
+        if self.chunk_size == 0 {
+            return Err(crate::mpwide::MpwError::Config("chunk_size must be >= 1".into()));
+        }
+        if let Some(r) = self.pacing_rate {
+            if !(r > 0.0) {
+                return Err(crate::mpwide::MpwError::Config(format!(
+                    "pacing rate must be positive, got {r}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The paper's recommendation for a WAN path: ≥32 streams, autotuning on.
+    pub fn wan_recommended() -> Self {
+        PathConfig { nstreams: 32, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_paper() {
+        let c = PathConfig::default();
+        assert_eq!(c.nstreams, 1);
+        assert!(c.autotune, "autotuner is enabled by default per the paper");
+        assert!(c.pacing_rate.is_none());
+    }
+
+    #[test]
+    fn validate_rejects_zero_streams() {
+        let c = PathConfig { nstreams: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_too_many_streams() {
+        let c = PathConfig { nstreams: MAX_STREAMS + 1, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_chunk() {
+        let c = PathConfig { chunk_size: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_nonpositive_pacing() {
+        let c = PathConfig { pacing_rate: Some(0.0), ..Default::default() };
+        assert!(c.validate().is_err());
+        let c = PathConfig { pacing_rate: Some(-1.0), ..Default::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn accepts_256_streams() {
+        let c = PathConfig::with_streams(256);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn wan_recommended_has_32_streams() {
+        assert_eq!(PathConfig::wan_recommended().nstreams, 32);
+    }
+}

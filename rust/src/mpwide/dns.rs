@@ -1,0 +1,45 @@
+//! `MPW_DNSResolve`: obtain an IP address locally, given a hostname.
+//!
+//! MPWide ships this because compute nodes of some supercomputers have no
+//! working resolver, so the front-end resolves names and passes literal
+//! addresses to the nodes.
+
+use std::net::ToSocketAddrs;
+
+use super::errors::{MpwError, Result};
+
+/// Resolve `host` to an IPv4/IPv6 address string (first result wins, IPv4
+/// preferred, matching the original's behaviour).
+pub fn dns_resolve(host: &str) -> Result<String> {
+    let addrs: Vec<_> = (host, 0u16)
+        .to_socket_addrs()
+        .map_err(|e| MpwError::Protocol(format!("cannot resolve {host}: {e}")))?
+        .collect();
+    addrs
+        .iter()
+        .find(|a| a.is_ipv4())
+        .or_else(|| addrs.first())
+        .map(|a| a.ip().to_string())
+        .ok_or_else(|| MpwError::Protocol(format!("no address for {host}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_localhost() {
+        let ip = dns_resolve("localhost").unwrap();
+        assert!(ip == "127.0.0.1" || ip == "::1", "{ip}");
+    }
+
+    #[test]
+    fn literal_ip_passes_through() {
+        assert_eq!(dns_resolve("127.0.0.1").unwrap(), "127.0.0.1");
+    }
+
+    #[test]
+    fn garbage_host_errors() {
+        assert!(dns_resolve("no-such-host.invalid.").is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Dynamic-size messaging with receive-side caching (`MPW_DSendRecv`,
+//! `MPW_DCycle`).
+//!
+//! Fixed-size `send`/`recv` requires both ends to agree on the message
+//! length, like MPI. When the size is not known to the receiver, MPWide
+//! prefixes an 8-byte length header on stream 0 and lets the receiver grow
+//! a cached buffer — the cache avoids reallocating on every exchange of a
+//! slowly-varying message (the bloodflow coupling's boundary arrays).
+
+use super::errors::{MpwError, Result};
+use super::path::Path;
+
+/// Upper bound accepted for a dynamic message (guards against a corrupted
+/// or malicious header causing an absurd allocation).
+pub const MAX_DYNAMIC: u64 = 1 << 40; // 1 TiB
+
+impl Path {
+    /// Send `buf` with a length prefix; pairs with [`Path::drecv_into`] /
+    /// [`Path::drecv`]. Holds the path's send gate across header **and**
+    /// body so concurrent senders (non-blocking handles) cannot
+    /// interleave mid-message.
+    pub fn dsend(&self, buf: &[u8]) -> Result<()> {
+        let _gate = self.send_gate.lock().unwrap();
+        self.send_header(buf.len() as u64)?;
+        self.send_ungated(buf)?;
+        Ok(())
+    }
+
+    /// Receive a dynamic message into `cache`, resizing it as needed. The
+    /// cache is only grown, never shrunk, so steady-state exchanges do not
+    /// allocate. Returns the message length.
+    pub fn drecv_into(&self, cache: &mut Vec<u8>) -> Result<usize> {
+        let _gate = self.recv_gate.lock().unwrap();
+        let len = self.recv_header()? as usize;
+        if cache.len() < len {
+            cache.resize(len, 0);
+        }
+        self.recv_ungated(&mut cache[..len])?;
+        Ok(len)
+    }
+
+    /// Receive a dynamic message as a fresh vector.
+    pub fn drecv(&self) -> Result<Vec<u8>> {
+        let mut v = Vec::new();
+        let n = self.drecv_into(&mut v)?;
+        v.truncate(n);
+        Ok(v)
+    }
+
+    /// `MPW_DSendRecv`: full-duplex dynamic exchange — send `sbuf` while
+    /// receiving the peer's message into `cache`. Returns the received
+    /// length.
+    pub fn dsend_recv(&self, sbuf: &[u8], cache: &mut Vec<u8>) -> Result<usize> {
+        std::thread::scope(|scope| -> Result<usize> {
+            let tx = scope.spawn(|| self.dsend(sbuf));
+            let n = self.drecv_into(cache)?;
+            tx.join().map_err(|_| MpwError::WorkerPanic("dsend".into()))??;
+            Ok(n)
+        })
+    }
+
+    fn send_header(&self, len: u64) -> Result<()> {
+        let slot = &self.streams[0];
+        let mut tx = slot.tx.lock().unwrap();
+        tx.w.write_all(&len.to_be_bytes())?;
+        tx.w.flush()?;
+        Ok(())
+    }
+
+    fn recv_header(&self) -> Result<u64> {
+        let slot = &self.streams[0];
+        let mut hdr = [0u8; 8];
+        slot.rx.lock().unwrap().read_exact(&mut hdr)?;
+        let len = u64::from_be_bytes(hdr);
+        if len > MAX_DYNAMIC {
+            return Err(MpwError::Protocol(format!("dynamic message length {len} too large")));
+        }
+        Ok(len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::config::PathConfig;
+    use crate::mpwide::transport::mem_path_pairs;
+    use crate::util::Rng;
+
+    fn mem_paths(n: usize) -> (Path, Path) {
+        let (l, r) = mem_path_pairs(n);
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        cfg.chunk_size = 1024;
+        (Path::from_pairs(l, cfg.clone()).unwrap(), Path::from_pairs(r, cfg).unwrap())
+    }
+
+    #[test]
+    fn dynamic_roundtrip_unknown_size() {
+        let (a, b) = mem_paths(3);
+        let mut msg = vec![0u8; 12_345];
+        Rng::new(4).fill_bytes(&mut msg);
+        let msg2 = msg.clone();
+        let t = std::thread::spawn(move || b.drecv().unwrap());
+        a.dsend(&msg).unwrap();
+        assert_eq!(t.join().unwrap(), msg2);
+    }
+
+    #[test]
+    fn dynamic_empty_message() {
+        let (a, b) = mem_paths(2);
+        let t = std::thread::spawn(move || b.drecv().unwrap());
+        a.dsend(&[]).unwrap();
+        assert_eq!(t.join().unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn cache_is_reused_and_grows() {
+        let (a, b) = mem_paths(2);
+        let t = std::thread::spawn(move || {
+            let mut cache = Vec::new();
+            let n1 = b.drecv_into(&mut cache).unwrap();
+            let cap1 = cache.capacity();
+            let n2 = b.drecv_into(&mut cache).unwrap();
+            let n3 = b.drecv_into(&mut cache).unwrap();
+            (n1, n2, n3, cap1, cache.capacity())
+        });
+        a.dsend(&vec![1u8; 1000]).unwrap();
+        a.dsend(&vec![2u8; 500]).unwrap(); // smaller: reuses, no realloc
+        a.dsend(&vec![3u8; 2000]).unwrap(); // larger: grows
+        let (n1, n2, n3, cap1, cap3) = t.join().unwrap();
+        assert_eq!((n1, n2, n3), (1000, 500, 2000));
+        assert!(cap1 >= 1000);
+        assert!(cap3 >= 2000);
+    }
+
+    #[test]
+    fn dsend_recv_full_duplex() {
+        let (a, b) = mem_paths(4);
+        let ma = vec![5u8; 7777];
+        let mb = vec![6u8; 333];
+        let ma2 = ma.clone();
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            let mut cache = Vec::new();
+            let n = b.dsend_recv(&mb2, &mut cache).unwrap();
+            assert_eq!(&cache[..n], &ma2[..]);
+        });
+        let mut cache = Vec::new();
+        let n = a.dsend_recv(&ma, &mut cache).unwrap();
+        assert_eq!(&cache[..n], &mb[..]);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_header_rejected() {
+        let (a, b) = mem_paths(1);
+        // Forge a header directly on stream 0.
+        {
+            let slot = &a.streams[0];
+            let mut tx = slot.tx.lock().unwrap();
+            tx.w.write_all(&(MAX_DYNAMIC + 1).to_be_bytes()).unwrap();
+        }
+        assert!(b.drecv().is_err());
+    }
+}

@@ -1,0 +1,54 @@
+//! Error type shared across the MPWide library.
+
+use thiserror::Error;
+
+/// Errors surfaced by MPWide operations.
+#[derive(Debug, Error)]
+pub enum MpwError {
+    /// Underlying socket / file I/O failure.
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Connection could not be established within the configured timeout.
+    #[error("connect to {endpoint} timed out after {seconds:.1}s")]
+    ConnectTimeout { endpoint: String, seconds: f64 },
+
+    /// A path id (or non-blocking handle id) that is not registered.
+    #[error("unknown id {0}")]
+    UnknownId(i32),
+
+    /// Handshake or wire-protocol violation.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Invalid configuration (e.g. 0 streams, oversized stream count).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A worker thread servicing one of the path's streams panicked.
+    #[error("stream worker panicked: {0}")]
+    WorkerPanic(String),
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, MpwError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = MpwError::UnknownId(7);
+        assert_eq!(e.to_string(), "unknown id 7");
+        let e = MpwError::ConnectTimeout { endpoint: "x:1".into(), seconds: 2.0 };
+        assert!(e.to_string().contains("x:1"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let io = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "gone");
+        let e: MpwError = io.into();
+        assert!(matches!(e, MpwError::Io(_)));
+    }
+}

@@ -1,0 +1,32 @@
+//! Core MPWide library (the paper's primary contribution).
+//!
+//! The central abstraction is the communication [`Path`](path::Path): a
+//! logical connection between two endpoints made of 1–256 parallel TCP
+//! streams. Messages sent over a path are striped evenly across the
+//! streams ([`stripe`]), written in user-configurable chunks
+//! ([`config::PathConfig::chunk_size`]), optionally rate-limited by a
+//! software pacer ([`pacing`]) and with tuned TCP windows
+//! ([`transport`]). An [`autotune`]r probes these parameters at path
+//! creation when enabled (the paper's default).
+//!
+//! On top of paths the library provides dynamic-size messaging with
+//! receive-side caching ([`dynamic`]), non-blocking operations
+//! ([`nonblocking`]), message cycling/relaying between paths ([`relay`]),
+//! and a C-style facade mirroring the paper's Table 2 ([`api`]).
+
+pub mod api;
+pub mod autotune;
+pub mod config;
+pub mod dns;
+pub mod dynamic;
+pub mod errors;
+pub mod nonblocking;
+pub mod pacing;
+pub mod path;
+pub mod relay;
+pub mod stripe;
+pub mod transport;
+
+pub use config::PathConfig;
+pub use errors::{MpwError, Result};
+pub use path::{Path, PathListener};

@@ -1,0 +1,171 @@
+//! Non-blocking operations: `MPW_ISendRecv`, `MPW_Has_NBE_Finished`,
+//! `MPW_Wait`.
+//!
+//! These are the latency-hiding primitive the distributed bloodflow run
+//! uses (§1.2.2): the solver posts the boundary exchange, computes the
+//! next sub-steps, and only waits when the data is actually needed —
+//! reducing the effective coupling overhead to ~6 ms per exchange.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::errors::{MpwError, Result};
+use super::path::Path;
+
+/// The operation a non-blocking handle performs.
+pub enum NbeOp {
+    /// Send a buffer.
+    Send(Vec<u8>),
+    /// Receive exactly `n` bytes.
+    Recv(usize),
+    /// Full-duplex: send the buffer, receive exactly `n` bytes.
+    SendRecv(Vec<u8>, usize),
+    /// Full-duplex with dynamic sizes (`MPW_DSendRecv` semantics).
+    DSendRecv(Vec<u8>),
+}
+
+/// Handle to an in-flight non-blocking exchange.
+pub struct NbeHandle {
+    done: Arc<AtomicBool>,
+    join: Option<JoinHandle<Result<Option<Vec<u8>>>>>,
+}
+
+impl NbeHandle {
+    /// `MPW_ISendRecv`: start the operation on a worker thread.
+    pub fn start(path: Arc<Path>, op: NbeOp) -> NbeHandle {
+        let done = Arc::new(AtomicBool::new(false));
+        let done2 = done.clone();
+        let join = std::thread::spawn(move || {
+            let result = match op {
+                NbeOp::Send(buf) => path.send(&buf).map(|_| None),
+                NbeOp::Recv(n) => {
+                    let mut buf = vec![0u8; n];
+                    path.recv(&mut buf).map(|_| Some(buf))
+                }
+                NbeOp::SendRecv(sbuf, n) => {
+                    let mut buf = vec![0u8; n];
+                    path.send_recv(&sbuf, &mut buf).map(|_| Some(buf))
+                }
+                NbeOp::DSendRecv(sbuf) => {
+                    let mut cache = Vec::new();
+                    path.dsend_recv(&sbuf, &mut cache).map(|n| {
+                        cache.truncate(n);
+                        Some(cache)
+                    })
+                }
+            };
+            done2.store(true, Ordering::Release);
+            result
+        });
+        NbeHandle { done, join: Some(join) }
+    }
+
+    /// `MPW_Has_NBE_Finished`: poll without blocking.
+    pub fn is_finished(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    /// `MPW_Wait`: block until completion; returns the received buffer for
+    /// receiving operations, `None` for pure sends.
+    pub fn wait(mut self) -> Result<Option<Vec<u8>>> {
+        let join = self.join.take().expect("wait called twice");
+        join.join().map_err(|_| MpwError::WorkerPanic("non-blocking worker".into()))?
+    }
+}
+
+impl Drop for NbeHandle {
+    fn drop(&mut self) {
+        // Detach politely: join so the worker can't outlive its path user.
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::config::PathConfig;
+    use crate::mpwide::transport::mem_path_pairs;
+
+    fn mem_paths(n: usize) -> (Arc<Path>, Arc<Path>) {
+        let (l, r) = mem_path_pairs(n);
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        (
+            Arc::new(Path::from_pairs(l, cfg.clone()).unwrap()),
+            Arc::new(Path::from_pairs(r, cfg).unwrap()),
+        )
+    }
+
+    #[test]
+    fn isend_irecv_complete() {
+        let (a, b) = mem_paths(2);
+        let msg = vec![42u8; 10_000];
+        let h_send = NbeHandle::start(a, NbeOp::Send(msg.clone()));
+        let h_recv = NbeHandle::start(b, NbeOp::Recv(10_000));
+        let got = h_recv.wait().unwrap().unwrap();
+        assert_eq!(got, msg);
+        assert!(h_send.wait().unwrap().is_none());
+    }
+
+    #[test]
+    fn has_finished_eventually_true() {
+        let (a, b) = mem_paths(1);
+        let h = NbeHandle::start(a, NbeOp::Send(vec![1u8; 100]));
+        let r = NbeHandle::start(b, NbeOp::Recv(100));
+        r.wait().unwrap();
+        // send must complete shortly after the receive drained it
+        let t0 = std::time::Instant::now();
+        while !h.is_finished() {
+            assert!(t0.elapsed().as_secs() < 5, "send never finished");
+            std::thread::yield_now();
+        }
+        assert!(h.is_finished());
+    }
+
+    #[test]
+    fn nonblocking_sendrecv_both_sides() {
+        let (a, b) = mem_paths(3);
+        let ma = vec![1u8; 5000];
+        let mb = vec![2u8; 6000];
+        let ha = NbeHandle::start(a, NbeOp::SendRecv(ma.clone(), 6000));
+        let hb = NbeHandle::start(b, NbeOp::SendRecv(mb.clone(), 5000));
+        assert_eq!(ha.wait().unwrap().unwrap(), mb);
+        assert_eq!(hb.wait().unwrap().unwrap(), ma);
+    }
+
+    #[test]
+    fn nonblocking_dynamic_exchange() {
+        let (a, b) = mem_paths(2);
+        let ha = NbeHandle::start(a, NbeOp::DSendRecv(vec![7u8; 123]));
+        let hb = NbeHandle::start(b, NbeOp::DSendRecv(vec![8u8; 4567]));
+        assert_eq!(ha.wait().unwrap().unwrap(), vec![8u8; 4567]);
+        assert_eq!(hb.wait().unwrap().unwrap(), vec![7u8; 123]);
+    }
+
+    #[test]
+    fn overlap_hides_latency() {
+        // The latency-hiding pattern from §1.2.2: post exchange, compute,
+        // then wait. With an in-memory transport the exchange is fast; this
+        // test asserts the *pattern* works (compute proceeds while the
+        // exchange is in flight and the result is still correct).
+        let (a, b) = mem_paths(2);
+        let echo = std::thread::spawn(move || {
+            let mut cache = Vec::new();
+            let n = b.drecv_into(&mut cache).unwrap();
+            b.dsend(&cache[..n]).unwrap();
+        });
+        let h = NbeHandle::start(a.clone(), NbeOp::DSendRecv(vec![3u8; 2048]));
+        // "compute" while the exchange is in flight
+        let mut acc = 0u64;
+        for i in 0..100_000u64 {
+            acc = acc.wrapping_add(i * i);
+        }
+        assert!(acc > 0);
+        let got = h.wait().unwrap().unwrap();
+        assert_eq!(got, vec![3u8; 2048]);
+        echo.join().unwrap();
+    }
+}

@@ -1,0 +1,505 @@
+//! The communication **path**: MPWide's central abstraction (§1.3.1).
+//!
+//! A path is a logical connection made of 1–256 parallel TCP streams.
+//! `send` stripes the message evenly over the streams ([`super::stripe`])
+//! and drives each stream from its own thread, writing in
+//! [`PathConfig::chunk_size`] units through the per-stream
+//! [`Pacer`](super::pacing::Pacer) — the same pthread-per-stream design as
+//! the C++ original. `send`/`recv` sizes must match on both ends (like
+//! MPI); use [`super::dynamic`] for unknown-size messages.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::config::PathConfig;
+use super::errors::{MpwError, Result};
+use super::pacing::Pacer;
+use super::stripe;
+use super::transport::{connect_streams, HalfDuplex, RawPathListener, StreamPair};
+
+/// Write half of one stream plus its pacer (locked together: pacing is
+/// per-stream and applies to writes).
+pub(crate) struct TxHalf {
+    pub w: Box<dyn HalfDuplex>,
+    pub pacer: Pacer,
+}
+
+/// One stream of a path: independently lockable halves so a send and a
+/// receive can run concurrently (`MPW_SendRecv`).
+pub(crate) struct StreamSlot {
+    pub tx: Mutex<TxHalf>,
+    pub rx: Mutex<Box<dyn HalfDuplex>>,
+    /// Raw socket fd when TCP-backed, for later `MPW_setWin` calls.
+    fd: Option<i32>,
+}
+
+/// A communication path between two endpoints.
+pub struct Path {
+    pub(crate) streams: Vec<StreamSlot>,
+    cfg: Mutex<PathConfig>,
+    peer: String,
+    /// Serializes whole send operations so concurrent sends (e.g. several
+    /// non-blocking handles on one path) cannot interleave the byte
+    /// streams mid-message.
+    pub(crate) send_gate: Mutex<()>,
+    /// Serializes whole receive operations (same rationale).
+    pub(crate) recv_gate: Mutex<()>,
+}
+
+impl std::fmt::Debug for Path {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Path")
+            .field("peer", &self.peer)
+            .field("nstreams", &self.streams.len())
+            .finish()
+    }
+}
+
+impl Path {
+    /// Build a path from already-established stream pairs. Applies the
+    /// configured TCP window to every stream. (Autotuning is a two-sided
+    /// protocol and is run by [`Path::connect`] / [`PathListener::accept_path`].)
+    pub fn from_pairs(pairs: Vec<StreamPair>, cfg: PathConfig) -> Result<Path> {
+        if pairs.is_empty() {
+            return Err(MpwError::Config("a path needs at least one stream".into()));
+        }
+        let mut cfg = cfg;
+        cfg.nstreams = pairs.len();
+        cfg.validate()?;
+        if let Some(win) = cfg.tcp_window {
+            for p in &pairs {
+                p.set_window(win)?;
+            }
+        }
+        let peer = pairs[0].peer.clone();
+        let streams = pairs
+            .into_iter()
+            .map(|p| StreamSlot {
+                fd: p.raw_fd(),
+                tx: Mutex::new(TxHalf { w: p.tx, pacer: Pacer::new(cfg.pacing_rate) }),
+                rx: Mutex::new(p.rx),
+            })
+            .collect();
+        Ok(Path {
+            streams,
+            cfg: Mutex::new(cfg),
+            peer,
+            send_gate: Mutex::new(()),
+            recv_gate: Mutex::new(()),
+        })
+    }
+
+    /// Client side of `MPW_CreatePath`: connect `cfg.nstreams` streams to
+    /// `host:port` (retrying until `cfg.connect_timeout`), then run the
+    /// autotuner as master if `cfg.autotune` is set.
+    pub fn connect(host: &str, port: u16, cfg: PathConfig) -> Result<Path> {
+        cfg.validate()?;
+        let pairs = connect_streams(host, port, cfg.nstreams, cfg.connect_timeout)?;
+        let autotune = cfg.autotune;
+        let path = Path::from_pairs(pairs, cfg)?;
+        if autotune {
+            super::autotune::tune_master(&path)?;
+        }
+        Ok(path)
+    }
+
+    /// Number of parallel TCP streams in this path.
+    pub fn nstreams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Peer description (diagnostics).
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// Snapshot of the current configuration.
+    pub fn config(&self) -> PathConfig {
+        self.cfg.lock().unwrap().clone()
+    }
+
+    /// `MPW_setChunkSize`: bytes handed to each low-level tcp call.
+    pub fn set_chunk_size(&self, chunk: usize) -> Result<()> {
+        if chunk == 0 {
+            return Err(MpwError::Config("chunk_size must be >= 1".into()));
+        }
+        self.cfg.lock().unwrap().chunk_size = chunk;
+        Ok(())
+    }
+
+    /// `MPW_setPacingRate`: per-stream software pacing in bytes/second
+    /// (`None` disables pacing).
+    pub fn set_pacing_rate(&self, rate: Option<f64>) -> Result<()> {
+        if let Some(r) = rate {
+            if !(r > 0.0) {
+                return Err(MpwError::Config(format!("pacing rate must be positive, got {r}")));
+            }
+        }
+        self.cfg.lock().unwrap().pacing_rate = rate;
+        for s in &self.streams {
+            s.tx.lock().unwrap().pacer.set_rate(rate);
+        }
+        Ok(())
+    }
+
+    /// `MPW_setWin`: request a TCP window on every stream; the kernel may
+    /// clamp it to site limits. Returns the granted value of the last
+    /// stream (None for non-socket transports).
+    pub fn set_window(&self, bytes: usize) -> Result<Option<usize>> {
+        self.cfg.lock().unwrap().tcp_window = Some(bytes);
+        let mut granted = None;
+        for s in &self.streams {
+            if let Some(fd) = s.fd {
+                granted = super::transport::set_socket_window(fd, bytes)?;
+            }
+        }
+        Ok(granted)
+    }
+
+    /// `MPW_setAutoTuning`.
+    pub fn set_autotuning(&self, on: bool) {
+        self.cfg.lock().unwrap().autotune = on;
+    }
+
+    /// `MPW_Send`: send `buf`, split evenly over the streams. The receiver
+    /// must post a `recv` of exactly the same size. Returns bytes sent.
+    pub fn send(&self, buf: &[u8]) -> Result<usize> {
+        let _gate = self.send_gate.lock().unwrap();
+        self.send_ungated(buf)
+    }
+
+    /// Send without taking the send gate (callers that already hold it:
+    /// the dynamic-message layer).
+    pub(crate) fn send_ungated(&self, buf: &[u8]) -> Result<usize> {
+        let chunk = self.cfg.lock().unwrap().chunk_size;
+        let n = self.streams.len();
+        if n == 1 {
+            Self::send_worker(&self.streams[0], buf, chunk)?;
+            return Ok(buf.len());
+        }
+        // §Perf: stream workers run on the persistent task pool — one OS
+        // thread spawn per stream per send was the dominant cost for
+        // small multi-stream messages (EXPERIMENTS.md §Perf change 1).
+        let segs = stripe::segments(buf.len(), n);
+        let mut results: Vec<Result<()>> = Vec::new();
+        results.resize_with(n, || Ok(()));
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
+            for ((slot, seg), out) in self.streams.iter().zip(segs).zip(results.iter_mut()) {
+                if seg.is_empty() {
+                    continue;
+                }
+                let data = &buf[seg];
+                jobs.push(Box::new(move || *out = Self::send_worker(slot, data, chunk)));
+            }
+            crate::util::pool::scope(jobs);
+        }
+        results.into_iter().collect::<Result<Vec<_>>>()?;
+        Ok(buf.len())
+    }
+
+    /// `MPW_Recv`: receive exactly `buf.len()` bytes, merging the incoming
+    /// per-stream segments. Returns bytes received.
+    pub fn recv(&self, buf: &mut [u8]) -> Result<usize> {
+        let _gate = self.recv_gate.lock().unwrap();
+        self.recv_ungated(buf)
+    }
+
+    /// Receive without taking the recv gate (dynamic-message layer).
+    pub(crate) fn recv_ungated(&self, buf: &mut [u8]) -> Result<usize> {
+        let chunk = self.cfg.lock().unwrap().chunk_size;
+        let n = self.streams.len();
+        let len = buf.len();
+        if n == 1 {
+            Self::recv_worker(&self.streams[0], buf, chunk)?;
+            return Ok(len);
+        }
+        let segs = stripe::segments(len, n);
+        // Split the buffer into disjoint &mut segments for the workers.
+        let mut parts: Vec<(usize, &mut [u8])> = Vec::with_capacity(n);
+        let mut rest = buf;
+        let mut consumed = 0usize;
+        for (i, seg) in segs.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(seg.end - consumed);
+            consumed = seg.end;
+            rest = tail;
+            if !head.is_empty() {
+                parts.push((i, head));
+            }
+        }
+        let mut results: Vec<Result<()>> = Vec::new();
+        results.resize_with(parts.len(), || Ok(()));
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts.len());
+            for ((i, part), out) in parts.into_iter().zip(results.iter_mut()) {
+                let slot = &self.streams[i];
+                jobs.push(Box::new(move || *out = Self::recv_worker(slot, part, chunk)));
+            }
+            crate::util::pool::scope(jobs);
+        }
+        results.into_iter().collect::<Result<Vec<_>>>()?;
+        Ok(len)
+    }
+
+    /// `MPW_SendRecv`: full-duplex exchange — send `sbuf` while receiving
+    /// `rbuf.len()` bytes, concurrently over all streams.
+    pub fn send_recv(&self, sbuf: &[u8], rbuf: &mut [u8]) -> Result<()> {
+        let mut tx_res: Result<()> = Ok(());
+        let mut rx_res: Result<()> = Ok(());
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| tx_res = self.send(sbuf).map(|_| ())),
+                Box::new(|| rx_res = self.recv(rbuf).map(|_| ())),
+            ];
+            crate::util::pool::scope(jobs);
+        }
+        tx_res?;
+        rx_res
+    }
+
+    /// `MPW_Barrier`: synchronize the two ends — each side sends a token
+    /// byte on stream 0 and waits for the peer's.
+    pub fn barrier(&self) -> Result<()> {
+        const TOKEN: u8 = 0xB7;
+        let slot = &self.streams[0];
+        let mut tx_res: Result<()> = Ok(());
+        let mut b = [0u8; 1];
+        {
+            let tx_job = || -> Result<()> {
+                let _gate = self.send_gate.lock().unwrap();
+                let mut tx = slot.tx.lock().unwrap();
+                tx.w.write_all(&[TOKEN])?;
+                tx.w.flush()?;
+                Ok(())
+            };
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| tx_res = tx_job())];
+            // token receive runs inline; the pool handles the send half
+            crate::util::pool::scope_with_inline(jobs, || -> Result<()> {
+                let _gate = self.recv_gate.lock().unwrap();
+                slot.rx.lock().unwrap().read_exact(&mut b)?;
+                Ok(())
+            })?;
+        }
+        tx_res?;
+        if b[0] != TOKEN {
+            return Err(MpwError::Protocol(format!("bad barrier token {:#x}", b[0])));
+        }
+        Ok(())
+    }
+
+    /// Round-trip time measured with a barrier exchange (used by the
+    /// autotuner's window estimate and by diagnostics).
+    pub fn measure_rtt(&self) -> Result<Duration> {
+        let t0 = std::time::Instant::now();
+        self.barrier()?;
+        Ok(t0.elapsed())
+    }
+
+    fn send_worker(slot: &StreamSlot, data: &[u8], chunk: usize) -> Result<()> {
+        let mut tx = slot.tx.lock().unwrap();
+        for c in stripe::chunks(0..data.len(), chunk) {
+            tx.pacer.acquire(c.len());
+            tx.w.write_all(&data[c])?;
+        }
+        tx.w.flush()?;
+        Ok(())
+    }
+
+    fn recv_worker(slot: &StreamSlot, data: &mut [u8], chunk: usize) -> Result<()> {
+        let mut rx = slot.rx.lock().unwrap();
+        for c in stripe::chunks(0..data.len(), chunk) {
+            rx.read_exact(&mut data[c])?;
+        }
+        Ok(())
+    }
+}
+
+/// Server side of `MPW_CreatePath`: listens for incoming stream bundles and
+/// assembles them into [`Path`]s (multiple concurrent clients supported —
+/// a forwarder accepts two paths from one listener).
+pub struct PathListener {
+    raw: RawPathListener,
+    cfg: PathConfig,
+}
+
+impl PathListener {
+    /// Bind a listener on `port` (0 picks a free port) with the config
+    /// applied to every accepted path.
+    pub fn bind(port: u16, cfg: PathConfig) -> Result<PathListener> {
+        Ok(PathListener { raw: RawPathListener::bind(&format!("0.0.0.0:{port}"))?, cfg })
+    }
+
+    /// The bound port.
+    pub fn port(&self) -> u16 {
+        self.raw.port()
+    }
+
+    /// Accept the next complete path; runs the autotuner as slave if
+    /// configured (must match the connecting side's setting).
+    pub fn accept_path(&mut self) -> Result<Path> {
+        let (pairs, _uuid) = self.raw.accept_streams()?;
+        let autotune = self.cfg.autotune;
+        let path = Path::from_pairs(pairs, self.cfg.clone())?;
+        if autotune {
+            super::autotune::tune_slave(&path)?;
+        }
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::transport::mem_path_pairs;
+    use crate::util::Rng;
+
+    fn mem_paths(n: usize) -> (Path, Path) {
+        let (l, r) = mem_path_pairs(n);
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        cfg.chunk_size = 4096;
+        let a = Path::from_pairs(l, cfg.clone()).unwrap();
+        let b = Path::from_pairs(r, cfg).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn send_recv_roundtrip_multi_stream() {
+        let (a, b) = mem_paths(4);
+        let mut msg = vec![0u8; 100_000];
+        Rng::new(1).fill_bytes(&mut msg);
+        let msg2 = msg.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 100_000];
+            b.recv(&mut buf).unwrap();
+            assert_eq!(buf, msg2);
+        });
+        assert_eq!(a.send(&msg).unwrap(), 100_000);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn send_recv_empty_message() {
+        let (a, b) = mem_paths(3);
+        a.send(&[]).unwrap();
+        let mut buf = [];
+        b.recv(&mut buf).unwrap();
+    }
+
+    #[test]
+    fn message_smaller_than_stream_count() {
+        let (a, b) = mem_paths(8);
+        let msg = [1u8, 2, 3];
+        let t = std::thread::spawn(move || {
+            let mut buf = [0u8; 3];
+            b.recv(&mut buf).unwrap();
+            buf
+        });
+        a.send(&msg).unwrap();
+        assert_eq!(t.join().unwrap(), msg);
+    }
+
+    #[test]
+    fn full_duplex_send_recv() {
+        let (a, b) = mem_paths(2);
+        let ma = vec![7u8; 50_000];
+        let mb = vec![9u8; 30_000];
+        let ma2 = ma.clone();
+        let mb2 = mb.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 50_000];
+            b.send_recv(&mb2, &mut buf).unwrap();
+            assert_eq!(buf, ma2);
+        });
+        let mut buf = vec![0u8; 30_000];
+        a.send_recv(&ma, &mut buf).unwrap();
+        assert_eq!(buf, mb);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        let (a, b) = mem_paths(2);
+        let t = std::thread::spawn(move || b.barrier().unwrap());
+        a.barrier().unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn chunk_size_smaller_than_message() {
+        let (a, b) = mem_paths(2);
+        a.set_chunk_size(7).unwrap();
+        b.set_chunk_size(7).unwrap();
+        let mut msg = vec![0u8; 1001];
+        Rng::new(2).fill_bytes(&mut msg);
+        let msg2 = msg.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 1001];
+            b.recv(&mut buf).unwrap();
+            buf
+        });
+        a.send(&msg).unwrap();
+        assert_eq!(t.join().unwrap(), msg2);
+    }
+
+    #[test]
+    fn set_chunk_zero_rejected() {
+        let (a, _b) = mem_paths(1);
+        assert!(a.set_chunk_size(0).is_err());
+    }
+
+    #[test]
+    fn set_pacing_negative_rejected() {
+        let (a, _b) = mem_paths(1);
+        assert!(a.set_pacing_rate(Some(-5.0)).is_err());
+        assert!(a.set_pacing_rate(Some(1e6)).is_ok());
+        assert!(a.set_pacing_rate(None).is_ok());
+    }
+
+    #[test]
+    fn from_pairs_rejects_empty() {
+        assert!(Path::from_pairs(vec![], PathConfig::default()).is_err());
+    }
+
+    #[test]
+    fn tcp_path_end_to_end() {
+        let mut cfg = PathConfig::with_streams(4);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            let p = Path::connect("127.0.0.1", port, cfg).unwrap();
+            let mut msg = vec![0u8; 256 * 1024];
+            Rng::new(3).fill_bytes(&mut msg);
+            p.send(&msg).unwrap();
+            p.barrier().unwrap();
+            msg
+        });
+        let server = listener.accept_path().unwrap();
+        let mut buf = vec![0u8; 256 * 1024];
+        server.recv(&mut buf).unwrap();
+        server.barrier().unwrap();
+        let sent = t.join().unwrap();
+        assert_eq!(buf, sent);
+    }
+
+    #[test]
+    fn measure_rtt_loopback_is_small() {
+        let mut cfg = PathConfig::with_streams(1);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            let p = Path::connect("127.0.0.1", port, cfg).unwrap();
+            for _ in 0..3 {
+                p.barrier().unwrap();
+            }
+        });
+        let server = listener.accept_path().unwrap();
+        for _ in 0..3 {
+            let rtt = server.measure_rtt().unwrap();
+            assert!(rtt < Duration::from_secs(1));
+        }
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,227 @@
+//! Message cycling and relaying between paths (`MPW_Cycle`, `MPW_DCycle`,
+//! `MPW_Relay`).
+//!
+//! `cycle` moves one message: send a buffer over one path while receiving
+//! from another — the building block for daisy-chaining sites. `relay`
+//! pumps **all** traffic between two paths until they close; a standalone
+//! [`crate::tools::forwarder`] process wraps it to mimic firewall-style
+//! data forwarding on machines where compute nodes cannot accept inbound
+//! connections (paper Fig 3).
+
+use super::errors::{MpwError, Result};
+use super::path::Path;
+
+/// Buffer size used by the relay pump loops.
+pub const RELAY_BUF: usize = 256 * 1024;
+
+/// `MPW_Cycle`: send `buf` over `send_to` while receiving `recv_len` bytes
+/// from `recv_from`. Returns the received message.
+pub fn cycle(recv_from: &Path, send_to: &Path, buf: &[u8], recv_len: usize) -> Result<Vec<u8>> {
+    std::thread::scope(|scope| -> Result<Vec<u8>> {
+        let tx = scope.spawn(|| send_to.send(buf).map(|_| ()));
+        let mut out = vec![0u8; recv_len];
+        recv_from.recv(&mut out)?;
+        tx.join().map_err(|_| MpwError::WorkerPanic("cycle send".into()))??;
+        Ok(out)
+    })
+}
+
+/// `MPW_DCycle`: like [`cycle`] but with dynamic sizes and a reusable
+/// receive cache. Returns the received length (data is in `cache`).
+pub fn dcycle(
+    recv_from: &Path,
+    send_to: &Path,
+    buf: &[u8],
+    cache: &mut Vec<u8>,
+) -> Result<usize> {
+    std::thread::scope(|scope| -> Result<usize> {
+        let tx = scope.spawn(|| send_to.dsend(buf));
+        let n = recv_from.drecv_into(cache)?;
+        tx.join().map_err(|_| MpwError::WorkerPanic("dcycle send".into()))??;
+        Ok(n)
+    })
+}
+
+/// Totals moved by a [`relay`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RelayStats {
+    /// Bytes forwarded from path `a` to path `b`.
+    pub a_to_b: u64,
+    /// Bytes forwarded from path `b` to path `a`.
+    pub b_to_a: u64,
+}
+
+/// `MPW_Relay`: sustained bidirectional forwarding of all traffic between
+/// two paths, stream-for-stream, until both directions reach end-of-stream.
+/// Requires equal stream counts (the forwarder creates both sides, so this
+/// holds by construction).
+pub fn relay(a: &Path, b: &Path) -> Result<RelayStats> {
+    if a.nstreams() != b.nstreams() {
+        return Err(MpwError::Config(format!(
+            "relay requires equal stream counts ({} vs {})",
+            a.nstreams(),
+            b.nstreams()
+        )));
+    }
+    let n = a.nstreams();
+    std::thread::scope(|scope| -> Result<RelayStats> {
+        let mut fwd = Vec::with_capacity(n);
+        let mut bwd = Vec::with_capacity(n);
+        for i in 0..n {
+            let (sa, sb) = (&a.streams[i], &b.streams[i]);
+            fwd.push(scope.spawn(move || pump(sa, sb)));
+            bwd.push(scope.spawn(move || pump(sb, sa)));
+        }
+        let mut stats = RelayStats { a_to_b: 0, b_to_a: 0 };
+        for h in fwd {
+            stats.a_to_b += h.join().map_err(|_| MpwError::WorkerPanic("relay fwd".into()))??;
+        }
+        for h in bwd {
+            stats.b_to_a += h.join().map_err(|_| MpwError::WorkerPanic("relay bwd".into()))??;
+        }
+        Ok(stats)
+    })
+}
+
+/// Copy bytes from `src`'s read half to `dst`'s write half until EOF.
+fn pump(
+    src: &crate::mpwide::path::StreamSlot,
+    dst: &crate::mpwide::path::StreamSlot,
+) -> Result<u64> {
+    let mut buf = vec![0u8; RELAY_BUF];
+    let mut total = 0u64;
+    loop {
+        let n = {
+            let mut rx = src.rx.lock().unwrap();
+            match rx.read_some(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => n,
+                // Peer reset after finishing is a normal shutdown race.
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::ConnectionReset
+                        || e.kind() == std::io::ErrorKind::BrokenPipe =>
+                {
+                    break
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        let mut tx = dst.tx.lock().unwrap();
+        tx.pacer.acquire(n);
+        match tx.w.write_all(&buf[..n]) {
+            Ok(()) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::ConnectionReset
+                    || e.kind() == std::io::ErrorKind::BrokenPipe =>
+            {
+                break
+            }
+            Err(e) => return Err(e.into()),
+        }
+        tx.w.flush()?;
+        total += n as u64;
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::config::PathConfig;
+    use crate::mpwide::transport::mem_path_pairs;
+    use crate::util::Rng;
+
+    fn mem_paths(n: usize) -> (Path, Path) {
+        let (l, r) = mem_path_pairs(n);
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        (Path::from_pairs(l, cfg.clone()).unwrap(), Path::from_pairs(r, cfg).unwrap())
+    }
+
+    #[test]
+    fn cycle_moves_between_paths() {
+        // topology: left <-> mid(a, b) <-> right
+        let (left, mid_a) = mem_paths(2);
+        let (mid_b, right) = mem_paths(2);
+        let t_left = std::thread::spawn(move || {
+            left.send(&vec![1u8; 100]).unwrap();
+        });
+        let t_right = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 100];
+            right.recv(&mut buf).unwrap();
+            buf
+        });
+        // mid receives from left, forwards to right (its own payload here
+        // is what it received — classic cycle usage passes a buffer along).
+        let got = cycle(&mid_a, &mid_b, &vec![0u8; 0], 0).unwrap();
+        assert!(got.is_empty());
+        let mut buf = vec![0u8; 100];
+        mid_a.recv(&mut buf).unwrap();
+        mid_b.send(&buf).unwrap();
+        assert_eq!(t_right.join().unwrap(), vec![1u8; 100]);
+        t_left.join().unwrap();
+    }
+
+    #[test]
+    fn dcycle_roundtrip() {
+        let (left, mid_a) = mem_paths(1);
+        let (mid_b, right) = mem_paths(1);
+        let payload = vec![9u8; 4096];
+        let p2 = payload.clone();
+        let t_left = std::thread::spawn(move || left.dsend(&p2).unwrap());
+        let t_right = std::thread::spawn(move || right.drecv().unwrap());
+        let mut cache = Vec::new();
+        // receive from left, forward the same bytes to right
+        let n = dcycle(&mid_a, &mid_b, &[], &mut cache).unwrap();
+        assert_eq!(n, 4096);
+        // the dcycle above sent an empty message first; consume it…
+        let first = t_right.join().unwrap();
+        assert!(first.is_empty());
+        // …then forward the real payload
+        let t_right2 = {
+            let (mid_b2, right2) = mem_paths(1);
+            let h = std::thread::spawn(move || right2.drecv().unwrap());
+            mid_b2.dsend(&cache[..n]).unwrap();
+            h
+        };
+        assert_eq!(t_right2.join().unwrap(), payload);
+        t_left.join().unwrap();
+    }
+
+    #[test]
+    fn relay_rejects_mismatched_streams() {
+        let (a, _a2) = mem_paths(2);
+        let (b, _b2) = mem_paths(3);
+        assert!(relay(&a, &b).is_err());
+    }
+
+    #[test]
+    fn relay_forwards_both_directions() {
+        // ends: left <-> (fwd_l | fwd_r) <-> right
+        let (left, fwd_l) = mem_paths(2);
+        let (fwd_r, right) = mem_paths(2);
+        let mut msg_lr = vec![0u8; 50_000];
+        let mut msg_rl = vec![0u8; 20_000];
+        Rng::new(5).fill_bytes(&mut msg_lr);
+        Rng::new(6).fill_bytes(&mut msg_rl);
+        let (m1, m2) = (msg_lr.clone(), msg_rl.clone());
+
+        let t_relay = std::thread::spawn(move || relay(&fwd_l, &fwd_r).unwrap());
+        let t_right = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 50_000];
+            right.recv(&mut buf).unwrap();
+            right.send(&msg_rl).unwrap();
+            drop(right); // close so the relay sees EOF
+            buf
+        });
+        left.send(&msg_lr).unwrap();
+        let mut buf = vec![0u8; 20_000];
+        left.recv(&mut buf).unwrap();
+        assert_eq!(buf, m2);
+        assert_eq!(t_right.join().unwrap(), m1);
+        drop(left);
+        let stats = t_relay.join().unwrap();
+        assert_eq!(stats.a_to_b, 50_000);
+        assert_eq!(stats.b_to_a, 20_000);
+    }
+}

@@ -1,0 +1,123 @@
+//! Message striping: how a logical message is split across the parallel
+//! TCP streams of a path, and into per-call chunks within each stream.
+//!
+//! This module is **pure** (no I/O) and is shared verbatim by the real
+//! socket path ([`super::path`]) and the WAN simulator's
+//! [`crate::netsim::simpath`], so the simulated experiments exercise the
+//! same splitting logic as the production code.
+
+use std::ops::Range;
+
+/// Byte range of a message assigned to stream `i` of `nstreams`
+/// (`MPW_Send` "splitted evenly over the channels").
+///
+/// Uses balanced contiguous slabs: the first `len % nstreams` streams get
+/// one extra byte, so segment sizes differ by at most 1.
+pub fn segment(len: usize, nstreams: usize, i: usize) -> Range<usize> {
+    assert!(nstreams > 0, "nstreams must be >= 1");
+    assert!(i < nstreams, "stream index {i} out of range {nstreams}");
+    let base = len / nstreams;
+    let extra = len % nstreams;
+    let start = i * base + i.min(extra);
+    let size = base + usize::from(i < extra);
+    start..start + size
+}
+
+/// All stream segments for a message of `len` bytes.
+pub fn segments(len: usize, nstreams: usize) -> Vec<Range<usize>> {
+    (0..nstreams).map(|i| segment(len, nstreams, i)).collect()
+}
+
+/// Iterator over the chunk ranges of a single stream segment: each chunk is
+/// at most `chunk_size` bytes (the unit handed to one low-level tcp call).
+pub fn chunks(seg: Range<usize>, chunk_size: usize) -> impl Iterator<Item = Range<usize>> {
+    assert!(chunk_size > 0, "chunk_size must be >= 1");
+    let mut pos = seg.start;
+    let end = seg.end;
+    std::iter::from_fn(move || {
+        if pos >= end {
+            return None;
+        }
+        let next = (pos + chunk_size).min(end);
+        let r = pos..next;
+        pos = next;
+        Some(r)
+    })
+}
+
+/// Number of low-level calls needed to move `len` bytes over `nstreams`
+/// streams with the given chunk size (used by the simulator and by the
+/// autotuner's cost model).
+pub fn call_count(len: usize, nstreams: usize, chunk_size: usize) -> usize {
+    segments(len, nstreams)
+        .into_iter()
+        .map(|s| s.len().div_ceil(chunk_size))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_cover_exactly() {
+        for len in [0usize, 1, 7, 100, 1023, 1024, 1025] {
+            for n in [1usize, 2, 3, 7, 32] {
+                let segs = segments(len, n);
+                assert_eq!(segs.len(), n);
+                // contiguous, ordered, covering 0..len
+                assert_eq!(segs[0].start, 0);
+                assert_eq!(segs[n - 1].end, len);
+                for w in segs.windows(2) {
+                    assert_eq!(w[0].end, w[1].start);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segments_balanced() {
+        let segs = segments(10, 3);
+        let sizes: Vec<usize> = segs.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn empty_message_gives_empty_segments() {
+        for s in segments(0, 5) {
+            assert!(s.is_empty());
+        }
+    }
+
+    #[test]
+    fn chunks_partition_segment() {
+        let seg = 5..27;
+        let cs: Vec<_> = chunks(seg.clone(), 8).collect();
+        assert_eq!(cs, vec![5..13, 13..21, 21..27]);
+    }
+
+    #[test]
+    fn chunks_empty_segment() {
+        assert_eq!(chunks(3..3, 8).count(), 0);
+    }
+
+    #[test]
+    fn chunk_exact_multiple() {
+        let cs: Vec<_> = chunks(0..16, 8).collect();
+        assert_eq!(cs, vec![0..8, 8..16]);
+    }
+
+    #[test]
+    fn call_count_matches_manual() {
+        // 100 bytes over 3 streams: 34+33+33; chunk 10 -> 4+4+4 = 12 calls
+        assert_eq!(call_count(100, 3, 10), 12);
+        assert_eq!(call_count(0, 3, 10), 0);
+        assert_eq!(call_count(1, 1, 1 << 20), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn segment_index_out_of_range_panics() {
+        segment(10, 2, 2);
+    }
+}

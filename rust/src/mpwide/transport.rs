@@ -1,0 +1,549 @@
+//! Stream transports: real TCP sockets (the production transport, analogous
+//! to the paper's `Socket` class) and an in-memory duplex used by unit
+//! tests.
+//!
+//! A path's stream is a pair of independently lockable halves so that a
+//! send and a receive can proceed concurrently on the same stream
+//! (`MPW_SendRecv`), exactly as MPWide uses full-duplex TCP with one
+//! pthread per direction.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::os::fd::AsRawFd;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::errors::{MpwError, Result};
+
+/// Magic bytes opening the per-stream handshake.
+pub const HELLO_MAGIC: [u8; 4] = *b"MPW1";
+/// Handshake size: magic + path uuid + stream idx + nstreams + reserved.
+pub const HELLO_LEN: usize = 4 + 8 + 2 + 2 + 8;
+
+/// One direction of a stream. Implemented by `TcpStream` (via the blanket
+/// impl) and the in-memory test transport.
+pub trait HalfDuplex: Send {
+    /// Write the whole buffer.
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()>;
+    /// Read exactly `buf.len()` bytes.
+    fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()>;
+    /// Read up to `buf.len()` bytes; `Ok(0)` signals end-of-stream. Used by
+    /// the relay/forwarder, which must forward whatever arrives.
+    fn read_some(&mut self, buf: &mut [u8]) -> std::io::Result<usize>;
+    /// Flush buffered data (no-op for unbuffered transports).
+    fn flush(&mut self) -> std::io::Result<()>;
+}
+
+impl HalfDuplex for TcpStream {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        Write::write_all(self, buf)
+    }
+    fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
+        Read::read_exact(self, buf)
+    }
+    fn read_some(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        Read::read(self, buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Write::flush(self)
+    }
+}
+
+/// Adapter giving any `Read + Write` object the [`HalfDuplex`] surface
+/// (used by tools that wrap buffered readers/writers).
+pub struct IoHalf<T: Read + Write + Send>(pub T);
+
+impl<T: Read + Write + Send> HalfDuplex for IoHalf<T> {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        Write::write_all(&mut self.0, buf)
+    }
+    fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
+        Read::read_exact(&mut self.0, buf)
+    }
+    fn read_some(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        Read::read(&mut self.0, buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Write::flush(&mut self.0)
+    }
+}
+
+/// A full-duplex stream: independently owned tx/rx halves plus transport
+/// metadata. Building block handed to [`super::path::Path`].
+pub struct StreamPair {
+    /// Write half.
+    pub tx: Box<dyn HalfDuplex>,
+    /// Read half.
+    pub rx: Box<dyn HalfDuplex>,
+    /// Human-readable peer description (for diagnostics).
+    pub peer: String,
+    /// Raw fd when backed by a real socket — lets `set_window` adjust
+    /// SO_SNDBUF/SO_RCVBUF after creation.
+    fd: Option<i32>,
+}
+
+impl std::fmt::Debug for StreamPair {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamPair").field("peer", &self.peer).field("fd", &self.fd).finish()
+    }
+}
+
+impl StreamPair {
+    /// Wrap an established, handshaken TCP stream.
+    pub fn from_tcp(stream: TcpStream) -> Result<StreamPair> {
+        stream.set_nodelay(true)?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+        let fd = stream.as_raw_fd();
+        let rx = stream.try_clone()?;
+        Ok(StreamPair { tx: Box::new(stream), rx: Box::new(rx), peer, fd: Some(fd) })
+    }
+
+    /// Raw socket fd when TCP-backed (None for in-memory transports).
+    pub fn raw_fd(&self) -> Option<i32> {
+        self.fd
+    }
+
+    /// Set the TCP window (both SO_SNDBUF and SO_RCVBUF) on the underlying
+    /// socket. The kernel is free to clamp the value to the site limits —
+    /// the same constraint the paper notes for `MPW_setWin`. Returns the
+    /// value actually granted by the kernel (doubled bookkeeping included),
+    /// or `None` for non-socket transports.
+    pub fn set_window(&self, bytes: usize) -> Result<Option<usize>> {
+        match self.fd {
+            None => Ok(None),
+            Some(fd) => set_socket_window(fd, bytes),
+        }
+    }
+}
+
+/// Set SO_SNDBUF/SO_RCVBUF on a raw socket fd; returns the granted value
+/// (the kernel clamps to site limits, exactly the `MPW_setWin` caveat).
+pub fn set_socket_window(fd: i32, bytes: usize) -> Result<Option<usize>> {
+    let val = bytes as libc::c_int;
+    // SAFETY: fd is a valid open socket owned by the calling StreamPair /
+    // Path; we pass a correctly-sized c_int for both options.
+    unsafe {
+        for opt in [libc::SO_SNDBUF, libc::SO_RCVBUF] {
+            let rc = libc::setsockopt(
+                fd,
+                libc::SOL_SOCKET,
+                opt,
+                &val as *const _ as *const libc::c_void,
+                std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+            );
+            if rc != 0 {
+                return Err(MpwError::Io(std::io::Error::last_os_error()));
+            }
+        }
+        let mut got: libc::c_int = 0;
+        let mut len = std::mem::size_of::<libc::c_int>() as libc::socklen_t;
+        let rc = libc::getsockopt(
+            fd,
+            libc::SOL_SOCKET,
+            libc::SO_SNDBUF,
+            &mut got as *mut _ as *mut libc::c_void,
+            &mut len,
+        );
+        if rc != 0 {
+            return Err(MpwError::Io(std::io::Error::last_os_error()));
+        }
+        Ok(Some(got as usize))
+    }
+}
+
+/// Encode the per-stream hello: which path this stream belongs to and its
+/// index, so a listener can group concurrently arriving streams (possibly
+/// from several clients) into complete paths.
+pub fn encode_hello(path_uuid: u64, stream_idx: u16, nstreams: u16) -> [u8; HELLO_LEN] {
+    let mut h = [0u8; HELLO_LEN];
+    h[0..4].copy_from_slice(&HELLO_MAGIC);
+    h[4..12].copy_from_slice(&path_uuid.to_be_bytes());
+    h[12..14].copy_from_slice(&stream_idx.to_be_bytes());
+    h[14..16].copy_from_slice(&nstreams.to_be_bytes());
+    h
+}
+
+/// Decode and validate a hello header.
+pub fn decode_hello(h: &[u8; HELLO_LEN]) -> Result<(u64, u16, u16)> {
+    if h[0..4] != HELLO_MAGIC {
+        return Err(MpwError::Protocol(format!("bad magic {:?}", &h[0..4])));
+    }
+    let uuid = u64::from_be_bytes(h[4..12].try_into().unwrap());
+    let idx = u16::from_be_bytes(h[12..14].try_into().unwrap());
+    let n = u16::from_be_bytes(h[14..16].try_into().unwrap());
+    if n == 0 || idx >= n {
+        return Err(MpwError::Protocol(format!("bad stream index {idx}/{n}")));
+    }
+    Ok((uuid, idx, n))
+}
+
+/// Connect one TCP stream with retry until `timeout` (endpoints of a
+/// distributed run start in arbitrary order, so the connecting side polls).
+pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + timeout;
+    let mut delay = Duration::from_millis(10);
+    loop {
+        // Re-resolve each attempt: DNS may converge while we wait.
+        let attempt = addr
+            .to_socket_addrs()
+            .ok()
+            .and_then(|mut it| it.next())
+            .ok_or_else(|| MpwError::Protocol(format!("cannot resolve {addr}")));
+        match attempt {
+            Ok(sa) => match TcpStream::connect_timeout(&sa, Duration::from_secs(5)) {
+                Ok(s) => return Ok(s),
+                Err(_) if Instant::now() < deadline => {}
+                Err(e) => {
+                    return Err(if Instant::now() >= deadline {
+                        MpwError::ConnectTimeout {
+                            endpoint: addr.to_string(),
+                            seconds: timeout.as_secs_f64(),
+                        }
+                    } else {
+                        MpwError::Io(e)
+                    })
+                }
+            },
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e);
+                }
+            }
+        }
+        if Instant::now() >= deadline {
+            return Err(MpwError::ConnectTimeout {
+                endpoint: addr.to_string(),
+                seconds: timeout.as_secs_f64(),
+            });
+        }
+        std::thread::sleep(delay);
+        delay = (delay * 2).min(Duration::from_millis(500));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// In-memory duplex transport (unit tests; no sockets, no ports).
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct ChanInner {
+    buf: std::collections::VecDeque<u8>,
+    closed: bool,
+}
+
+#[derive(Default)]
+struct Chan {
+    inner: Mutex<ChanInner>,
+    cv: Condvar,
+}
+
+/// Writer half of an in-memory channel; marks the channel closed on drop.
+pub struct MemWriter(Arc<Chan>);
+/// Reader half of an in-memory channel.
+pub struct MemReader(Arc<Chan>);
+
+impl Write for MemWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let mut g = self.0.inner.lock().unwrap();
+        g.buf.extend(buf.iter());
+        self.0.cv.notify_all();
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for MemWriter {
+    fn drop(&mut self) {
+        self.0.inner.lock().unwrap().closed = true;
+        self.0.cv.notify_all();
+    }
+}
+
+impl Read for MemReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut g = self.0.inner.lock().unwrap();
+        loop {
+            if !g.buf.is_empty() {
+                let n = buf.len().min(g.buf.len());
+                for b in buf.iter_mut().take(n) {
+                    *b = g.buf.pop_front().unwrap();
+                }
+                return Ok(n);
+            }
+            if g.closed {
+                return Ok(0);
+            }
+            g = self.0.cv.wait(g).unwrap();
+        }
+    }
+}
+
+// Read-only / write-only halves still need the full HalfDuplex surface; the
+// unused direction errors loudly rather than hanging.
+struct MemTx(MemWriter);
+struct MemRx(MemReader);
+
+impl HalfDuplex for MemTx {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        Write::write_all(&mut self.0, buf)
+    }
+    fn read_exact(&mut self, _buf: &mut [u8]) -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "write-only half"))
+    }
+    fn read_some(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "write-only half"))
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl HalfDuplex for MemRx {
+    fn write_all(&mut self, _buf: &[u8]) -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "read-only half"))
+    }
+    fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
+        Read::read_exact(&mut self.0, buf)
+    }
+    fn read_some(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        Read::read(&mut self.0, buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Create a connected pair of in-memory full-duplex streams. Used by unit
+/// tests so path logic can be exercised without sockets.
+pub fn mem_pair() -> (StreamPair, StreamPair) {
+    let ab = Arc::new(Chan::default()); // a -> b
+    let ba = Arc::new(Chan::default()); // b -> a
+    let a = StreamPair {
+        tx: Box::new(MemTx(MemWriter(ab.clone()))),
+        rx: Box::new(MemRx(MemReader(ba.clone()))),
+        peer: "mem:b".into(),
+        fd: None,
+    };
+    let b = StreamPair {
+        tx: Box::new(MemTx(MemWriter(ba))),
+        rx: Box::new(MemRx(MemReader(ab))),
+        peer: "mem:a".into(),
+        fd: None,
+    };
+    (a, b)
+}
+
+/// Create `n` connected in-memory stream pairs (one path's worth).
+pub fn mem_path_pairs(n: usize) -> (Vec<StreamPair>, Vec<StreamPair>) {
+    let mut left = Vec::with_capacity(n);
+    let mut right = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (a, b) = mem_pair();
+        left.push(a);
+        right.push(b);
+    }
+    (left, right)
+}
+
+// ---------------------------------------------------------------------------
+// Path listener: groups incoming handshaken streams into complete paths.
+// ---------------------------------------------------------------------------
+
+/// Accepts TCP connections and assembles them into complete stream sets,
+/// keyed by the client-generated path uuid in each stream's hello. Several
+/// clients may connect concurrently (e.g. both sides of a forwarder).
+pub struct RawPathListener {
+    listener: TcpListener,
+    pending: HashMap<u64, Vec<Option<TcpStream>>>,
+}
+
+impl RawPathListener {
+    /// Bind to `addr` (e.g. `"0.0.0.0:6000"`).
+    pub fn bind(addr: &str) -> Result<RawPathListener> {
+        Ok(RawPathListener { listener: TcpListener::bind(addr)?, pending: HashMap::new() })
+    }
+
+    /// The local port actually bound (useful with port 0 in tests).
+    pub fn port(&self) -> u16 {
+        self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
+    }
+
+    /// Block until one complete path (all `nstreams` streams, ordered by
+    /// stream index) has arrived; returns its streams and uuid.
+    pub fn accept_streams(&mut self) -> Result<(Vec<StreamPair>, u64)> {
+        loop {
+            let (mut s, _) = self.listener.accept()?;
+            let mut hello = [0u8; HELLO_LEN];
+            Read::read_exact(&mut s, &mut hello)?;
+            let (uuid, idx, n) = decode_hello(&hello)?;
+            let slot = self.pending.entry(uuid).or_insert_with(|| {
+                let mut v = Vec::with_capacity(n as usize);
+                v.resize_with(n as usize, || None);
+                v
+            });
+            if slot.len() != n as usize {
+                return Err(MpwError::Protocol(format!(
+                    "stream count mismatch for path {uuid:#x}: {} vs {n}",
+                    slot.len()
+                )));
+            }
+            if slot[idx as usize].is_some() {
+                return Err(MpwError::Protocol(format!("duplicate stream {idx} for {uuid:#x}")));
+            }
+            slot[idx as usize] = Some(s);
+            if slot.iter().all(Option::is_some) {
+                let streams = self.pending.remove(&uuid).unwrap();
+                let pairs = streams
+                    .into_iter()
+                    .map(|s| StreamPair::from_tcp(s.unwrap()))
+                    .collect::<Result<Vec<_>>>()?;
+                return Ok((pairs, uuid));
+            }
+        }
+    }
+}
+
+/// Connect `nstreams` handshaken TCP streams to `host:port`, all tagged
+/// with a fresh path uuid.
+pub fn connect_streams(
+    host: &str,
+    port: u16,
+    nstreams: usize,
+    timeout: Duration,
+) -> Result<Vec<StreamPair>> {
+    let addr = format!("{host}:{port}");
+    let uuid = fresh_uuid();
+    let mut pairs = Vec::with_capacity(nstreams);
+    for i in 0..nstreams {
+        let mut s = connect_retry(&addr, timeout)?;
+        Write::write_all(&mut s, &encode_hello(uuid, i as u16, nstreams as u16))?;
+        pairs.push(StreamPair::from_tcp(s)?);
+    }
+    Ok(pairs)
+}
+
+/// Generate a path uuid: time + pid + counter. Uniqueness only needs to
+/// hold per listener, briefly.
+fn fresh_uuid() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static CTR: AtomicU64 = AtomicU64::new(0);
+    let t = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let pid = std::process::id() as u64;
+    t ^ (pid << 32) ^ CTR.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37_79B9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hello_roundtrip() {
+        let h = encode_hello(0xDEAD_BEEF, 3, 8);
+        let (uuid, idx, n) = decode_hello(&h).unwrap();
+        assert_eq!((uuid, idx, n), (0xDEAD_BEEF, 3, 8));
+    }
+
+    #[test]
+    fn hello_rejects_bad_magic() {
+        let mut h = encode_hello(1, 0, 1);
+        h[0] = b'X';
+        assert!(decode_hello(&h).is_err());
+    }
+
+    #[test]
+    fn hello_rejects_bad_index() {
+        let h = encode_hello(1, 5, 4);
+        assert!(decode_hello(&h).is_err());
+        let h = encode_hello(1, 0, 0);
+        assert!(decode_hello(&h).is_err());
+    }
+
+    #[test]
+    fn mem_pair_roundtrip() {
+        let (mut a, mut b) = mem_pair();
+        a.tx.write_all(b"hello").unwrap();
+        let mut buf = [0u8; 5];
+        b.rx.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hello");
+        // and the reverse direction
+        b.tx.write_all(b"world").unwrap();
+        a.rx.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"world");
+    }
+
+    #[test]
+    fn mem_reader_sees_eof_on_writer_drop() {
+        let (a, mut b) = mem_pair();
+        drop(a);
+        let mut buf = [0u8; 4];
+        let n = b.rx.read_some(&mut buf).unwrap();
+        assert_eq!(n, 0);
+    }
+
+    #[test]
+    fn mem_rx_refuses_write() {
+        let (mut a, _b) = mem_pair();
+        assert!(a.rx.write_all(b"x").is_err());
+        assert!(a.tx.read_exact(&mut [0u8; 1]).is_err());
+    }
+
+    #[test]
+    fn tcp_streams_assemble_into_path() {
+        let mut listener = RawPathListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            connect_streams("127.0.0.1", port, 3, Duration::from_secs(5)).unwrap()
+        });
+        let (server_side, _uuid) = listener.accept_streams().unwrap();
+        let client_side = t.join().unwrap();
+        assert_eq!(server_side.len(), 3);
+        assert_eq!(client_side.len(), 3);
+    }
+
+    #[test]
+    fn tcp_set_window_returns_granted() {
+        let mut listener = RawPathListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            connect_streams("127.0.0.1", port, 1, Duration::from_secs(5)).unwrap()
+        });
+        let (server_side, _) = listener.accept_streams().unwrap();
+        let client_side = t.join().unwrap();
+        let granted = client_side[0].set_window(1 << 20).unwrap();
+        assert!(granted.is_some());
+        assert!(granted.unwrap() > 0);
+        drop(server_side);
+    }
+
+    #[test]
+    fn connect_retry_times_out_quickly_on_dead_port() {
+        // Port 1 on localhost is almost certainly closed; refused, not hang.
+        let r = connect_retry("127.0.0.1:1", Duration::from_millis(200));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn interleaved_clients_get_separate_paths() {
+        let mut listener = RawPathListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.port();
+        let t1 = std::thread::spawn(move || {
+            connect_streams("127.0.0.1", port, 2, Duration::from_secs(5)).unwrap()
+        });
+        let t2 = std::thread::spawn(move || {
+            connect_streams("127.0.0.1", port, 2, Duration::from_secs(5)).unwrap()
+        });
+        let (p1, u1) = listener.accept_streams().unwrap();
+        let (p2, u2) = listener.accept_streams().unwrap();
+        assert_ne!(u1, u2);
+        assert_eq!(p1.len(), 2);
+        assert_eq!(p2.len(), 2);
+        t1.join().unwrap();
+        t2.join().unwrap();
+    }
+}

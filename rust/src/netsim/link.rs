@@ -1,0 +1,250 @@
+//! Link profiles: the calibrated per-route parameters of the simulator.
+//!
+//! Everything qualitative comes from the TCP model; a profile only fixes
+//! what a real route fixes — propagation delay, bottleneck capacity,
+//! residual loss per direction, and how busy the route is. Profiles are
+//! named after the endpoint pairs in the paper's evaluation.
+
+/// Transfer direction over a link (the paper reports each direction
+/// separately — Table 1's `11/16`-style cells).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Endpoint 1 → endpoint 2 (first number in the paper's cells).
+    AtoB,
+    /// Endpoint 2 → endpoint 1.
+    BtoA,
+}
+
+/// A wide-area route between two endpoints.
+#[derive(Debug, Clone)]
+pub struct LinkProfile {
+    /// Human-readable route name (paper endpoint pair).
+    pub name: &'static str,
+    /// Base round-trip time, seconds.
+    pub rtt: f64,
+    /// Bottleneck capacity per direction, bytes/second.
+    pub capacity: f64,
+    /// Residual per-packet loss probability, A→B.
+    pub loss_ab: f64,
+    /// Residual per-packet loss probability, B→A.
+    pub loss_ba: f64,
+    /// Background traffic A→B expressed as a number of competing elastic
+    /// TCP flows (fractional allowed). Fair-share competition against
+    /// these is what makes N parallel streams collectively faster than
+    /// one — the paper's core mechanism.
+    pub bg_ab: f64,
+    /// Background competing-flow weight, B→A.
+    pub bg_ba: f64,
+    /// Relative RTT jitter (std-dev as a fraction of the base RTT).
+    pub jitter: f64,
+    /// Coupling between directions under simultaneous bidirectional load
+    /// (ack compression, duplex contention on campus equipment): the
+    /// usable share of one direction shrinks by `duplex · utilization` of
+    /// the other.
+    pub duplex_penalty: f64,
+}
+
+impl LinkProfile {
+    /// Loss probability for a direction.
+    pub fn loss(&self, dir: Direction) -> f64 {
+        match dir {
+            Direction::AtoB => self.loss_ab,
+            Direction::BtoA => self.loss_ba,
+        }
+    }
+
+    /// Background load for a direction.
+    pub fn bg(&self, dir: Direction) -> f64 {
+        match dir {
+            Direction::AtoB => self.bg_ab,
+            Direction::BtoA => self.bg_ba,
+        }
+    }
+
+    /// Bandwidth-delay product, bytes.
+    pub fn bdp(&self) -> f64 {
+        self.capacity * self.rtt
+    }
+}
+
+/// The routes of the paper's evaluation. Parameters are calibrated so the
+/// *measured tooling throughputs* land near Table 1 / §1.2.3 — see
+/// EXPERIMENTS.md for the comparison and the calibration notes.
+pub mod profiles {
+    use super::LinkProfile;
+
+    /// London (UK) – Poznań (PL), regular internet (Table 1 rows 1–3).
+    pub fn london_poznan() -> LinkProfile {
+        LinkProfile {
+            name: "London-Poznan",
+            rtt: 0.035,
+            capacity: 135e6,
+            loss_ab: 8.0e-5,
+            loss_ba: 2.0e-6,
+            bg_ab: 3.5,
+            bg_ba: 0.15,
+            jitter: 0.06,
+            duplex_penalty: 0.42,
+        }
+    }
+
+    /// Poznań (PL) – Gdańsk (PL), national research network.
+    pub fn poznan_gdansk() -> LinkProfile {
+        LinkProfile {
+            name: "Poznan-Gdansk",
+            rtt: 0.012,
+            capacity: 140e6,
+            loss_ab: 3.0e-5,
+            loss_ba: 2.0e-6,
+            bg_ab: 1.2,
+            bg_ba: 0.10,
+            jitter: 0.05,
+            duplex_penalty: 0.15,
+        }
+    }
+
+    /// Poznań (PL) – Amsterdam (NL), regular internet.
+    pub fn poznan_amsterdam() -> LinkProfile {
+        LinkProfile {
+            name: "Poznan-Amsterdam",
+            rtt: 0.030,
+            capacity: 70e6,
+            loss_ab: 8.0e-6,
+            loss_ba: 3.0e-4,
+            bg_ab: 1.2,
+            bg_ba: 1.2,
+            jitter: 0.06,
+            duplex_penalty: 0.18,
+        }
+    }
+
+    /// UCL (London) – Yale (US), regular internet (§1.2.3 file transfers).
+    pub fn ucl_yale() -> LinkProfile {
+        LinkProfile {
+            name: "UCL-Yale",
+            rtt: 0.075,
+            capacity: 55e6,
+            loss_ab: 1.0e-4,
+            loss_ba: 1.0e-4,
+            bg_ab: 1.2,
+            bg_ba: 1.2,
+            jitter: 0.08,
+            duplex_penalty: 0.20,
+        }
+    }
+
+    /// UCL desktop – HECToR (Edinburgh) over regular internet: the
+    /// bloodflow coupling link (§1.2.2; "messages require 11 ms to
+    /// traverse the network back and forth").
+    pub fn ucl_hector() -> LinkProfile {
+        LinkProfile {
+            name: "UCL-HECToR",
+            rtt: 0.011,
+            capacity: 60e6,
+            loss_ab: 1.0e-6,
+            loss_ba: 1.0e-6,
+            bg_ab: 0.5,
+            bg_ba: 0.5,
+            jitter: 0.10,
+            duplex_penalty: 0.10,
+        }
+    }
+
+    /// Dedicated 10 Gbit/s lightpath between CosmoGrid supercomputers
+    /// (Espoo–Edinburgh–Amsterdam triangle, §1.2.1 / Fig 1).
+    pub fn cosmogrid_lightpath() -> LinkProfile {
+        LinkProfile {
+            name: "CosmoGrid-lightpath",
+            rtt: 0.030,
+            capacity: 1.25e9,
+            loss_ab: 1.0e-7,
+            loss_ba: 1.0e-7,
+            bg_ab: 0.05,
+            bg_ba: 0.05,
+            jitter: 0.03,
+            duplex_penalty: 0.05,
+        }
+    }
+
+    /// Amsterdam – Tokyo 10 Gbit/s lightpath (the original CosmoGrid run,
+    /// §1.2.1): intercontinental RTT, clean dedicated capacity.
+    pub fn amsterdam_tokyo() -> LinkProfile {
+        LinkProfile {
+            name: "Amsterdam-Tokyo",
+            rtt: 0.27,
+            capacity: 1.25e9,
+            loss_ab: 2.0e-7,
+            loss_ba: 2.0e-7,
+            bg_ab: 0.05,
+            bg_ba: 0.05,
+            jitter: 0.02,
+            duplex_penalty: 0.05,
+        }
+    }
+
+    /// Same-machine / LAN reference (the paper's §1.3.6 constraint: MPWide
+    /// has little to gain locally).
+    pub fn local_lan() -> LinkProfile {
+        LinkProfile {
+            name: "local-LAN",
+            rtt: 0.0002,
+            capacity: 1.2e9,
+            loss_ab: 0.0,
+            loss_ba: 0.0,
+            bg_ab: 0.0,
+            bg_ba: 0.0,
+            jitter: 0.05,
+            duplex_penalty: 0.0,
+        }
+    }
+
+    /// All profiles (for sweeps and sanity tests).
+    pub fn all() -> Vec<LinkProfile> {
+        vec![
+            london_poznan(),
+            poznan_gdansk(),
+            poznan_amsterdam(),
+            ucl_yale(),
+            ucl_hector(),
+            cosmogrid_lightpath(),
+            amsterdam_tokyo(),
+            local_lan(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_accessors() {
+        let l = profiles::london_poznan();
+        assert_eq!(l.loss(Direction::AtoB), l.loss_ab);
+        assert_eq!(l.bg(Direction::BtoA), l.bg_ba);
+    }
+
+    #[test]
+    fn profiles_are_physical() {
+        for p in profiles::all() {
+            assert!(p.rtt > 0.0 && p.rtt < 1.0, "{}", p.name);
+            assert!(p.capacity > 1e6, "{}", p.name);
+            assert!((0.0..0.01).contains(&p.loss_ab), "{}", p.name);
+            assert!((0.0..0.01).contains(&p.loss_ba), "{}", p.name);
+            assert!((0.0..64.0).contains(&p.bg_ab), "{}", p.name);
+            assert!(p.duplex_penalty < 1.0, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn lightpaths_are_10g() {
+        assert!((profiles::cosmogrid_lightpath().capacity - 1.25e9).abs() < 1.0);
+        assert!((profiles::amsterdam_tokyo().capacity - 1.25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn bdp_math() {
+        let l = profiles::amsterdam_tokyo();
+        assert!((l.bdp() - 1.25e9 * 0.27).abs() < 1.0);
+    }
+}

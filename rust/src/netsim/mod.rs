@@ -1,0 +1,34 @@
+//! WAN substrate simulator (DESIGN.md §2).
+//!
+//! The paper's evaluation ran on real wide-area routes (London–Poznań,
+//! Poznań–Gdańsk, Poznań–Amsterdam, UCL–Yale, and 10 Gbit/s lightpaths
+//! between Espoo/Edinburgh/Amsterdam and Amsterdam–Tokyo). Those links are
+//! not available here, so this module provides a **flow-level,
+//! round-based discrete-event TCP model**: per-flow congestion windows
+//! (slow start + AIMD), receiver-window caps, per-direction stochastic
+//! loss, background load, and proportional sharing of a bottleneck.
+//!
+//! The point of the model is that the phenomena MPWide exploits *emerge
+//! from the mechanisms* rather than being scripted:
+//!
+//! * a single TCP flow on a long fat network is capped by
+//!   `min(rwnd/RTT, ~MSS/(RTT·√p))` (the Mathis law falls out of AIMD),
+//! * N parallel flows recover from loss independently and aggregate,
+//! * loss asymmetry between directions produces the asymmetric
+//!   single-stream numbers in the paper's Table 1,
+//! * and MPWide's own benchmark exchanges data in *both directions at
+//!   once* (`MPW_SendRecv`), which is why its Table 1 rows are symmetric.
+//!
+//! Only the per-route parameters (RTT, capacity, loss, background load)
+//! are calibrated; see [`profiles`] and EXPERIMENTS.md for the
+//! paper-vs-measured comparison.
+
+pub mod link;
+pub mod network;
+pub mod simpath;
+pub mod tcp_model;
+
+pub use link::{profiles, Direction, LinkProfile};
+pub use network::{simulate_duplex, simulate_oneway, OneWayResult};
+pub use simpath::{SimPath, SimTransferResult};
+pub use tcp_model::{TcpFlow, INIT_CWND, MSS};

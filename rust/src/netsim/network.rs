@@ -1,0 +1,360 @@
+//! The round-based network engine: advances a set of flows over a link,
+//! sharing the bottleneck proportionally, drawing loss and background
+//! load stochastically, and (for bidirectional runs) coupling the two
+//! directions through the profile's duplex penalty.
+
+use super::link::{Direction, LinkProfile};
+use super::tcp_model::{TcpFlow, MSS};
+use crate::util::Rng;
+
+/// Result of driving a set of flows to completion in one direction.
+#[derive(Debug, Clone)]
+pub struct OneWayResult {
+    /// Wall-clock (simulated) seconds until the last flow finished.
+    pub seconds: f64,
+    /// Total bytes delivered.
+    pub bytes: f64,
+    /// Aggregate throughput, bytes/second.
+    pub throughput: f64,
+    /// Total loss events across flows.
+    pub losses: u32,
+    /// Rounds simulated.
+    pub rounds: u32,
+    /// Optional timeline of (t, cumulative bytes) samples.
+    pub timeline: Vec<(f64, f64)>,
+}
+
+/// Hard cap on simulation rounds (guards against a mis-parameterized run
+/// spinning forever; generous: 10⁶ RTTs).
+const MAX_ROUNDS: u32 = 1_000_000;
+
+fn round_dt(link: &LinkProfile, rng: &mut Rng) -> f64 {
+    (link.rtt * (1.0 + link.jitter * rng.gauss())).clamp(link.rtt * 0.5, link.rtt * 2.0)
+}
+
+/// Max-min fair ("waterfilling") allocation of `capacity` bytes among
+/// foreground flows demanding `offers`, with `bg_weight` additional
+/// elastic (always-hungry) background flows absorbing their fair share.
+/// This is the mechanism behind MPWide's stream-count advantage: on a
+/// busy bottleneck, N flows collectively receive ~N/(N+bg) of capacity
+/// where one flow receives ~1/(1+bg).
+pub fn maxmin_allocate(offers: &[f64], capacity: f64, bg_weight: f64) -> Vec<f64> {
+    let mut alloc = vec![0.0; offers.len()];
+    let mut unsat: Vec<usize> = (0..offers.len()).filter(|&i| offers[i] > 0.0).collect();
+    let mut cap = capacity;
+    // Background flows are never satisfied, so they keep their weight in
+    // every round of the waterfilling and simply absorb the remainder.
+    while !unsat.is_empty() && cap > 1e-9 {
+        let share = cap / (unsat.len() as f64 + bg_weight);
+        let satisfied: Vec<usize> =
+            unsat.iter().copied().filter(|&i| offers[i] <= share).collect();
+        if satisfied.is_empty() {
+            for &i in &unsat {
+                alloc[i] = share;
+            }
+            return alloc;
+        }
+        for &i in &satisfied {
+            alloc[i] = offers[i];
+            cap -= offers[i];
+        }
+        unsat.retain(|i| !satisfied.contains(i));
+    }
+    alloc
+}
+
+/// Advance `flows` one round in one direction. `other_util` is the
+/// utilization (0..1) of the opposite direction during the same round,
+/// for the duplex coupling. Returns (bytes delivered, loss events,
+/// utilization of this direction).
+fn step_direction(
+    flows: &mut [TcpFlow],
+    link: &LinkProfile,
+    dir: Direction,
+    dt: f64,
+    other_util: f64,
+    rng: &mut Rng,
+) -> (f64, u32, f64) {
+    let offers: Vec<f64> = flows.iter().map(|f| f.offer(dt)).collect();
+    let total_offer: f64 = offers.iter().sum();
+    if total_offer <= 0.0 {
+        // nothing to move this round, but stalled flows must still tick
+        for f in flows.iter_mut() {
+            if !f.done() {
+                f.on_round(0.0, false);
+            }
+        }
+        return (0.0, 0, 0.0);
+    }
+    // Background intensity fluctuates round to round.
+    let bg = (link.bg(dir) * (1.0 + 0.3 * rng.gauss())).max(0.0);
+    let duplex = 1.0 - link.duplex_penalty * other_util;
+    let capacity = (link.capacity * dt * duplex).max(MSS);
+    let alloc = maxmin_allocate(&offers, capacity, bg);
+
+    // Loss: residual random loss per packet, plus queue-overflow pressure
+    // when a flow's window overshoots its fair allocation. Per-flow (not
+    // global) loss avoids synchronized collapse and lets each flow's
+    // AIMD settle just above its share — standard flow-level modelling.
+    const BETA_LOSS: f64 = 0.3;
+    let p_rand = link.loss(dir);
+    let mut delivered_total = 0.0;
+    let mut losses = 0;
+    for ((f, &offer), &a) in flows.iter_mut().zip(&offers).zip(&alloc) {
+        if offer <= 0.0 {
+            // still tick the flow (stall countdown) without progress
+            if !f.done() {
+                f.on_round(0.0, false);
+            }
+            continue;
+        }
+        let delivered = offer.min(a);
+        let packets = delivered / MSS;
+        let overshoot = ((offer - a) / a.max(MSS)).max(0.0);
+        let p_loss = (1.0 - (1.0 - p_rand).powf(packets)) + BETA_LOSS * overshoot.min(3.0);
+        let lost = rng.chance(p_loss.min(0.95));
+        f.on_round(delivered, lost);
+        if lost {
+            losses += 1;
+        }
+        delivered_total += delivered;
+    }
+    let util = (delivered_total / (link.capacity * dt)).min(1.0);
+    (delivered_total, losses, util)
+}
+
+/// Drive `flows` to completion in a single direction (scp-style
+/// unidirectional transfer). `record_timeline` samples cumulative bytes
+/// each round (used by the figure benches).
+pub fn simulate_oneway(
+    flows: &mut [TcpFlow],
+    link: &LinkProfile,
+    dir: Direction,
+    rng: &mut Rng,
+    record_timeline: bool,
+) -> OneWayResult {
+    let mut t = 0.0;
+    let mut rounds = 0;
+    let mut losses = 0;
+    let mut moved = 0.0;
+    let mut timeline = Vec::new();
+    while flows.iter().any(|f| !f.done()) && rounds < MAX_ROUNDS {
+        let dt = round_dt(link, rng);
+        let (d, l, _) = step_direction(flows, link, dir, dt, 0.0, rng);
+        t += dt;
+        rounds += 1;
+        losses += l;
+        moved += d;
+        if record_timeline {
+            timeline.push((t, moved));
+        }
+    }
+    OneWayResult {
+        seconds: t,
+        bytes: moved,
+        throughput: if t > 0.0 { moved / t } else { 0.0 },
+        losses,
+        rounds,
+        timeline,
+    }
+}
+
+/// Drive two flow sets simultaneously, one per direction — the shape of
+/// `MPW_SendRecv`, which is how the paper's MPWide throughput tests ran
+/// (and why MPWide's Table 1 rows are symmetric). Returns per-direction
+/// results; each direction's clock stops when its own flows finish.
+pub fn simulate_duplex(
+    flows_ab: &mut [TcpFlow],
+    flows_ba: &mut [TcpFlow],
+    link: &LinkProfile,
+    rng: &mut Rng,
+) -> (OneWayResult, OneWayResult) {
+    let mut t = 0.0;
+    let mut rounds = 0;
+    let (mut end_ab, mut end_ba) = (0.0f64, 0.0f64);
+    let (mut moved_ab, mut moved_ba) = (0.0f64, 0.0f64);
+    let (mut losses_ab, mut losses_ba) = (0u32, 0u32);
+    let (mut util_ab, mut util_ba) = (0.0f64, 0.0f64);
+    while (flows_ab.iter().any(|f| !f.done()) || flows_ba.iter().any(|f| !f.done()))
+        && rounds < MAX_ROUNDS
+    {
+        let dt = round_dt(link, rng);
+        let (d_ab, l_ab, u_ab) =
+            step_direction(flows_ab, link, Direction::AtoB, dt, util_ba, rng);
+        let (d_ba, l_ba, u_ba) =
+            step_direction(flows_ba, link, Direction::BtoA, dt, util_ab, rng);
+        util_ab = u_ab;
+        util_ba = u_ba;
+        t += dt;
+        rounds += 1;
+        moved_ab += d_ab;
+        moved_ba += d_ba;
+        losses_ab += l_ab;
+        losses_ba += l_ba;
+        if d_ab > 0.0 {
+            end_ab = t;
+        }
+        if d_ba > 0.0 {
+            end_ba = t;
+        }
+    }
+    let mk = |moved: f64, end: f64, losses: u32| OneWayResult {
+        seconds: end,
+        bytes: moved,
+        throughput: if end > 0.0 { moved / end } else { 0.0 },
+        losses,
+        rounds,
+        timeline: Vec::new(),
+    };
+    (mk(moved_ab, end_ab, losses_ab), mk(moved_ba, end_ba, losses_ba))
+}
+
+/// Convenience: unidirectional transfer of `bytes` over `nstreams` equal
+/// flows with the given per-stream receiver window and app cap.
+pub fn transfer_oneway(
+    link: &LinkProfile,
+    dir: Direction,
+    bytes: f64,
+    nstreams: usize,
+    rwnd: f64,
+    app_cap: Option<f64>,
+    seed: u64,
+) -> OneWayResult {
+    let mut rng = Rng::new(seed);
+    let per = bytes / nstreams as f64;
+    let mut flows: Vec<TcpFlow> =
+        (0..nstreams).map(|_| TcpFlow::new(per, rwnd, app_cap)).collect();
+    simulate_oneway(&mut flows, link, dir, &mut rng, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::profiles;
+    use crate::util::prop;
+
+    const MB: f64 = 1024.0 * 1024.0;
+
+    #[test]
+    fn conservation_all_bytes_arrive() {
+        let link = profiles::london_poznan();
+        let r = transfer_oneway(&link, Direction::AtoB, 64.0 * MB, 8, 1e6, None, 1);
+        assert!((r.bytes - 64.0 * MB).abs() < 1.0, "{}", r.bytes);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let link = profiles::ucl_yale();
+        let a = transfer_oneway(&link, Direction::AtoB, 16.0 * MB, 4, 1e6, None, 7);
+        let b = transfer_oneway(&link, Direction::AtoB, 16.0 * MB, 4, 1e6, None, 7);
+        assert_eq!(a.seconds, b.seconds);
+        assert_eq!(a.losses, b.losses);
+    }
+
+    #[test]
+    fn window_limited_single_flow_hits_rwnd_over_rtt() {
+        // Clean LFN, tiny window: throughput ≈ rwnd / RTT.
+        let mut link = profiles::cosmogrid_lightpath();
+        link.loss_ab = 0.0;
+        link.bg_ab = 0.0;
+        link.jitter = 0.0;
+        let rwnd = 256.0 * 1024.0;
+        let r = transfer_oneway(&link, Direction::AtoB, 64.0 * MB, 1, rwnd, None, 3);
+        let expect = rwnd / link.rtt;
+        let ratio = r.throughput / expect;
+        assert!((0.7..1.1).contains(&ratio), "thr {} vs {}", r.throughput, expect);
+    }
+
+    #[test]
+    fn more_streams_beat_one_on_lossy_lfn() {
+        // The paper's core claim: ≥32 streams over long-distance networks.
+        let link = profiles::london_poznan();
+        let one = transfer_oneway(&link, Direction::AtoB, 64.0 * MB, 1, 4e6, None, 5);
+        let many = transfer_oneway(&link, Direction::AtoB, 64.0 * MB, 32, 4e6, None, 5);
+        assert!(
+            many.throughput > 2.0 * one.throughput,
+            "32 streams {:.1} MB/s vs 1 stream {:.1} MB/s",
+            many.throughput / MB,
+            one.throughput / MB
+        );
+    }
+
+    #[test]
+    fn throughput_never_exceeds_capacity() {
+        prop::check("thr<=cap", 20, |rng| {
+            let mut profs = profiles::all();
+            let link = profs.remove(rng.urange(0, profs.len()));
+            let bytes = (rng.urange(1, 64) as f64) * MB;
+            let n = rng.urange(1, 64);
+            let rwnd = rng.urange(64 * 1024, 8 << 20) as f64;
+            let r = transfer_oneway(&link, Direction::AtoB, bytes, n, rwnd, None, rng.next_u64());
+            if r.throughput <= link.capacity * 1.01 {
+                Ok(())
+            } else {
+                Err(format!("{} > cap {}", r.throughput, link.capacity))
+            }
+        });
+    }
+
+    #[test]
+    fn app_cap_binds() {
+        let mut link = profiles::poznan_gdansk();
+        link.loss_ab = 0.0;
+        link.bg_ab = 0.0;
+        let cap = 5.0 * MB;
+        let r = transfer_oneway(&link, Direction::AtoB, 32.0 * MB, 1, 64e6, Some(cap), 9);
+        assert!(r.throughput <= cap * 1.05, "{} vs {}", r.throughput, cap);
+        assert!(r.throughput >= cap * 0.6, "{} vs {}", r.throughput, cap);
+    }
+
+    #[test]
+    fn loss_asymmetry_produces_rate_asymmetry() {
+        // Single stream, directions differing only in loss: the cleaner
+        // direction must be faster (ZeroMQ's 30/110 pattern).
+        let link = profiles::london_poznan();
+        let ab = transfer_oneway(&link, Direction::AtoB, 64.0 * MB, 1, 4e6, None, 11);
+        let ba = transfer_oneway(&link, Direction::BtoA, 64.0 * MB, 1, 4e6, None, 11);
+        assert!(
+            ba.throughput > 1.5 * ab.throughput,
+            "clean dir {:.1} vs lossy dir {:.1} MB/s",
+            ba.throughput / MB,
+            ab.throughput / MB
+        );
+    }
+
+    #[test]
+    fn duplex_runs_finish_both_directions() {
+        let link = profiles::poznan_amsterdam();
+        let mut rng = Rng::new(13);
+        let per = 64.0 * MB / 16.0;
+        let mut ab: Vec<TcpFlow> = (0..16).map(|_| TcpFlow::new(per, 4e6, None)).collect();
+        let mut ba: Vec<TcpFlow> = (0..16).map(|_| TcpFlow::new(per, 4e6, None)).collect();
+        let (ra, rb) = simulate_duplex(&mut ab, &mut ba, &link, &mut rng);
+        assert!((ra.bytes - 64.0 * MB).abs() < 1.0);
+        assert!((rb.bytes - 64.0 * MB).abs() < 1.0);
+        // symmetric setup → roughly symmetric rates (the MPWide pattern)
+        let ratio = ra.throughput / rb.throughput;
+        assert!((0.4..2.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn timeline_is_monotonic() {
+        let link = profiles::ucl_yale();
+        let mut rng = Rng::new(17);
+        let mut flows = vec![TcpFlow::new(8.0 * MB, 2e6, None); 4];
+        let r = simulate_oneway(&mut flows, &link, Direction::AtoB, &mut rng, true);
+        assert!(!r.timeline.is_empty());
+        for w in r.timeline.windows(2) {
+            assert!(w[1].0 > w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn local_lan_is_fast_regardless_of_streams() {
+        let link = profiles::local_lan();
+        let one = transfer_oneway(&link, Direction::AtoB, 64.0 * MB, 1, 4e6, None, 19);
+        // loopback/LAN: single stream already saturates (paper §1.3.6)
+        assert!(one.throughput > 0.5 * link.capacity, "{}", one.throughput);
+    }
+}

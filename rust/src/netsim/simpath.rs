@@ -1,0 +1,238 @@
+//! `SimPath`: MPWide's path semantics over the simulated WAN.
+//!
+//! Reuses the *production* striping logic ([`crate::mpwide::stripe`]) and
+//! [`crate::mpwide::PathConfig`], and mirrors the autotuner's window rule
+//! (BDP split across streams, clamped — the same arithmetic as
+//! `mpwide::autotune::tune_master`), so the simulated experiments exercise
+//! the same decisions as the real socket path. Only the byte movement is
+//! replaced by the flow-level TCP model.
+
+use super::link::{Direction, LinkProfile};
+use super::network::{simulate_duplex, simulate_oneway, OneWayResult};
+use super::tcp_model::TcpFlow;
+use crate::mpwide::{stripe, PathConfig};
+use crate::util::Rng;
+
+/// Default receiver window when the user neither tunes nor autotunes:
+/// modern kernels autoscale a single bulk flow up to several MB; sites
+/// "not optimally configured by administrators" (the paper's premise)
+/// commonly cap near 4 MB.
+pub const OS_AUTOSCALE_RWND: f64 = 4.0 * 1024.0 * 1024.0;
+
+/// Site hard cap on explicitly-requested windows (`MPW_setWin` is granted
+/// only "within the constraints of the site configuration").
+pub const SITE_MAX_RWND: f64 = 8.0 * 1024.0 * 1024.0;
+
+/// Per-low-level-call CPU cost, seconds (syscall + copy dispatch). Makes
+/// the chunk-size knob meaningful in simulation: tiny chunks → many calls.
+pub const PER_CALL_OVERHEAD: f64 = 3.0e-6;
+
+/// Outcome of a simulated MPWide exchange.
+#[derive(Debug, Clone)]
+pub struct SimTransferResult {
+    /// A→B direction result.
+    pub ab: OneWayResult,
+    /// B→A direction result (zero-byte for one-way sends).
+    pub ba: OneWayResult,
+    /// Per-stream receiver window used (after autotune/setWin rules).
+    pub rwnd: f64,
+    /// CPU time charged for chunked low-level calls, seconds.
+    pub call_overhead: f64,
+}
+
+impl SimTransferResult {
+    /// Duplex throughput of the A→B direction, bytes/second, including
+    /// the per-call CPU overhead.
+    pub fn throughput_ab(&self) -> f64 {
+        let t = self.ab.seconds + self.call_overhead;
+        if t > 0.0 {
+            self.ab.bytes / t
+        } else {
+            0.0
+        }
+    }
+
+    /// Duplex throughput of the B→A direction.
+    pub fn throughput_ba(&self) -> f64 {
+        let t = self.ba.seconds + self.call_overhead;
+        if t > 0.0 {
+            self.ba.bytes / t
+        } else {
+            0.0
+        }
+    }
+}
+
+/// A simulated MPWide path over a link profile.
+#[derive(Debug, Clone)]
+pub struct SimPath {
+    link: LinkProfile,
+    cfg: PathConfig,
+    rwnd: f64,
+}
+
+impl SimPath {
+    /// Create a simulated path. Applies the same window policy as the
+    /// real path: explicit `tcp_window` is clamped to the site maximum;
+    /// autotune sets BDP/streams (clamped to [64 KB, 16 MB]); otherwise
+    /// the OS autoscaling default applies.
+    pub fn new(link: LinkProfile, cfg: PathConfig) -> SimPath {
+        let rwnd = match (cfg.tcp_window, cfg.autotune) {
+            (Some(w), _) => (w as f64).min(SITE_MAX_RWND),
+            (None, true) => {
+                // mirror mpwide::autotune::tune_master's BDP estimate
+                (link.bdp() / cfg.nstreams as f64).clamp(64.0 * 1024.0, 16.0 * 1024.0 * 1024.0)
+            }
+            (None, false) => OS_AUTOSCALE_RWND,
+        };
+        SimPath { link, cfg, rwnd }
+    }
+
+    /// The link this path runs over.
+    pub fn link(&self) -> &LinkProfile {
+        &self.link
+    }
+
+    /// Effective per-stream receiver window.
+    pub fn rwnd(&self) -> f64 {
+        self.rwnd
+    }
+
+    fn flows(&self, bytes: u64) -> Vec<TcpFlow> {
+        // exact production striping: segment lengths per stream
+        stripe::segments(bytes as usize, self.cfg.nstreams)
+            .into_iter()
+            .map(|seg| TcpFlow::new(seg.len() as f64, self.rwnd, self.cfg.pacing_rate))
+            .collect()
+    }
+
+    fn overhead(&self, bytes: u64) -> f64 {
+        stripe::call_count(bytes as usize, self.cfg.nstreams, self.cfg.chunk_size) as f64
+            * PER_CALL_OVERHEAD
+    }
+
+    /// Simulate `MPW_Send` of `bytes` in one direction.
+    pub fn send(&self, bytes: u64, dir: Direction, seed: u64) -> SimTransferResult {
+        let mut rng = Rng::new(seed);
+        let mut flows = self.flows(bytes);
+        let res = simulate_oneway(&mut flows, &self.link, dir, &mut rng, false);
+        let empty = OneWayResult {
+            seconds: 0.0,
+            bytes: 0.0,
+            throughput: 0.0,
+            losses: 0,
+            rounds: 0,
+            timeline: Vec::new(),
+        };
+        let (ab, ba) = match dir {
+            Direction::AtoB => (res, empty),
+            Direction::BtoA => (empty, res),
+        };
+        SimTransferResult { ab, ba, rwnd: self.rwnd, call_overhead: self.overhead(bytes) }
+    }
+
+    /// Simulate `MPW_SendRecv` of `bytes` in **both directions at once** —
+    /// how the paper's MPWide throughput tests ran (hence the symmetric
+    /// Table 1 rows).
+    pub fn send_recv(&self, bytes: u64, seed: u64) -> SimTransferResult {
+        let mut rng = Rng::new(seed);
+        let mut ab = self.flows(bytes);
+        let mut ba = self.flows(bytes);
+        let (ra, rb) = simulate_duplex(&mut ab, &mut ba, &self.link, &mut rng);
+        SimTransferResult {
+            ab: ra,
+            ba: rb,
+            rwnd: self.rwnd,
+            call_overhead: self.overhead(bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::link::profiles;
+
+    const MB: u64 = 1024 * 1024;
+
+    fn wan_cfg(n: usize) -> PathConfig {
+        PathConfig { nstreams: n, ..Default::default() }
+    }
+
+    #[test]
+    fn autotune_window_mirrors_tuner_rule() {
+        let link = profiles::amsterdam_tokyo(); // BDP = 337.5 MB
+        let p = SimPath::new(link.clone(), wan_cfg(32));
+        let expect = (link.bdp() / 32.0).clamp(64.0 * 1024.0, 16.0 * 1024.0 * 1024.0);
+        assert_eq!(p.rwnd(), expect);
+    }
+
+    #[test]
+    fn explicit_window_clamped_to_site_max() {
+        let mut cfg = wan_cfg(4);
+        cfg.tcp_window = Some(64 << 20);
+        let p = SimPath::new(profiles::london_poznan(), cfg);
+        assert_eq!(p.rwnd(), SITE_MAX_RWND);
+    }
+
+    #[test]
+    fn no_autotune_uses_os_default() {
+        let mut cfg = wan_cfg(4);
+        cfg.autotune = false;
+        let p = SimPath::new(profiles::london_poznan(), cfg);
+        assert_eq!(p.rwnd(), OS_AUTOSCALE_RWND);
+    }
+
+    #[test]
+    fn send_moves_all_bytes() {
+        let p = SimPath::new(profiles::london_poznan(), wan_cfg(16));
+        let r = p.send(64 * MB, Direction::AtoB, 1);
+        assert!((r.ab.bytes - (64 * MB) as f64).abs() < 1.0);
+        assert_eq!(r.ba.bytes, 0.0);
+    }
+
+    #[test]
+    fn sendrecv_is_roughly_symmetric() {
+        let p = SimPath::new(profiles::poznan_gdansk(), wan_cfg(32));
+        let r = p.send_recv(64 * MB, 2);
+        let ratio = r.throughput_ab() / r.throughput_ba();
+        assert!((0.4..2.5).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn more_streams_help_on_wan() {
+        let link = profiles::london_poznan();
+        let one = SimPath::new(link.clone(), wan_cfg(1)).send(64 * MB, Direction::AtoB, 3);
+        let many = SimPath::new(link, wan_cfg(32)).send(64 * MB, Direction::AtoB, 3);
+        assert!(
+            many.throughput_ab() > 1.5 * one.throughput_ab(),
+            "32 streams {:.1} vs 1 stream {:.1} MB/s",
+            many.throughput_ab() / MB as f64,
+            one.throughput_ab() / MB as f64
+        );
+    }
+
+    #[test]
+    fn tiny_chunks_cost_cpu() {
+        let link = profiles::local_lan();
+        let mut cfg = wan_cfg(4);
+        cfg.chunk_size = 1024; // pathological
+        let small = SimPath::new(link.clone(), cfg).send(64 * MB, Direction::AtoB, 4);
+        let big = SimPath::new(link, wan_cfg(4)).send(64 * MB, Direction::AtoB, 4);
+        assert!(small.call_overhead > 10.0 * big.call_overhead);
+        assert!(small.throughput_ab() < big.throughput_ab());
+    }
+
+    #[test]
+    fn pacing_caps_per_stream_rate() {
+        let mut link = profiles::cosmogrid_lightpath();
+        link.loss_ab = 0.0;
+        link.bg_ab = 0.0;
+        let mut cfg = wan_cfg(4);
+        cfg.pacing_rate = Some(2.0 * MB as f64); // 2 MB/s per stream
+        let p = SimPath::new(link, cfg);
+        let r = p.send(32 * MB, Direction::AtoB, 5);
+        // 4 streams × 2 MB/s = 8 MB/s aggregate ceiling
+        assert!(r.throughput_ab() <= 8.5 * MB as f64, "{}", r.throughput_ab());
+    }
+}

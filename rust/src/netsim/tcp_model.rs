@@ -1,0 +1,239 @@
+//! Per-flow TCP congestion model: slow start + CUBIC-style loss recovery
+//! with a receiver-window cap and an optional application-level rate cap
+//! (crypto for scp, serialization for MUSCLE, `MPW_setPacingRate` for
+//! MPWide).
+//!
+//! One "round" of the simulation is one RTT: the flow offers
+//! `min(cwnd, rwnd, app_cap·dt, remaining)` bytes, the network delivers a
+//! (possibly scaled) share, and the window reacts — shrinking to β·cwnd
+//! on a loss round (CUBIC β = 0.7) and converging back toward the
+//! pre-loss window quickly before probing onward. CUBIC (Linux's default
+//! since 2006) matters here: classic Reno's one-MSS-per-RTT recovery
+//! makes any stream that loses early a multi-second straggler that gates
+//! the whole striped message — a pathology real 2013 endpoints did not
+//! have. A loss-rate scaling law still emerges (asserted below):
+//! throughput falls superlinearly in √p as loss grows.
+
+/// Ethernet-ish maximum segment size, bytes.
+pub const MSS: f64 = 1448.0;
+
+/// Initial congestion window (RFC 6928's 10 segments).
+pub const INIT_CWND: f64 = 10.0 * MSS;
+
+/// One TCP flow moving a fixed number of bytes.
+#[derive(Debug, Clone)]
+pub struct TcpFlow {
+    /// Congestion window, bytes.
+    pub cwnd: f64,
+    /// Slow-start threshold, bytes.
+    pub ssthresh: f64,
+    /// Receiver window cap, bytes (`MPW_setWin` / OS autotuning limit).
+    pub rwnd: f64,
+    /// Bytes still to deliver.
+    pub remaining: f64,
+    /// Application-side rate cap, bytes/second (crypto, serialization,
+    /// or software pacing). `None` = unlimited.
+    pub app_cap: Option<f64>,
+    /// Bytes delivered so far.
+    pub delivered: f64,
+    /// Loss (window-reduction) events experienced.
+    pub losses: u32,
+    /// Window size at the last loss (CUBIC's W_max convergence target).
+    pub w_max: f64,
+    /// Application-level stall after each loss event, in rounds. 0 for a
+    /// plain TCP flow; >0 models protocols whose application layer
+    /// head-of-line blocks on retransmission (scp's ssh channel layer).
+    pub stall_rounds: u32,
+    /// Remaining stalled rounds (state).
+    stalled: u32,
+}
+
+impl TcpFlow {
+    /// New flow with `bytes` to move under a receiver window of `rwnd`.
+    pub fn new(bytes: f64, rwnd: f64, app_cap: Option<f64>) -> TcpFlow {
+        TcpFlow {
+            cwnd: INIT_CWND.min(rwnd),
+            ssthresh: rwnd,
+            rwnd,
+            remaining: bytes,
+            app_cap,
+            delivered: 0.0,
+            losses: 0,
+            w_max: rwnd,
+            stall_rounds: 0,
+            stalled: 0,
+        }
+    }
+
+    /// Builder: make the flow stall for `rounds` after every loss event
+    /// (application-level head-of-line blocking, e.g. scp).
+    pub fn with_loss_stall(mut self, rounds: u32) -> TcpFlow {
+        self.stall_rounds = rounds;
+        self
+    }
+
+    /// Whether the flow has delivered everything.
+    pub fn done(&self) -> bool {
+        self.remaining < 0.5
+    }
+
+    /// Bytes the flow would like to move in a round of length `dt`.
+    pub fn offer(&self, dt: f64) -> f64 {
+        if self.done() || self.stalled > 0 {
+            return 0.0;
+        }
+        let mut o = self.cwnd.min(self.rwnd).min(self.remaining);
+        if let Some(cap) = self.app_cap {
+            o = o.min(cap * dt);
+        }
+        o.max(0.0)
+    }
+
+    /// CUBIC multiplicative-decrease factor.
+    pub const BETA: f64 = 0.7;
+
+    /// Account one round: `delivered` bytes acked; `lost` = at least one
+    /// loss event this round (triple-dup-ack → multiplicative decrease).
+    pub fn on_round(&mut self, delivered: f64, lost: bool) {
+        self.remaining = (self.remaining - delivered).max(0.0);
+        self.delivered += delivered;
+        if self.stalled > 0 {
+            self.stalled -= 1;
+            return;
+        }
+        if lost {
+            self.stalled = self.stall_rounds;
+            self.losses += 1;
+            self.w_max = self.cwnd;
+            self.cwnd = (self.cwnd * Self::BETA).max(2.0 * MSS);
+            self.ssthresh = self.cwnd;
+        } else if self.cwnd < self.ssthresh {
+            // slow start: one extra segment per acked segment
+            self.cwnd = (self.cwnd + delivered).min(self.rwnd);
+        } else {
+            // CUBIC-flavoured avoidance: converge quickly back toward the
+            // pre-loss window, then probe beyond it.
+            let frac = if self.cwnd > 0.0 { (delivered / self.cwnd).min(1.0) } else { 0.0 };
+            let step = if self.cwnd < self.w_max {
+                // concave convergence: close 25% of the gap per RTT
+                MSS + 0.25 * (self.w_max - self.cwnd)
+            } else {
+                // max probing: gentle compounding growth past W_max
+                MSS + 0.03 * self.cwnd
+            };
+            self.cwnd = (self.cwnd + step * frac).min(self.rwnd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn offer_respects_all_caps() {
+        let f = TcpFlow::new(1e9, 100_000.0, Some(1e6));
+        // rwnd 100 KB, cwnd starts at INIT_CWND, app cap 1 MB/s over 10 ms
+        assert!((f.offer(0.01) - INIT_CWND.min(10_000.0)).abs() < 1.0);
+        let f2 = TcpFlow::new(500.0, 1e9, None);
+        assert_eq!(f2.offer(0.01), 500.0); // remaining is the binding cap
+    }
+
+    #[test]
+    fn slow_start_doubles_then_converges_to_wmax() {
+        let mut f = TcpFlow::new(1e12, 1e9, None);
+        f.ssthresh = 64.0 * MSS;
+        let c0 = f.cwnd;
+        f.on_round(f.cwnd, false);
+        assert!((f.cwnd - 2.0 * c0).abs() < 1.0, "slow start doubles");
+        // past ssthresh with a gap to w_max: close 25% of the gap + 1 MSS
+        f.cwnd = f.ssthresh;
+        f.w_max = f.ssthresh + 400.0 * MSS;
+        let c1 = f.cwnd;
+        f.on_round(f.cwnd, false);
+        let expect = c1 + MSS + 0.25 * (f.w_max - c1);
+        assert!((f.cwnd - expect).abs() < 1.0, "cubic convergence step");
+    }
+
+    #[test]
+    fn loss_shrinks_window_by_beta() {
+        let mut f = TcpFlow::new(1e12, 1e9, None);
+        f.cwnd = 1e6;
+        f.on_round(1e6, true);
+        assert!((f.cwnd - TcpFlow::BETA * 1e6).abs() < 1.0);
+        assert_eq!(f.losses, 1);
+        assert!((f.w_max - 1e6).abs() < 1.0, "w_max remembers the pre-loss window");
+    }
+
+    #[test]
+    fn recovery_after_loss_is_fast_not_linear() {
+        // The straggler pathology guard: after a loss at 4 MB, the window
+        // must be back within 5% of w_max in < 25 RTTs (Reno would need
+        // ~830 RTTs at 1 MSS per RTT).
+        let mut f = TcpFlow::new(1e12, 1e9, None);
+        f.cwnd = 4e6;
+        f.ssthresh = 2.0 * MSS; // force CA
+        f.on_round(4e6, true);
+        let mut rounds = 0;
+        while f.cwnd < 0.95 * f.w_max && rounds < 1000 {
+            f.on_round(f.cwnd, false);
+            rounds += 1;
+        }
+        assert!(rounds < 25, "recovery took {rounds} RTTs");
+    }
+
+    #[test]
+    fn window_never_exceeds_rwnd() {
+        let mut f = TcpFlow::new(1e12, 50_000.0, None);
+        for _ in 0..100 {
+            let o = f.offer(0.01);
+            f.on_round(o, false);
+            assert!(f.cwnd <= 50_000.0 + 1.0);
+        }
+    }
+
+    #[test]
+    fn completes_exact_byte_count() {
+        let mut f = TcpFlow::new(1_000_000.0, 1e9, None);
+        let mut moved = 0.0;
+        while !f.done() {
+            let o = f.offer(0.01);
+            f.on_round(o, false);
+            moved += o;
+        }
+        assert!((moved - 1_000_000.0).abs() < 1.0);
+        assert!((f.delivered - 1_000_000.0).abs() < 1.0);
+    }
+
+    /// A loss-rate scaling law must *emerge*: steady-state throughput of
+    /// a loss-limited flow falls steeply and monotonically as the loss
+    /// probability grows (CUBIC sits between Mathis's p^-1/2 and its own
+    /// p^-3/4 on these horizons). We only pin the shape, not a constant.
+    #[test]
+    fn loss_scaling_law_emerges() {
+        let rtt = 0.05;
+        let mut rates = Vec::new();
+        for &p in &[1e-5f64, 1e-4, 1e-3] {
+            let mut rng = Rng::new(42);
+            let mut f = TcpFlow::new(f64::INFINITY, 1e12, None);
+            f.ssthresh = 2.0 * MSS; // force CA from the start
+            f.cwnd = 100.0 * MSS;
+            f.w_max = 100.0 * MSS;
+            let rounds = 30_000;
+            let mut total = 0.0;
+            for _ in 0..rounds {
+                let o = f.offer(rtt);
+                let packets = o / MSS;
+                let lost = rng.chance(1.0 - (1.0 - p).powf(packets));
+                f.on_round(o, lost);
+                total += o;
+            }
+            rates.push(total / (rounds as f64 * rtt));
+        }
+        assert!(rates[0] > 2.0 * rates[1], "p×10 should cost >2x: {rates:?}");
+        assert!(rates[1] > 2.0 * rates[2], "p×10 should cost >2x: {rates:?}");
+        // and two decades of loss cost at least a decade of rate
+        assert!(rates[0] > 10.0 * rates[2], "{rates:?}");
+    }
+}

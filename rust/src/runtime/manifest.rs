@@ -1,0 +1,204 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (shapes, file names, validation vectors).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape/dtype of one tensor crossing the AOT boundary (f32 only — the
+/// paper's data-type stance applies: MPWide itself treats all payloads as
+/// byte arrays; the numeric contract lives here, at the artifact level).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions, row-major.
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Seeded inputs + jax-computed outputs for numeric validation of the
+/// PJRT round-trip.
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub inputs: Vec<Vec<f32>>,
+    pub outputs: Vec<Vec<f32>>,
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub validation: Validation,
+}
+
+/// The whole manifest: artifact registry plus the export configuration
+/// (particle counts, grid sizes) the applications need.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    artifacts: HashMap<String, ArtifactMeta>,
+    config: HashMap<String, f64>,
+}
+
+impl Manifest {
+    /// Load and parse `manifest.json`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let mut config = HashMap::new();
+        for (k, v) in j.get("config").and_then(Json::obj).ok_or_else(|| anyhow!("no config"))? {
+            config.insert(k.clone(), v.num().ok_or_else(|| anyhow!("config {k} not num"))?);
+        }
+        let mut artifacts = HashMap::new();
+        for (name, a) in
+            j.get("artifacts").and_then(Json::obj).ok_or_else(|| anyhow!("no artifacts"))?
+        {
+            artifacts.insert(name.clone(), Self::parse_artifact(name, a)?);
+        }
+        Ok(Manifest { artifacts, config })
+    }
+
+    fn parse_artifact(name: &str, a: &Json) -> Result<ArtifactMeta> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            a.get(key)
+                .and_then(Json::arr)
+                .ok_or_else(|| anyhow!("{name}: no {key}"))?
+                .iter()
+                .map(|s| {
+                    Ok(TensorSpec {
+                        shape: s
+                            .get("shape")
+                            .and_then(Json::usize_vec)
+                            .ok_or_else(|| anyhow!("{name}: bad shape"))?,
+                    })
+                })
+                .collect()
+        };
+        let v = a.get("validation").ok_or_else(|| anyhow!("{name}: no validation"))?;
+        let vecs = |key: &str| -> Result<Vec<Vec<f32>>> {
+            v.get(key)
+                .and_then(Json::arr)
+                .ok_or_else(|| anyhow!("{name}: no validation.{key}"))?
+                .iter()
+                .map(|x| x.f32_vec().ok_or_else(|| anyhow!("{name}: bad validation array")))
+                .collect()
+        };
+        Ok(ArtifactMeta {
+            file: a
+                .get("file")
+                .and_then(Json::str)
+                .ok_or_else(|| anyhow!("{name}: no file"))?
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            validation: Validation {
+                inputs: vecs("inputs")?,
+                outputs: vecs("outputs")?,
+                rtol: v.get("rtol").and_then(Json::num).unwrap_or(1e-3),
+                atol: v.get("atol").and_then(Json::num).unwrap_or(1e-5),
+            },
+        })
+    }
+
+    /// Look up an artifact by name.
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.get(name)
+    }
+
+    /// All artifact names (sorted, for deterministic iteration).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Export-config value (e.g. `nbody_n`, `flow3d_d`).
+    pub fn config(&self, key: &str) -> Option<f64> {
+        self.config.get(key).copied()
+    }
+
+    /// Export-config value as usize, erroring with context if missing.
+    pub fn config_usize(&self, key: &str) -> Result<usize> {
+        self.config(key)
+            .map(|v| v as usize)
+            .ok_or_else(|| anyhow!("manifest config key '{key}' missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "config": {"nbody_n": 8, "flow3d_d": 4},
+        "artifacts": {
+            "toy": {
+                "file": "toy.hlo.txt",
+                "inputs": [{"shape": [2, 3], "dtype": "f32"}],
+                "outputs": [{"shape": [2], "dtype": "f32"}],
+                "validation": {
+                    "inputs": [[1, 2, 3, 4, 5, 6]],
+                    "outputs": [[6, 15]],
+                    "rtol": 0.001,
+                    "atol": 0.0001
+                }
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.names(), vec!["toy"]);
+        assert_eq!(m.config_usize("nbody_n").unwrap(), 8);
+        let a = m.artifact("toy").unwrap();
+        assert_eq!(a.file, "toy.hlo.txt");
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[0].elems(), 6);
+        assert_eq!(a.validation.outputs[0], vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"config": {}, "artifacts": {"x": {}}}"#).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_is_none() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.artifact("nope").is_none());
+        assert!(m.config("nope").is_none());
+        assert!(m.config_usize("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Exercised fully in rust/tests/runtime_artifacts.rs; here only if
+        // the artifacts have been built.
+        let dir = crate::runtime::Runtime::default_dir();
+        let path = dir.join("manifest.json");
+        if path.exists() {
+            let m = Manifest::load(path).unwrap();
+            assert!(m.artifact("nbody_accel").is_some());
+            assert_eq!(m.config_usize("nbody_n").unwrap(), 1024);
+        }
+    }
+}

@@ -1,0 +1,201 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas payloads.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make
+//! artifacts`) lowers each L2 model to HLO **text**; this module loads the
+//! text (`HloModuleProto::from_text_file` — the text parser reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1's
+//! proto path rejects), compiles it on the PJRT CPU client, and exposes a
+//! typed `run_f32` entry point for the coordinator's hot path. Python is
+//! never invoked at runtime.
+
+pub mod manifest;
+
+use std::path::Path as FsPath;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
+
+/// A PJRT client plus the artifact manifest.
+///
+/// **Threading note:** the underlying `xla` crate wrappers are `Rc`-based
+/// and not `Send`; create one `Runtime` per coordinator thread (each
+/// CosmoGrid "site" owns its own client — which also mirrors the real
+/// deployment, where every site is a separate process on a different
+/// machine).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: std::path::PathBuf,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (produced by `make artifacts`) on the
+    /// PJRT CPU client.
+    pub fn open(dir: impl AsRef<FsPath>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, manifest, dir })
+    }
+
+    /// Default artifacts directory: `$MPWIDE_ARTIFACTS` or `./artifacts`
+    /// (searched upward from the current directory so tests and examples
+    /// work from any workspace subdirectory).
+    pub fn default_dir() -> std::path::PathBuf {
+        if let Ok(d) = std::env::var("MPWIDE_ARTIFACTS") {
+            return d.into();
+        }
+        let mut cur = std::env::current_dir().unwrap_or_else(|_| ".".into());
+        loop {
+            let cand = cur.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !cur.pop() {
+                return "artifacts".into();
+            }
+        }
+    }
+
+    /// The manifest describing every artifact.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile one artifact by name (e.g. `"nbody_accel"`).
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Executable { exe: Rc::new(exe), meta })
+    }
+}
+
+/// A compiled artifact ready to execute. Cheap to clone within a thread
+/// (shares the underlying PJRT executable); not `Send` — see [`Runtime`].
+#[derive(Clone)]
+pub struct Executable {
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    meta: ArtifactMeta,
+}
+
+impl Executable {
+    /// The artifact's manifest entry (shapes, validation data).
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute with f32 inputs laid out per the manifest. Checks element
+    /// counts, feeds the PJRT executable, unwraps the output tuple and
+    /// returns each output as a flat `Vec<f32>`.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.meta.file,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&self.meta.inputs) {
+            if data.len() != spec.elems() {
+                bail!(
+                    "artifact {} input {:?} expects {} elements, got {}",
+                    self.meta.file,
+                    spec.shape,
+                    spec.elems(),
+                    data.len()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.file))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple result: {e:?}"))?;
+        if tuple.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {} declared {} outputs, produced {}",
+                self.meta.file,
+                self.meta.outputs.len(),
+                tuple.len()
+            );
+        }
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, spec) in tuple.into_iter().zip(&self.meta.outputs) {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}"))?;
+            if v.len() != spec.elems() {
+                bail!("output expects {} elements, got {}", spec.elems(), v.len());
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    /// Run the manifest's validation case and compare against the
+    /// jax-computed expected outputs. Returns the max relative error seen.
+    pub fn validate(&self) -> Result<f64> {
+        let v = &self.meta.validation;
+        let inputs: Vec<&[f32]> = v.inputs.iter().map(|x| x.as_slice()).collect();
+        let outputs = self.run_f32(&inputs)?;
+        let mut max_rel = 0.0f64;
+        for (got, want) in outputs.iter().zip(&v.outputs) {
+            if got.len() != want.len() {
+                bail!("validation output length mismatch");
+            }
+            for (&g, &w) in got.iter().zip(want) {
+                let (g, w) = (g as f64, w as f64);
+                let tol = v.atol + v.rtol * w.abs();
+                let err = (g - w).abs();
+                if err > tol {
+                    bail!(
+                        "validation mismatch in {}: got {g}, want {w} (tol {tol})",
+                        self.meta.file
+                    );
+                }
+                let rel = err / (w.abs() + 1e-12);
+                if rel > max_rel {
+                    max_rel = rel;
+                }
+            }
+        }
+        Ok(max_rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_artifacts.rs (they need
+    // `make artifacts` to have run). Here: pure path logic.
+    use super::*;
+
+    #[test]
+    fn default_dir_env_override() {
+        std::env::set_var("MPWIDE_ARTIFACTS", "/tmp/somewhere");
+        assert_eq!(Runtime::default_dir(), std::path::PathBuf::from("/tmp/somewhere"));
+        std::env::remove_var("MPWIDE_ARTIFACTS");
+    }
+}

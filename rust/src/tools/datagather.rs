@@ -1,0 +1,270 @@
+//! The DataGather (paper §1.3.5): one-way, real-time synchronization of a
+//! directory to a remote machine, designed to run *concurrently* with a
+//! distributed simulation so its output collects on a single resource.
+//!
+//! Protocol per sync round (source side drives):
+//! 1. source scans its directory and sends a manifest of
+//!    (relative path, size, crc32);
+//! 2. destination replies with the indices it is missing or whose
+//!    size/crc differ;
+//! 3. source ships exactly those files via the [`super::mpwcp`] framing.
+//!
+//! Sync is one-way by design (the paper's constraint); deletions are not
+//! propagated.
+
+use std::collections::HashMap;
+use std::path::Path as FsPath;
+
+use crate::mpwide::errors::{MpwError, Result};
+use crate::mpwide::path::Path;
+
+/// One file entry in the sync manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Entry {
+    /// Path relative to the synced root (always `/`-separated).
+    pub rel: String,
+    /// File size in bytes.
+    pub size: u64,
+    /// CRC32 of the contents.
+    pub crc: u32,
+}
+
+/// Statistics of one sync round.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SyncStats {
+    /// Files in the source manifest.
+    pub scanned: usize,
+    /// Files actually shipped this round.
+    pub shipped: usize,
+    /// Payload bytes shipped.
+    pub bytes: u64,
+}
+
+/// Scan a directory recursively into manifest entries (sorted by path
+/// for determinism).
+pub fn scan(root: &FsPath) -> Result<Vec<Entry>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.is_file() {
+                let data = std::fs::read(&p)?;
+                let rel = p
+                    .strip_prefix(root)
+                    .map_err(|_| MpwError::Protocol("path outside root".into()))?
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                out.push(Entry { rel, size: data.len() as u64, crc: crc32fast::hash(&data) });
+            }
+        }
+    }
+    out.sort_by(|a, b| a.rel.cmp(&b.rel));
+    Ok(out)
+}
+
+fn encode_manifest(entries: &[Entry]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(entries.len() as u32).to_be_bytes());
+    for e in entries {
+        let name = e.rel.as_bytes();
+        buf.extend_from_slice(&(name.len() as u16).to_be_bytes());
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&e.size.to_be_bytes());
+        buf.extend_from_slice(&e.crc.to_be_bytes());
+    }
+    buf
+}
+
+fn decode_manifest(buf: &[u8]) -> Result<Vec<Entry>> {
+    let err = || MpwError::Protocol("malformed datagather manifest".into());
+    if buf.len() < 4 {
+        return Err(err());
+    }
+    let n = u32::from_be_bytes(buf[0..4].try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n);
+    let mut i = 4;
+    for _ in 0..n {
+        if buf.len() < i + 2 {
+            return Err(err());
+        }
+        let nl = u16::from_be_bytes(buf[i..i + 2].try_into().unwrap()) as usize;
+        i += 2;
+        if buf.len() < i + nl + 12 {
+            return Err(err());
+        }
+        let rel = String::from_utf8(buf[i..i + nl].to_vec()).map_err(|_| err())?;
+        i += nl;
+        let size = u64::from_be_bytes(buf[i..i + 8].try_into().unwrap());
+        i += 8;
+        let crc = u32::from_be_bytes(buf[i..i + 4].try_into().unwrap());
+        i += 4;
+        out.push(Entry { rel, size, crc });
+    }
+    if i != buf.len() {
+        return Err(err());
+    }
+    Ok(out)
+}
+
+/// Which manifest entries does the destination need, given its local
+/// state? (pure: unit-tested directly)
+pub fn diff_needed(remote: &[Entry], local: &HashMap<String, Entry>) -> Vec<u32> {
+    remote
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| match local.get(&e.rel) {
+            None => true,
+            Some(l) => l.size != e.size || l.crc != e.crc,
+        })
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// Source side: run one sync round of `root` over `path`.
+pub fn sync_once(path: &Path, root: &FsPath) -> Result<SyncStats> {
+    let entries = scan(root)?;
+    path.dsend(&encode_manifest(&entries))?;
+    let wanted_raw = path.drecv()?;
+    if wanted_raw.len() % 4 != 0 {
+        return Err(MpwError::Protocol("malformed want-list".into()));
+    }
+    let wanted: Vec<u32> = wanted_raw
+        .chunks_exact(4)
+        .map(|c| u32::from_be_bytes(c.try_into().unwrap()))
+        .collect();
+    let mut stats =
+        SyncStats { scanned: entries.len(), shipped: wanted.len(), bytes: 0 };
+    for idx in wanted {
+        let e = entries
+            .get(idx as usize)
+            .ok_or_else(|| MpwError::Protocol(format!("bad want index {idx}")))?;
+        let full = root.join(e.rel.replace('/', std::path::MAIN_SEPARATOR_STR));
+        super::mpwcp::send_file(path, &full, &e.rel.replace('/', "__"))?;
+        stats.bytes += e.size;
+    }
+    Ok(stats)
+}
+
+/// Destination side: serve one sync round into `dest`. Returns the
+/// number of files received.
+pub fn serve_once(path: &Path, dest: &FsPath) -> Result<usize> {
+    std::fs::create_dir_all(dest)?;
+    let manifest = decode_manifest(&path.drecv()?)?;
+    let local: HashMap<String, Entry> = scan(dest)?
+        .into_iter()
+        .map(|e| (e.rel.replace("__", "/"), e))
+        .collect();
+    let needed = diff_needed(&manifest, &local);
+    let mut reply = Vec::with_capacity(needed.len() * 4);
+    for idx in &needed {
+        reply.extend_from_slice(&idx.to_be_bytes());
+    }
+    path.dsend(&reply)?;
+    for _ in 0..needed.len() {
+        super::mpwcp::recv_file(path, dest)?;
+    }
+    Ok(needed.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::transport::mem_path_pairs;
+    use crate::mpwide::PathConfig;
+    use std::path::PathBuf;
+
+    fn mem_paths(n: usize) -> (Path, Path) {
+        let (l, r) = mem_path_pairs(n);
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        (Path::from_pairs(l, cfg.clone()).unwrap(), Path::from_pairs(r, cfg).unwrap())
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("datagather-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let entries = vec![
+            Entry { rel: "a/b.txt".into(), size: 10, crc: 0xDEAD },
+            Entry { rel: "c.bin".into(), size: 0, crc: 0 },
+        ];
+        assert_eq!(decode_manifest(&encode_manifest(&entries)).unwrap(), entries);
+        assert!(decode_manifest(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn diff_detects_new_changed_and_same() {
+        let remote = vec![
+            Entry { rel: "same".into(), size: 5, crc: 1 },
+            Entry { rel: "changed".into(), size: 5, crc: 2 },
+            Entry { rel: "new".into(), size: 5, crc: 3 },
+        ];
+        let mut local = HashMap::new();
+        local.insert("same".to_string(), Entry { rel: "same".into(), size: 5, crc: 1 });
+        local.insert("changed".to_string(), Entry { rel: "changed".into(), size: 5, crc: 99 });
+        assert_eq!(diff_needed(&remote, &local), vec![1, 2]);
+    }
+
+    #[test]
+    fn scan_is_recursive_and_sorted() {
+        let dir = tmpdir("scan");
+        std::fs::create_dir_all(dir.join("sub")).unwrap();
+        std::fs::write(dir.join("z.txt"), b"zz").unwrap();
+        std::fs::write(dir.join("sub/a.txt"), b"aa").unwrap();
+        let entries = scan(&dir).unwrap();
+        let rels: Vec<&str> = entries.iter().map(|e| e.rel.as_str()).collect();
+        assert_eq!(rels, vec!["sub/a.txt", "z.txt"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_sync_then_incremental() {
+        let dir = tmpdir("sync");
+        let src = dir.join("src");
+        let dst = dir.join("dst");
+        std::fs::create_dir_all(src.join("run")).unwrap();
+        std::fs::write(src.join("run/snap0.dat"), vec![1u8; 5000]).unwrap();
+        std::fs::write(src.join("log.txt"), b"hello").unwrap();
+
+        // round 1: everything ships
+        let (a, b) = mem_paths(2);
+        let dst2 = dst.clone();
+        let t = std::thread::spawn(move || serve_once(&b, &dst2).unwrap());
+        let src2 = src.clone();
+        let stats = sync_once(&a, &src2).unwrap();
+        assert_eq!(t.join().unwrap(), 2);
+        assert_eq!(stats.shipped, 2);
+        assert_eq!(std::fs::read(dst.join("run__snap0.dat")).unwrap(), vec![1u8; 5000]);
+
+        // round 2: nothing changed → nothing ships
+        let (a, b) = mem_paths(2);
+        let dst2 = dst.clone();
+        let t = std::thread::spawn(move || serve_once(&b, &dst2).unwrap());
+        let stats = sync_once(&a, &src).unwrap();
+        assert_eq!(t.join().unwrap(), 0);
+        assert_eq!(stats.shipped, 0);
+
+        // round 3: simulation wrote a new snapshot → only it ships
+        std::fs::write(src.join("run/snap1.dat"), vec![2u8; 800]).unwrap();
+        let (a, b) = mem_paths(2);
+        let dst2 = dst.clone();
+        let t = std::thread::spawn(move || serve_once(&b, &dst2).unwrap());
+        let stats = sync_once(&a, &src).unwrap();
+        assert_eq!(t.join().unwrap(), 1);
+        assert_eq!(stats.shipped, 1);
+        assert_eq!(stats.bytes, 800);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

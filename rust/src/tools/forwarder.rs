@@ -1,0 +1,216 @@
+//! The Forwarder (paper §1.3.3, Fig 3).
+//!
+//! Supercomputing sites commonly deny inbound connections to compute
+//! nodes. Administrators would normally punch firewall holes; the
+//! Forwarder mimics that *in user space*: a small process on a reachable
+//! front-end node that accepts two paths — one from each endpoint — and
+//! relays all traffic between them. "Because the Forwarder operates on a
+//! higher level in the network architecture, it is generally slightly
+//! less efficient than conventional firewall-based forwarding" — the
+//! `local_overhead` bench quantifies that overhead here.
+//!
+//! An optional artificial one-way delay per hop lets integration tests
+//! and the bloodflow experiment (§1.2.2) reproduce the paper's 11 ms
+//! round-trip over real sockets.
+
+use std::time::Duration;
+
+use crate::mpwide::errors::{MpwError, Result};
+use crate::mpwide::path::{Path, PathListener};
+use crate::mpwide::relay::RelayStats;
+use crate::mpwide::transport::HalfDuplex;
+use crate::mpwide::PathConfig;
+
+/// Forwarder configuration.
+#[derive(Debug, Clone)]
+pub struct ForwarderConfig {
+    /// Streams per accepted path (both sides must match).
+    pub nstreams: usize,
+    /// Artificial one-way delay added per forwarded batch (propagation
+    /// emulation; `None` = forward immediately).
+    pub delay: Option<Duration>,
+    /// Stop after relaying this many total bytes (tests); `None` = until
+    /// both sides close.
+    pub max_bytes: Option<u64>,
+}
+
+impl Default for ForwarderConfig {
+    fn default() -> Self {
+        ForwarderConfig { nstreams: 1, delay: None, max_bytes: None }
+    }
+}
+
+/// Accept two paths from `listener` and relay between them until both
+/// close. Returns the relay statistics.
+///
+/// Both endpoints *connect* to the forwarder (exactly the Fig 3 layout:
+/// pyNS and HemeLB both dial the front-end process), so path creation
+/// order on the listener is first-come-first-served.
+pub fn run(listener: &mut PathListener, cfg: &ForwarderConfig) -> Result<RelayStats> {
+    let a = listener.accept_path()?;
+    let b = listener.accept_path()?;
+    relay_with_delay(&a, &b, cfg.delay)
+}
+
+/// Like [`crate::mpwide::relay::relay`] but optionally delaying each
+/// forwarded batch by `delay` (one-way propagation emulation).
+pub fn relay_with_delay(a: &Path, b: &Path, delay: Option<Duration>) -> Result<RelayStats> {
+    if a.nstreams() != b.nstreams() {
+        return Err(MpwError::Config(format!(
+            "forwarder requires equal stream counts ({} vs {})",
+            a.nstreams(),
+            b.nstreams()
+        )));
+    }
+    let n = a.nstreams();
+    std::thread::scope(|scope| -> Result<RelayStats> {
+        let mut fwd = Vec::with_capacity(n);
+        let mut bwd = Vec::with_capacity(n);
+        for i in 0..n {
+            let (sa, sb) = (&a.streams[i], &b.streams[i]);
+            fwd.push(scope.spawn(move || pump_delayed(sa, sb, delay)));
+            bwd.push(scope.spawn(move || pump_delayed(sb, sa, delay)));
+        }
+        let mut stats = RelayStats { a_to_b: 0, b_to_a: 0 };
+        for h in fwd {
+            stats.a_to_b +=
+                h.join().map_err(|_| MpwError::WorkerPanic("forwarder fwd".into()))??;
+        }
+        for h in bwd {
+            stats.b_to_a +=
+                h.join().map_err(|_| MpwError::WorkerPanic("forwarder bwd".into()))??;
+        }
+        Ok(stats)
+    })
+}
+
+fn pump_delayed(
+    src: &crate::mpwide::path::StreamSlot,
+    dst: &crate::mpwide::path::StreamSlot,
+    delay: Option<Duration>,
+) -> Result<u64> {
+    let mut buf = vec![0u8; crate::mpwide::relay::RELAY_BUF];
+    let mut total = 0u64;
+    loop {
+        let n = {
+            let mut rx = src.rx.lock().unwrap();
+            match rx.read_some(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => n,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::ConnectionReset
+                        || e.kind() == std::io::ErrorKind::BrokenPipe =>
+                {
+                    break
+                }
+                Err(e) => return Err(e.into()),
+            }
+        };
+        if let Some(d) = delay {
+            std::thread::sleep(d);
+        }
+        let mut tx = dst.tx.lock().unwrap();
+        tx.pacer.acquire(n);
+        match HalfDuplex::write_all(&mut *tx.w, &buf[..n]) {
+            Ok(()) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::ConnectionReset
+                    || e.kind() == std::io::ErrorKind::BrokenPipe =>
+            {
+                break
+            }
+            Err(e) => return Err(e.into()),
+        }
+        tx.w.flush()?;
+        total += n as u64;
+    }
+    Ok(total)
+}
+
+/// Spawn a forwarder on a fresh port; returns the port and the join
+/// handle producing its relay stats. Autotuning must be disabled on the
+/// connecting endpoints too (the forwarder cannot play autotune slave on
+/// two sides at once before relaying).
+pub fn spawn(
+    nstreams: usize,
+    delay: Option<Duration>,
+) -> Result<(u16, std::thread::JoinHandle<Result<RelayStats>>)> {
+    let mut cfg = PathConfig::with_streams(nstreams);
+    cfg.autotune = false;
+    let mut listener = PathListener::bind(0, cfg)?;
+    let port = listener.port();
+    let fcfg = ForwarderConfig { nstreams, delay, max_bytes: None };
+    let handle = std::thread::spawn(move || run(&mut listener, &fcfg));
+    Ok((port, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn client_cfg(n: usize) -> PathConfig {
+        let mut c = PathConfig::with_streams(n);
+        c.autotune = false;
+        c
+    }
+
+    #[test]
+    fn endpoints_communicate_through_forwarder() {
+        let (port, fwd) = spawn(2, None).unwrap();
+        let t_a = std::thread::spawn(move || {
+            let p = Path::connect("127.0.0.1", port, client_cfg(2)).unwrap();
+            p.send(&vec![7u8; 10_000]).unwrap();
+            let mut buf = vec![0u8; 8];
+            p.recv(&mut buf).unwrap();
+            buf
+        });
+        let t_b = std::thread::spawn(move || {
+            let p = Path::connect("127.0.0.1", port, client_cfg(2)).unwrap();
+            let mut buf = vec![0u8; 10_000];
+            p.recv(&mut buf).unwrap();
+            p.send(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+            buf
+        });
+        let got_b = t_b.join().unwrap();
+        assert_eq!(got_b, vec![7u8; 10_000]);
+        assert_eq!(t_a.join().unwrap(), [1, 2, 3, 4, 5, 6, 7, 8]);
+        let stats = fwd.join().unwrap().unwrap();
+        assert_eq!(stats.a_to_b + stats.b_to_a, 10_008);
+    }
+
+    #[test]
+    fn delay_inflates_round_trip() {
+        let delay = Duration::from_millis(8);
+        let (port, _fwd) = spawn(1, Some(delay)).unwrap();
+        let t_b = std::thread::spawn(move || {
+            let p = Path::connect("127.0.0.1", port, client_cfg(1)).unwrap();
+            for _ in 0..3 {
+                p.barrier().unwrap();
+            }
+        });
+        let p = Path::connect("127.0.0.1", port, client_cfg(1)).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..3 {
+            p.barrier().unwrap();
+        }
+        let per_barrier = t0.elapsed() / 3;
+        // barrier tokens travel concurrently in both directions, so each
+        // barrier costs one forwarder hop (~8 ms), not two
+        assert!(per_barrier >= Duration::from_millis(7), "{per_barrier:?}");
+        assert!(per_barrier < Duration::from_millis(40), "{per_barrier:?}");
+        t_b.join().unwrap();
+    }
+
+    #[test]
+    fn mismatched_stream_counts_rejected() {
+        use crate::mpwide::transport::mem_path_pairs;
+        let (a, _x) = mem_path_pairs(2);
+        let (b, _y) = mem_path_pairs(3);
+        let mut cfg = PathConfig::default();
+        cfg.autotune = false;
+        let pa = Path::from_pairs(a, cfg.clone()).unwrap();
+        let pb = Path::from_pairs(b, cfg).unwrap();
+        assert!(relay_with_delay(&pa, &pb, None).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! The tools shipped with MPWide (paper §1.3.3–§1.3.5 and §1.4):
+//!
+//! * [`forwarder`] — user-space data forwarding for sites whose compute
+//!   nodes cannot accept inbound connections (Fig 3).
+//! * [`mpwcp`] — `mpw-cp`, the scp-class file transfer tool with
+//!   stream-count/chunk-size knobs and CRC32 integrity checking.
+//! * [`datagather`] — one-way real-time directory synchronization.
+//! * [`mpwtest`] — the two-endpoint benchmark suite (paper's `MPWTest`).
+
+pub mod datagather;
+pub mod forwarder;
+pub mod mpwcp;
+pub mod mpwtest;

@@ -1,0 +1,237 @@
+//! `mpw-cp` (paper §1.3.4): scp-class file transfer over an MPWide path.
+//!
+//! The original bootstraps its remote end via SSH; here the remote end is
+//! a small server loop (`mpwide cp-serve`) — the measured quantity,
+//! transfer performance, is unaffected (DESIGN.md §2). Unlike scp, the
+//! user can tune streams/chunk size from the command line, which is the
+//! tool's whole point. Every file carries a CRC32 that the receiver
+//! verifies and acknowledges.
+
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path as FsPath, PathBuf};
+
+use crate::mpwide::errors::{MpwError, Result};
+use crate::mpwide::path::Path;
+
+/// Transfer buffer size (bytes read from disk per dynamic message).
+pub const IO_CHUNK: usize = 8 << 20;
+
+/// Receiver acknowledgement codes.
+const ACK_OK: u64 = 0xC0DE_600D;
+const ACK_BAD: u64 = 0xC0DE_0BAD;
+
+/// Outcome of one file transfer (sender side).
+#[derive(Debug, Clone)]
+pub struct CpStats {
+    /// Payload bytes moved.
+    pub bytes: u64,
+    /// Wall seconds for the data phase.
+    pub seconds: f64,
+    /// CRC32 of the file contents.
+    pub crc: u32,
+}
+
+/// Send one file over an established path. `remote_name` is the name the
+/// receiver stores it under (sanitized server-side).
+pub fn send_file(path: &Path, file: &FsPath, remote_name: &str) -> Result<CpStats> {
+    let mut f = File::open(file)?;
+    let size = f.metadata()?.len();
+
+    // header: name + size (CRC follows the data — computed while streaming)
+    let name_bytes = remote_name.as_bytes();
+    let mut header = Vec::with_capacity(2 + name_bytes.len() + 8);
+    header.extend_from_slice(&(name_bytes.len() as u16).to_be_bytes());
+    header.extend_from_slice(name_bytes);
+    header.extend_from_slice(&size.to_be_bytes());
+    path.dsend(&header)?;
+
+    let t0 = std::time::Instant::now();
+    let mut hasher = crc32fast::Hasher::new();
+    let mut buf = vec![0u8; IO_CHUNK];
+    let mut sent = 0u64;
+    while sent < size {
+        let want = ((size - sent) as usize).min(IO_CHUNK);
+        f.read_exact(&mut buf[..want])?;
+        hasher.update(&buf[..want]);
+        path.dsend(&buf[..want])?;
+        sent += want as u64;
+    }
+    let crc = hasher.finalize();
+    path.dsend(&crc.to_be_bytes())?;
+    let seconds = t0.elapsed().as_secs_f64();
+
+    // wait for the receiver's verdict
+    let ack = path.drecv()?;
+    if ack.len() != 8 {
+        return Err(MpwError::Protocol("short mpw-cp ack".into()));
+    }
+    match u64::from_be_bytes(ack.try_into().unwrap()) {
+        ACK_OK => Ok(CpStats { bytes: size, seconds, crc }),
+        ACK_BAD => Err(MpwError::Protocol("receiver reported CRC mismatch".into())),
+        other => Err(MpwError::Protocol(format!("bad ack {other:#x}"))),
+    }
+}
+
+/// Receive one file into `dest_dir`. Returns (stored path, bytes, crc).
+pub fn recv_file(path: &Path, dest_dir: &FsPath) -> Result<(PathBuf, u64, u32)> {
+    let header = path.drecv()?;
+    if header.len() < 10 {
+        return Err(MpwError::Protocol("short mpw-cp header".into()));
+    }
+    let name_len = u16::from_be_bytes(header[0..2].try_into().unwrap()) as usize;
+    if header.len() != 2 + name_len + 8 {
+        return Err(MpwError::Protocol("malformed mpw-cp header".into()));
+    }
+    let name = String::from_utf8(header[2..2 + name_len].to_vec())
+        .map_err(|_| MpwError::Protocol("non-utf8 file name".into()))?;
+    let size = u64::from_be_bytes(header[2 + name_len..].try_into().unwrap());
+
+    // sanitize: basename only — a hostile sender must not escape dest_dir
+    let base = std::path::Path::new(&name)
+        .file_name()
+        .ok_or_else(|| MpwError::Protocol(format!("bad file name {name:?}")))?;
+    let dest = dest_dir.join(base);
+
+    let mut out = File::create(&dest)?;
+    let mut hasher = crc32fast::Hasher::new();
+    let mut cache = Vec::new();
+    let mut got = 0u64;
+    while got < size {
+        let n = path.drecv_into(&mut cache)?;
+        hasher.update(&cache[..n]);
+        out.write_all(&cache[..n])?;
+        got += n as u64;
+    }
+    out.flush()?;
+    let crc_msg = path.drecv()?;
+    if crc_msg.len() != 4 {
+        return Err(MpwError::Protocol("short crc trailer".into()));
+    }
+    let want_crc = u32::from_be_bytes(crc_msg.try_into().unwrap());
+    let crc = hasher.finalize();
+    let verdict = if crc == want_crc { ACK_OK } else { ACK_BAD };
+    path.dsend(&verdict.to_be_bytes())?;
+    if crc != want_crc {
+        return Err(MpwError::Protocol(format!("crc mismatch: {crc:#x} != {want_crc:#x}")));
+    }
+    Ok((dest, size, crc))
+}
+
+/// Server loop: accept files on `path` until the peer closes. Returns
+/// the number of files received.
+pub fn serve(path: &Path, dest_dir: &FsPath) -> Result<usize> {
+    std::fs::create_dir_all(dest_dir)?;
+    let mut count = 0;
+    loop {
+        match recv_file(path, dest_dir) {
+            Ok(_) => count += 1,
+            Err(MpwError::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::UnexpectedEof
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::BrokenPipe
+                ) =>
+            {
+                return Ok(count)
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::transport::mem_path_pairs;
+    use crate::mpwide::PathConfig;
+    use crate::util::Rng;
+
+    fn mem_paths(n: usize) -> (Path, Path) {
+        let (l, r) = mem_path_pairs(n);
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        (Path::from_pairs(l, cfg.clone()).unwrap(), Path::from_pairs(r, cfg).unwrap())
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mpwcp-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn file_roundtrip_with_integrity() {
+        let dir = tmpdir("rt");
+        let src = dir.join("input.bin");
+        let mut data = vec![0u8; 3 * 1024 * 1024 + 17];
+        Rng::new(7).fill_bytes(&mut data);
+        std::fs::write(&src, &data).unwrap();
+
+        let (a, b) = mem_paths(4);
+        let dest = dir.join("out");
+        std::fs::create_dir_all(&dest).unwrap();
+        let dest2 = dest.clone();
+        let t = std::thread::spawn(move || recv_file(&b, &dest2).unwrap());
+        let stats = send_file(&a, &src, "copy.bin").unwrap();
+        let (stored, size, crc) = t.join().unwrap();
+        assert_eq!(size, data.len() as u64);
+        assert_eq!(stats.crc, crc);
+        assert_eq!(std::fs::read(stored).unwrap(), data);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_file_roundtrip() {
+        let dir = tmpdir("empty");
+        let src = dir.join("empty.bin");
+        std::fs::write(&src, b"").unwrap();
+        let (a, b) = mem_paths(1);
+        let dest = dir.clone();
+        let t = std::thread::spawn(move || recv_file(&b, &dest).unwrap());
+        let stats = send_file(&a, &src, "empty.out").unwrap();
+        let (_, size, _) = t.join().unwrap();
+        assert_eq!(size, 0);
+        assert_eq!(stats.bytes, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn hostile_path_is_sanitized() {
+        let dir = tmpdir("evil");
+        let src = dir.join("x.bin");
+        std::fs::write(&src, b"attack").unwrap();
+        let (a, b) = mem_paths(1);
+        let dest = dir.join("dest");
+        std::fs::create_dir_all(&dest).unwrap();
+        let dest2 = dest.clone();
+        let t = std::thread::spawn(move || recv_file(&b, &dest2).unwrap());
+        send_file(&a, &src, "../../escape.bin").unwrap();
+        let (stored, _, _) = t.join().unwrap();
+        assert!(stored.starts_with(&dest), "stored at {stored:?}");
+        assert_eq!(stored.file_name().unwrap(), "escape.bin");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn serve_counts_files_until_close() {
+        let dir = tmpdir("serve");
+        let src1 = dir.join("a.bin");
+        let src2 = dir.join("b.bin");
+        std::fs::write(&src1, vec![1u8; 1000]).unwrap();
+        std::fs::write(&src2, vec![2u8; 2000]).unwrap();
+        let (a, b) = mem_paths(2);
+        let dest = dir.join("dest");
+        let dest2 = dest.clone();
+        let t = std::thread::spawn(move || serve(&b, &dest2).unwrap());
+        send_file(&a, &src1, "a.bin").unwrap();
+        send_file(&a, &src2, "b.bin").unwrap();
+        drop(a); // close → server loop ends
+        assert_eq!(t.join().unwrap(), 2);
+        assert_eq!(std::fs::read(dest.join("a.bin")).unwrap(), vec![1u8; 1000]);
+        assert_eq!(std::fs::read(dest.join("b.bin")).unwrap(), vec![2u8; 2000]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,132 @@
+//! `MPWTest` (paper §1.4): the two-endpoint benchmark suite, "requires to
+//! be started manually on both end points". The master side drives
+//! full-duplex `MPW_SendRecv` exchanges over a range of message sizes and
+//! reports throughput per size; the slave echoes. This is the harness
+//! behind the MPWide rows of Table 1.
+
+use std::time::Instant;
+
+use crate::mpwide::errors::{MpwError, Result};
+use crate::mpwide::path::Path;
+
+/// Message sizes exercised by the suite (1 KB … 64 MB).
+pub const SIZES: [usize; 7] =
+    [1 << 10, 16 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20, 64 << 20];
+
+/// One row of the benchmark report.
+#[derive(Debug, Clone)]
+pub struct TestRow {
+    /// Message size per direction, bytes.
+    pub size: usize,
+    /// Repetitions measured.
+    pub reps: usize,
+    /// Mean seconds per full-duplex exchange.
+    pub seconds: f64,
+    /// Duplex throughput, bytes/second (size / seconds, per direction).
+    pub rate: f64,
+}
+
+/// Master side: run the suite over an established path. `reps_for` maps
+/// a size to a repetition count (fewer reps for huge messages).
+pub fn run_master(path: &Path, sizes: &[usize], reps_for: impl Fn(usize) -> usize) -> Result<Vec<TestRow>> {
+    let mut rows = Vec::with_capacity(sizes.len());
+    // announce the plan: count, then (size, reps) pairs
+    let mut plan = Vec::new();
+    plan.extend_from_slice(&(sizes.len() as u32).to_be_bytes());
+    for &s in sizes {
+        plan.extend_from_slice(&(s as u64).to_be_bytes());
+        plan.extend_from_slice(&(reps_for(s) as u32).to_be_bytes());
+    }
+    path.dsend(&plan)?;
+
+    for &size in sizes {
+        let reps = reps_for(size);
+        let msg = vec![0x5Au8; size];
+        let mut buf = vec![0u8; size];
+        path.barrier()?;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            path.send_recv(&msg, &mut buf)?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        rows.push(TestRow { size, reps, seconds: dt, rate: size as f64 / dt });
+    }
+    Ok(rows)
+}
+
+/// Slave side: obey the master's plan, echoing exchanges.
+pub fn run_slave(path: &Path) -> Result<()> {
+    let plan = path.drecv()?;
+    if plan.len() < 4 {
+        return Err(MpwError::Protocol("short MPWTest plan".into()));
+    }
+    let n = u32::from_be_bytes(plan[0..4].try_into().unwrap()) as usize;
+    if plan.len() != 4 + n * 12 {
+        return Err(MpwError::Protocol("malformed MPWTest plan".into()));
+    }
+    for k in 0..n {
+        let off = 4 + k * 12;
+        let size = u64::from_be_bytes(plan[off..off + 8].try_into().unwrap()) as usize;
+        let reps = u32::from_be_bytes(plan[off + 8..off + 12].try_into().unwrap()) as usize;
+        let msg = vec![0xA5u8; size];
+        let mut buf = vec![0u8; size];
+        path.barrier()?;
+        for _ in 0..reps {
+            path.send_recv(&msg, &mut buf)?;
+        }
+    }
+    Ok(())
+}
+
+/// Default repetition policy: more reps for small messages.
+pub fn default_reps(size: usize) -> usize {
+    match size {
+        s if s <= 16 << 10 => 50,
+        s if s <= 1 << 20 => 20,
+        s if s <= 16 << 20 => 5,
+        _ => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::transport::mem_path_pairs;
+    use crate::mpwide::PathConfig;
+
+    fn mem_paths(n: usize) -> (Path, Path) {
+        let (l, r) = mem_path_pairs(n);
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        (Path::from_pairs(l, cfg.clone()).unwrap(), Path::from_pairs(r, cfg).unwrap())
+    }
+
+    #[test]
+    fn master_slave_suite_completes() {
+        let (a, b) = mem_paths(2);
+        let t = std::thread::spawn(move || run_slave(&b).unwrap());
+        let rows = run_master(&a, &[1024, 65536], |_| 3).unwrap();
+        t.join().unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert_eq!(r.reps, 3);
+            assert!(r.seconds > 0.0);
+            assert!(r.rate > 0.0);
+        }
+        assert_eq!(rows[0].size, 1024);
+    }
+
+    #[test]
+    fn default_reps_monotonic() {
+        assert!(default_reps(1024) >= default_reps(1 << 20));
+        assert!(default_reps(1 << 20) >= default_reps(64 << 20));
+    }
+
+    #[test]
+    fn slave_rejects_garbage_plan() {
+        let (a, b) = mem_paths(1);
+        let t = std::thread::spawn(move || run_slave(&b));
+        a.dsend(&[1, 2, 3]).unwrap();
+        assert!(t.join().unwrap().is_err());
+    }
+}

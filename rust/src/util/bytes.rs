@@ -1,0 +1,59 @@
+//! Human-readable byte and rate formatting for reports and CLI output.
+
+/// Format a byte count, e.g. `64.0 MB`. Uses SI-ish binary steps of 1024 but
+/// MB/GB labels, matching how the paper reports sizes (64MB, 256MB, 160GB).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a rate in bytes/second as `MB/s` (the paper's unit in Table 1).
+pub fn human_rate(bytes_per_sec: f64) -> String {
+    format!("{:.1} MB/s", bytes_per_sec / (1024.0 * 1024.0))
+}
+
+/// Convenience: MB (binary) to bytes.
+pub const fn mb(n: u64) -> u64 {
+    n * 1024 * 1024
+}
+
+/// Convenience: KB (binary) to bytes.
+pub const fn kb(n: u64) -> u64 {
+    n * 1024
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_small() {
+        assert_eq!(human_bytes(512), "512 B");
+    }
+
+    #[test]
+    fn bytes_mb() {
+        assert_eq!(human_bytes(mb(64)), "64.0 MB");
+    }
+
+    #[test]
+    fn rate_mbs() {
+        assert_eq!(human_rate(70.0 * 1024.0 * 1024.0), "70.0 MB/s");
+    }
+
+    #[test]
+    fn consts() {
+        assert_eq!(kb(1), 1024);
+        assert_eq!(mb(1), 1024 * 1024);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities: deterministic RNG, statistics, byte
+//! formatting and a mini property-testing harness.
+//!
+//! The build environment is offline, so the usual crates (`rand`,
+//! `proptest`, `criterion`) are unavailable; these modules provide the
+//! minimal, well-tested subset the rest of the codebase needs.
+
+pub mod bytes;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use bytes::{human_bytes, human_rate};
+pub use rng::Rng;

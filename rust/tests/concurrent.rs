@@ -1,0 +1,161 @@
+//! Integration: concurrent use of the library — the paper's
+//! MPWTestConcurrent analog. Multiple paths, non-blocking exchanges in
+//! flight simultaneously, DataGather running while a "simulation"
+//! exchanges, and the facade under concurrent access.
+
+use std::sync::Arc;
+
+use mpwide::mpwide::nonblocking::{NbeHandle, NbeOp};
+use mpwide::mpwide::{Path, PathConfig, PathListener};
+use mpwide::util::Rng;
+
+fn cfg(n: usize) -> PathConfig {
+    let mut c = PathConfig::with_streams(n);
+    c.autotune = false;
+    c
+}
+
+fn pair(n: usize) -> (Arc<Path>, Arc<Path>) {
+    let mut listener = PathListener::bind(0, cfg(n)).unwrap();
+    let port = listener.port();
+    let c = cfg(n);
+    let t = std::thread::spawn(move || Path::connect("127.0.0.1", port, c).unwrap());
+    let server = listener.accept_path().unwrap();
+    (Arc::new(t.join().unwrap()), Arc::new(server))
+}
+
+#[test]
+fn several_paths_transfer_concurrently() {
+    let pairs: Vec<_> = (0..4).map(|_| pair(2)).collect();
+    std::thread::scope(|s| {
+        for (i, (client, server)) in pairs.iter().enumerate() {
+            let msg = vec![i as u8; 500_000];
+            let expect = msg.clone();
+            let server = server.clone();
+            let client = client.clone();
+            s.spawn(move || {
+                let t = std::thread::spawn(move || {
+                    let mut buf = vec![0u8; 500_000];
+                    server.recv(&mut buf).unwrap();
+                    assert_eq!(buf, expect);
+                });
+                client.send(&msg).unwrap();
+                t.join().unwrap();
+            });
+        }
+    });
+}
+
+#[test]
+fn multiple_nonblocking_exchanges_in_flight() {
+    let (client, server) = pair(2);
+    // echo server: three sequential dynamic exchanges
+    let echo = std::thread::spawn(move || {
+        for _ in 0..3 {
+            let mut cache = Vec::new();
+            let n = server.drecv_into(&mut cache).unwrap();
+            server.dsend(&cache[..n]).unwrap();
+        }
+    });
+    // client posts three exchanges back-to-back; the path's send/recv
+    // gates keep the wire streams intact, but which handle picks up
+    // which echo is scheduling-dependent — compare as a multiset
+    let payloads: Vec<Vec<u8>> = (0..3).map(|i| vec![i as u8 + 1; 10_000 * (i + 1)]).collect();
+    let handles: Vec<NbeHandle> = payloads
+        .iter()
+        .map(|p| NbeHandle::start(client.clone(), NbeOp::DSendRecv(p.clone())))
+        .collect();
+    let mut got: Vec<Vec<u8>> = handles.into_iter().map(|h| h.wait().unwrap().unwrap()).collect();
+    let mut want = payloads.clone();
+    got.sort();
+    want.sort();
+    assert_eq!(got, want);
+    echo.join().unwrap();
+}
+
+#[test]
+fn datagather_runs_while_simulation_exchanges() {
+    // the paper's DataGather use case: sync concurrently with a running
+    // distributed application
+    let dir = std::env::temp_dir().join(format!("concurrent-dg-{}", std::process::id()));
+    let src = dir.join("src");
+    let dst = dir.join("dst");
+    std::fs::create_dir_all(&src).unwrap();
+    std::fs::write(src.join("state.dat"), vec![3u8; 200_000]).unwrap();
+
+    let (sim_client, sim_server) = pair(2);
+    let (dg_client, dg_server) = pair(1);
+
+    std::thread::scope(|s| {
+        // the "simulation": 20 sendrecv rounds
+        s.spawn(move || {
+            let mut buf = vec![0u8; 50_000];
+            for _ in 0..20 {
+                sim_server.send_recv(&vec![1u8; 50_000], &mut buf).unwrap();
+            }
+        });
+        s.spawn(move || {
+            let mut buf = vec![0u8; 50_000];
+            for _ in 0..20 {
+                sim_client.send_recv(&vec![2u8; 50_000], &mut buf).unwrap();
+            }
+        });
+        // the gather, concurrently
+        let dst2 = dst.clone();
+        s.spawn(move || {
+            mpwide::tools::datagather::serve_once(&dg_server, &dst2).unwrap();
+        });
+        let src2 = src.clone();
+        s.spawn(move || {
+            let stats = mpwide::tools::datagather::sync_once(&dg_client, &src2).unwrap();
+            assert_eq!(stats.shipped, 1);
+        });
+    });
+    assert_eq!(std::fs::read(dst.join("state.dat")).unwrap(), vec![3u8; 200_000]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn facade_paths_used_from_worker_threads() {
+    use mpwide::mpwide::api;
+    api::mpw_init();
+    let mut listener = PathListener::bind(0, cfg(2)).unwrap();
+    let port = listener.port();
+    let echo = std::thread::spawn(move || {
+        let p = listener.accept_path().unwrap();
+        let mut buf = vec![0u8; 10_000];
+        for _ in 0..4 {
+            p.recv(&mut buf).unwrap();
+            p.send(&buf).unwrap();
+        }
+    });
+    let id = api::mpw_create_path_cfg("127.0.0.1", port, cfg(2)).unwrap();
+    // four threads hammer the same facade path id (serialized internally)
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(move || {
+                let mut msg = vec![0u8; 10_000];
+                Rng::new(5).fill_bytes(&mut msg);
+                api::mpw_send(id, &msg).unwrap();
+                let mut back = vec![0u8; 10_000];
+                api::mpw_recv(id, &mut back).unwrap();
+            });
+        }
+    });
+    echo.join().unwrap();
+    api::mpw_finalize();
+}
+
+#[test]
+fn barrier_storm_no_deadlock() {
+    let (client, server) = pair(1);
+    let t = std::thread::spawn(move || {
+        for _ in 0..200 {
+            server.barrier().unwrap();
+        }
+    });
+    for _ in 0..200 {
+        client.barrier().unwrap();
+    }
+    t.join().unwrap();
+}

@@ -1,0 +1,99 @@
+//! Integration: forwarder topologies — single hop, a chain of two
+//! forwarders (the multi-forwarder deployments of Groen et al. 2011),
+//! delay injection, and multi-stream relays.
+
+use std::time::{Duration, Instant};
+
+use mpwide::mpwide::{Path, PathConfig};
+use mpwide::tools::forwarder;
+use mpwide::util::Rng;
+
+fn cfg(n: usize) -> PathConfig {
+    let mut c = PathConfig::with_streams(n);
+    c.autotune = false;
+    c
+}
+
+#[test]
+fn single_forwarder_multi_stream() {
+    let (port, fwd) = forwarder::spawn(4, None).unwrap();
+    let mut msg = vec![0u8; 2 << 20];
+    Rng::new(11).fill_bytes(&mut msg);
+    let expect = msg.clone();
+    let t_recv = std::thread::spawn(move || {
+        let p = Path::connect("127.0.0.1", port, cfg(4)).unwrap();
+        let mut buf = vec![0u8; 2 << 20];
+        p.recv(&mut buf).unwrap();
+        buf
+    });
+    let sender = Path::connect("127.0.0.1", port, cfg(4)).unwrap();
+    sender.send(&msg).unwrap();
+    assert_eq!(t_recv.join().unwrap(), expect);
+    drop(sender);
+    let _ = fwd;
+}
+
+#[test]
+fn chain_of_two_forwarders() {
+    // endpoint A -> fwd1 -> fwd2 -> endpoint B: fwd1 and fwd2 are linked
+    // by a path that fwd1's second slot connects to fwd2.
+    let (port2, _fwd2) = forwarder::spawn(2, None).unwrap();
+    let (port1, _fwd1) = forwarder::spawn(2, None).unwrap();
+    // bridge: one client connects fwd1 <-> fwd2
+    let bridge = std::thread::spawn(move || {
+        // endpoint A dials fwd1; bridge dials fwd1 AND fwd2, splicing them:
+        // simplest spliced bridge = two paths + manual relay
+        let p1 = Path::connect("127.0.0.1", port1, cfg(2)).unwrap();
+        let p2 = Path::connect("127.0.0.1", port2, cfg(2)).unwrap();
+        // forward one message each way manually (cycle semantics)
+        let mut buf = vec![0u8; 1 << 20];
+        p1.recv(&mut buf).unwrap();
+        p2.send(&buf).unwrap();
+    });
+    let mut msg = vec![0u8; 1 << 20];
+    Rng::new(12).fill_bytes(&mut msg);
+    let expect = msg.clone();
+    let t_b = std::thread::spawn(move || {
+        let p = Path::connect("127.0.0.1", port2, cfg(2)).unwrap();
+        let mut buf = vec![0u8; 1 << 20];
+        p.recv(&mut buf).unwrap();
+        buf
+    });
+    let a = Path::connect("127.0.0.1", port1, cfg(2)).unwrap();
+    a.send(&msg).unwrap();
+    assert_eq!(t_b.join().unwrap(), expect);
+    bridge.join().unwrap();
+}
+
+#[test]
+fn forwarder_delay_affects_oneway_latency() {
+    let (port, _fwd) = forwarder::spawn(1, Some(Duration::from_millis(10))).unwrap();
+    let t_recv = std::thread::spawn(move || {
+        let p = Path::connect("127.0.0.1", port, cfg(1)).unwrap();
+        let mut buf = [0u8; 16];
+        let t0 = Instant::now();
+        p.recv(&mut buf).unwrap();
+        (buf, t0.elapsed())
+    });
+    let sender = Path::connect("127.0.0.1", port, cfg(1)).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let receiver be ready
+    sender.send(&[7u8; 16]).unwrap();
+    let (buf, _dt) = t_recv.join().unwrap();
+    assert_eq!(buf, [7u8; 16]);
+}
+
+#[test]
+fn forwarder_full_duplex_under_delay() {
+    let (port, _fwd) = forwarder::spawn(2, Some(Duration::from_millis(3))).unwrap();
+    let t_b = std::thread::spawn(move || {
+        let p = Path::connect("127.0.0.1", port, cfg(2)).unwrap();
+        let mut buf = vec![0u8; 100_000];
+        p.send_recv(&vec![5u8; 60_000], &mut buf).unwrap();
+        assert_eq!(buf, vec![4u8; 100_000]);
+    });
+    let a = Path::connect("127.0.0.1", port, cfg(2)).unwrap();
+    let mut buf = vec![0u8; 60_000];
+    a.send_recv(&vec![4u8; 100_000], &mut buf).unwrap();
+    assert_eq!(buf, vec![5u8; 60_000]);
+    t_b.join().unwrap();
+}

@@ -1,0 +1,166 @@
+//! Property tests on the WAN simulator: conservation, capacity bounds,
+//! determinism, fair-share sanity and the monotonicities the paper's
+//! claims rest on.
+
+use mpwide::mpwide::PathConfig;
+use mpwide::netsim::network::{maxmin_allocate, transfer_oneway};
+use mpwide::netsim::{profiles, Direction, SimPath};
+use mpwide::util::prop;
+
+const MB: f64 = 1024.0 * 1024.0;
+
+#[test]
+fn prop_all_bytes_always_delivered() {
+    prop::check("conservation", 40, |rng| {
+        let profs = profiles::all();
+        let link = profs[rng.urange(0, profs.len())].clone();
+        let bytes = rng.urange(1, 64) as f64 * MB;
+        let n = rng.urange(1, 128);
+        let rwnd = rng.urange(64 * 1024, 8 << 20) as f64;
+        let dir = if rng.chance(0.5) { Direction::AtoB } else { Direction::BtoA };
+        let r = transfer_oneway(&link, dir, bytes, n, rwnd, None, rng.next_u64());
+        if (r.bytes - bytes).abs() > 1.0 {
+            return Err(format!("{} of {} bytes delivered on {}", r.bytes, bytes, link.name));
+        }
+        if !r.seconds.is_finite() || r.seconds <= 0.0 {
+            return Err(format!("bad duration {}", r.seconds));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_throughput_bounded_by_capacity() {
+    prop::check("cap-bound", 40, |rng| {
+        let profs = profiles::all();
+        let link = profs[rng.urange(0, profs.len())].clone();
+        let bytes = rng.urange(4, 64) as f64 * MB;
+        let n = rng.urange(1, 128);
+        let r = transfer_oneway(&link, Direction::AtoB, bytes, n, 4.0 * MB, None, rng.next_u64());
+        // ×1.05: round-granularity bookkeeping can slightly overshoot
+        if r.throughput > link.capacity * 1.05 {
+            return Err(format!("{} > {} on {}", r.throughput, link.capacity, link.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deterministic_given_seed() {
+    prop::check("determinism", 25, |rng| {
+        let profs = profiles::all();
+        let link = profs[rng.urange(0, profs.len())].clone();
+        let seed = rng.next_u64();
+        let bytes = rng.urange(1, 32) as f64 * MB;
+        let n = rng.urange(1, 64);
+        let a = transfer_oneway(&link, Direction::AtoB, bytes, n, 2.0 * MB, None, seed);
+        let b = transfer_oneway(&link, Direction::AtoB, bytes, n, 2.0 * MB, None, seed);
+        if a.seconds != b.seconds || a.losses != b.losses {
+            return Err("same seed, different outcome".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_maxmin_allocation_is_feasible_and_fair() {
+    prop::check("maxmin", 300, |rng| {
+        let n = rng.urange(1, 40);
+        let offers: Vec<f64> = (0..n).map(|_| rng.urange(0, 1 << 22) as f64).collect();
+        let cap = rng.urange(1, 1 << 24) as f64;
+        let bg = rng.f64() * 8.0;
+        let alloc = maxmin_allocate(&offers, cap, bg);
+        let total: f64 = alloc.iter().sum();
+        if total > cap * (1.0 + 1e-9) + 1.0 {
+            return Err(format!("allocated {total} > cap {cap}"));
+        }
+        for (i, (&a, &o)) in alloc.iter().zip(&offers).enumerate() {
+            if a > o + 1e-9 {
+                return Err(format!("flow {i} allocated {a} > offer {o}"));
+            }
+            if a < 0.0 {
+                return Err("negative allocation".into());
+            }
+        }
+        // fairness: two flows with equal demand get equal allocation
+        if n >= 2 {
+            let mut offers2 = offers.clone();
+            offers2[0] = 1000.0;
+            offers2[1] = 1000.0;
+            let alloc2 = maxmin_allocate(&offers2, cap, bg);
+            if (alloc2[0] - alloc2[1]).abs() > 1e-6 {
+                return Err("equal demands, unequal shares".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_streams_never_much_worse() {
+    // Monotonicity (statistical): aggregate throughput with 4× the
+    // streams should never be dramatically worse on any WAN profile.
+    prop::check("streams-monotone", 12, |rng| {
+        let wan = [
+            profiles::london_poznan(),
+            profiles::poznan_gdansk(),
+            profiles::poznan_amsterdam(),
+            profiles::ucl_yale(),
+        ];
+        let link = wan[rng.urange(0, wan.len())].clone();
+        let seed = rng.next_u64();
+        let few = SimPath::new(link.clone(), PathConfig::with_streams(2))
+            .send(64 * 1024 * 1024, Direction::AtoB, seed);
+        let many = SimPath::new(link, PathConfig::with_streams(8))
+            .send(64 * 1024 * 1024, Direction::AtoB, seed);
+        if many.throughput_ab() < 0.6 * few.throughput_ab() {
+            return Err(format!(
+                "8 streams {:.1} MB/s much worse than 2 streams {:.1} MB/s",
+                many.throughput_ab() / MB,
+                few.throughput_ab() / MB
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn wan_recommendation_holds_32_streams_beat_1() {
+    // The paper's §1.3.1 guidance, asserted across every WAN profile.
+    for link in [
+        profiles::london_poznan(),
+        profiles::poznan_gdansk(),
+        profiles::poznan_amsterdam(),
+        profiles::ucl_yale(),
+        profiles::amsterdam_tokyo(),
+    ] {
+        let one = SimPath::new(link.clone(), PathConfig::with_streams(1))
+            .send(64 * 1024 * 1024, Direction::AtoB, 42);
+        let many = SimPath::new(link.clone(), PathConfig::with_streams(32))
+            .send(64 * 1024 * 1024, Direction::AtoB, 42);
+        assert!(
+            many.throughput_ab() > one.throughput_ab(),
+            "{}: 32 streams {:.1} <= 1 stream {:.1} MB/s",
+            link.name,
+            many.throughput_ab() / MB,
+            one.throughput_ab() / MB
+        );
+    }
+}
+
+#[test]
+fn local_single_stream_recommendation_holds() {
+    // §1.3.1: "a single stream for connections between local programs".
+    let link = profiles::local_lan();
+    let one = SimPath::new(link.clone(), PathConfig::with_streams(1))
+        .send(64 * 1024 * 1024, Direction::AtoB, 7);
+    let many = SimPath::new(link, PathConfig::with_streams(64))
+        .send(64 * 1024 * 1024, Direction::AtoB, 7);
+    // locally, more streams buy nothing (within noise)
+    assert!(
+        many.throughput_ab() < 1.3 * one.throughput_ab(),
+        "64 streams {:.0} vs 1 stream {:.0} MB/s locally",
+        many.throughput_ab() / MB,
+        one.throughput_ab() / MB
+    );
+}

@@ -1,0 +1,155 @@
+//! Integration: real TCP paths over loopback — creation, transfer,
+//! tuning knobs, barriers, autotuning and teardown (the paper's
+//! MPWUnitTests analog).
+
+use std::time::Duration;
+
+use mpwide::mpwide::{Path, PathConfig, PathListener};
+use mpwide::util::Rng;
+
+fn cfg(n: usize, autotune: bool) -> PathConfig {
+    let mut c = PathConfig::with_streams(n);
+    c.autotune = autotune;
+    c
+}
+
+fn pair(n: usize, autotune: bool) -> (Path, Path) {
+    let mut listener = PathListener::bind(0, cfg(n, autotune)).unwrap();
+    let port = listener.port();
+    let c = cfg(n, autotune);
+    let t = std::thread::spawn(move || Path::connect("127.0.0.1", port, c).unwrap());
+    let server = listener.accept_path().unwrap();
+    (t.join().unwrap(), server)
+}
+
+#[test]
+fn large_transfer_many_streams() {
+    let (client, server) = pair(16, false);
+    let mut msg = vec![0u8; 8 << 20];
+    Rng::new(1).fill_bytes(&mut msg);
+    let expect = msg.clone();
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 8 << 20];
+        server.recv(&mut buf).unwrap();
+        buf
+    });
+    client.send(&msg).unwrap();
+    assert_eq!(t.join().unwrap(), expect);
+}
+
+#[test]
+fn bidirectional_sendrecv_loopback() {
+    let (client, server) = pair(4, false);
+    let a = vec![1u8; 1 << 20];
+    let b = vec![2u8; 1 << 20];
+    let (a2, b2) = (a.clone(), b.clone());
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 1 << 20];
+        server.send_recv(&b2, &mut buf).unwrap();
+        assert_eq!(buf, a2);
+    });
+    let mut buf = vec![0u8; 1 << 20];
+    client.send_recv(&a, &mut buf).unwrap();
+    assert_eq!(buf, b);
+    t.join().unwrap();
+}
+
+#[test]
+fn autotuned_path_creation_converges() {
+    // both ends autotune (the paper's default); path must come up and
+    // agree on a probed chunk size
+    let (client, server) = pair(2, true);
+    let client_chunk = client.config().chunk_size;
+    let server_chunk = server.config().chunk_size;
+    assert_eq!(client_chunk, server_chunk);
+    assert!(mpwide::mpwide::autotune::CANDIDATE_CHUNKS.contains(&client_chunk));
+    // and the tuned path still moves data correctly
+    let msg = vec![9u8; 100_000];
+    let m2 = msg.clone();
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 100_000];
+        server.recv(&mut buf).unwrap();
+        buf
+    });
+    client.send(&msg).unwrap();
+    assert_eq!(t.join().unwrap(), m2);
+}
+
+#[test]
+fn set_window_applies_on_live_path() {
+    let (client, server) = pair(2, false);
+    let granted = client.set_window(256 * 1024).unwrap();
+    assert!(granted.unwrap() >= 256 * 1024 / 2, "kernel granted {granted:?}");
+    drop(server);
+}
+
+#[test]
+fn pacing_limits_loopback_throughput() {
+    let (client, server) = pair(1, false);
+    client.set_pacing_rate(Some(4.0 * 1024.0 * 1024.0)).unwrap(); // 4 MB/s
+    client.set_chunk_size(64 * 1024).unwrap();
+    let msg = vec![0u8; 2 << 20]; // 2 MB at 4 MB/s ≈ 0.5 s minus burst
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 2 << 20];
+        server.recv(&mut buf).unwrap();
+    });
+    let t0 = std::time::Instant::now();
+    client.send(&msg).unwrap();
+    let dt = t0.elapsed();
+    t.join().unwrap();
+    assert!(dt >= Duration::from_millis(300), "paced send took only {dt:?}");
+}
+
+#[test]
+fn rtt_measurement_sane_on_loopback() {
+    let (client, server) = pair(1, false);
+    let t = std::thread::spawn(move || {
+        for _ in 0..5 {
+            server.barrier().unwrap();
+        }
+    });
+    let mut rtts = Vec::new();
+    for _ in 0..5 {
+        rtts.push(client.measure_rtt().unwrap());
+    }
+    t.join().unwrap();
+    assert!(rtts.iter().all(|r| *r < Duration::from_millis(100)), "{rtts:?}");
+}
+
+#[test]
+fn peer_disconnect_surfaces_as_error() {
+    let (client, server) = pair(1, false);
+    drop(server);
+    let mut buf = vec![0u8; 1024];
+    // allow the FIN to land
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(client.recv(&mut buf).is_err());
+}
+
+#[test]
+fn connect_to_closed_port_times_out() {
+    let mut c = cfg(1, false);
+    c.connect_timeout = Duration::from_millis(300);
+    let t0 = std::time::Instant::now();
+    let r = Path::connect("127.0.0.1", 9, c); // discard port; closed
+    assert!(r.is_err());
+    assert!(t0.elapsed() < Duration::from_secs(10));
+}
+
+#[test]
+fn many_sequential_paths_from_one_listener() {
+    let mut listener = PathListener::bind(0, cfg(1, false)).unwrap();
+    let port = listener.port();
+    for i in 0..5 {
+        let c = cfg(1, false);
+        let t = std::thread::spawn(move || {
+            let p = Path::connect("127.0.0.1", port, c).unwrap();
+            p.send(&[i as u8]).unwrap();
+        });
+        let p = listener.accept_path().unwrap();
+        let mut b = [0u8; 1];
+        p.recv(&mut b).unwrap();
+        assert_eq!(b[0], i as u8);
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,158 @@
+//! Integration: the PJRT runtime loads every AOT artifact and reproduces
+//! the jax-computed validation outputs — the numeric contract across the
+//! python→rust boundary. Requires `make artifacts` (skipped with a notice
+//! otherwise).
+
+use mpwide::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(dir).expect("runtime opens"))
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let names = rt.manifest().names();
+    for expected in
+        ["flow1d_step", "flow3d_step", "nbody_accel", "nbody_kick_drift", "nbody_kinetic"]
+    {
+        assert!(names.contains(&expected), "missing {expected} in {names:?}");
+    }
+}
+
+#[test]
+fn every_artifact_validates_numerically() {
+    let Some(rt) = runtime_or_skip() else { return };
+    for name in rt.manifest().names() {
+        let exe = rt.load(name).unwrap_or_else(|e| panic!("load {name}: {e:#}"));
+        let max_rel = exe.validate().unwrap_or_else(|e| panic!("validate {name}: {e:#}"));
+        eprintln!("{name}: max rel err {max_rel:.2e}");
+    }
+}
+
+#[test]
+fn nbody_accel_shapes_and_physics() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let n = rt.manifest().config_usize("nbody_n").unwrap();
+    let exe = rt.load("nbody_accel").unwrap();
+
+    // Two bodies far apart on x, everything else at the origin with zero
+    // mass: acceleration must point along +x for the body at -d.
+    let mut pos = vec![0.0f32; n * 3];
+    let mut mass = vec![0.0f32; n];
+    pos[0] = -1.0; // body 0 at (-1, 0, 0)
+    pos[3] = 1.0; // body 1 at (+1, 0, 0)
+    mass[0] = 1.0;
+    mass[1] = 1.0;
+    let out = exe.run_f32(&[&pos, &pos, &mass]).unwrap();
+    assert_eq!(out.len(), 1);
+    let acc = &out[0];
+    assert_eq!(acc.len(), n * 3);
+    assert!(acc[0] > 0.0, "body 0 pulled toward +x, got {}", acc[0]);
+    assert!(acc[3] < 0.0, "body 1 pulled toward -x, got {}", acc[3]);
+    assert!((acc[0] + acc[3]).abs() < 1e-5, "Newton's third law");
+    // all zero-mass bodies feel the same field; y/z components vanish
+    assert!(acc[1].abs() < 1e-6 && acc[2].abs() < 1e-6);
+}
+
+#[test]
+fn kick_drift_is_exact_arithmetic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let n = rt.manifest().config_usize("nbody_n").unwrap();
+    let exe = rt.load("nbody_kick_drift").unwrap();
+    let pos = vec![1.0f32; n * 3];
+    let vel = vec![2.0f32; n * 3];
+    let acc = vec![4.0f32; n * 3];
+    let dt = vec![0.5f32];
+    let out = exe.run_f32(&[&pos, &vel, &acc, &dt]).unwrap();
+    // v' = 2 + 4*0.5 = 4 ; p' = 1 + 4*0.5 = 3
+    assert!(out[0].iter().all(|&p| (p - 3.0).abs() < 1e-6));
+    assert!(out[1].iter().all(|&v| (v - 4.0).abs() < 1e-6));
+}
+
+#[test]
+fn flow_models_run_and_couple() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let m = rt.manifest().config_usize("flow1d_m").unwrap();
+    let d = rt.manifest().config_usize("flow3d_d").unwrap();
+    let f1 = rt.load("flow1d_step").unwrap();
+    let f3 = rt.load("flow3d_step").unwrap();
+
+    let mut p = vec![0.0f32; m];
+    let mut q = vec![0.0f32; m];
+    let mut u = vec![0.0f32; d * d * d];
+    let mut outlet = 0.0f32;
+    // The 1-D wave travels ~0.4 cells/step, so the inlet signal needs
+    // ~160 steps to reach the coupling interface at the distal end; run
+    // 400 to let the coupled 3-D field pick it up.
+    for step in 0..400 {
+        let inlet = (0.2 * step as f32).sin();
+        let bc = vec![inlet, outlet];
+        let out1 = f1.run_f32(&[&p, &q, &bc]).unwrap();
+        p = out1[0].clone();
+        q = out1[1].clone();
+        let iface_p = out1[2][0];
+        let plane = vec![iface_p; d * d];
+        let out3 = f3.run_f32(&[&u, &plane]).unwrap();
+        u = out3[0].clone();
+        outlet = out3[1][0];
+        assert!(p.iter().all(|v| v.is_finite()));
+        assert!(u.iter().all(|v| v.is_finite()));
+    }
+    // after the coupled run the 3-D field must have picked up signal
+    assert!(u.iter().any(|&v| v.abs() > 1e-6));
+}
+
+#[test]
+fn wrong_input_count_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("nbody_kinetic").unwrap();
+    assert!(exe.run_f32(&[]).is_err());
+}
+
+#[test]
+fn wrong_input_size_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("nbody_kinetic").unwrap();
+    let vel = vec![0.0f32; 3];
+    let mass = vec![0.0f32; 7];
+    assert!(exe.run_f32(&[&vel, &mass]).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.load("does_not_exist").is_err());
+}
+
+#[test]
+fn one_runtime_per_thread_pattern_works() {
+    // The xla wrappers are Rc-based (not Send), so each coordinator
+    // thread — like each CosmoGrid site — owns its own Runtime. This is
+    // the pattern the applications use; prove it composes.
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    std::thread::scope(|s| {
+        for t in 0..3usize {
+            let dir = dir.clone();
+            s.spawn(move || {
+                let rt = Runtime::open(dir).unwrap();
+                let n = rt.manifest().config_usize("nbody_n").unwrap();
+                let exe = rt.load("nbody_kinetic").unwrap();
+                let vel = vec![t as f32; n * 3];
+                let mass = vec![1.0f32; n];
+                let out = exe.run_f32(&[&vel, &mass]).unwrap();
+                let want = 0.5 * (t * t * 3 * n) as f32;
+                assert!((out[0][0] - want).abs() <= want.max(1.0) * 1e-4);
+            });
+        }
+    });
+}

@@ -1,0 +1,173 @@
+//! Integration: mpw-cp and DataGather over real sockets — end-to-end
+//! integrity (CRC32), multi-stream transfers, sync semantics, and the
+//! MPWTest suite over loopback TCP.
+
+use mpwide::mpwide::{Path, PathConfig, PathListener};
+use mpwide::tools::{datagather, mpwcp, mpwtest};
+use mpwide::util::Rng;
+
+fn cfg(n: usize) -> PathConfig {
+    let mut c = PathConfig::with_streams(n);
+    c.autotune = false;
+    c
+}
+
+fn tcp_pair(n: usize) -> (Path, Path) {
+    let mut listener = PathListener::bind(0, cfg(n)).unwrap();
+    let port = listener.port();
+    let c = cfg(n);
+    let t = std::thread::spawn(move || Path::connect("127.0.0.1", port, c).unwrap());
+    let server = listener.accept_path().unwrap();
+    (t.join().unwrap(), server)
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("tools-int-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn mpwcp_over_tcp_with_16_streams() {
+    let dir = tmpdir("cp16");
+    let src = dir.join("big.bin");
+    let mut data = vec![0u8; 10 << 20];
+    Rng::new(21).fill_bytes(&mut data);
+    std::fs::write(&src, &data).unwrap();
+
+    let (client, server) = tcp_pair(16);
+    let dest = dir.join("out");
+    std::fs::create_dir_all(&dest).unwrap();
+    let dest2 = dest.clone();
+    let t = std::thread::spawn(move || mpwcp::recv_file(&server, &dest2).unwrap());
+    let stats = mpwcp::send_file(&client, &src, "big.bin").unwrap();
+    let (stored, size, crc) = t.join().unwrap();
+    assert_eq!(size, 10 << 20);
+    assert_eq!(crc, stats.crc);
+    assert_eq!(std::fs::read(stored).unwrap(), data);
+    assert!(stats.seconds > 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mpwcp_tuned_chunk_size_still_correct() {
+    let dir = tmpdir("cpchunk");
+    let src = dir.join("f.bin");
+    let mut data = vec![0u8; 3_333_333];
+    Rng::new(22).fill_bytes(&mut data);
+    std::fs::write(&src, &data).unwrap();
+
+    let (client, server) = tcp_pair(3);
+    client.set_chunk_size(7_777).unwrap();
+    server.set_chunk_size(7_777).unwrap();
+    let dest = dir.clone();
+    let t = std::thread::spawn(move || mpwcp::recv_file(&server, &dest).unwrap());
+    mpwcp::send_file(&client, &src, "g.bin").unwrap();
+    let (stored, _, _) = t.join().unwrap();
+    assert_eq!(std::fs::read(stored).unwrap(), data);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn datagather_over_tcp_incremental_rounds() {
+    let dir = tmpdir("dg");
+    let src = dir.join("src");
+    let dst = dir.join("dst");
+    std::fs::create_dir_all(src.join("deep/nest")).unwrap();
+    std::fs::write(src.join("deep/nest/a.dat"), vec![1u8; 123_456]).unwrap();
+    std::fs::write(src.join("b.dat"), vec![2u8; 777]).unwrap();
+
+    let (client, server) = tcp_pair(2);
+    // round 1: ship all
+    let dst2 = dst.clone();
+    let t = std::thread::spawn(move || {
+        let n1 = datagather::serve_once(&server, &dst2).unwrap();
+        let n2 = datagather::serve_once(&server, &dst2).unwrap();
+        let n3 = datagather::serve_once(&server, &dst2).unwrap();
+        (n1, n2, n3)
+    });
+    let s1 = datagather::sync_once(&client, &src).unwrap();
+    // round 2: no change
+    let s2 = datagather::sync_once(&client, &src).unwrap();
+    // round 3: file modified in place
+    std::fs::write(src.join("b.dat"), vec![9u8; 777]).unwrap();
+    let s3 = datagather::sync_once(&client, &src).unwrap();
+    let (n1, n2, n3) = t.join().unwrap();
+    assert_eq!((n1, s1.shipped), (2, 2));
+    assert_eq!((n2, s2.shipped), (0, 0));
+    assert_eq!((n3, s3.shipped), (1, 1));
+    assert_eq!(std::fs::read(dst.join("deep__nest__a.dat")).unwrap(), vec![1u8; 123_456]);
+    assert_eq!(std::fs::read(dst.join("b.dat")).unwrap(), vec![9u8; 777]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mpwtest_suite_over_tcp() {
+    let (client, server) = tcp_pair(4);
+    let t = std::thread::spawn(move || mpwtest::run_slave(&server).unwrap());
+    let rows = mpwtest::run_master(&client, &[4096, 262_144, 1 << 20], |_| 4).unwrap();
+    t.join().unwrap();
+    assert_eq!(rows.len(), 3);
+    // loopback should beat 50 MB/s easily at 1 MB messages
+    let last = rows.last().unwrap();
+    assert!(
+        last.rate > 50.0 * 1024.0 * 1024.0,
+        "loopback rate only {:.1} MB/s",
+        last.rate / (1024.0 * 1024.0)
+    );
+}
+
+#[test]
+fn cli_binary_selftest_and_dns() {
+    // exercise the shipped binary end-to-end (MPWUnitTests analog)
+    let bin = env!("CARGO_BIN_EXE_mpwide");
+    let out = std::process::Command::new(bin).arg("selftest").output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("selftest OK"));
+
+    let out = std::process::Command::new(bin).args(["dns", "localhost"]).output().unwrap();
+    assert!(out.status.success());
+    let ip = String::from_utf8_lossy(&out.stdout);
+    assert!(ip.contains("127.0.0.1") || ip.contains("::1"), "{ip}");
+
+    let out = std::process::Command::new(bin).arg("help").output().unwrap();
+    assert!(String::from_utf8_lossy(&out.stdout).contains("mpw-cp"));
+}
+
+#[test]
+fn cli_cp_roundtrip_via_processes() {
+    let dir = tmpdir("clicp");
+    let src = dir.join("payload.bin");
+    let mut data = vec![0u8; 1 << 20];
+    Rng::new(23).fill_bytes(&mut data);
+    std::fs::write(&src, &data).unwrap();
+    let dest = dir.join("recv");
+    std::fs::create_dir_all(&dest).unwrap();
+
+    let bin = env!("CARGO_BIN_EXE_mpwide");
+    let port = "16131";
+    let mut server = std::process::Command::new(bin)
+        .args(["cp-serve", "--port", port, "--dir", dest.to_str().unwrap(), "--streams", "4", "--no-autotune"])
+        .spawn()
+        .unwrap();
+    // client retries until the server listens (connect_retry handles it)
+    let out = std::process::Command::new(bin)
+        .args([
+            "cp",
+            src.to_str().unwrap(),
+            "127.0.0.1",
+            "copied.bin",
+            "--port",
+            port,
+            "--streams",
+            "4",
+            "--no-autotune",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let _ = server.wait();
+    assert_eq!(std::fs::read(dest.join("copied.bin")).unwrap(), data);
+    let _ = std::fs::remove_dir_all(&dir);
+}
