@@ -1,10 +1,12 @@
 //! Minimal measurement harness for the `cargo bench` targets (the
 //! `criterion` crate is unavailable in the offline build).
 //!
-//! Provides warmup + repeated sampling with summary statistics, and a
+//! Provides warmup + repeated sampling with summary statistics, a
 //! fixed-width table printer used to emit the paper-style rows every
-//! bench target regenerates (DESIGN.md §4). Bench binaries are declared
-//! `harness = false` and call these helpers from `main`.
+//! bench target regenerates (DESIGN.md §4), and a small JSON emitter
+//! ([`BenchJson`]) writing `BENCH_<name>.json` files that CI archives as
+//! artifacts so the perf trajectory is recorded per PR. Bench binaries
+//! are declared `harness = false` and call these helpers from `main`.
 
 use std::time::Instant;
 
@@ -149,6 +151,113 @@ pub fn banner(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// One field of a [`BenchJson`] report.
+#[derive(Debug, Clone)]
+enum JsonField {
+    Num(f64),
+    Text(String),
+    Series(Vec<f64>),
+}
+
+/// Flat JSON report for one bench run, written as `BENCH_<name>.json`.
+///
+/// The output directory is `$BENCH_OUT_DIR` when set, else the current
+/// directory. Non-finite numbers serialize as `null` (JSON has no NaN).
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    name: String,
+    fields: Vec<(String, JsonField)>,
+}
+
+impl BenchJson {
+    /// New report for the bench called `name`.
+    pub fn new(name: &str) -> BenchJson {
+        BenchJson { name: name.to_string(), fields: Vec::new() }
+    }
+
+    /// Add a numeric field.
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.fields.push((key.to_string(), JsonField::Num(v)));
+        self
+    }
+
+    /// Add a string field.
+    pub fn text(&mut self, key: &str, v: &str) -> &mut Self {
+        self.fields.push((key.to_string(), JsonField::Text(v.to_string())));
+        self
+    }
+
+    /// Add an array-of-numbers field.
+    pub fn series(&mut self, key: &str, v: &[f64]) -> &mut Self {
+        self.fields.push((key.to_string(), JsonField::Series(v.to_vec())));
+        self
+    }
+
+    fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                '\r' => out.push_str("\\r"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    fn fmt_num(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".into()
+        }
+    }
+
+    /// Serialize to a JSON object string.
+    pub fn render(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"bench\": \"{}\"", Self::escape(&self.name)));
+        for (k, v) in &self.fields {
+            out.push_str(", ");
+            out.push_str(&format!("\"{}\": ", Self::escape(k)));
+            match v {
+                JsonField::Num(n) => out.push_str(&Self::fmt_num(*n)),
+                JsonField::Text(s) => out.push_str(&format!("\"{}\"", Self::escape(s))),
+                JsonField::Series(xs) => {
+                    out.push('[');
+                    for (i, x) in xs.iter().enumerate() {
+                        if i > 0 {
+                            out.push_str(", ");
+                        }
+                        out.push_str(&Self::fmt_num(*x));
+                    }
+                    out.push(']');
+                }
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json` into `$BENCH_OUT_DIR` (or the current
+    /// directory) and return its path.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("BENCH_OUT_DIR").unwrap_or_else(|_| ".".into());
+        self.write_to(std::path::Path::new(&dir))
+    }
+
+    /// Write `BENCH_<name>.json` into `dir` and return its path.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.render())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +306,34 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a"]);
         t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn bench_json_renders_parseable_json() {
+        let mut j = BenchJson::new("adaptive_wan");
+        j.num("ratio", 2.5)
+            .text("scenario", "congestion \"ramp\"\n")
+            .series("goodput", &[1.0, 2.5, f64::NAN]);
+        let text = j.render();
+        let parsed = crate::util::json::Json::parse(&text).expect("valid JSON");
+        assert_eq!(parsed.get("bench").unwrap().str(), Some("adaptive_wan"));
+        assert_eq!(parsed.get("ratio").unwrap().num(), Some(2.5));
+        assert_eq!(parsed.get("scenario").unwrap().str(), Some("congestion \"ramp\"\n"));
+        let series = parsed.get("goodput").unwrap().arr().unwrap();
+        assert_eq!(series.len(), 3);
+        assert_eq!(series[2], crate::util::json::Json::Null);
+    }
+
+    #[test]
+    fn bench_json_writes_to_dir() {
+        // write_to, not the env-var path: mutating the process environment
+        // in a parallel test run races other threads' getenv
+        let dir = std::env::temp_dir().join(format!("benchjson-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = BenchJson::new("smoke").num("x", 1.0).write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_smoke.json"));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

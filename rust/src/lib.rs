@@ -5,9 +5,11 @@
 //! 2013, DOI 10.5334/jors.ah) as a three-layer Rust + JAX + Pallas stack.
 //!
 //! * [`mpwide`] — the library itself: communication **paths** made of 1–256
-//!   parallel TCP streams, chunked + paced sends, TCP window tuning, an
-//!   autotuner, dynamic-size messaging, non-blocking operations, relays, and
-//!   a C-style facade mirroring the paper's Table 2 API.
+//!   parallel TCP streams, chunked + paced sends, TCP window tuning, a
+//!   creation-time autotuner plus an online adaptive tuner (live
+//!   restriping as WAN conditions drift), dynamic-size messaging,
+//!   non-blocking operations, relays, and a C-style facade mirroring the
+//!   paper's Table 2 API.
 //! * [`netsim`] — a flow-level discrete-event TCP simulator standing in for
 //!   the paper's wide-area testbeds (see DESIGN.md §2), with link profiles
 //!   named after the paper's endpoint pairs.

@@ -27,12 +27,20 @@
 //! | `MPW_setWin`             | [`mpw_set_win`]             |
 //! | `MPW_setAutoTuning`      | [`mpw_set_autotuning`]      |
 //! | `MPW_DNSResolve`         | [`mpw_dns_resolve`]         |
+//!
+//! Runtime-adaptation extensions (not in the paper's Table 2 — the
+//! online tuner added on top of the creation-time autotuner):
+//!
+//! | Extension                | Here                        |
+//! |--------------------------|-----------------------------|
+//! | `MPW_setTuneMode`        | [`mpw_set_tune_mode`]       |
+//! | `MPW_TuneMode`           | [`mpw_tune_mode`]           |
+//! | `MPW_TuneState`          | [`mpw_tune_state`]          |
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
-use once_cell::sync::Lazy;
-
+use super::adapt::{TuneMode, TuneSnapshot};
 use super::config::PathConfig;
 use super::errors::{MpwError, Result};
 use super::nonblocking::{NbeHandle, NbeOp};
@@ -47,19 +55,23 @@ struct Context {
     next_handle: i32,
 }
 
-static CTX: Lazy<Mutex<Context>> = Lazy::new(|| {
-    Mutex::new(Context {
-        paths: HashMap::new(),
-        handles: HashMap::new(),
-        listeners: HashMap::new(),
-        next_path: 0,
-        next_handle: 0,
+static CTX: OnceLock<Mutex<Context>> = OnceLock::new();
+
+fn ctx() -> &'static Mutex<Context> {
+    CTX.get_or_init(|| {
+        Mutex::new(Context {
+            paths: HashMap::new(),
+            handles: HashMap::new(),
+            listeners: HashMap::new(),
+            next_path: 0,
+            next_handle: 0,
+        })
     })
-});
+}
 
 /// `MPW_Init`: reset the global context (idempotent).
 pub fn mpw_init() {
-    let mut c = CTX.lock().unwrap();
+    let mut c = ctx().lock().unwrap();
     c.paths.clear();
     c.handles.clear();
     c.listeners.clear();
@@ -74,7 +86,7 @@ pub fn mpw_finalize() {
 
 fn with_path<T>(id: i32, f: impl FnOnce(&Arc<Path>) -> Result<T>) -> Result<T> {
     let p = {
-        let c = CTX.lock().unwrap();
+        let c = ctx().lock().unwrap();
         c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?
     };
     f(&p)
@@ -89,7 +101,7 @@ pub fn mpw_create_path(host: &str, port: u16, nstreams: usize) -> Result<i32> {
 /// `MPW_CreatePath` with a full configuration.
 pub fn mpw_create_path_cfg(host: &str, port: u16, cfg: PathConfig) -> Result<i32> {
     let path = Path::connect(host, port, cfg)?;
-    let mut c = CTX.lock().unwrap();
+    let mut c = ctx().lock().unwrap();
     let id = c.next_path;
     c.next_path += 1;
     c.paths.insert(id, Arc::new(path));
@@ -107,7 +119,7 @@ pub fn mpw_serve_path(port: u16, nstreams: usize) -> Result<i32> {
 pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
     // Hold the context lock only around registry mutation, not accept().
     let mut listener = {
-        let mut c = CTX.lock().unwrap();
+        let mut c = ctx().lock().unwrap();
         match c.listeners.remove(&port) {
             Some(l) => l,
             None => PathListener::bind(port, cfg.clone())?,
@@ -115,7 +127,7 @@ pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
     };
     let real_port = listener.port();
     let path = listener.accept_path()?;
-    let mut c = CTX.lock().unwrap();
+    let mut c = ctx().lock().unwrap();
     c.listeners.insert(real_port, listener);
     let id = c.next_path;
     c.next_path += 1;
@@ -125,7 +137,7 @@ pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
 
 /// `MPW_DestroyPath`: close and unregister a path.
 pub fn mpw_destroy_path(id: i32) -> Result<()> {
-    let mut c = CTX.lock().unwrap();
+    let mut c = ctx().lock().unwrap();
     c.paths.remove(&id).map(|_| ()).ok_or(MpwError::UnknownId(id))
 }
 
@@ -163,7 +175,7 @@ pub fn mpw_barrier(id: i32) -> Result<()> {
 /// `buf` over path `send_id`.
 pub fn mpw_cycle(recv_id: i32, send_id: i32, buf: &[u8], recv_len: usize) -> Result<Vec<u8>> {
     let (pr, ps) = {
-        let c = CTX.lock().unwrap();
+        let c = ctx().lock().unwrap();
         (
             c.paths.get(&recv_id).cloned().ok_or(MpwError::UnknownId(recv_id))?,
             c.paths.get(&send_id).cloned().ok_or(MpwError::UnknownId(send_id))?,
@@ -175,7 +187,7 @@ pub fn mpw_cycle(recv_id: i32, send_id: i32, buf: &[u8], recv_len: usize) -> Res
 /// `MPW_DCycle` (dynamic sizes).
 pub fn mpw_dcycle(recv_id: i32, send_id: i32, buf: &[u8]) -> Result<Vec<u8>> {
     let (pr, ps) = {
-        let c = CTX.lock().unwrap();
+        let c = ctx().lock().unwrap();
         (
             c.paths.get(&recv_id).cloned().ok_or(MpwError::UnknownId(recv_id))?,
             c.paths.get(&send_id).cloned().ok_or(MpwError::UnknownId(send_id))?,
@@ -190,7 +202,7 @@ pub fn mpw_dcycle(recv_id: i32, send_id: i32, buf: &[u8]) -> Result<Vec<u8>> {
 /// `MPW_Relay`: forward all traffic between two paths until both close.
 pub fn mpw_relay(a: i32, b: i32) -> Result<relay::RelayStats> {
     let (pa, pb) = {
-        let c = CTX.lock().unwrap();
+        let c = ctx().lock().unwrap();
         (
             c.paths.get(&a).cloned().ok_or(MpwError::UnknownId(a))?,
             c.paths.get(&b).cloned().ok_or(MpwError::UnknownId(b))?,
@@ -202,11 +214,11 @@ pub fn mpw_relay(a: i32, b: i32) -> Result<relay::RelayStats> {
 /// `MPW_ISendRecv`: start a non-blocking exchange; returns a handle id.
 pub fn mpw_isend_recv(id: i32, op: NbeOp) -> Result<i32> {
     let p = {
-        let c = CTX.lock().unwrap();
+        let c = ctx().lock().unwrap();
         c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?
     };
     let h = NbeHandle::start(p, op);
-    let mut c = CTX.lock().unwrap();
+    let mut c = ctx().lock().unwrap();
     let hid = c.next_handle;
     c.next_handle += 1;
     c.handles.insert(hid, h);
@@ -215,7 +227,7 @@ pub fn mpw_isend_recv(id: i32, op: NbeOp) -> Result<i32> {
 
 /// `MPW_Has_NBE_Finished`.
 pub fn mpw_has_nbe_finished(hid: i32) -> Result<bool> {
-    let c = CTX.lock().unwrap();
+    let c = ctx().lock().unwrap();
     c.handles.get(&hid).map(|h| h.is_finished()).ok_or(MpwError::UnknownId(hid))
 }
 
@@ -223,7 +235,7 @@ pub fn mpw_has_nbe_finished(hid: i32) -> Result<bool> {
 /// bytes for receiving operations.
 pub fn mpw_wait(hid: i32) -> Result<Option<Vec<u8>>> {
     let h = {
-        let mut c = CTX.lock().unwrap();
+        let mut c = ctx().lock().unwrap();
         c.handles.remove(&hid).ok_or(MpwError::UnknownId(hid))?
     };
     h.wait()
@@ -250,6 +262,28 @@ pub fn mpw_set_autotuning(id: i32, on: bool) -> Result<()> {
         p.set_autotuning(on);
         Ok(())
     })
+}
+
+/// `MPW_setTuneMode` (runtime extension): switch a live path between
+/// creation-time-only tuning ([`TuneMode::Static`]) and online
+/// adaptation ([`TuneMode::Adaptive`]).
+pub fn mpw_set_tune_mode(id: i32, mode: TuneMode) -> Result<()> {
+    with_path(id, |p| {
+        p.set_tune_mode(mode);
+        Ok(())
+    })
+}
+
+/// `MPW_TuneMode` (runtime extension): current tuning mode of a path.
+pub fn mpw_tune_mode(id: i32) -> Result<TuneMode> {
+    with_path(id, |p| Ok(p.tune_mode()))
+}
+
+/// `MPW_TuneState` (runtime extension): snapshot of the live tuning
+/// state — active streams, chunk size, pacing rate and the controller's
+/// smoothed goodput estimate.
+pub fn mpw_tune_state(id: i32) -> Result<TuneSnapshot> {
+    with_path(id, |p| Ok(p.tune_snapshot()))
 }
 
 /// `MPW_DNSResolve`.
@@ -297,6 +331,38 @@ mod tests {
         let mut back = vec![0u8; 1000];
         mpw_recv(id, &mut back).unwrap();
         assert_eq!(back, msg);
+        mpw_destroy_path(id).unwrap();
+        t.join().unwrap();
+        mpw_finalize();
+    }
+
+    #[test]
+    fn tune_mode_over_facade() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            let p = listener.accept_path().unwrap();
+            let mut buf = vec![0u8; 256 * 1024];
+            for _ in 0..3 {
+                p.recv(&mut buf).unwrap();
+            }
+        });
+        let id = mpw_create_path_cfg("127.0.0.1", port, cfg).unwrap();
+        assert_eq!(mpw_tune_mode(id).unwrap(), TuneMode::Static);
+        mpw_set_tune_mode(id, TuneMode::Adaptive).unwrap();
+        assert_eq!(mpw_tune_mode(id).unwrap(), TuneMode::Adaptive);
+        let msg = vec![1u8; 256 * 1024];
+        for _ in 0..3 {
+            mpw_send(id, &msg).unwrap();
+        }
+        let state = mpw_tune_state(id).unwrap();
+        assert!((1..=2).contains(&state.active_streams));
+        assert!(state.chunk_size >= 1);
+        assert!(matches!(mpw_tune_mode(99), Err(MpwError::UnknownId(99))));
         mpw_destroy_path(id).unwrap();
         t.join().unwrap();
         mpw_finalize();

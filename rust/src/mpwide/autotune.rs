@@ -1,4 +1,4 @@
-//! The MPWide autotuner (§1.3.1).
+//! The MPWide autotuner (§1.3.1) — the **creation-time** half of tuning.
 //!
 //! Enabled by default, the autotuner probes a small set of chunk sizes at
 //! path-creation time, measures round-trip throughput for each, adopts the
@@ -8,6 +8,10 @@
 //! the best performance is obtained by testing different parameters by
 //! hand" — applies verbatim: the A1 bench (`streams_sweep`) compares
 //! autotuned vs hand-tuned vs default configurations.
+//!
+//! The **runtime** half lives in [`super::adapt`]: the master side seeds
+//! the adaptive controller with the rate achieved here, so the online
+//! tuner starts from the creation-time optimum instead of cold.
 //!
 //! Protocol (on stream 0, both sides must have autotuning enabled):
 //! 16-byte control frames `[cmd: u64 BE][value: u64 BE]`. The connecting
@@ -100,6 +104,11 @@ pub fn tune_master(path: &Path) -> Result<TuneResult> {
     };
     send_ctrl(path, CMD_DONE, 0)?;
     path.barrier()?;
+    // Arm the runtime controller's collapse detector with the rate the
+    // path achieved at creation: if conditions later drift far below
+    // this, the adaptive tuner (when enabled) restripes immediately
+    // instead of first having to relearn a baseline.
+    path.note_tuned_rate(best.1);
     Ok(TuneResult { chunk_size: best.0, window, rtt_seconds: rtt, best_rate: best.1 })
 }
 

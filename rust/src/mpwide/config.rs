@@ -1,8 +1,12 @@
 //! Path configuration: the user-tunable performance parameters the paper
 //! exposes (§1.3.1) — stream count, chunk size, pacing rate, TCP window
-//! size, and the autotuning switch (enabled by default).
+//! size, and the autotuning switch (enabled by default) — plus the
+//! runtime-adaptation settings ([`AdaptConfig`]) layered on top by this
+//! reproduction.
 
 use std::time::Duration;
+
+use super::adapt::AdaptConfig;
 
 /// Maximum number of TCP streams per path. The paper reports efficient
 /// operation with up to 256 streams in a single path.
@@ -33,6 +37,10 @@ pub struct PathConfig {
     /// How long `Path::connect` keeps retrying before giving up (endpoints
     /// of a distributed run start in arbitrary order).
     pub connect_timeout: Duration,
+    /// Runtime adaptation (live restriping / re-chunking / re-pacing).
+    /// Defaults to [`TuneMode::Static`](super::adapt::TuneMode::Static),
+    /// i.e. the paper's creation-time-only behaviour.
+    pub adapt: AdaptConfig,
 }
 
 impl Default for PathConfig {
@@ -44,6 +52,7 @@ impl Default for PathConfig {
             tcp_window: None,
             autotune: true,
             connect_timeout: Duration::from_secs(30),
+            adapt: AdaptConfig::default(),
         }
     }
 }
@@ -75,6 +84,7 @@ impl PathConfig {
                 )));
             }
         }
+        self.adapt.validate()?;
         Ok(())
     }
 

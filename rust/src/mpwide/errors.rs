@@ -1,33 +1,65 @@
 //! Error type shared across the MPWide library.
+//!
+//! Display/From impls are hand-written (the `thiserror` derive crate is
+//! unavailable in the offline build).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by MPWide operations.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum MpwError {
     /// Underlying socket / file I/O failure.
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Connection could not be established within the configured timeout.
-    #[error("connect to {endpoint} timed out after {seconds:.1}s")]
-    ConnectTimeout { endpoint: String, seconds: f64 },
+    ConnectTimeout {
+        /// The `host:port` that could not be reached.
+        endpoint: String,
+        /// The configured timeout, seconds.
+        seconds: f64,
+    },
 
     /// A path id (or non-blocking handle id) that is not registered.
-    #[error("unknown id {0}")]
     UnknownId(i32),
 
     /// Handshake or wire-protocol violation.
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// Invalid configuration (e.g. 0 streams, oversized stream count).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// A worker thread servicing one of the path's streams panicked.
-    #[error("stream worker panicked: {0}")]
     WorkerPanic(String),
+}
+
+impl fmt::Display for MpwError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MpwError::Io(e) => write!(f, "i/o error: {e}"),
+            MpwError::ConnectTimeout { endpoint, seconds } => {
+                write!(f, "connect to {endpoint} timed out after {seconds:.1}s")
+            }
+            MpwError::UnknownId(id) => write!(f, "unknown id {id}"),
+            MpwError::Protocol(msg) => write!(f, "protocol error: {msg}"),
+            MpwError::Config(msg) => write!(f, "invalid configuration: {msg}"),
+            MpwError::WorkerPanic(msg) => write!(f, "stream worker panicked: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for MpwError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MpwError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for MpwError {
+    fn from(e: std::io::Error) -> MpwError {
+        MpwError::Io(e)
+    }
 }
 
 /// Library-wide result alias.

@@ -6,14 +6,29 @@
 //! streams ([`stripe`]), written in user-configurable chunks
 //! ([`config::PathConfig::chunk_size`]), optionally rate-limited by a
 //! software pacer ([`pacing`]) and with tuned TCP windows
-//! ([`transport`]). An [`autotune`]r probes these parameters at path
-//! creation when enabled (the paper's default).
+//! ([`transport`]).
+//!
+//! Tuning happens at two distinct times:
+//!
+//! * **Creation time** — the [`autotune`]r (the paper's §1.3.1 tuner,
+//!   enabled by default) probes chunk sizes over the freshly-built path,
+//!   adopts the fastest on both ends, and sets a BDP-derived TCP window.
+//!   After that the paper's MPWide never touches the knobs again.
+//! * **Runtime** — the [`adapt`] subsystem (this reproduction's
+//!   extension, opt-in via
+//!   [`AdaptConfig::mode`](adapt::AdaptConfig::mode) or
+//!   `MPW_setTuneMode`) keeps watching per-send goodput and **live
+//!   restripes** the path: it changes how many of the established
+//!   streams a message is striped over, re-chunks, and re-paces as WAN
+//!   conditions drift — no reconnects, both ends converging through a
+//!   tiny per-message active-stream header.
 //!
 //! On top of paths the library provides dynamic-size messaging with
 //! receive-side caching ([`dynamic`]), non-blocking operations
 //! ([`nonblocking`]), message cycling/relaying between paths ([`relay`]),
 //! and a C-style facade mirroring the paper's Table 2 ([`api`]).
 
+pub mod adapt;
 pub mod api;
 pub mod autotune;
 pub mod config;
@@ -27,6 +42,7 @@ pub mod relay;
 pub mod stripe;
 pub mod transport;
 
+pub use adapt::{AdaptConfig, TuneMode, TuneSnapshot};
 pub use config::PathConfig;
 pub use errors::{MpwError, Result};
 pub use path::{Path, PathListener};

@@ -67,6 +67,18 @@ impl Pacer {
     }
 }
 
+/// Floor for adaptively-chosen per-stream pacing rates: the online
+/// controller never paces a stream below this, so a transiently bad
+/// goodput estimate cannot wedge a path at a crawl.
+pub const MIN_ADAPTIVE_RATE: f64 = 1024.0 * 1024.0; // 1 MB/s
+
+/// Split a path-level pacing budget (bytes/second) across `active`
+/// streams, clamped to [`MIN_ADAPTIVE_RATE`]. Used by the
+/// [`adapt`](super::adapt) controller when it re-paces a live path.
+pub fn per_stream_rate(total: f64, active: usize) -> f64 {
+    (total / active.max(1) as f64).max(MIN_ADAPTIVE_RATE)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +128,13 @@ mod tests {
     fn ideal_duration_math() {
         assert_eq!(Pacer::ideal_duration(None, 1000), 0.0);
         assert!((Pacer::ideal_duration(Some(1000.0), 500) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_stream_rate_splits_and_floors() {
+        assert_eq!(per_stream_rate(32.0 * MIN_ADAPTIVE_RATE, 4), 8.0 * MIN_ADAPTIVE_RATE);
+        // floor binds for tiny budgets and is safe for active = 0
+        assert_eq!(per_stream_rate(1.0, 16), MIN_ADAPTIVE_RATE);
+        assert_eq!(per_stream_rate(5.0 * MIN_ADAPTIVE_RATE, 0), 5.0 * MIN_ADAPTIVE_RATE);
     }
 }

@@ -1,21 +1,33 @@
 //! The communication **path**: MPWide's central abstraction (§1.3.1).
 //!
 //! A path is a logical connection made of 1–256 parallel TCP streams.
-//! `send` stripes the message evenly over the streams ([`super::stripe`])
-//! and drives each stream from its own thread, writing in
-//! [`PathConfig::chunk_size`] units through the per-stream
+//! `send` stripes the message evenly over the **active** streams
+//! ([`super::stripe`]) and drives each stream from its own thread,
+//! writing in chunk-size units through the per-stream
 //! [`Pacer`](super::pacing::Pacer) — the same pthread-per-stream design as
 //! the C++ original. `send`/`recv` sizes must match on both ends (like
 //! MPI); use [`super::dynamic`] for unknown-size messages.
+//!
+//! The per-operation knobs (active stream count, chunk size, pacing) are
+//! read from the path's lock-free [`TuningState`] so the
+//! [`adapt`](super::adapt)ive controller can adjust them mid-run. Every
+//! message carries a 2-byte header on stream 0 advertising the sender's
+//! active stream count, so the receiver restripes in lockstep without any
+//! negotiation round-trip.
 
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
+use super::adapt::{AdaptiveController, TuneMode, TuneSnapshot, TuningState};
 use super::config::PathConfig;
 use super::errors::{MpwError, Result};
 use super::pacing::Pacer;
 use super::stripe;
 use super::transport::{connect_streams, HalfDuplex, RawPathListener, StreamPair};
+
+/// Wire size of the per-message active-stream header (u16, big endian,
+/// on stream 0 ahead of the striped payload).
+pub const ACTIVE_HEADER_LEN: usize = 2;
 
 /// Write half of one stream plus its pacer (locked together: pacing is
 /// per-stream and applies to writes).
@@ -37,6 +49,10 @@ pub(crate) struct StreamSlot {
 pub struct Path {
     pub(crate) streams: Vec<StreamSlot>,
     cfg: Mutex<PathConfig>,
+    /// Live performance knobs, consulted per operation (lock-free reads).
+    tuning: Arc<TuningState>,
+    /// Online tuner fed by the send path when the mode is adaptive.
+    controller: Mutex<AdaptiveController>,
     peer: String,
     /// Serializes whole send operations so concurrent sends (e.g. several
     /// non-blocking handles on one path) cannot interleave the byte
@@ -51,6 +67,7 @@ impl std::fmt::Debug for Path {
         f.debug_struct("Path")
             .field("peer", &self.peer)
             .field("nstreams", &self.streams.len())
+            .field("active", &self.tuning.active_streams())
             .finish()
     }
 }
@@ -72,7 +89,7 @@ impl Path {
             }
         }
         let peer = pairs[0].peer.clone();
-        let streams = pairs
+        let streams: Vec<StreamSlot> = pairs
             .into_iter()
             .map(|p| StreamSlot {
                 fd: p.raw_fd(),
@@ -80,9 +97,14 @@ impl Path {
                 rx: Mutex::new(p.rx),
             })
             .collect();
+        let tuning = Arc::new(TuningState::from_config(&cfg));
+        let controller =
+            Mutex::new(AdaptiveController::new(cfg.adapt.clone(), streams.len()));
         Ok(Path {
             streams,
             cfg: Mutex::new(cfg),
+            tuning,
+            controller,
             peer,
             send_gate: Mutex::new(()),
             recv_gate: Mutex::new(()),
@@ -98,7 +120,14 @@ impl Path {
         let autotune = cfg.autotune;
         let path = Path::from_pairs(pairs, cfg)?;
         if autotune {
+            // Suspend runtime adaptation while the probe protocol runs:
+            // the probes must measure each chunk candidate under identical
+            // striping/pacing, and the controller must not learn from its
+            // own probe traffic (it is seeded with the clean result).
+            let mode = path.tune_mode();
+            path.set_tune_mode(TuneMode::Static);
             super::autotune::tune_master(&path)?;
+            path.set_tune_mode(mode);
         }
         Ok(path)
     }
@@ -113,9 +142,45 @@ impl Path {
         &self.peer
     }
 
-    /// Snapshot of the current configuration.
+    /// Snapshot of the current configuration, with the live tuning values
+    /// (chunk size, pacing) overlaid so it reflects what the path is
+    /// actually doing right now.
     pub fn config(&self) -> PathConfig {
-        self.cfg.lock().unwrap().clone()
+        let mut cfg = self.cfg.lock().unwrap().clone();
+        cfg.chunk_size = self.tuning.chunk();
+        cfg.pacing_rate = self.tuning.pacing();
+        cfg
+    }
+
+    /// The path's live tuning knobs (shared with the adaptive controller).
+    pub fn tuning(&self) -> &TuningState {
+        &self.tuning
+    }
+
+    /// `MPW_setTuneMode`: switch between creation-time-only tuning and
+    /// online adaptation at runtime.
+    pub fn set_tune_mode(&self, mode: TuneMode) {
+        self.tuning.set_mode(mode);
+    }
+
+    /// `MPW_TuneMode`: the current tuning mode.
+    pub fn tune_mode(&self) -> TuneMode {
+        self.tuning.mode()
+    }
+
+    /// `MPW_TuneState`: snapshot of the live tuning state, including the
+    /// controller's smoothed goodput estimate.
+    pub fn tune_snapshot(&self) -> TuneSnapshot {
+        let mut s = self.tuning.snapshot();
+        s.ewma_rate = self.controller.lock().unwrap().ewma_rate();
+        s
+    }
+
+    /// Seed the runtime controller's rate baseline (called by the
+    /// creation-time autotuner so the collapse detector is armed from the
+    /// first send).
+    pub(crate) fn note_tuned_rate(&self, rate: f64) {
+        self.controller.lock().unwrap().seed_rate(rate);
     }
 
     /// `MPW_setChunkSize`: bytes handed to each low-level tcp call.
@@ -124,6 +189,7 @@ impl Path {
             return Err(MpwError::Config("chunk_size must be >= 1".into()));
         }
         self.cfg.lock().unwrap().chunk_size = chunk;
+        self.tuning.set_chunk(chunk);
         Ok(())
     }
 
@@ -136,6 +202,7 @@ impl Path {
             }
         }
         self.cfg.lock().unwrap().pacing_rate = rate;
+        self.tuning.set_pacing(rate);
         for s in &self.streams {
             s.tx.lock().unwrap().pacer.set_rate(rate);
         }
@@ -171,31 +238,87 @@ impl Path {
     /// Send without taking the send gate (callers that already hold it:
     /// the dynamic-message layer).
     pub(crate) fn send_ungated(&self, buf: &[u8]) -> Result<usize> {
-        let chunk = self.cfg.lock().unwrap().chunk_size;
-        let n = self.streams.len();
-        if n == 1 {
+        let t0 = Instant::now();
+        let chunk = self.tuning.chunk();
+        let active = self.tuning.active_streams().clamp(1, self.streams.len());
+        // flush only when no payload follows on stream 0 (empty message);
+        // otherwise stream 0's worker flushes and carries the header along
+        self.write_active_header(active, buf.is_empty())?;
+        if active == 1 {
             Self::send_worker(&self.streams[0], buf, chunk)?;
-            return Ok(buf.len());
-        }
-        // §Perf: stream workers run on the persistent task pool — one OS
-        // thread spawn per stream per send was the dominant cost for
-        // small multi-stream messages (EXPERIMENTS.md §Perf change 1).
-        let segs = stripe::segments(buf.len(), n);
-        let mut results: Vec<Result<()>> = Vec::new();
-        results.resize_with(n, || Ok(()));
-        {
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(n);
-            for ((slot, seg), out) in self.streams.iter().zip(segs).zip(results.iter_mut()) {
-                if seg.is_empty() {
-                    continue;
+        } else {
+            // §Perf: stream workers run on the persistent task pool — one
+            // OS thread spawn per stream per send was the dominant cost
+            // for small multi-stream messages (EXPERIMENTS.md §Perf 1).
+            let segs = stripe::segments(buf.len(), active);
+            let mut results: Vec<Result<()>> = Vec::new();
+            results.resize_with(active, || Ok(()));
+            {
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(active);
+                for ((slot, seg), out) in
+                    self.streams[..active].iter().zip(segs).zip(results.iter_mut())
+                {
+                    if seg.is_empty() {
+                        continue;
+                    }
+                    let data = &buf[seg];
+                    jobs.push(Box::new(move || *out = Self::send_worker(slot, data, chunk)));
                 }
-                let data = &buf[seg];
-                jobs.push(Box::new(move || *out = Self::send_worker(slot, data, chunk)));
+                crate::util::pool::scope(jobs);
             }
-            crate::util::pool::scope(jobs);
+            results.into_iter().collect::<Result<Vec<_>>>()?;
         }
-        results.into_iter().collect::<Result<Vec<_>>>()?;
+        self.observe_send(buf.len(), t0.elapsed());
         Ok(buf.len())
+    }
+
+    /// Feed the adaptive controller with this send's goodput and apply
+    /// whatever it decides (no-op in static mode).
+    fn observe_send(&self, bytes: usize, elapsed: Duration) {
+        if self.tuning.mode() != TuneMode::Adaptive {
+            return;
+        }
+        let decision = {
+            let snapshot = self.tuning.snapshot();
+            let mut c = self.controller.lock().unwrap();
+            c.observe(bytes, elapsed.as_secs_f64(), &snapshot)
+        };
+        if decision.is_hold() {
+            return;
+        }
+        self.tuning.apply(&decision);
+        if let Some(rate) = decision.pacing {
+            // pacers are per-stream state behind the tx locks; the send
+            // workers are done by now, so these are uncontended
+            for s in &self.streams {
+                s.tx.lock().unwrap().pacer.set_rate(rate);
+            }
+        }
+    }
+
+    /// Write the 2-byte active-stream header on stream 0 (always the
+    /// first bytes of a message, ahead of any striped payload).
+    fn write_active_header(&self, active: usize, flush: bool) -> Result<()> {
+        let mut tx = self.streams[0].tx.lock().unwrap();
+        tx.w.write_all(&(active as u16).to_be_bytes())?;
+        if flush {
+            tx.w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Read the peer's active-stream header from stream 0.
+    fn read_active_header(&self) -> Result<usize> {
+        let mut hdr = [0u8; ACTIVE_HEADER_LEN];
+        self.streams[0].rx.lock().unwrap().read_exact(&mut hdr)?;
+        let n = u16::from_be_bytes(hdr) as usize;
+        if n == 0 || n > self.streams.len() {
+            return Err(MpwError::Protocol(format!(
+                "peer advertised {n} active streams on a {}-stream path",
+                self.streams.len()
+            )));
+        }
+        Ok(n)
     }
 
     /// `MPW_Recv`: receive exactly `buf.len()` bytes, merging the incoming
@@ -207,16 +330,18 @@ impl Path {
 
     /// Receive without taking the recv gate (dynamic-message layer).
     pub(crate) fn recv_ungated(&self, buf: &mut [u8]) -> Result<usize> {
-        let chunk = self.cfg.lock().unwrap().chunk_size;
-        let n = self.streams.len();
+        let chunk = self.tuning.chunk();
+        // The sender's header tells us how many streams this message was
+        // striped over — restriping needs no negotiation round-trip.
+        let active = self.read_active_header()?;
         let len = buf.len();
-        if n == 1 {
+        if active == 1 {
             Self::recv_worker(&self.streams[0], buf, chunk)?;
             return Ok(len);
         }
-        let segs = stripe::segments(len, n);
+        let segs = stripe::segments(len, active);
         // Split the buffer into disjoint &mut segments for the workers.
-        let mut parts: Vec<(usize, &mut [u8])> = Vec::with_capacity(n);
+        let mut parts: Vec<(usize, &mut [u8])> = Vec::with_capacity(active);
         let mut rest = buf;
         let mut consumed = 0usize;
         for (i, seg) in segs.iter().enumerate() {
@@ -341,7 +466,11 @@ impl PathListener {
         let autotune = self.cfg.autotune;
         let path = Path::from_pairs(pairs, self.cfg.clone())?;
         if autotune {
+            // see Path::connect: no runtime adaptation during the probes
+            let mode = path.tune_mode();
+            path.set_tune_mode(TuneMode::Static);
             super::autotune::tune_slave(&path)?;
+            path.set_tune_mode(mode);
         }
         Ok(path)
     }
@@ -481,6 +610,89 @@ mod tests {
         server.barrier().unwrap();
         let sent = t.join().unwrap();
         assert_eq!(buf, sent);
+    }
+
+    #[test]
+    fn restriped_send_follows_header() {
+        // Sender stripes over 3 of 8 established streams; the receiver
+        // learns the count from the per-message header — no negotiation.
+        let (a, b) = mem_paths(8);
+        a.tuning().set_active(3);
+        let mut msg = vec![0u8; 50_000];
+        Rng::new(7).fill_bytes(&mut msg);
+        let m2 = msg.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 50_000];
+            b.recv(&mut buf).unwrap();
+            buf
+        });
+        a.send(&msg).unwrap();
+        assert_eq!(t.join().unwrap(), m2);
+    }
+
+    #[test]
+    fn restripe_can_change_between_messages() {
+        let (a, b) = mem_paths(4);
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 30_000];
+            for _ in 0..3 {
+                b.recv(&mut buf).unwrap();
+            }
+            buf
+        });
+        let msg = vec![9u8; 30_000];
+        for active in [4usize, 1, 2] {
+            a.tuning().set_active(active);
+            a.send(&msg).unwrap();
+        }
+        assert_eq!(t.join().unwrap(), msg);
+    }
+
+    #[test]
+    fn adaptive_mode_roundtrips_and_reports_state() {
+        let (l, r) = mem_path_pairs(4);
+        let mut cfg = PathConfig::with_streams(4);
+        cfg.autotune = false;
+        cfg.adapt.mode = TuneMode::Adaptive;
+        let a = Path::from_pairs(l, cfg.clone()).unwrap();
+        let b = Path::from_pairs(r, cfg).unwrap();
+        assert_eq!(a.tune_mode(), TuneMode::Adaptive);
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 1 << 20];
+            for _ in 0..8 {
+                b.recv(&mut buf).unwrap();
+            }
+        });
+        let msg = vec![5u8; 1 << 20];
+        for _ in 0..8 {
+            a.send(&msg).unwrap();
+        }
+        let snap = a.tune_snapshot();
+        assert!((1..=4).contains(&snap.active_streams), "{snap:?}");
+        assert!(snap.ewma_rate.is_some(), "controller saw no samples");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tune_mode_switches_at_runtime() {
+        let (a, _b) = mem_paths(2);
+        assert_eq!(a.tune_mode(), TuneMode::Static);
+        a.set_tune_mode(TuneMode::Adaptive);
+        assert_eq!(a.tune_mode(), TuneMode::Adaptive);
+        a.set_tune_mode(TuneMode::Static);
+        assert_eq!(a.tune_mode(), TuneMode::Static);
+    }
+
+    #[test]
+    fn bogus_active_header_rejected() {
+        let (a, b) = mem_paths(2);
+        // forge a header advertising more streams than the path has
+        {
+            let mut tx = a.streams[0].tx.lock().unwrap();
+            tx.w.write_all(&9u16.to_be_bytes()).unwrap();
+        }
+        let mut buf = [0u8; 4];
+        assert!(b.recv(&mut buf).is_err());
     }
 
     #[test]

@@ -221,7 +221,9 @@ mod tests {
         assert_eq!(t_right.join().unwrap(), m1);
         drop(left);
         let stats = t_relay.join().unwrap();
-        assert_eq!(stats.a_to_b, 50_000);
-        assert_eq!(stats.b_to_a, 20_000);
+        // payload + the per-message active-stream header on stream 0
+        let hdr = crate::mpwide::path::ACTIVE_HEADER_LEN as u64;
+        assert_eq!(stats.a_to_b, 50_000 + hdr);
+        assert_eq!(stats.b_to_a, 20_000 + hdr);
     }
 }

@@ -117,32 +117,99 @@ impl StreamPair {
     }
 }
 
+/// Raw `setsockopt`/`getsockopt` bindings (the `libc` crate is
+/// unavailable in the offline build; these are the two calls MPWide
+/// needs for `MPW_setWin`).
+#[cfg(unix)]
+mod sockopt {
+    use std::ffi::{c_int, c_void};
+
+    /// `socklen_t` is `u32` on every supported unix target.
+    pub type SockLen = u32;
+
+    /// Mainstream Linux ABIs use the asm-generic socket constants; the
+    /// mips/sparc Linux ports kept the historical BSD-style values, as
+    /// do macOS and the BSDs.
+    #[cfg(all(
+        target_os = "linux",
+        not(any(
+            target_arch = "mips",
+            target_arch = "mips64",
+            target_arch = "sparc",
+            target_arch = "sparc64"
+        ))
+    ))]
+    mod values {
+        use std::ffi::c_int;
+        pub const SOL_SOCKET: c_int = 1;
+        pub const SO_SNDBUF: c_int = 7;
+        pub const SO_RCVBUF: c_int = 8;
+    }
+
+    #[cfg(not(all(
+        target_os = "linux",
+        not(any(
+            target_arch = "mips",
+            target_arch = "mips64",
+            target_arch = "sparc",
+            target_arch = "sparc64"
+        ))
+    )))]
+    mod values {
+        use std::ffi::c_int;
+        pub const SOL_SOCKET: c_int = 0xffff;
+        pub const SO_SNDBUF: c_int = 0x1001;
+        pub const SO_RCVBUF: c_int = 0x1002;
+    }
+
+    pub use values::{SOL_SOCKET, SO_RCVBUF, SO_SNDBUF};
+
+    extern "C" {
+        pub fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_void,
+            len: SockLen,
+        ) -> c_int;
+        pub fn getsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *mut c_void,
+            len: *mut SockLen,
+        ) -> c_int;
+    }
+}
+
 /// Set SO_SNDBUF/SO_RCVBUF on a raw socket fd; returns the granted value
 /// (the kernel clamps to site limits, exactly the `MPW_setWin` caveat).
+#[cfg(unix)]
 pub fn set_socket_window(fd: i32, bytes: usize) -> Result<Option<usize>> {
-    let val = bytes as libc::c_int;
+    use std::ffi::{c_int, c_void};
+    let val = bytes as c_int;
     // SAFETY: fd is a valid open socket owned by the calling StreamPair /
     // Path; we pass a correctly-sized c_int for both options.
     unsafe {
-        for opt in [libc::SO_SNDBUF, libc::SO_RCVBUF] {
-            let rc = libc::setsockopt(
+        for opt in [sockopt::SO_SNDBUF, sockopt::SO_RCVBUF] {
+            let rc = sockopt::setsockopt(
                 fd,
-                libc::SOL_SOCKET,
+                sockopt::SOL_SOCKET,
                 opt,
-                &val as *const _ as *const libc::c_void,
-                std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+                &val as *const c_int as *const c_void,
+                std::mem::size_of::<c_int>() as sockopt::SockLen,
             );
             if rc != 0 {
                 return Err(MpwError::Io(std::io::Error::last_os_error()));
             }
         }
-        let mut got: libc::c_int = 0;
-        let mut len = std::mem::size_of::<libc::c_int>() as libc::socklen_t;
-        let rc = libc::getsockopt(
+        let mut got: c_int = 0;
+        let mut len = std::mem::size_of::<c_int>() as sockopt::SockLen;
+        let rc = sockopt::getsockopt(
             fd,
-            libc::SOL_SOCKET,
-            libc::SO_SNDBUF,
-            &mut got as *mut _ as *mut libc::c_void,
+            sockopt::SOL_SOCKET,
+            sockopt::SO_SNDBUF,
+            &mut got as *mut c_int as *mut c_void,
             &mut len,
         );
         if rc != 0 {
@@ -150,6 +217,13 @@ pub fn set_socket_window(fd: i32, bytes: usize) -> Result<Option<usize>> {
         }
         Ok(Some(got as usize))
     }
+}
+
+/// Non-unix fallback: window tuning is unavailable; report `None` exactly
+/// like the in-memory transports do.
+#[cfg(not(unix))]
+pub fn set_socket_window(_fd: i32, _bytes: usize) -> Result<Option<usize>> {
+    Ok(None)
 }
 
 /// Encode the per-stream hello: which path this stream belongs to and its

@@ -30,5 +30,5 @@ pub mod tcp_model;
 
 pub use link::{profiles, Direction, LinkProfile};
 pub use network::{simulate_duplex, simulate_oneway, OneWayResult};
-pub use simpath::{SimPath, SimTransferResult};
+pub use simpath::{AdaptiveSimPath, DriftingLink, LinkPhase, SimPath, SimTransferResult};
 pub use tcp_model::{TcpFlow, INIT_CWND, MSS};

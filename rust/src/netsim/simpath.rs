@@ -6,10 +6,22 @@
 //! `mpwide::autotune::tune_master`), so the simulated experiments exercise
 //! the same decisions as the real socket path. Only the byte movement is
 //! replaced by the flow-level TCP model.
+//!
+//! For the runtime-adaptation experiments this module also provides
+//! **time-varying links** ([`DriftingLink`]: piecewise link profiles —
+//! congestion ramps, loss bursts) and [`AdaptiveSimPath`], a simulated
+//! path that consults the *production*
+//! [`TuningState`](crate::mpwide::adapt::TuningState) /
+//! [`AdaptiveController`](crate::mpwide::adapt::AdaptiveController) per
+//! exchange — so the controller logic tested here is byte-for-byte the
+//! one the socket path runs.
+
+use std::sync::Arc;
 
 use super::link::{Direction, LinkProfile};
 use super::network::{simulate_duplex, simulate_oneway, OneWayResult};
 use super::tcp_model::TcpFlow;
+use crate::mpwide::adapt::{AdaptiveController, TuneMode, TuningState};
 use crate::mpwide::{stripe, PathConfig};
 use crate::util::Rng;
 
@@ -148,6 +160,159 @@ impl SimPath {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Time-varying links + the adaptive simulated path.
+// ---------------------------------------------------------------------------
+
+/// One segment of a time-varying WAN: the route behaves as `link` from
+/// simulated time `start` (seconds) onward, until the next phase begins.
+#[derive(Debug, Clone)]
+pub struct LinkPhase {
+    /// Simulated time at which this phase takes effect.
+    pub start: f64,
+    /// The link profile in force during the phase.
+    pub link: LinkProfile,
+}
+
+/// A piecewise-constant time-varying link: the deterministic stand-in
+/// for WAN drift (background load rising over hours, loss bursts) that
+/// the online tuner exists to survive.
+#[derive(Debug, Clone)]
+pub struct DriftingLink {
+    phases: Vec<LinkPhase>,
+}
+
+impl DriftingLink {
+    /// Build from explicit phases. The earliest phase must start at or
+    /// before t = 0 so every query time is covered.
+    pub fn new(mut phases: Vec<LinkPhase>) -> DriftingLink {
+        assert!(!phases.is_empty(), "a drifting link needs at least one phase");
+        phases.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        assert!(phases[0].start <= 0.0, "first phase must start at t <= 0");
+        DriftingLink { phases }
+    }
+
+    /// A link that never changes (useful as a control).
+    pub fn steady(link: LinkProfile) -> DriftingLink {
+        DriftingLink::new(vec![LinkPhase { start: 0.0, link }])
+    }
+
+    /// The profile in force at simulated time `t`.
+    pub fn at(&self, t: f64) -> &LinkProfile {
+        self.phases
+            .iter()
+            .rev()
+            .find(|p| p.start <= t)
+            .map(|p| &p.link)
+            .unwrap_or(&self.phases[0].link)
+    }
+
+    /// Canned scenario: at `onset` the route's background load jumps to
+    /// `bg` competing elastic flows per direction (a congestion ramp —
+    /// the share-starvation case more parallel streams recover from).
+    pub fn congestion_ramp(base: LinkProfile, onset: f64, bg: f64) -> DriftingLink {
+        let mut hot = base.clone();
+        hot.bg_ab = bg;
+        hot.bg_ba = bg;
+        DriftingLink::new(vec![
+            LinkPhase { start: 0.0, link: base },
+            LinkPhase { start: onset, link: hot },
+        ])
+    }
+
+    /// Canned scenario: residual loss jumps to `loss` per direction
+    /// during `[from, until)` and recovers afterwards.
+    pub fn loss_burst(base: LinkProfile, from: f64, until: f64, loss: f64) -> DriftingLink {
+        assert!(from < until, "loss burst must have positive duration");
+        let mut lossy = base.clone();
+        lossy.loss_ab = loss;
+        lossy.loss_ba = loss;
+        DriftingLink::new(vec![
+            LinkPhase { start: 0.0, link: base.clone() },
+            LinkPhase { start: from, link: lossy },
+            LinkPhase { start: until, link: base },
+        ])
+    }
+}
+
+/// A simulated MPWide path over a [`DriftingLink`], with the production
+/// runtime-tuning stack in the loop: each `send_recv` consults the
+/// shared [`TuningState`] for the active stream count / chunk / pacing,
+/// advances a simulated clock by the transfer's wall time, and (in
+/// adaptive mode) feeds the observed goodput to the
+/// [`AdaptiveController`], applying its decisions exactly like
+/// `Path::send` does on real sockets.
+#[derive(Debug)]
+pub struct AdaptiveSimPath {
+    schedule: DriftingLink,
+    cfg: PathConfig,
+    tuning: Arc<TuningState>,
+    controller: AdaptiveController,
+    rwnd: f64,
+    clock: f64,
+}
+
+impl AdaptiveSimPath {
+    /// Create over a schedule. The TCP window is fixed at creation from
+    /// the **phase-0** link (exactly the real path's behaviour: windows
+    /// are autotuned once, against the conditions seen at creation).
+    pub fn new(schedule: DriftingLink, cfg: PathConfig) -> AdaptiveSimPath {
+        let rwnd = SimPath::new(schedule.at(0.0).clone(), cfg.clone()).rwnd();
+        let tuning = Arc::new(TuningState::from_config(&cfg));
+        let controller = AdaptiveController::new(cfg.adapt.clone(), cfg.nstreams);
+        AdaptiveSimPath { schedule, cfg, tuning, controller, rwnd, clock: 0.0 }
+    }
+
+    /// The live tuning knobs (set the initial active count here to model
+    /// a creation-time-tuned path).
+    pub fn tuning(&self) -> &TuningState {
+        &self.tuning
+    }
+
+    /// Simulated seconds elapsed so far.
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Advance the clock without traffic (compute phases between
+    /// exchanges).
+    pub fn advance(&mut self, seconds: f64) {
+        self.clock += seconds.max(0.0);
+    }
+
+    /// Simulate one full-duplex `MPW_SendRecv` of `bytes` per direction
+    /// under the link profile in force *now*, then let the controller
+    /// react to the observed goodput.
+    pub fn send_recv(&mut self, bytes: u64, seed: u64) -> SimTransferResult {
+        let link = self.schedule.at(self.clock).clone();
+        let active = self.tuning.active_streams().clamp(1, self.cfg.nstreams);
+        let chunk = self.tuning.chunk();
+        let pacing = self.tuning.pacing();
+        let mut rng = Rng::new(seed);
+        let rwnd = self.rwnd;
+        let mk_flows = || -> Vec<TcpFlow> {
+            stripe::segments(bytes as usize, active)
+                .into_iter()
+                .map(|seg| TcpFlow::new(seg.len() as f64, rwnd, pacing))
+                .collect()
+        };
+        let mut ab = mk_flows();
+        let mut ba = mk_flows();
+        let (ra, rb) = simulate_duplex(&mut ab, &mut ba, &link, &mut rng);
+        let call_overhead =
+            stripe::call_count(bytes as usize, active, chunk) as f64 * PER_CALL_OVERHEAD;
+        let res = SimTransferResult { ab: ra, ba: rb, rwnd: self.rwnd, call_overhead };
+        self.clock += res.ab.seconds.max(res.ba.seconds) + call_overhead;
+        if self.tuning.mode() == TuneMode::Adaptive {
+            let snapshot = self.tuning.snapshot();
+            let seconds = res.ab.seconds + call_overhead;
+            let decision = self.controller.observe(bytes as usize, seconds, &snapshot);
+            self.tuning.apply(&decision);
+        }
+        res
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -221,6 +386,55 @@ mod tests {
         let big = SimPath::new(link, wan_cfg(4)).send(64 * MB, Direction::AtoB, 4);
         assert!(small.call_overhead > 10.0 * big.call_overhead);
         assert!(small.throughput_ab() < big.throughput_ab());
+    }
+
+    #[test]
+    fn drifting_link_selects_phase_by_time() {
+        let sched = DriftingLink::congestion_ramp(profiles::cosmogrid_lightpath(), 10.0, 8.0);
+        assert!(sched.at(0.0).bg_ab < 1.0);
+        assert!(sched.at(9.99).bg_ab < 1.0);
+        assert_eq!(sched.at(10.0).bg_ab, 8.0);
+        assert_eq!(sched.at(1e6).bg_ab, 8.0);
+    }
+
+    #[test]
+    fn loss_burst_recovers() {
+        let base = profiles::cosmogrid_lightpath();
+        let sched = DriftingLink::loss_burst(base.clone(), 5.0, 15.0, 1e-3);
+        assert_eq!(sched.at(0.0).loss_ab, base.loss_ab);
+        assert_eq!(sched.at(7.0).loss_ab, 1e-3);
+        assert_eq!(sched.at(15.0).loss_ab, base.loss_ab);
+    }
+
+    #[test]
+    #[should_panic(expected = "first phase must start")]
+    fn drifting_link_requires_time_zero_coverage() {
+        DriftingLink::new(vec![LinkPhase { start: 5.0, link: profiles::local_lan() }]);
+    }
+
+    #[test]
+    fn adaptive_sim_path_moves_bytes_and_advances_clock() {
+        let sched = DriftingLink::steady(profiles::london_poznan());
+        let mut p = AdaptiveSimPath::new(sched, wan_cfg(8));
+        let r = p.send_recv(16 * MB, 3);
+        assert!((r.ab.bytes - (16 * MB) as f64).abs() < 1.0);
+        assert!(p.clock() > 0.0);
+        let t1 = p.clock();
+        p.advance(2.5);
+        assert!((p.clock() - t1 - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_mode_never_touches_the_knobs() {
+        let sched = DriftingLink::congestion_ramp(profiles::cosmogrid_lightpath(), 0.5, 16.0);
+        let mut cfg = wan_cfg(16);
+        cfg.autotune = false;
+        let mut p = AdaptiveSimPath::new(sched, cfg);
+        p.tuning().set_active(4);
+        for i in 0..20 {
+            p.send_recv(16 * MB, 100 + i);
+        }
+        assert_eq!(p.tuning().active_streams(), 4, "static path restriped itself");
     }
 
     #[test]

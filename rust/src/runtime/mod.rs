@@ -9,6 +9,10 @@
 //! never invoked at runtime.
 
 pub mod manifest;
+// Offline stand-in for the real `xla` PJRT bindings: same API, every
+// entry point errors. Delete this declaration and add the real crate
+// dependency to re-enable PJRT execution; no call sites change.
+mod xla;
 
 use std::path::Path as FsPath;
 use std::rc::Rc;

@@ -176,7 +176,9 @@ mod tests {
         assert_eq!(got_b, vec![7u8; 10_000]);
         assert_eq!(t_a.join().unwrap(), [1, 2, 3, 4, 5, 6, 7, 8]);
         let stats = fwd.join().unwrap().unwrap();
-        assert_eq!(stats.a_to_b + stats.b_to_a, 10_008);
+        // two messages crossed, each carrying the 2-byte active-stream header
+        let hdr = 2 * crate::mpwide::path::ACTIVE_HEADER_LEN as u64;
+        assert_eq!(stats.a_to_b + stats.b_to_a, 10_008 + hdr);
     }
 
     #[test]

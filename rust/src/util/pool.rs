@@ -15,9 +15,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex};
-
-use once_cell::sync::Lazy;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Upper bound on pool size — a backstop against runaway growth, far
 /// above what the test-suite/benches need concurrently.
@@ -36,28 +34,34 @@ struct Pool {
     cv: Condvar,
 }
 
-static POOL: Lazy<Pool> = Lazy::new(|| Pool {
-    inner: Mutex::new(PoolInner { jobs: VecDeque::new(), idle: 0, workers: 0 }),
-    cv: Condvar::new(),
-});
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        inner: Mutex::new(PoolInner { jobs: VecDeque::new(), idle: 0, workers: 0 }),
+        cv: Condvar::new(),
+    })
+}
 
 fn worker_loop() {
-    let mut g = POOL.inner.lock().unwrap();
+    let p = pool();
+    let mut g = p.inner.lock().unwrap();
     loop {
         if let Some(job) = g.jobs.pop_front() {
             drop(g);
             job();
-            g = POOL.inner.lock().unwrap();
+            g = p.inner.lock().unwrap();
         } else {
             g.idle += 1;
-            g = POOL.cv.wait(g).unwrap();
+            g = p.cv.wait(g).unwrap();
             g.idle -= 1;
         }
     }
 }
 
 fn submit(job: Job) {
-    let mut g = POOL.inner.lock().unwrap();
+    let p = pool();
+    let mut g = p.inner.lock().unwrap();
     g.jobs.push_back(job);
     if g.idle == 0 && g.workers < MAX_WORKERS {
         g.workers += 1;
@@ -66,7 +70,7 @@ fn submit(job: Job) {
             .spawn(worker_loop)
             .expect("spawn pool worker");
     }
-    POOL.cv.notify_one();
+    p.cv.notify_one();
 }
 
 struct ScopeState {
@@ -184,7 +188,7 @@ pub fn scope_with_inline<'env, R>(
 
 /// Current pool size (diagnostics/tests).
 pub fn workers() -> usize {
-    POOL.inner.lock().unwrap().workers
+    pool().inner.lock().unwrap().workers
 }
 
 #[cfg(test)]

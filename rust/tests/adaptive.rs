@@ -1,0 +1,130 @@
+//! Integration: the online adaptive tuner (live restriping).
+//!
+//! Netsim side — a mid-run WAN disturbance (congestion ramp / loss
+//! burst) must trigger restriping over more of the established streams
+//! and recover most of the lost goodput, while a frozen creation-time
+//! configuration stays degraded. Socket side — a path with adaptation
+//! enabled keeps moving bytes correctly while the controller works.
+
+use mpwide::mpwide::adapt::TuneMode;
+use mpwide::mpwide::{Path, PathConfig, PathListener};
+use mpwide::netsim::{profiles, AdaptiveSimPath, DriftingLink};
+use mpwide::util::Rng;
+
+const MB: u64 = 1024 * 1024;
+
+/// A 32-stream path whose creation-time tuning settled on a few active
+/// streams (plenty on a clean lightpath, given generous 8 MB windows —
+/// the site maximum), over the given schedule.
+fn tuned_path(schedule: DriftingLink, mode: TuneMode, active: usize) -> AdaptiveSimPath {
+    let mut cfg = PathConfig::with_streams(32);
+    cfg.tcp_window = Some(8 << 20);
+    cfg.adapt.mode = mode;
+    let p = AdaptiveSimPath::new(schedule, cfg);
+    p.tuning().set_active(active);
+    p
+}
+
+/// Drive `p` with 64 MB duplex exchanges until its clock passes
+/// `until`; returns the goodput (A→B) of each exchange.
+fn drive_until(p: &mut AdaptiveSimPath, until: f64, seed0: &mut u64) -> Vec<f64> {
+    let mut rates = Vec::new();
+    while p.clock() < until {
+        let r = p.send_recv(64 * MB, *seed0);
+        *seed0 += 1;
+        rates.push(r.throughput_ab());
+    }
+    rates
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+#[test]
+fn congestion_ramp_triggers_restriping_and_recovers_goodput() {
+    let onset = 5.0;
+    let horizon = 40.0;
+    let schedule = || DriftingLink::congestion_ramp(profiles::cosmogrid_lightpath(), onset, 12.0);
+
+    let mut adaptive = tuned_path(schedule(), TuneMode::Adaptive, 4);
+    let mut frozen = tuned_path(schedule(), TuneMode::Static, 4);
+
+    let mut seed = 1000;
+    drive_until(&mut adaptive, onset, &mut seed);
+    let adaptive_post = drive_until(&mut adaptive, horizon, &mut seed);
+
+    let mut seed = 1000;
+    drive_until(&mut frozen, onset, &mut seed);
+    let frozen_post = drive_until(&mut frozen, horizon, &mut seed);
+
+    // the bandwidth drop made the controller stripe over (many) more of
+    // the established streams — no reconnect happened, the path still
+    // has 32 streams and simply uses more of them
+    let active = adaptive.tuning().active_streams();
+    assert!(active >= 16, "controller only reached {active} active streams");
+    assert_eq!(frozen.tuning().active_streams(), 4, "frozen config must not move");
+
+    // steady state after convergence: compare the last half of the
+    // disturbance window
+    let a = mean(&adaptive_post[adaptive_post.len() / 2..]);
+    let f = mean(&frozen_post[frozen_post.len() / 2..]);
+    assert!(
+        a > 1.5 * f,
+        "adaptive {:.1} MB/s not >= 1.5x frozen {:.1} MB/s",
+        a / MB as f64,
+        f / MB as f64
+    );
+}
+
+#[test]
+fn loss_burst_restripes_and_recovery_is_stable() {
+    let schedule =
+        DriftingLink::loss_burst(profiles::cosmogrid_lightpath(), 3.0, 30.0, 5.0e-5);
+    let mut p = tuned_path(schedule, TuneMode::Adaptive, 4);
+    let mut seed = 4242;
+    drive_until(&mut p, 3.0, &mut seed);
+    let during = drive_until(&mut p, 30.0, &mut seed);
+    assert!(
+        p.tuning().active_streams() > 8,
+        "loss burst did not trigger restriping: {} active",
+        p.tuning().active_streams()
+    );
+    // after the burst clears, the path must keep working and not thrash
+    let after = drive_until(&mut p, 40.0, &mut seed);
+    assert!(!during.is_empty() && !after.is_empty());
+    assert!(mean(&after) >= mean(&during), "post-burst goodput regressed");
+}
+
+#[test]
+fn adaptive_socket_path_stays_correct_under_controller_activity() {
+    // Loopback TCP with adaptation on: the controller adjusts active
+    // streams / chunk / pacing between messages while data integrity
+    // must hold bit-exact. (Throughput is not asserted — CI machines.)
+    let mut cfg = PathConfig::with_streams(8);
+    cfg.autotune = false;
+    cfg.adapt.mode = TuneMode::Adaptive;
+    let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+    let port = listener.port();
+    let t = std::thread::spawn(move || {
+        let p = Path::connect("127.0.0.1", port, cfg).unwrap();
+        let mut msg = vec![0u8; 1 << 20];
+        for i in 0..12u64 {
+            Rng::new(i).fill_bytes(&mut msg);
+            p.send(&msg).unwrap();
+        }
+        p.barrier().unwrap();
+    });
+    let server = listener.accept_path().unwrap();
+    let mut buf = vec![0u8; 1 << 20];
+    let mut want = vec![0u8; 1 << 20];
+    for i in 0..12u64 {
+        server.recv(&mut buf).unwrap();
+        Rng::new(i).fill_bytes(&mut want);
+        assert_eq!(buf, want, "payload corrupted at message {i}");
+    }
+    server.barrier().unwrap();
+    t.join().unwrap();
+    let snap = server.tune_snapshot();
+    assert!((1..=8).contains(&snap.active_streams), "{snap:?}");
+}

@@ -1,0 +1,190 @@
+//! Offline in-tree shim for the [`anyhow`](https://docs.rs/anyhow) crate.
+//!
+//! The build environment has no network access to crates.io, so this
+//! workspace vendors the small subset of the anyhow surface the codebase
+//! actually uses: [`Error`], [`Result`], the [`Context`] extension trait
+//! (on both `Result` and `Option`), and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Errors are flattened to their display message plus a
+//! `: `-joined context chain — enough for CLI/diagnostic output, which is
+//! all this codebase does with them.
+
+use std::fmt;
+
+/// A flattened, context-carrying error. Like the real `anyhow::Error`,
+/// this type deliberately does **not** implement `std::error::Error`, so
+/// the blanket `From<E: std::error::Error>` conversion below stays
+/// coherent with `From<Error> for Error`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer (what `.context(...)` does).
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` alias with the shim [`Error`] as the default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Attach a context message, converting the error to [`Error`].
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+
+    /// Attach a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn from_std_error_keeps_message() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "disk on fire");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let msg = r.unwrap_err().to_string();
+        assert_eq!(msg, "reading manifest: disk on fire");
+    }
+
+    #[test]
+    fn with_context_is_lazy_on_ok() {
+        let mut called = false;
+        let r: Result<u32> = Ok::<u32, std::io::Error>(7).with_context(|| {
+            called = true;
+            "never"
+        });
+        assert_eq!(r.unwrap(), 7);
+        assert!(!called);
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<&str> = None.context("missing argument");
+        assert_eq!(r.unwrap_err().to_string(), "missing argument");
+        let r: Result<&str> = Some("x").context("unused");
+        assert_eq!(r.unwrap(), "x");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag was {flag}");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        let e = anyhow!("code {}", 42);
+        assert_eq!(format!("{e}"), "code 42");
+        assert_eq!(format!("{e:?}"), "code 42");
+    }
+}

@@ -1,0 +1,85 @@
+//! Offline in-tree shim for the [`crc32fast`](https://docs.rs/crc32fast)
+//! crate: a plain table-driven CRC32 (IEEE 802.3, reflected polynomial
+//! 0xEDB88320) behind the same `hash` / `Hasher` API. Not SIMD-tuned —
+//! the tools using it (mpw-cp, DataGather) are I/O-bound here — but
+//! bit-identical in output to the real crate.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// One-shot CRC32 of a buffer.
+pub fn hash(buf: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(buf);
+    h.finalize()
+}
+
+/// Streaming CRC32 hasher (same surface as `crc32fast::Hasher`).
+#[derive(Debug, Clone)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    /// Fresh hasher.
+    pub fn new() -> Hasher {
+        Hasher { state: 0xFFFF_FFFF }
+    }
+
+    /// Feed bytes.
+    pub fn update(&mut self, buf: &[u8]) {
+        let mut s = self.state;
+        for &b in buf {
+            s = (s >> 8) ^ TABLE[((s ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = s;
+    }
+
+    /// Finish and return the checksum.
+    pub fn finalize(self) -> u32 {
+        !self.state
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Hasher {
+        Hasher::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // the canonical CRC32 check value
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"hello wide area networks";
+        let mut h = Hasher::new();
+        h.update(&data[..5]);
+        h.update(&data[5..]);
+        assert_eq!(h.finalize(), hash(data));
+    }
+}
