@@ -95,8 +95,16 @@ fn main() {
     let recovery = adaptive / oracle.max(1.0);
 
     let mut t = Table::new(&["config", "active streams (end)", "steady goodput MB/s"]);
-    t.row(&["frozen (creation-time tuned)".into(), format!("{frozen_active}"), format!("{:.1}", frozen / MBF)]);
-    t.row(&["adaptive (online restriping)".into(), format!("{adaptive_active}"), format!("{:.1}", adaptive / MBF)]);
+    t.row(&[
+        "frozen (creation-time tuned)".into(),
+        format!("{frozen_active}"),
+        format!("{:.1}", frozen / MBF),
+    ]);
+    t.row(&[
+        "adaptive (online restriping)".into(),
+        format!("{adaptive_active}"),
+        format!("{:.1}", adaptive / MBF),
+    ]);
     t.row(&["oracle (32 streams from t=0)".into(), "32".into(), format!("{:.1}", oracle / MBF)]);
     t.print();
     println!("\nadaptive / frozen : {ratio:.2}x   (required >= 1.5x)");

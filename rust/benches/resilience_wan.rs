@@ -1,0 +1,202 @@
+//! **Experiment RS1 — fault-tolerant striping under stream loss and
+//! rejoin.**
+//!
+//! A 4-stream path runs bulk `MPW_SendRecv` exchanges over a clean,
+//! paced intercontinental lightpath (Amsterdam–Tokyo geometry with the
+//! stochastic terms zeroed, so per-stream rates are deterministic and
+//! the stream-count arithmetic is exact). Mid-run, one stream suffers a
+//! blackout: it dies *during* a transfer and rejoins later. The
+//! resilience layer isolates the stream, retries the in-flight message
+//! over the survivors, stripes in degraded mode while the stream is
+//! down, and re-absorbs it after rejoin.
+//!
+//! Reported (and asserted, so CI catches resilience regressions):
+//!   * the transfer interrupted mid-flight **completes** (retries ≥ 1,
+//!     every exchange returns Ok);
+//!   * steady degraded goodput ≥ (N-1)/N of the baseline's over the
+//!     same window (the blackout costs exactly the dead stream's share,
+//!     not the whole path);
+//!   * post-rejoin goodput recovers to ≥ 90% of baseline.
+//!
+//! `--quick` (or BENCH_QUICK=1) runs a reduced grid for the CI
+//! bench-smoke job. Results are emitted as BENCH_resilience_wan.json.
+
+use mpwide::benchlib::{banner, BenchJson, Table};
+use mpwide::mpwide::PathConfig;
+use mpwide::netsim::{profiles, AdaptiveSimPath, DriftingLink, FaultSchedule, LinkProfile};
+
+const MB: u64 = 1024 * 1024;
+const MBF: f64 = 1024.0 * 1024.0;
+const NSTREAMS: usize = 4;
+const DEAD_STREAM: usize = 2;
+
+struct Scenario {
+    message: u64,
+    t_down: f64,
+    t_up: f64,
+    horizon: f64,
+}
+
+/// Amsterdam–Tokyo geometry with the stochastic terms zeroed: the bench
+/// asserts exact stream-count arithmetic, so the link must not add
+/// loss/background noise on top.
+fn clean_lightpath() -> LinkProfile {
+    let mut link = profiles::amsterdam_tokyo();
+    link.loss_ab = 0.0;
+    link.loss_ba = 0.0;
+    link.bg_ab = 0.0;
+    link.bg_ba = 0.0;
+    link.jitter = 0.0;
+    link.duplex_penalty = 0.0;
+    link
+}
+
+fn path(faults: FaultSchedule) -> AdaptiveSimPath {
+    let mut cfg = PathConfig::with_streams(NSTREAMS);
+    cfg.tcp_window = Some(8 << 20); // site maximum, per-stream
+    cfg.pacing_rate = Some(2.0 * MBF); // deterministic per-stream rate
+    cfg.resilience.enabled = true;
+    // rejoin (the Up events) requires reconnection, exactly as on the
+    // real path — the sim must not model a recovery the configured
+    // library would refuse to perform
+    cfg.resilience.reconnect.enabled = true;
+    AdaptiveSimPath::with_faults(DriftingLink::steady(clean_lightpath()), cfg, faults)
+}
+
+/// Drive exchanges until `horizon` sim-seconds; returns per-exchange
+/// (start, end, goodput bytes/s).
+fn drive(
+    p: &mut AdaptiveSimPath,
+    horizon: f64,
+    message: u64,
+    seed: &mut u64,
+) -> Vec<(f64, f64, f64)> {
+    let mut out = Vec::new();
+    while p.clock() < horizon {
+        let t0 = p.clock();
+        p.try_send_recv(message, *seed).expect("exchange failed despite scheduled recovery");
+        *seed += 1;
+        let t1 = p.clock();
+        out.push((t0, t1, message as f64 / (t1 - t0)));
+    }
+    out
+}
+
+/// Mean goodput of the samples fully inside `(from, until)`, skipping
+/// any exchange that straddles `from` (the transition transient — e.g.
+/// the transfer the blackout interrupts, whose retry waste is real but
+/// not steady-state).
+fn window_mean(samples: &[(f64, f64, f64)], from: f64, until: f64) -> f64 {
+    let inside: Vec<f64> = samples
+        .iter()
+        .filter(|(t0, t1, _)| *t0 >= from && *t1 <= until)
+        .map(|(_, _, g)| *g)
+        .collect();
+    inside.iter().sum::<f64>() / inside.len().max(1) as f64
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || matches!(std::env::var("BENCH_QUICK").as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let sc = if quick {
+        Scenario { message: 32 * MB, t_down: 20.0, t_up: 45.0, horizon: 70.0 }
+    } else {
+        Scenario { message: 64 * MB, t_down: 40.0, t_up: 90.0, horizon: 140.0 }
+    };
+
+    banner("RS1: 1-of-4 stream blackout mid-transfer, then rejoin");
+    println!(
+        "clean Amsterdam-Tokyo lightpath, stream {DEAD_STREAM} down at t={:.0}s / up at t={:.0}s, \
+         {} MB exchanges{}",
+        sc.t_down,
+        sc.t_up,
+        sc.message / MB,
+        if quick { " (quick grid)" } else { "" }
+    );
+
+    let mut seed = 9_000;
+    let mut base_path = path(FaultSchedule::none());
+    let baseline = drive(&mut base_path, sc.horizon, sc.message, &mut seed);
+
+    let mut seed = 9_000; // identical seeds: identical link randomness
+    let mut faulty_path = path(FaultSchedule::blackout(DEAD_STREAM, sc.t_down, sc.t_up));
+    let faulted = drive(&mut faulty_path, sc.horizon, sc.message, &mut seed);
+
+    let base_degraded = window_mean(&baseline, sc.t_down, sc.t_up);
+    let base_post = window_mean(&baseline, sc.t_up, sc.horizon);
+    let degraded = window_mean(&faulted, sc.t_down, sc.t_up);
+    let post = window_mean(&faulted, sc.t_up, sc.horizon);
+    let degraded_ratio = degraded / base_degraded.max(1.0);
+    let recovery_ratio = post / base_post.max(1.0);
+    let floor = (NSTREAMS - 1) as f64 / NSTREAMS as f64;
+
+    let mut t = Table::new(&["window", "baseline MB/s", "faulted MB/s", "ratio"]);
+    t.row(&[
+        format!("degraded [{:.0}s, {:.0}s]", sc.t_down, sc.t_up),
+        format!("{:.2}", base_degraded / MBF),
+        format!("{:.2}", degraded / MBF),
+        format!("{degraded_ratio:.3}"),
+    ]);
+    t.row(&[
+        format!("post-rejoin [{:.0}s, {:.0}s]", sc.t_up, sc.horizon),
+        format!("{:.2}", base_post / MBF),
+        format!("{:.2}", post / MBF),
+        format!("{recovery_ratio:.3}"),
+    ]);
+    t.print();
+    println!(
+        "\nretries: {}   rejoins: {}   live streams at end: {}",
+        faulty_path.retries(),
+        faulty_path.rejoins(),
+        faulty_path.live_streams()
+    );
+    println!("degraded / baseline : {degraded_ratio:.3}   (required >= {floor:.2})");
+    println!("post-rejoin recovery: {:.1}%  (required >= 90%)", recovery_ratio * 100.0);
+
+    let goodput_series: Vec<f64> = faulted.iter().map(|(_, _, g)| g / MBF).collect();
+    let mut json = BenchJson::new("resilience_wan");
+    json.text("scenario", "clean Amsterdam-Tokyo lightpath + 1-of-4 stream blackout w/ rejoin")
+        .num("nstreams", NSTREAMS as f64)
+        .num("message_mb", (sc.message / MB) as f64)
+        .num("t_down_s", sc.t_down)
+        .num("t_up_s", sc.t_up)
+        .num("horizon_s", sc.horizon)
+        .num("baseline_degraded_window_mbps", base_degraded / MBF)
+        .num("degraded_mbps", degraded / MBF)
+        .num("post_rejoin_mbps", post / MBF)
+        .num("degraded_ratio", degraded_ratio)
+        .num("recovery_ratio", recovery_ratio)
+        .num("retries", faulty_path.retries() as f64)
+        .num("rejoins", faulty_path.rejoins() as f64)
+        .num("quick", if quick { 1.0 } else { 0.0 })
+        .series("faulted_goodput_mbps", &goodput_series);
+    match json.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_resilience_wan.json: {e}"),
+    }
+
+    let mut failed = false;
+    if faulty_path.retries() < 1 {
+        eprintln!("FAIL: the blackout never interrupted a transfer (retries = 0)");
+        failed = true;
+    }
+    if faulty_path.rejoins() != 1 {
+        eprintln!("FAIL: expected exactly 1 rejoin, saw {}", faulty_path.rejoins());
+        failed = true;
+    }
+    if faulty_path.live_streams() != NSTREAMS {
+        eprintln!("FAIL: path did not return to full health");
+        failed = true;
+    }
+    if degraded_ratio < floor {
+        eprintln!("FAIL: degraded goodput ratio {degraded_ratio:.3} < {floor:.2}");
+        failed = true;
+    }
+    if recovery_ratio < 0.9 {
+        eprintln!("FAIL: recovery {:.1}% < 90%", recovery_ratio * 100.0);
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

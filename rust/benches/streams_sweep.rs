@@ -81,5 +81,7 @@ fn main() {
         t.row(&[format!("{} KB", chunk >> 10), format!("{:.0}", rate(&lan, cfg))]);
     }
     t.print();
-    println!("Shape check: tiny chunks pay per-call overhead (MPW_setChunkSize's reason to exist).");
+    println!(
+        "Shape check: tiny chunks pay per-call overhead (MPW_setChunkSize's reason to exist)."
+    );
 }

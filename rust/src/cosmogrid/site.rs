@@ -20,7 +20,11 @@ pub struct Site {
 
 impl Site {
     /// Open the runtime and compile the three N-body artifacts.
-    pub fn new(rank: usize, artifacts_dir: &std::path::Path, particles: SiteParticles) -> Result<Site> {
+    pub fn new(
+        rank: usize,
+        artifacts_dir: &std::path::Path,
+        particles: SiteParticles,
+    ) -> Result<Site> {
         let rt = Runtime::open(artifacts_dir)?;
         let n = rt.manifest().config_usize("nbody_n")?;
         anyhow::ensure!(
@@ -74,7 +78,8 @@ impl Site {
     /// Serialize (pos, mass) for the ring exchange: the data another
     /// site needs to compute our gravity on its particles.
     pub fn exchange_block(&self) -> Vec<u8> {
-        let mut buf = Vec::with_capacity(self.particles.pos.len() * 4 + self.particles.mass.len() * 4);
+        let cap = self.particles.pos.len() * 4 + self.particles.mass.len() * 4;
+        let mut buf = Vec::with_capacity(cap);
         for v in &self.particles.pos {
             buf.extend_from_slice(&v.to_le_bytes());
         }
@@ -86,7 +91,12 @@ impl Site {
 
     /// Deserialize a peer's exchange block into (pos, mass).
     pub fn decode_block(buf: &[u8], n_pad: usize) -> Result<(Vec<f32>, Vec<f32>)> {
-        anyhow::ensure!(buf.len() == n_pad * 16, "exchange block size {} != {}", buf.len(), n_pad * 16);
+        anyhow::ensure!(
+            buf.len() == n_pad * 16,
+            "exchange block size {} != {}",
+            buf.len(),
+            n_pad * 16
+        );
         let read = |range: std::ops::Range<usize>| -> Vec<f32> {
             buf[range]
                 .chunks_exact(4)

@@ -162,6 +162,11 @@ const PACING_OFF: u64 = 0;
 #[derive(Debug)]
 pub struct TuningState {
     active: AtomicUsize,
+    /// The active count last chosen by the user or controller, before
+    /// any degraded-mode clamp. When a dead stream rejoins, the live
+    /// limit rises and `active` is restored toward this value — so a
+    /// path that lost a stream "re-absorbs" it without renegotiation.
+    preferred_active: AtomicUsize,
     chunk: AtomicUsize,
     pacing_bits: AtomicU64,
     mode: AtomicU8,
@@ -173,6 +178,7 @@ impl TuningState {
     pub fn new(active: usize, chunk: usize, pacing: Option<f64>, mode: TuneMode) -> TuningState {
         let s = TuningState {
             active: AtomicUsize::new(active.max(1)),
+            preferred_active: AtomicUsize::new(active.max(1)),
             chunk: AtomicUsize::new(chunk.max(1)),
             pacing_bits: AtomicU64::new(PACING_OFF),
             mode: AtomicU8::new(MODE_STATIC),
@@ -192,9 +198,25 @@ impl TuningState {
         self.active.load(Ordering::Relaxed)
     }
 
-    /// Set the active stream count (clamped to >= 1 by callers).
+    /// Set the active stream count (clamped to >= 1 by callers). This is
+    /// a *deliberate* choice (user or controller), so it also updates the
+    /// preferred count that degraded-mode striping restores after rejoin.
     pub fn set_active(&self, n: usize) {
         self.active.store(n.max(1), Ordering::Relaxed);
+        self.preferred_active.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// The active count the path would use if every stream were healthy.
+    pub fn preferred_active(&self) -> usize {
+        self.preferred_active.load(Ordering::Relaxed)
+    }
+
+    /// Degraded-mode clamp: cap the *effective* active count to the
+    /// number of live streams without forgetting the preferred count.
+    /// Called by the resilience layer on stream death and rejoin.
+    pub fn apply_live_limit(&self, live: usize) {
+        let preferred = self.preferred_active.load(Ordering::Relaxed);
+        self.active.store(preferred.min(live).max(1), Ordering::Relaxed);
     }
 
     /// Current chunk size.
@@ -327,6 +349,27 @@ impl AdaptiveController {
             cool: 0,
             settled: false,
         }
+    }
+
+    /// Cap the hill climb at `live` streams (degraded-mode striping: dead
+    /// streams cannot carry traffic, so proposals above the live count
+    /// would stall every send). Raising the ceiling (rejoin) restarts the
+    /// upward search: the controller may have settled while degraded and
+    /// would otherwise never try the recovered streams.
+    pub fn set_ceiling(&mut self, live: usize) {
+        let live = live.max(1);
+        if live > self.max_streams {
+            self.settled = false;
+            self.dir = 1;
+            self.step = self.step.max(1);
+            self.last_rate = 0.0;
+        }
+        self.max_streams = live;
+    }
+
+    /// Current hill-climb ceiling.
+    pub fn ceiling(&self) -> usize {
+        self.max_streams
     }
 
     /// Seed the rate estimate from the creation-time autotuner, so the
@@ -619,6 +662,37 @@ mod tests {
         // seed in place the very first decisions already ramp upward
         let trace = drive(&mut c, &mut s, |n| 1e7 * n as f64, 12);
         assert!(*trace.last().unwrap() > 4, "{trace:?}");
+    }
+
+    #[test]
+    fn live_limit_clamps_and_restores_preferred() {
+        let t = TuningState::new(8, 1 << 20, None, TuneMode::Static);
+        assert_eq!(t.preferred_active(), 8);
+        t.apply_live_limit(5); // 3 streams died
+        assert_eq!(t.active_streams(), 5);
+        assert_eq!(t.preferred_active(), 8, "clamp must not overwrite intent");
+        t.apply_live_limit(8); // all rejoined
+        assert_eq!(t.active_streams(), 8);
+        // a deliberate set during degradation updates the preference
+        t.apply_live_limit(2);
+        t.set_active(2);
+        t.apply_live_limit(8);
+        assert_eq!(t.active_streams(), 2);
+    }
+
+    #[test]
+    fn controller_ceiling_caps_proposals() {
+        let mut c = AdaptiveController::new(test_cfg(), 16);
+        c.set_ceiling(3);
+        assert_eq!(c.ceiling(), 3);
+        let mut s = snap(3);
+        // reward more streams: without the ceiling this ramps to 16
+        let trace = drive(&mut c, &mut s, |n| 1e6 * n as f64, 30);
+        assert!(trace.iter().all(|&a| a <= 3), "climbed past the live count: {trace:?}");
+        // rejoin: ceiling back up, the climb resumes
+        c.set_ceiling(16);
+        let trace = drive(&mut c, &mut s, |n| 1e6 * n as f64, 40);
+        assert!(*trace.last().unwrap() > 3, "never re-absorbed rejoined streams: {trace:?}");
     }
 
     #[test]

@@ -36,21 +36,29 @@
 //! | `MPW_setTuneMode`        | [`mpw_set_tune_mode`]       |
 //! | `MPW_TuneMode`           | [`mpw_tune_mode`]           |
 //! | `MPW_TuneState`          | [`mpw_tune_state`]          |
+//! | `MPW_PathStatus`         | [`mpw_path_status`]         |
+//! | `MPW_setReconnectPolicy` | [`mpw_set_reconnect_policy`] |
+//! | `MPW_ServeRejoins`       | [`mpw_serve_rejoins`]       |
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::adapt::{TuneMode, TuneSnapshot};
-use super::config::PathConfig;
+use super::config::{PathConfig, ReconnectPolicy};
 use super::errors::{MpwError, Result};
 use super::nonblocking::{NbeHandle, NbeOp};
 use super::path::{Path, PathListener};
 use super::relay;
+use super::resilience::{self, PathStatus, ReconnectMonitor, RejoinDaemon};
 
 struct Context {
     paths: HashMap<i32, Arc<Path>>,
     handles: HashMap<i32, NbeHandle>,
     listeners: HashMap<u16, PathListener>,
+    /// Background reconnect monitors, keyed by path id.
+    monitors: HashMap<i32, ReconnectMonitor>,
+    /// Background rejoin daemons, keyed by listen port.
+    daemons: HashMap<u16, RejoinDaemon>,
     next_path: i32,
     next_handle: i32,
 }
@@ -63,6 +71,8 @@ fn ctx() -> &'static Mutex<Context> {
             paths: HashMap::new(),
             handles: HashMap::new(),
             listeners: HashMap::new(),
+            monitors: HashMap::new(),
+            daemons: HashMap::new(),
             next_path: 0,
             next_handle: 0,
         })
@@ -71,17 +81,49 @@ fn ctx() -> &'static Mutex<Context> {
 
 /// `MPW_Init`: reset the global context (idempotent).
 pub fn mpw_init() {
-    let mut c = ctx().lock().unwrap();
-    c.paths.clear();
-    c.handles.clear();
-    c.listeners.clear();
-    c.next_path = 0;
-    c.next_handle = 0;
+    mpw_finalize();
 }
 
-/// `MPW_Finalize`: close all paths, listeners and in-flight handles.
+/// `MPW_Finalize`: close all paths and listeners and **drain every
+/// non-blocking handle** — finished handles are harvested (their worker
+/// joined), unfinished ones are detached so finalize never wedges on a
+/// peer that will not speak again. Abandoned handles used to leak in
+/// the global table until `mpw_wait`; finalize now owns their cleanup.
 pub fn mpw_finalize() {
-    mpw_init();
+    let (paths, handles, listeners, monitors, daemons) = {
+        let mut c = ctx().lock().unwrap();
+        c.next_path = 0;
+        c.next_handle = 0;
+        (
+            std::mem::take(&mut c.paths),
+            std::mem::take(&mut c.handles),
+            std::mem::take(&mut c.listeners),
+            std::mem::take(&mut c.monitors),
+            std::mem::take(&mut c.daemons),
+        )
+    };
+    // Drop outside the context lock: monitor drops notify their paths,
+    // and handle drops must not serialize behind the registry.
+    drop(monitors);
+    drop(daemons);
+    // Close every path first (sticky flag + force-closed streams):
+    // detached workers of unfinished handles are parked in blocking
+    // reads holding their own Arc<Path>, and without this they (and
+    // their sockets) would outlive finalize for the whole process
+    // lifetime — or, with reconnection enabled, stall in the zero-live
+    // rejoin wait.
+    for p in paths.values() {
+        p.close();
+    }
+    for (_, h) in handles {
+        if h.is_finished() {
+            let _ = h.wait(); // join + discard the completed result
+        }
+        // unfinished handles detach on drop and exit promptly now that
+        // their streams are closed
+    }
+    drop(paths);
+    drop(listeners);
 }
 
 fn with_path<T>(id: i32, f: impl FnOnce(&Arc<Path>) -> Result<T>) -> Result<T> {
@@ -98,13 +140,21 @@ pub fn mpw_create_path(host: &str, port: u16, nstreams: usize) -> Result<i32> {
     mpw_create_path_cfg(host, port, PathConfig::with_streams(nstreams))
 }
 
-/// `MPW_CreatePath` with a full configuration.
+/// `MPW_CreatePath` with a full configuration. When the configuration
+/// enables background reconnection, a per-path monitor is started and
+/// owned by the global context (stopped by destroy/finalize).
 pub fn mpw_create_path_cfg(host: &str, port: u16, cfg: PathConfig) -> Result<i32> {
-    let path = Path::connect(host, port, cfg)?;
+    let spawn_monitor = cfg.resilience.reconnect.enabled;
+    let path = Arc::new(Path::connect(host, port, cfg)?);
+    let monitor =
+        if spawn_monitor { Some(resilience::spawn_reconnect_monitor(&path)) } else { None };
     let mut c = ctx().lock().unwrap();
     let id = c.next_path;
     c.next_path += 1;
-    c.paths.insert(id, Arc::new(path));
+    c.paths.insert(id, path);
+    if let Some(m) = monitor {
+        c.monitors.insert(id, m);
+    }
     Ok(id)
 }
 
@@ -115,7 +165,10 @@ pub fn mpw_serve_path(port: u16, nstreams: usize) -> Result<i32> {
     mpw_serve_path_cfg(port, PathConfig::with_streams(nstreams))
 }
 
-/// Accepting side with a full configuration.
+/// Accepting side with a full configuration. Accepted paths are
+/// registered for stream rejoin; call [`mpw_serve_rejoins`] once all
+/// expected paths on a port have been accepted to start serving
+/// reconnects.
 pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
     // Hold the context lock only around registry mutation, not accept().
     let mut listener = {
@@ -126,19 +179,46 @@ pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
         }
     };
     let real_port = listener.port();
-    let path = listener.accept_path()?;
+    let path = listener.accept_path_arc()?;
     let mut c = ctx().lock().unwrap();
     c.listeners.insert(real_port, listener);
     let id = c.next_path;
     c.next_path += 1;
-    c.paths.insert(id, Arc::new(path));
+    c.paths.insert(id, path);
     Ok(id)
 }
 
-/// `MPW_DestroyPath`: close and unregister a path.
-pub fn mpw_destroy_path(id: i32) -> Result<()> {
+/// `MPW_ServeRejoins` (resilience extension): convert the listener on
+/// `port` into a background [`RejoinDaemon`] serving stream reconnects
+/// for every path previously accepted from it. The port can no longer
+/// accept *new* paths afterwards (the daemon owns the socket); the
+/// daemon is stopped by finalize.
+pub fn mpw_serve_rejoins(port: u16) -> Result<()> {
+    // One critical section: releasing the lock between removing the
+    // listener and inserting the daemon would race finalize/init and
+    // leak a live daemon into the reset context.
     let mut c = ctx().lock().unwrap();
-    c.paths.remove(&id).map(|_| ()).ok_or(MpwError::UnknownId(id))
+    let listener = c.listeners.remove(&port).ok_or(MpwError::UnknownId(port as i32))?;
+    let daemon = listener.into_rejoin_daemon();
+    c.daemons.insert(port, daemon);
+    Ok(())
+}
+
+/// `MPW_DestroyPath`: close and unregister a path (and stop its
+/// reconnect monitor, if any). The streams are force-closed so any
+/// detached non-blocking worker still parked on the path exits instead
+/// of leaking with its sockets — once destroyed, the path is gone from
+/// the table and finalize could no longer reach it.
+pub fn mpw_destroy_path(id: i32) -> Result<()> {
+    let (path, monitor) = {
+        let mut c = ctx().lock().unwrap();
+        let p = c.paths.remove(&id).ok_or(MpwError::UnknownId(id))?;
+        (p, c.monitors.remove(&id))
+    };
+    drop(monitor);
+    path.close();
+    drop(path);
+    Ok(())
 }
 
 /// `MPW_Send`.
@@ -286,6 +366,37 @@ pub fn mpw_tune_state(id: i32) -> Result<TuneSnapshot> {
     with_path(id, |p| Ok(p.tune_snapshot()))
 }
 
+/// `MPW_PathStatus` (resilience extension): per-stream health of a
+/// path — live/dead streams, effective vs preferred striping width and
+/// the rejoin tally.
+pub fn mpw_path_status(id: i32) -> Result<PathStatus> {
+    with_path(id, |p| Ok(p.status()))
+}
+
+/// `MPW_setReconnectPolicy` (resilience extension): replace a path's
+/// reconnect policy at runtime. Enabling reconnection starts a
+/// background monitor for the path if none is running; disabling stops
+/// it.
+pub fn mpw_set_reconnect_policy(id: i32, policy: ReconnectPolicy) -> Result<()> {
+    let enable = policy.enabled;
+    // One critical section for lookup + policy + monitor bookkeeping:
+    // releasing the lock in between would race destroy/finalize and could
+    // leave a stale monitor entry under a reused id.
+    let mut c = ctx().lock().unwrap();
+    let path = c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?;
+    // validation (zero backoff, reconnect-without-framing) lives in
+    // Path::set_reconnect_policy
+    path.set_reconnect_policy(policy)?;
+    if enable {
+        if !c.monitors.contains_key(&id) {
+            c.monitors.insert(id, resilience::spawn_reconnect_monitor(&path));
+        }
+    } else {
+        c.monitors.remove(&id);
+    }
+    Ok(())
+}
+
 /// `MPW_DNSResolve`.
 pub fn mpw_dns_resolve(host: &str) -> Result<String> {
     super::dns::dns_resolve(host)
@@ -365,6 +476,105 @@ mod tests {
         assert!(matches!(mpw_tune_mode(99), Err(MpwError::UnknownId(99))));
         mpw_destroy_path(id).unwrap();
         t.join().unwrap();
+        mpw_finalize();
+    }
+
+    #[test]
+    fn finalize_drains_inflight_handles_without_wedging() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        let mut cfg = PathConfig::with_streams(1);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            let p = listener.accept_path().unwrap();
+            // answer only the first exchange; the second recv handle
+            // stays in flight forever
+            let mut buf = vec![0u8; 32];
+            p.recv(&mut buf).unwrap();
+            p.send(&buf).unwrap();
+            p // keep the path open so the abandoned recv genuinely blocks
+        });
+        let id = mpw_create_path_cfg("127.0.0.1", port, cfg).unwrap();
+        // one handle that finishes...
+        let done = mpw_isend_recv(id, NbeOp::SendRecv(vec![9u8; 32], 32)).unwrap();
+        let t0 = std::time::Instant::now();
+        while !mpw_has_nbe_finished(done).unwrap() {
+            assert!(t0.elapsed().as_secs() < 5, "exchange never completed");
+            std::thread::yield_now();
+        }
+        // ...and one that never will (peer sends nothing further)
+        let stuck = mpw_isend_recv(id, NbeOp::Recv(64)).unwrap();
+        assert!(!mpw_has_nbe_finished(stuck).unwrap());
+        let t1 = std::time::Instant::now();
+        mpw_finalize();
+        assert!(
+            t1.elapsed() < std::time::Duration::from_secs(2),
+            "finalize must detach in-flight handles, not join them"
+        );
+        // the table was drained: both ids are gone
+        assert!(matches!(mpw_has_nbe_finished(done), Err(MpwError::UnknownId(_))));
+        assert!(matches!(mpw_has_nbe_finished(stuck), Err(MpwError::UnknownId(_))));
+        let server = t.join().unwrap();
+        drop(server);
+    }
+
+    #[test]
+    fn path_status_and_reconnect_policy_over_facade() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false;
+        cfg.resilience.enabled = true; // reconnect requires resilient framing
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || listener.accept_path().unwrap());
+        let id = mpw_create_path_cfg("127.0.0.1", port, cfg).unwrap();
+        let server = t.join().unwrap();
+        let st = mpw_path_status(id).unwrap();
+        assert_eq!((st.nstreams, st.live), (2, 2));
+        assert!(st.dead.is_empty());
+        assert!(!st.reconnect_enabled);
+        let policy = crate::mpwide::config::ReconnectPolicy {
+            enabled: true,
+            ..Default::default()
+        };
+        mpw_set_reconnect_policy(id, policy).unwrap();
+        assert!(mpw_path_status(id).unwrap().reconnect_enabled);
+        assert!(matches!(mpw_path_status(99), Err(MpwError::UnknownId(99))));
+        mpw_destroy_path(id).unwrap();
+        drop(server);
+        mpw_finalize();
+    }
+
+    #[test]
+    fn serve_rejoins_takes_over_the_listener() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        assert!(mpw_serve_rejoins(59_871).is_err(), "no listener bound on that port");
+        let mut cfg = PathConfig::with_streams(1);
+        cfg.autotune = false;
+        // reserve an ephemeral port for the facade listener (hardcoded
+        // ports collide with whatever else runs on the CI host)
+        let port = {
+            let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            probe.local_addr().unwrap().port()
+        };
+        let ccfg = cfg.clone();
+        let t = std::thread::spawn(move || {
+            // Path::connect retries until the facade's listener is up
+            let p = Path::connect("127.0.0.1", port, ccfg).unwrap();
+            p.barrier().unwrap();
+            p
+        });
+        let id = mpw_serve_path_cfg(port, cfg).unwrap();
+        mpw_barrier(id).unwrap();
+        // converting the listener into a rejoin daemon consumes it
+        mpw_serve_rejoins(port).unwrap();
+        assert!(mpw_serve_rejoins(port).is_err(), "listener already consumed");
+        let client = t.join().unwrap();
+        drop(client);
         mpw_finalize();
     }
 

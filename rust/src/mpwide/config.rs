@@ -8,6 +8,105 @@ use std::time::Duration;
 
 use super::adapt::AdaptConfig;
 
+/// How (and whether) a path's client end re-establishes dead streams.
+///
+/// The accepting end is passive: its listener's rejoin daemon recognises
+/// the original path uuid + stream index in the reconnect handshake and
+/// slots the fresh socket back into the dead stream's position. This
+/// policy drives the *connecting* end's background reconnect monitor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReconnectPolicy {
+    /// Reconnect dead streams in the background (off by default: the
+    /// paper's MPWide treats stream errors as fatal, and rejoin needs a
+    /// rejoin daemon on the accepting end).
+    pub enabled: bool,
+    /// Give up on a stream after this many consecutive failed reconnect
+    /// attempts (0 = never give up).
+    pub max_attempts: u32,
+    /// Backoff floor between reconnect attempts.
+    pub base_delay: Duration,
+    /// Backoff ceiling (delay doubles from `base_delay` up to this).
+    pub max_delay: Duration,
+    /// Per-attempt connect timeout.
+    pub connect_timeout: Duration,
+    /// How long a send/recv with *zero* live streams waits for a rejoin
+    /// before failing with `AllStreamsDead`. `ZERO` is allowed and means
+    /// "fail immediately" — background rejoin of *partially* degraded
+    /// paths still works.
+    pub rejoin_wait: Duration,
+}
+
+impl Default for ReconnectPolicy {
+    fn default() -> Self {
+        ReconnectPolicy {
+            enabled: false,
+            max_attempts: 0,
+            base_delay: Duration::from_millis(50),
+            max_delay: Duration::from_secs(5),
+            connect_timeout: Duration::from_secs(5),
+            rejoin_wait: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Fault-tolerance settings for a path (the `mpwide::resilience` layer).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ResilienceConfig {
+    /// Frame every message so single-stream failures are detected and
+    /// isolated, with the in-flight message retried over the surviving
+    /// streams. Off by default: the framed protocol changes the wire
+    /// format (both ends must agree) and adds a per-message delivery
+    /// acknowledgement.
+    pub enabled: bool,
+    /// Background reconnection of dead streams (connecting end only).
+    pub reconnect: ReconnectPolicy,
+}
+
+impl ResilienceConfig {
+    /// Resilient framing on, background rejoin on (WAN production preset).
+    pub fn wan() -> Self {
+        ResilienceConfig {
+            enabled: true,
+            reconnect: ReconnectPolicy { enabled: true, ..Default::default() },
+        }
+    }
+
+    /// Validate the resilience parameters.
+    pub fn validate(&self) -> crate::mpwide::Result<()> {
+        let r = &self.reconnect;
+        if r.base_delay > r.max_delay {
+            return Err(crate::mpwide::MpwError::Config(format!(
+                "reconnect base_delay {:?} exceeds max_delay {:?}",
+                r.base_delay, r.max_delay
+            )));
+        }
+        if r.base_delay.is_zero() {
+            // a zero base never grows (0 * 2 = 0): the monitor would open
+            // connects as fast as the wakeup floor allows, forever
+            return Err(crate::mpwide::MpwError::Config(
+                "reconnect base_delay must be positive".into(),
+            ));
+        }
+        if r.enabled && r.connect_timeout.is_zero() {
+            // connect_retry with a zero deadline fails on entry: every
+            // redial would fail instantly and no stream could ever rejoin
+            return Err(crate::mpwide::MpwError::Config(
+                "reconnect connect_timeout must be positive".into(),
+            ));
+        }
+        if r.enabled && !self.enabled {
+            // stream death is only ever *detected* by the resilient
+            // framing layer; a reconnect monitor without it would idle
+            // forever while stream errors stay fatal — silently inert
+            // fault tolerance is worse than an upfront error
+            return Err(crate::mpwide::MpwError::Config(
+                "reconnect requires resilience.enabled (failure detection lives there)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// Maximum number of TCP streams per path. The paper reports efficient
 /// operation with up to 256 streams in a single path.
 pub const MAX_STREAMS: usize = 256;
@@ -41,6 +140,10 @@ pub struct PathConfig {
     /// Defaults to [`TuneMode::Static`](super::adapt::TuneMode::Static),
     /// i.e. the paper's creation-time-only behaviour.
     pub adapt: AdaptConfig,
+    /// Fault tolerance: per-stream failure isolation, degraded-mode
+    /// striping and background stream rejoin. Defaults to disabled (the
+    /// paper's stream-error-is-fatal behaviour).
+    pub resilience: ResilienceConfig,
 }
 
 impl Default for PathConfig {
@@ -53,6 +156,7 @@ impl Default for PathConfig {
             autotune: true,
             connect_timeout: Duration::from_secs(30),
             adapt: AdaptConfig::default(),
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -85,6 +189,7 @@ impl PathConfig {
             }
         }
         self.adapt.validate()?;
+        self.resilience.validate()?;
         Ok(())
     }
 
@@ -130,6 +235,49 @@ mod tests {
         assert!(c.validate().is_err());
         let c = PathConfig { pacing_rate: Some(-1.0), ..Default::default() };
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn resilience_defaults_off_and_wan_preset_on() {
+        let c = PathConfig::default();
+        assert!(!c.resilience.enabled, "resilient framing must be opt-in");
+        assert!(!c.resilience.reconnect.enabled);
+        let w = ResilienceConfig::wan();
+        assert!(w.enabled && w.reconnect.enabled);
+        assert!(w.validate().is_ok());
+    }
+
+    #[test]
+    fn resilience_validation_rejects_inverted_backoff() {
+        let mut c = PathConfig::default();
+        c.resilience.reconnect.base_delay = Duration::from_secs(10);
+        c.resilience.reconnect.max_delay = Duration::from_secs(1);
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn resilience_validation_rejects_zero_backoff() {
+        let mut c = PathConfig::default();
+        c.resilience.reconnect.base_delay = Duration::ZERO;
+        assert!(c.validate().is_err(), "a zero backoff floor never grows");
+    }
+
+    #[test]
+    fn resilience_validation_rejects_zero_connect_timeout() {
+        let mut c = PathConfig::default();
+        c.resilience.enabled = true;
+        c.resilience.reconnect.enabled = true;
+        c.resilience.reconnect.connect_timeout = Duration::ZERO;
+        assert!(c.validate().is_err(), "a zero connect deadline can never rejoin");
+    }
+
+    #[test]
+    fn resilience_validation_rejects_reconnect_without_framing() {
+        let mut c = PathConfig::default();
+        c.resilience.reconnect.enabled = true; // framing left off
+        assert!(c.validate().is_err(), "reconnect without failure detection is inert");
+        c.resilience.enabled = true;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

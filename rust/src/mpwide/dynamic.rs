@@ -18,9 +18,14 @@ impl Path {
     /// Send `buf` with a length prefix; pairs with [`Path::drecv_into`] /
     /// [`Path::drecv`]. Holds the path's send gate across header **and**
     /// body so concurrent senders (non-blocking handles) cannot
-    /// interleave mid-message.
+    /// interleave mid-message. In resilient mode no separate header is
+    /// needed: the message length travels in the per-message CTRL frame.
     pub fn dsend(&self, buf: &[u8]) -> Result<()> {
         let _gate = self.send_gate.lock().unwrap();
+        if self.resilient() {
+            super::resilience::send(self, buf)?;
+            return Ok(());
+        }
         self.send_header(buf.len() as u64)?;
         self.send_ungated(buf)?;
         Ok(())
@@ -31,6 +36,9 @@ impl Path {
     /// allocate. Returns the message length.
     pub fn drecv_into(&self, cache: &mut Vec<u8>) -> Result<usize> {
         let _gate = self.recv_gate.lock().unwrap();
+        if self.resilient() {
+            return super::resilience::recv(self, super::resilience::RecvTarget::Dynamic(cache));
+        }
         let len = self.recv_header()? as usize;
         if cache.len() < len {
             cache.resize(len, 0);
@@ -124,9 +132,9 @@ mod tests {
             let n3 = b.drecv_into(&mut cache).unwrap();
             (n1, n2, n3, cap1, cache.capacity())
         });
-        a.dsend(&vec![1u8; 1000]).unwrap();
-        a.dsend(&vec![2u8; 500]).unwrap(); // smaller: reuses, no realloc
-        a.dsend(&vec![3u8; 2000]).unwrap(); // larger: grows
+        a.dsend(&[1u8; 1000]).unwrap();
+        a.dsend(&[2u8; 500]).unwrap(); // smaller: reuses, no realloc
+        a.dsend(&[3u8; 2000]).unwrap(); // larger: grows
         let (n1, n2, n3, cap1, cap3) = t.join().unwrap();
         assert_eq!((n1, n2, n3), (1000, 500, 2000));
         assert!(cap1 >= 1000);

@@ -30,6 +30,27 @@ pub enum MpwError {
 
     /// A worker thread servicing one of the path's streams panicked.
     WorkerPanic(String),
+
+    /// One stream of a path failed and was isolated (resilience layer).
+    StreamDead {
+        /// Index of the failed stream within its path.
+        stream: usize,
+    },
+
+    /// Every stream of a path is dead and no rejoin arrived in time.
+    AllStreamsDead,
+
+    /// A relay/forwarder pump hit a hard stream error mid-flight; the
+    /// relay was torn down. Carries the bytes moved before the failure so
+    /// callers still get partial accounting.
+    RelayBroken {
+        /// Bytes forwarded a→b before the failure.
+        a_to_b: u64,
+        /// Bytes forwarded b→a before the failure.
+        b_to_a: u64,
+        /// Description of the underlying stream error.
+        detail: String,
+    },
 }
 
 impl fmt::Display for MpwError {
@@ -43,6 +64,16 @@ impl fmt::Display for MpwError {
             MpwError::Protocol(msg) => write!(f, "protocol error: {msg}"),
             MpwError::Config(msg) => write!(f, "invalid configuration: {msg}"),
             MpwError::WorkerPanic(msg) => write!(f, "stream worker panicked: {msg}"),
+            MpwError::StreamDead { stream } => {
+                write!(f, "stream {stream} is dead (isolated by the resilience layer)")
+            }
+            MpwError::AllStreamsDead => {
+                write!(f, "all streams of the path are dead and no rejoin arrived")
+            }
+            MpwError::RelayBroken { a_to_b, b_to_a, detail } => write!(
+                f,
+                "relay broken after forwarding {a_to_b} bytes a->b / {b_to_a} bytes b->a: {detail}"
+            ),
         }
     }
 }
@@ -75,6 +106,16 @@ mod tests {
         assert_eq!(e.to_string(), "unknown id 7");
         let e = MpwError::ConnectTimeout { endpoint: "x:1".into(), seconds: 2.0 };
         assert!(e.to_string().contains("x:1"));
+    }
+
+    #[test]
+    fn resilience_display_messages() {
+        let e = MpwError::StreamDead { stream: 3 };
+        assert!(e.to_string().contains("stream 3"));
+        assert!(MpwError::AllStreamsDead.to_string().contains("all streams"));
+        let e = MpwError::RelayBroken { a_to_b: 10, b_to_a: 20, detail: "boom".into() };
+        let s = e.to_string();
+        assert!(s.contains("10") && s.contains("20") && s.contains("boom"), "{s}");
     }
 
     #[test]

@@ -27,6 +27,22 @@
 //! receive-side caching ([`dynamic`]), non-blocking operations
 //! ([`nonblocking`]), message cycling/relaying between paths ([`relay`]),
 //! and a C-style facade mirroring the paper's Table 2 ([`api`]).
+//!
+//! ## Fault tolerance
+//!
+//! With [`config::ResilienceConfig::enabled`] set (both ends!), the
+//! [`resilience`] layer frames every message so that a single stream's
+//! TCP error no longer kills the path: the failed stream is isolated,
+//! the in-flight message retries over the survivors, and striping runs
+//! in degraded mode (the active-stream count follows the live count)
+//! until the stream rejoins. Rejoin reuses the creation-time handshake —
+//! the connecting end's [`resilience::ReconnectMonitor`] redials with
+//! the original path uuid + stream index, and the accepting end's
+//! [`resilience::RejoinDaemon`] (made from the [`PathListener`]) slots
+//! the fresh socket back into its old position. Stream-death semantics,
+//! the rejoin knobs ([`config::ReconnectPolicy`]) and the facade calls
+//! (`mpw_path_status`, `mpw_set_reconnect_policy`) are documented in
+//! [`resilience`].
 
 pub mod adapt;
 pub mod api;
@@ -39,10 +55,12 @@ pub mod nonblocking;
 pub mod pacing;
 pub mod path;
 pub mod relay;
+pub mod resilience;
 pub mod stripe;
 pub mod transport;
 
 pub use adapt::{AdaptConfig, TuneMode, TuneSnapshot};
-pub use config::PathConfig;
+pub use config::{PathConfig, ReconnectPolicy, ResilienceConfig};
 pub use errors::{MpwError, Result};
 pub use path::{Path, PathListener};
+pub use resilience::{PathStatus, ReconnectMonitor, RejoinDaemon};

@@ -76,10 +76,14 @@ impl NbeHandle {
 
 impl Drop for NbeHandle {
     fn drop(&mut self) {
-        // Detach politely: join so the worker can't outlive its path user.
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        // Detach, never join: joining here wedged the dropping thread
+        // forever when an unfinished Recv/SendRecv handle was abandoned
+        // and the peer never sent (the worker is parked in a blocking
+        // read). The worker owns its own Arc<Path> and exits when the
+        // operation resolves or the path's streams are closed —
+        // `Path::close` (or `mpw_finalize`, which calls it) unwedges an
+        // abandoned worker deliberately.
+        let _ = self.join.take();
     }
 }
 
@@ -143,6 +147,23 @@ mod tests {
         let hb = NbeHandle::start(b, NbeOp::DSendRecv(vec![8u8; 4567]));
         assert_eq!(ha.wait().unwrap().unwrap(), vec![8u8; 4567]);
         assert_eq!(hb.wait().unwrap().unwrap(), vec![7u8; 123]);
+    }
+
+    #[test]
+    fn dropping_unfinished_handle_does_not_block() {
+        // Regression: Drop used to join the worker thread, wedging the
+        // dropping thread forever when the peer never sends.
+        let (a, b) = mem_paths(2);
+        let h = NbeHandle::start(a, NbeOp::Recv(1024));
+        assert!(!h.is_finished());
+        let t0 = std::time::Instant::now();
+        drop(h);
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "drop of an in-flight handle must not block on the worker"
+        );
+        // keep the peer alive until here so the receive genuinely blocks
+        drop(b);
     }
 
     #[test]

@@ -15,15 +15,17 @@
 //! active stream count, so the receiver restripes in lockstep without any
 //! negotiation round-trip.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::adapt::{AdaptiveController, TuneMode, TuneSnapshot, TuningState};
-use super::config::PathConfig;
+use super::config::{PathConfig, ReconnectPolicy};
 use super::errors::{MpwError, Result};
 use super::pacing::Pacer;
+use super::resilience::{self, FrameBox, HealthState, PathStatus, RejoinDaemon, RejoinRegistry};
 use super::stripe;
-use super::transport::{connect_streams, HalfDuplex, RawPathListener, StreamPair};
+use super::transport::{connect_streams, HalfDuplex, KillSwitch, RawPathListener, StreamPair};
 
 /// Wire size of the per-message active-stream header (u16, big endian,
 /// on stream 0 ahead of the striped payload).
@@ -36,13 +38,25 @@ pub(crate) struct TxHalf {
     pub pacer: Pacer,
 }
 
+/// Transport metadata of one stream, replaced wholesale on rejoin.
+pub(crate) struct SlotMeta {
+    /// Raw socket fd when TCP-backed, for later `MPW_setWin` calls.
+    pub fd: Option<i32>,
+    /// Force-close handle (failure isolation / relay teardown).
+    pub kill: KillSwitch,
+}
+
 /// One stream of a path: independently lockable halves so a send and a
 /// receive can run concurrently (`MPW_SendRecv`).
 pub(crate) struct StreamSlot {
     pub tx: Mutex<TxHalf>,
     pub rx: Mutex<Box<dyn HalfDuplex>>,
-    /// Raw socket fd when TCP-backed, for later `MPW_setWin` calls.
-    fd: Option<i32>,
+    pub meta: Mutex<SlotMeta>,
+    /// Failure flag (resilience layer); dead streams carry no traffic
+    /// until a rejoin replaces their transport.
+    pub dead: AtomicBool,
+    /// Frames read off this stream for another consumer (resilient mode).
+    pub inbox: FrameBox,
 }
 
 /// A communication path between two endpoints.
@@ -60,6 +74,27 @@ pub struct Path {
     pub(crate) send_gate: Mutex<()>,
     /// Serializes whole receive operations (same rationale).
     pub(crate) recv_gate: Mutex<()>,
+    /// Stream health (rejoin generation, rejoin tally, waiter condvar).
+    pub(crate) health: HealthState,
+    /// Sticky control stream index for resilient framing.
+    pub(crate) cur_ctrl: AtomicUsize,
+    /// Next outgoing / expected incoming message sequence numbers of the
+    /// resilient protocol (guarded by the send/recv gates respectively).
+    pub(crate) res_send_seq: AtomicU64,
+    pub(crate) res_recv_seq: AtomicU64,
+    /// Resilient framing enabled (cached from the config at creation;
+    /// both ends must agree, like every other MPWide knob).
+    resilient: bool,
+    /// Sticky closed flag: set by [`Path::close`], never cleared. Gates
+    /// rejoin so a closed path cannot be resurrected by its monitor.
+    closed: AtomicBool,
+    /// Reconnect policy consulted by zero-live waits and the monitor.
+    reconnect: Mutex<ReconnectPolicy>,
+    /// `host:port` + path uuid of the remote end (connecting side only);
+    /// what the reconnect monitor redials.
+    remote: Mutex<Option<(String, u64)>>,
+    /// Path uuid from the stream handshake (both sides, where known).
+    uuid: Mutex<Option<u64>>,
 }
 
 impl std::fmt::Debug for Path {
@@ -68,6 +103,7 @@ impl std::fmt::Debug for Path {
             .field("peer", &self.peer)
             .field("nstreams", &self.streams.len())
             .field("active", &self.tuning.active_streams())
+            .field("live", &self.live_stream_indices().len())
             .finish()
     }
 }
@@ -91,15 +127,22 @@ impl Path {
         let peer = pairs[0].peer.clone();
         let streams: Vec<StreamSlot> = pairs
             .into_iter()
-            .map(|p| StreamSlot {
-                fd: p.raw_fd(),
-                tx: Mutex::new(TxHalf { w: p.tx, pacer: Pacer::new(cfg.pacing_rate) }),
-                rx: Mutex::new(p.rx),
+            .map(|p| {
+                let (tx, rx, fd, kill) = p.into_parts();
+                StreamSlot {
+                    tx: Mutex::new(TxHalf { w: tx, pacer: Pacer::new(cfg.pacing_rate) }),
+                    rx: Mutex::new(rx),
+                    meta: Mutex::new(SlotMeta { fd, kill }),
+                    dead: AtomicBool::new(false),
+                    inbox: FrameBox::default(),
+                }
             })
             .collect();
         let tuning = Arc::new(TuningState::from_config(&cfg));
         let controller =
             Mutex::new(AdaptiveController::new(cfg.adapt.clone(), streams.len()));
+        let resilient = cfg.resilience.enabled;
+        let reconnect = cfg.resilience.reconnect.clone();
         Ok(Path {
             streams,
             cfg: Mutex::new(cfg),
@@ -108,6 +151,15 @@ impl Path {
             peer,
             send_gate: Mutex::new(()),
             recv_gate: Mutex::new(()),
+            health: HealthState::new(),
+            cur_ctrl: AtomicUsize::new(0),
+            res_send_seq: AtomicU64::new(0),
+            res_recv_seq: AtomicU64::new(0),
+            resilient,
+            closed: AtomicBool::new(false),
+            reconnect: Mutex::new(reconnect),
+            remote: Mutex::new(None),
+            uuid: Mutex::new(None),
         })
     }
 
@@ -116,9 +168,11 @@ impl Path {
     /// autotuner as master if `cfg.autotune` is set.
     pub fn connect(host: &str, port: u16, cfg: PathConfig) -> Result<Path> {
         cfg.validate()?;
-        let pairs = connect_streams(host, port, cfg.nstreams, cfg.connect_timeout)?;
+        let (pairs, uuid) = connect_streams(host, port, cfg.nstreams, cfg.connect_timeout)?;
         let autotune = cfg.autotune;
         let path = Path::from_pairs(pairs, cfg)?;
+        *path.remote.lock().unwrap() = Some((format!("{host}:{port}"), uuid));
+        *path.uuid.lock().unwrap() = Some(uuid);
         if autotune {
             // Suspend runtime adaptation while the probe protocol runs:
             // the probes must measure each chunk candidate under identical
@@ -216,7 +270,8 @@ impl Path {
         self.cfg.lock().unwrap().tcp_window = Some(bytes);
         let mut granted = None;
         for s in &self.streams {
-            if let Some(fd) = s.fd {
+            let fd = s.meta.lock().unwrap().fd;
+            if let Some(fd) = fd {
                 granted = super::transport::set_socket_window(fd, bytes)?;
             }
         }
@@ -238,6 +293,9 @@ impl Path {
     /// Send without taking the send gate (callers that already hold it:
     /// the dynamic-message layer).
     pub(crate) fn send_ungated(&self, buf: &[u8]) -> Result<usize> {
+        if self.resilient {
+            return resilience::send(self, buf);
+        }
         let t0 = Instant::now();
         let chunk = self.tuning.chunk();
         let active = self.tuning.active_streams().clamp(1, self.streams.len());
@@ -274,7 +332,7 @@ impl Path {
 
     /// Feed the adaptive controller with this send's goodput and apply
     /// whatever it decides (no-op in static mode).
-    fn observe_send(&self, bytes: usize, elapsed: Duration) {
+    pub(crate) fn observe_send(&self, bytes: usize, elapsed: Duration) {
         if self.tuning.mode() != TuneMode::Adaptive {
             return;
         }
@@ -330,6 +388,9 @@ impl Path {
 
     /// Receive without taking the recv gate (dynamic-message layer).
     pub(crate) fn recv_ungated(&self, buf: &mut [u8]) -> Result<usize> {
+        if self.resilient {
+            return resilience::recv(self, resilience::RecvTarget::Fixed(buf));
+        }
         let chunk = self.tuning.chunk();
         // The sender's header tells us how many streams this message was
         // striped over — restriping needs no negotiation round-trip.
@@ -339,19 +400,12 @@ impl Path {
             Self::recv_worker(&self.streams[0], buf, chunk)?;
             return Ok(len);
         }
-        let segs = stripe::segments(len, active);
         // Split the buffer into disjoint &mut segments for the workers.
-        let mut parts: Vec<(usize, &mut [u8])> = Vec::with_capacity(active);
-        let mut rest = buf;
-        let mut consumed = 0usize;
-        for (i, seg) in segs.iter().enumerate() {
-            let (head, tail) = rest.split_at_mut(seg.end - consumed);
-            consumed = seg.end;
-            rest = tail;
-            if !head.is_empty() {
-                parts.push((i, head));
-            }
-        }
+        let parts: Vec<(usize, &mut [u8])> = stripe::split_mut(buf, active)
+            .into_iter()
+            .enumerate()
+            .filter(|(_, head)| !head.is_empty())
+            .collect();
         let mut results: Vec<Result<()>> = Vec::new();
         results.resize_with(parts.len(), || Ok(()));
         {
@@ -383,8 +437,14 @@ impl Path {
     }
 
     /// `MPW_Barrier`: synchronize the two ends — each side sends a token
-    /// byte on stream 0 and waits for the peer's.
+    /// byte on stream 0 and waits for the peer's. In resilient mode the
+    /// token exchange is a pair of resilient empty messages, so a
+    /// barrier survives stream death like any other operation.
     pub fn barrier(&self) -> Result<()> {
+        if self.resilient {
+            let mut empty: [u8; 0] = [];
+            return self.send_recv(&[], &mut empty);
+        }
         const TOKEN: u8 = 0xB7;
         let slot = &self.streams[0];
         let mut tx_res: Result<()> = Ok(());
@@ -420,6 +480,250 @@ impl Path {
         Ok(t0.elapsed())
     }
 
+    // -- stream health (resilience layer) -----------------------------------
+
+    /// Whether resilient framing is active on this path.
+    pub fn resilient(&self) -> bool {
+        self.resilient
+    }
+
+    /// Whether stream `i` can currently carry traffic.
+    pub fn stream_alive(&self, i: usize) -> bool {
+        i < self.streams.len() && !self.streams[i].dead.load(Ordering::SeqCst)
+    }
+
+    /// Indices of all live streams, ascending.
+    pub fn live_stream_indices(&self) -> Vec<usize> {
+        (0..self.streams.len()).filter(|&i| self.stream_alive(i)).collect()
+    }
+
+    /// The next live stream after `c`, cyclically — THE control-stream
+    /// rotation rule. Both ends apply it independently on observing the
+    /// same death, so it must stay the single definition (the resilient
+    /// framing's `ctrl_stream` and the eager rotation in
+    /// `mark_stream_dead` both call it).
+    pub(crate) fn next_live_after(&self, c: usize) -> Option<usize> {
+        let n = self.streams.len();
+        (1..=n).map(|d| (c + d) % n).find(|&j| self.stream_alive(j))
+    }
+
+    /// Current health generation (bumped only on rejoin; failure reports
+    /// carry the generation they observed so a report about a
+    /// since-replaced transport is dropped — but two simultaneous death
+    /// reports both land).
+    pub(crate) fn health_generation(&self) -> u64 {
+        self.health.generation.load(Ordering::SeqCst)
+    }
+
+    /// Isolate stream `i`: mark it dead, force-close its transport (which
+    /// propagates the failure to the peer), clamp the striping to the
+    /// live count and cap the adaptive controller. `gen_seen` is the
+    /// health generation the caller observed before the failing
+    /// operation; a mismatch means a rejoin replaced transports
+    /// underneath it and the (possibly stale) report is dropped.
+    pub(crate) fn mark_stream_dead(&self, i: usize, gen_seen: u64) {
+        if i >= self.streams.len() {
+            return;
+        }
+        let _g = self.health.sync.lock().unwrap();
+        if self.health.generation.load(Ordering::SeqCst) != gen_seen {
+            return;
+        }
+        let slot = &self.streams[i];
+        if slot.dead.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        slot.meta.lock().unwrap().kill.fire();
+        // Eagerly rotate the control stream off the dead slot. Rotation
+        // must happen at *death observation* (which both ends make,
+        // because the kill propagates), not lazily at the next use: a
+        // background rejoin could revive the slot in between, and a side
+        // that never observed the death would stay on the old control
+        // stream while the peer moved on.
+        let c = self.cur_ctrl.load(Ordering::SeqCst);
+        if c == i {
+            if let Some(next) = self.next_live_after(c) {
+                self.cur_ctrl.store(next, Ordering::SeqCst);
+            }
+        }
+        let live = self.live_stream_indices().len().max(1);
+        self.tuning.apply_live_limit(live);
+        self.controller.lock().unwrap().set_ceiling(live);
+        self.health.cv.notify_all();
+    }
+
+    /// Chaos/testing hook (also used by the rejoin daemon to retire a
+    /// stale socket): force stream `i` into the dead state as if its I/O
+    /// had failed.
+    pub fn inject_stream_failure(&self, i: usize) -> Result<()> {
+        if i >= self.streams.len() {
+            return Err(MpwError::Config(format!("stream index {i} out of range")));
+        }
+        let gen = self.health_generation();
+        self.mark_stream_dead(i, gen);
+        Ok(())
+    }
+
+    /// Install a fresh transport into dead stream `i` (the rejoin
+    /// protocol's final step). Restores the stream to the live set,
+    /// raises the controller ceiling and wakes any zero-live waiters.
+    pub fn reinstall_stream(&self, i: usize, pair: StreamPair) -> Result<()> {
+        if i >= self.streams.len() {
+            return Err(MpwError::Config(format!("stream index {i} out of range")));
+        }
+        let _g = self.health.sync.lock().unwrap();
+        // checked under the health lock: a close() racing this install
+        // must not be followed by a resurrecting reinstall
+        if self.is_closed() {
+            return Err(MpwError::Protocol("path is closed; refusing reinstall".into()));
+        }
+        let slot = &self.streams[i];
+        if !slot.dead.load(Ordering::SeqCst) {
+            return Err(MpwError::Protocol(format!("stream {i} is alive; refusing reinstall")));
+        }
+        if let Some(win) = self.cfg.lock().unwrap().tcp_window {
+            let _ = pair.set_window(win);
+        }
+        let (tx, rx, fd, kill) = pair.into_parts();
+        {
+            // meta first: once the old tx/rx halves are dropped their fd
+            // is closed (and may be reused by the OS), so the old
+            // KillSwitch must already be unreachable by then — a
+            // concurrent shutdown_all_streams may fire the *new* switch
+            // (correct: it wants everything closed) but never a stale fd
+            let mut m = slot.meta.lock().unwrap();
+            m.fd = fd;
+            m.kill = kill;
+        }
+        {
+            let mut txg = slot.tx.lock().unwrap();
+            txg.w = tx;
+            txg.pacer.set_rate(self.tuning.pacing());
+        }
+        *slot.rx.lock().unwrap() = rx;
+        // frames parked off the dead transport must not replay on the new
+        slot.inbox.clear();
+        slot.dead.store(false, Ordering::SeqCst);
+        let live = self.live_stream_indices().len();
+        self.tuning.apply_live_limit(live);
+        self.controller.lock().unwrap().set_ceiling(live);
+        self.health.rejoined.fetch_add(1, Ordering::SeqCst);
+        self.health.generation.fetch_add(1, Ordering::SeqCst);
+        self.health.cv.notify_all();
+        Ok(())
+    }
+
+    /// Block until at least one stream is live. Errors immediately with
+    /// `AllStreamsDead` when reconnection is disabled, or after the
+    /// policy's `rejoin_wait` deadline otherwise.
+    pub(crate) fn wait_for_any_live(&self) -> Result<()> {
+        let policy = self.reconnect.lock().unwrap().clone();
+        if self.is_closed() || !policy.enabled {
+            return Err(MpwError::AllStreamsDead);
+        }
+        let deadline = Instant::now() + policy.rejoin_wait;
+        let mut g = self.health.sync.lock().unwrap();
+        loop {
+            if self.is_closed() {
+                return Err(MpwError::AllStreamsDead);
+            }
+            if self.streams.iter().any(|s| !s.dead.load(Ordering::SeqCst)) {
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(MpwError::AllStreamsDead);
+            }
+            let (g2, _) = self.health.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
+
+    /// The path's reconnect policy (a snapshot).
+    pub fn reconnect_policy(&self) -> ReconnectPolicy {
+        self.reconnect.lock().unwrap().clone()
+    }
+
+    /// Replace the reconnect policy at runtime (`MPW_setReconnectPolicy`
+    /// facade). Validated with the same rules as at creation (a zero
+    /// backoff floor or reconnect-without-framing must not sneak in
+    /// through the runtime door). Takes effect on the monitor's next
+    /// cycle and the next zero-live-stream wait.
+    pub fn set_reconnect_policy(&self, policy: ReconnectPolicy) -> Result<()> {
+        let probe = super::config::ResilienceConfig {
+            enabled: self.resilient,
+            reconnect: policy.clone(),
+        };
+        probe.validate()?;
+        *self.reconnect.lock().unwrap() = policy;
+        // wake the monitor so a newly-enabled policy acts promptly
+        let _g = self.health.sync.lock().unwrap();
+        self.health.cv.notify_all();
+        Ok(())
+    }
+
+    /// Remote endpoint (`host:port`, path uuid) — connecting side only.
+    pub fn remote_endpoint(&self) -> Option<(String, u64)> {
+        self.remote.lock().unwrap().clone()
+    }
+
+    /// The path uuid agreed in the stream handshake, where known.
+    pub fn path_uuid(&self) -> Option<u64> {
+        *self.uuid.lock().unwrap()
+    }
+
+    pub(crate) fn set_path_uuid(&self, uuid: u64) {
+        *self.uuid.lock().unwrap() = Some(uuid);
+    }
+
+    /// `MPW_PathStatus`: point-in-time health report.
+    pub fn status(&self) -> PathStatus {
+        let dead: Vec<usize> =
+            (0..self.streams.len()).filter(|&i| !self.stream_alive(i)).collect();
+        PathStatus {
+            nstreams: self.streams.len(),
+            live: self.streams.len() - dead.len(),
+            dead,
+            active_streams: self.tuning.active_streams(),
+            preferred_active: self.tuning.preferred_active(),
+            rejoined: self.health.rejoined.load(Ordering::SeqCst),
+            resilient: self.resilient,
+            reconnect_enabled: self.reconnect.lock().unwrap().enabled,
+        }
+    }
+
+    /// Permanently close the path: force-close every stream and set a
+    /// sticky closed flag. Any worker parked in a blocking read or
+    /// write — including the detached worker of a dropped non-blocking
+    /// handle — fails promptly and exits. The flag gates
+    /// [`Path::reinstall_stream`] and the zero-live wait, so neither the
+    /// reconnect monitor nor a rejoin daemon can resurrect a closed
+    /// path; drop it.
+    pub fn close(&self) {
+        {
+            // flag set under the health lock: a racing reinstall either
+            // completed before this (and its fresh transport is killed by
+            // the shutdown below) or observes the flag and refuses
+            let _g = self.health.sync.lock().unwrap();
+            self.closed.store(true, Ordering::SeqCst);
+            self.health.cv.notify_all();
+        }
+        self.shutdown_all_streams();
+    }
+
+    /// Whether [`Path::close`] has been called.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Force-close every stream (relay teardown: unblocks pumps parked
+    /// in reads on healthy streams when a sibling stream fails hard).
+    pub(crate) fn shutdown_all_streams(&self) {
+        for s in &self.streams {
+            s.meta.lock().unwrap().kill.fire();
+        }
+    }
+
     fn send_worker(slot: &StreamSlot, data: &[u8], chunk: usize) -> Result<()> {
         let mut tx = slot.tx.lock().unwrap();
         for c in stripe::chunks(0..data.len(), chunk) {
@@ -445,13 +749,18 @@ impl Path {
 pub struct PathListener {
     raw: RawPathListener,
     cfg: PathConfig,
+    registry: Arc<RejoinRegistry>,
 }
 
 impl PathListener {
     /// Bind a listener on `port` (0 picks a free port) with the config
     /// applied to every accepted path.
     pub fn bind(port: u16, cfg: PathConfig) -> Result<PathListener> {
-        Ok(PathListener { raw: RawPathListener::bind(&format!("0.0.0.0:{port}"))?, cfg })
+        Ok(PathListener {
+            raw: RawPathListener::bind(&format!("0.0.0.0:{port}"))?,
+            cfg,
+            registry: Arc::new(RejoinRegistry::default()),
+        })
     }
 
     /// The bound port.
@@ -462,9 +771,10 @@ impl PathListener {
     /// Accept the next complete path; runs the autotuner as slave if
     /// configured (must match the connecting side's setting).
     pub fn accept_path(&mut self) -> Result<Path> {
-        let (pairs, _uuid) = self.raw.accept_streams()?;
+        let (pairs, uuid) = self.raw.accept_streams()?;
         let autotune = self.cfg.autotune;
         let path = Path::from_pairs(pairs, self.cfg.clone())?;
+        path.set_path_uuid(uuid);
         if autotune {
             // see Path::connect: no runtime adaptation during the probes
             let mode = path.tune_mode();
@@ -473,6 +783,39 @@ impl PathListener {
             path.set_tune_mode(mode);
         }
         Ok(path)
+    }
+
+    /// Like [`PathListener::accept_path`] but returns the path shared and
+    /// registered for stream rejoin: once the listener is turned into a
+    /// [`RejoinDaemon`], reconnecting streams bearing this path's uuid
+    /// are routed back into it.
+    pub fn accept_path_arc(&mut self) -> Result<Arc<Path>> {
+        let (pairs, uuid) = self.raw.accept_streams()?;
+        let autotune = self.cfg.autotune;
+        let path = Path::from_pairs(pairs, self.cfg.clone())?;
+        path.set_path_uuid(uuid);
+        let path = Arc::new(path);
+        if autotune {
+            let mode = path.tune_mode();
+            path.set_tune_mode(TuneMode::Static);
+            super::autotune::tune_slave(&path)?;
+            path.set_tune_mode(mode);
+        }
+        self.registry.register(uuid, &path);
+        Ok(path)
+    }
+
+    /// The rejoin registry shared with daemons created from this listener.
+    pub fn registry(&self) -> Arc<RejoinRegistry> {
+        self.registry.clone()
+    }
+
+    /// Convert the listener into a background [`RejoinDaemon`] serving
+    /// stream rejoins for every path accepted via
+    /// [`PathListener::accept_path_arc`]. Call once all expected paths
+    /// have been accepted.
+    pub fn into_rejoin_daemon(self) -> RejoinDaemon {
+        RejoinDaemon::spawn(self.raw, self.registry)
     }
 }
 

@@ -8,6 +8,8 @@
 //! data forwarding on machines where compute nodes cannot accept inbound
 //! connections (paper Fig 3).
 
+use std::time::Duration;
+
 use super::errors::{MpwError, Result};
 use super::path::Path;
 
@@ -55,7 +57,20 @@ pub struct RelayStats {
 /// two paths, stream-for-stream, until both directions reach end-of-stream.
 /// Requires equal stream counts (the forwarder creates both sides, so this
 /// holds by construction).
+///
+/// When one leg dies mid-pump (a hard stream error rather than a clean
+/// close), the relay tears **both** paths down so every pump unblocks,
+/// and returns [`MpwError::RelayBroken`] carrying the partial totals —
+/// a dead leg must surface promptly, not hang the forwarder forever on
+/// the healthy leg's idle streams.
 pub fn relay(a: &Path, b: &Path) -> Result<RelayStats> {
+    relay_delayed(a, b, None)
+}
+
+/// [`relay`] with an artificial one-way delay per forwarded batch
+/// (propagation emulation — what the user-space forwarder's `--delay-ms`
+/// exposes). `None` forwards immediately.
+pub fn relay_delayed(a: &Path, b: &Path, delay: Option<Duration>) -> Result<RelayStats> {
     if a.nstreams() != b.nstreams() {
         return Err(MpwError::Config(format!(
             "relay requires equal stream counts ({} vs {})",
@@ -69,25 +84,71 @@ pub fn relay(a: &Path, b: &Path) -> Result<RelayStats> {
         let mut bwd = Vec::with_capacity(n);
         for i in 0..n {
             let (sa, sb) = (&a.streams[i], &b.streams[i]);
-            fwd.push(scope.spawn(move || pump(sa, sb)));
-            bwd.push(scope.spawn(move || pump(sb, sa)));
+            fwd.push(scope.spawn(move || pump_guarded(sa, sb, a, b, delay)));
+            bwd.push(scope.spawn(move || pump_guarded(sb, sa, a, b, delay)));
         }
         let mut stats = RelayStats { a_to_b: 0, b_to_a: 0 };
+        let mut first_err: Option<MpwError> = None;
         for h in fwd {
-            stats.a_to_b += h.join().map_err(|_| MpwError::WorkerPanic("relay fwd".into()))??;
+            let (moved, err) =
+                h.join().map_err(|_| MpwError::WorkerPanic("relay fwd".into()))?;
+            stats.a_to_b += moved;
+            if let Some(e) = err {
+                first_err.get_or_insert(e);
+            }
         }
         for h in bwd {
-            stats.b_to_a += h.join().map_err(|_| MpwError::WorkerPanic("relay bwd".into()))??;
+            let (moved, err) =
+                h.join().map_err(|_| MpwError::WorkerPanic("relay bwd".into()))?;
+            stats.b_to_a += moved;
+            if let Some(e) = err {
+                first_err.get_or_insert(e);
+            }
         }
-        Ok(stats)
+        match first_err {
+            None => Ok(stats),
+            Some(e) => Err(MpwError::RelayBroken {
+                a_to_b: stats.a_to_b,
+                b_to_a: stats.b_to_a,
+                detail: e.to_string(),
+            }),
+        }
     })
 }
 
+/// [`pump`] plus teardown: a hard pump error force-closes every stream
+/// of both paths so sibling pumps parked in reads unblock instead of
+/// hanging the relay.
+fn pump_guarded(
+    src: &crate::mpwide::path::StreamSlot,
+    dst: &crate::mpwide::path::StreamSlot,
+    a: &Path,
+    b: &Path,
+    delay: Option<Duration>,
+) -> (u64, Option<MpwError>) {
+    let out = pump(src, dst, delay);
+    if out.1.is_some() {
+        a.shutdown_all_streams();
+        b.shutdown_all_streams();
+    }
+    out
+}
+
 /// Copy bytes from `src`'s read half to `dst`'s write half until EOF.
+/// Returns the bytes moved and the hard error that stopped the pump, if
+/// any (clean close and shutdown races report no error).
+///
+/// Known limitation: `ConnectionReset`/`BrokenPipe` are treated as a
+/// clean close because peers routinely reset right after finishing (the
+/// normal shutdown race) — without message framing the pump cannot tell
+/// that apart from a mid-transfer reset, so a reset-killed leg ends its
+/// own pump quietly rather than tearing the relay down. Endpoint-level
+/// recovery for that case lives in `mpwide::resilience`, not here.
 fn pump(
     src: &crate::mpwide::path::StreamSlot,
     dst: &crate::mpwide::path::StreamSlot,
-) -> Result<u64> {
+    delay: Option<Duration>,
+) -> (u64, Option<MpwError>) {
     let mut buf = vec![0u8; RELAY_BUF];
     let mut total = 0u64;
     loop {
@@ -103,9 +164,12 @@ fn pump(
                 {
                     break
                 }
-                Err(e) => return Err(e.into()),
+                Err(e) => return (total, Some(e.into())),
             }
         };
+        if let Some(d) = delay {
+            std::thread::sleep(d);
+        }
         let mut tx = dst.tx.lock().unwrap();
         tx.pacer.acquire(n);
         match tx.w.write_all(&buf[..n]) {
@@ -116,12 +180,14 @@ fn pump(
             {
                 break
             }
-            Err(e) => return Err(e.into()),
+            Err(e) => return (total, Some(e.into())),
         }
-        tx.w.flush()?;
+        if let Err(e) = tx.w.flush() {
+            return (total, Some(e.into()));
+        }
         total += n as u64;
     }
-    Ok(total)
+    (total, None)
 }
 
 #[cfg(test)]
@@ -144,7 +210,7 @@ mod tests {
         let (left, mid_a) = mem_paths(2);
         let (mid_b, right) = mem_paths(2);
         let t_left = std::thread::spawn(move || {
-            left.send(&vec![1u8; 100]).unwrap();
+            left.send(&[1u8; 100]).unwrap();
         });
         let t_right = std::thread::spawn(move || {
             let mut buf = vec![0u8; 100];
@@ -153,7 +219,7 @@ mod tests {
         });
         // mid receives from left, forwards to right (its own payload here
         // is what it received — classic cycle usage passes a buffer along).
-        let got = cycle(&mid_a, &mid_b, &vec![0u8; 0], 0).unwrap();
+        let got = cycle(&mid_a, &mid_b, &[0u8; 0], 0).unwrap();
         assert!(got.is_empty());
         let mut buf = vec![0u8; 100];
         mid_a.recv(&mut buf).unwrap();
@@ -193,6 +259,44 @@ mod tests {
         let (a, _a2) = mem_paths(2);
         let (b, _b2) = mem_paths(3);
         assert!(relay(&a, &b).is_err());
+    }
+
+    #[test]
+    fn relay_leg_death_returns_partial_stats_not_hang() {
+        use crate::mpwide::transport::mem_path_pairs_killable;
+        // left <-> (fwd_l | fwd_r) <-> right, with a kill switch on one
+        // stream of the left leg.
+        let (l, fl, kills) = mem_path_pairs_killable(2);
+        let (fr, right) = mem_path_pairs(2);
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false;
+        let left = Path::from_pairs(l, cfg.clone()).unwrap();
+        let fwd_l = Path::from_pairs(fl, cfg.clone()).unwrap();
+        let fwd_r = Path::from_pairs(fr, cfg.clone()).unwrap();
+        let right = Path::from_pairs(right, cfg).unwrap();
+
+        let t_relay = std::thread::spawn(move || relay(&fwd_l, &fwd_r));
+        let t_right = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 10_000];
+            right.recv(&mut buf).unwrap();
+            buf
+        });
+        left.send(&[3u8; 10_000]).unwrap();
+        assert_eq!(t_right.join().unwrap(), vec![3u8; 10_000]);
+        // now sever one stream of the left leg while the relay idles on it
+        kills[1].fire();
+        let r = t_relay.join().unwrap();
+        match r {
+            Err(MpwError::RelayBroken { a_to_b, b_to_a, detail }) => {
+                let hdr = crate::mpwide::path::ACTIVE_HEADER_LEN as u64;
+                assert_eq!(a_to_b, 10_000 + hdr, "partial totals must survive");
+                assert_eq!(b_to_a, 0);
+                assert!(!detail.is_empty());
+            }
+            other => panic!("expected RelayBroken, got {other:?}"),
+        }
+        // the left endpoint sees the teardown as stream errors, not a hang
+        assert!(left.send(&[1u8; 64]).is_err());
     }
 
     #[test]

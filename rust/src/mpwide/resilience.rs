@@ -1,0 +1,1381 @@
+//! Fault-tolerant paths: per-stream failure detection and isolation,
+//! automatic stream rejoin, and degraded-mode striping.
+//!
+//! The paper's MPWide (and this reproduction, before this module)
+//! treated any single-stream TCP error as fatal to the whole path — a
+//! poor fit for the library's headline deployments, week-scale WAN runs
+//! striped across continents where *some* socket dying is a matter of
+//! when, not if. This module layers three mechanisms on top of the
+//! existing path machinery, all opt-in via
+//! [`ResilienceConfig`](super::config::ResilienceConfig):
+//!
+//! 1. **Failure detection & isolation** — in resilient mode every
+//!    message is sent as typed frames (`CTRL` / `DATA` / `ACK`, each
+//!    tagged with a message sequence number and attempt counter). A
+//!    stream whose I/O fails is marked dead and force-closed
+//!    ([`KillSwitch`](super::transport::KillSwitch)), which propagates
+//!    the failure to the peer, and the in-flight message is *retried
+//!    over the surviving streams* instead of erroring the path. Delivery
+//!    is confirmed by a per-message `ACK`; a receiver that lost a stream
+//!    mid-message `NACK`s with the dead stream's index so the sender
+//!    routes around it even when the sender's own writes "succeeded"
+//!    into a dying socket.
+//! 2. **Degraded-mode striping** — stream health feeds the live tuning
+//!    state: the effective active-stream count is clamped to the live
+//!    count ([`TuningState::apply_live_limit`](super::adapt::TuningState::apply_live_limit))
+//!    and the adaptive controller's hill-climb ceiling follows the live
+//!    count, so the per-message active-stream header automatically
+//!    routes around dead streams and re-absorbs rejoined ones.
+//! 3. **Background rejoin** — the connecting end runs a
+//!    [`ReconnectMonitor`] that redials dead streams with the *original
+//!    path uuid and stream index* (the same hello handshake used at
+//!    creation); the accepting end runs a [`RejoinDaemon`] on the path
+//!    listener that recognises the uuid and slots the fresh socket back
+//!    into its old position via [`Path::reinstall_stream`].
+//!
+//! ### Wire format (resilient mode only)
+//!
+//! Every frame is `[magic u8][kind u8][msg_seq u64][attempt u32][len
+//! u32]` followed by `len` payload bytes. `CTRL` (on the current control
+//! stream) carries the message length, the explicit list of stream
+//! indices the payload is striped over, and the sender's dead set
+//! (in-band death gossip — a failure only the sender can observe still
+//! reaches the receiver, whose slot must die before a rejoin can be
+//! accepted); `DATA` carries one chunk of one stream's segment; `ACK`
+//! carries delivered/retry plus the index of a stream the receiver
+//! found dead. Frames from aborted attempts are
+//! skipped by sequence/attempt comparison, so retries need no draining
+//! protocol. Frame headers cost 18 bytes per chunk (≥ 64 KiB in
+//! adaptive mode) — well under 0.1% overhead.
+//!
+//! The control stream is *sticky*: both ends start at stream 0 and
+//! rotate — to the next live index, cyclically — only when the current
+//! control stream dies. Rotation is driven by death (which propagates
+//! through the socket shutdown) and never by rejoin (which does not),
+//! so both ends converge on the same control stream without
+//! negotiation.
+//!
+//! ### Semantics: resilient sends are rendezvous sends
+//!
+//! Because delivery is ACK-confirmed, a resilient `send` completes only
+//! once the receiver's matching `recv` has consumed the message —
+//! MPI's `Ssend` semantics, not the buffered semantics of non-resilient
+//! mode. Two ends that both do `send(..)` then `recv(..)` therefore
+//! deadlock (each waits for the other's ack). Symmetric exchanges must
+//! use `send_recv` / `dsend_recv` (which run both directions
+//! concurrently), `barrier`, or non-blocking handles — the patterns
+//! MPWide applications already use.
+//!
+//! ### Limitations
+//!
+//! Failure detection is I/O-driven: a half-open connection that
+//! swallows writes without erroring (cable pull, NAT timeout) is only
+//! detected when TCP gives up — enable OS keepalive for long-idle
+//! paths. A lost final `ACK` can leave the sender retrying a message
+//! the receiver already delivered; the duplicate is detected by
+//! sequence number and re-acknowledged on the receiver's next `recv`
+//! (or, if this end is itself blocked in a send, by the ACK wait
+//! itself). One known divergence window remains: if the control stream
+//! dies in the sub-RTT interval while *another* stream's rejoin is
+//! half-installed (one end confirmed, the other still awaiting its
+//! [`REJOIN_ACK`]), the two ends can rotate to different control
+//! streams and stall until one side's I/O fails; a progress timeout on
+//! the ACK wait would close it and is tracked as a ROADMAP item.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::errors::{MpwError, Result};
+use super::path::Path;
+use super::stripe;
+use super::transport::{reconnect_stream, RawPathListener, StreamPair, REJOIN_ACK};
+
+/// Sanity byte opening every resilient frame.
+pub const FRAME_MAGIC: u8 = 0xF5;
+/// Frame kinds.
+pub const KIND_CTRL: u8 = 1;
+/// See [`KIND_CTRL`].
+pub const KIND_DATA: u8 = 2;
+/// See [`KIND_CTRL`].
+pub const KIND_ACK: u8 = 3;
+/// Fixed frame header size: magic + kind + msg_seq + attempt + len.
+pub const FRAME_HDR_LEN: usize = 1 + 1 + 8 + 4 + 4;
+/// Upper bound on a single DATA frame payload (a corrupted header must
+/// not trigger an absurd allocation).
+pub const MAX_FRAME_PAYLOAD: usize = 64 << 20;
+
+const ACK_OK: u8 = 0;
+const ACK_RETRY: u8 = 1;
+/// "No dead stream to report" in an ACK's detail field.
+const NO_DETAIL: u16 = u16::MAX;
+
+/// Decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHdr {
+    /// Frame kind (`KIND_*`).
+    pub kind: u8,
+    /// Per-direction message sequence number.
+    pub msg_seq: u64,
+    /// Retry attempt within the message.
+    pub attempt: u32,
+    /// Payload length in bytes.
+    pub len: u32,
+}
+
+/// Encode a frame header.
+pub fn encode_frame_hdr(kind: u8, msg_seq: u64, attempt: u32, len: u32) -> [u8; FRAME_HDR_LEN] {
+    let mut h = [0u8; FRAME_HDR_LEN];
+    h[0] = FRAME_MAGIC;
+    h[1] = kind;
+    h[2..10].copy_from_slice(&msg_seq.to_be_bytes());
+    h[10..14].copy_from_slice(&attempt.to_be_bytes());
+    h[14..18].copy_from_slice(&len.to_be_bytes());
+    h
+}
+
+/// Decode and validate a frame header.
+pub fn decode_frame_hdr(h: &[u8; FRAME_HDR_LEN]) -> Result<FrameHdr> {
+    if h[0] != FRAME_MAGIC {
+        return Err(MpwError::Protocol(format!("bad frame magic {:#04x}", h[0])));
+    }
+    let kind = h[1];
+    if !(KIND_CTRL..=KIND_ACK).contains(&kind) {
+        return Err(MpwError::Protocol(format!("bad frame kind {kind}")));
+    }
+    let msg_seq = u64::from_be_bytes(h[2..10].try_into().unwrap());
+    let attempt = u32::from_be_bytes(h[10..14].try_into().unwrap());
+    let len = u32::from_be_bytes(h[14..18].try_into().unwrap());
+    if len as usize > MAX_FRAME_PAYLOAD {
+        return Err(MpwError::Protocol(format!("frame payload {len} exceeds bound")));
+    }
+    Ok(FrameHdr { kind, msg_seq, attempt, len })
+}
+
+/// Decoded CTRL payload: message length, the explicit stream list the
+/// payload is striped over (in segment order), and the sender's dead
+/// set — in-band death gossip, so a failure only one side can observe
+/// (e.g. a write error whose stream the sender then stops using) still
+/// reaches the peer and unlocks rejoin there.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CtrlMsg {
+    /// Total message length, bytes.
+    pub total: u64,
+    /// Stream indices carrying segments 0..k. `streams[0]` is also the
+    /// control stream of the attempt.
+    pub streams: Vec<u16>,
+    /// Stream indices the sender considers dead.
+    pub dead: Vec<u16>,
+}
+
+/// Encode a CTRL payload.
+pub fn encode_ctrl(total: u64, streams: &[u16], dead: &[u16]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + 2 * (streams.len() + dead.len()));
+    out.extend_from_slice(&total.to_be_bytes());
+    out.extend_from_slice(&(streams.len() as u16).to_be_bytes());
+    for s in streams {
+        out.extend_from_slice(&s.to_be_bytes());
+    }
+    out.extend_from_slice(&(dead.len() as u16).to_be_bytes());
+    for s in dead {
+        out.extend_from_slice(&s.to_be_bytes());
+    }
+    out
+}
+
+/// Decode a CTRL payload.
+pub fn parse_ctrl(p: &[u8]) -> Result<CtrlMsg> {
+    if p.len() < 12 {
+        return Err(MpwError::Protocol("short ctrl frame".into()));
+    }
+    let total = u64::from_be_bytes(p[0..8].try_into().unwrap());
+    let k = u16::from_be_bytes(p[8..10].try_into().unwrap()) as usize;
+    if k == 0 || p.len() < 12 + 2 * k {
+        return Err(MpwError::Protocol(format!("ctrl frame stream list malformed (k={k})")));
+    }
+    let streams: Vec<u16> =
+        (0..k).map(|i| u16::from_be_bytes(p[10 + 2 * i..12 + 2 * i].try_into().unwrap())).collect();
+    let off = 10 + 2 * k;
+    let d = u16::from_be_bytes(p[off..off + 2].try_into().unwrap()) as usize;
+    if p.len() != off + 2 + 2 * d {
+        return Err(MpwError::Protocol(format!("ctrl frame dead list malformed (d={d})")));
+    }
+    let base = off + 2;
+    let dead = (0..d)
+        .map(|i| u16::from_be_bytes(p[base + 2 * i..base + 2 + 2 * i].try_into().unwrap()))
+        .collect();
+    Ok(CtrlMsg { total, streams, dead })
+}
+
+// ---------------------------------------------------------------------------
+// Per-stream frame inbox: routing between concurrent frame consumers.
+// ---------------------------------------------------------------------------
+
+/// Frames read off a stream by one consumer but destined for another.
+///
+/// A stream's read half has a single byte-level owner at a time (the rx
+/// mutex), but up to three logical consumers: the receiver's CTRL
+/// reader, the receiver's DATA segment workers, and the sender's ACK
+/// waiter (full-duplex traffic interleaves all three on the control
+/// stream). Whoever holds the rx lock reads whole frames and parks the
+/// ones that are not theirs here; every consumer checks the inbox
+/// before (and immediately after) taking the lock.
+#[derive(Default)]
+pub(crate) struct FrameBox {
+    q: Mutex<VecDeque<(FrameHdr, Vec<u8>)>>,
+}
+
+impl FrameBox {
+    /// Park a frame for another consumer.
+    fn push(&self, hdr: FrameHdr, payload: Vec<u8>) {
+        self.q.lock().unwrap().push_back((hdr, payload));
+    }
+
+    /// Take the oldest parked frame of `kind`, if any.
+    fn take(&self, kind: u8) -> Option<(FrameHdr, Vec<u8>)> {
+        let mut q = self.q.lock().unwrap();
+        let pos = q.iter().position(|(h, _)| h.kind == kind)?;
+        q.remove(pos)
+    }
+
+    /// Discard every parked frame (stream rejoin: frames parked off the
+    /// old transport must not be replayed against the new one).
+    pub(crate) fn clear(&self) {
+        self.q.lock().unwrap().clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Path health.
+// ---------------------------------------------------------------------------
+
+/// Shared health state of one path: a *generation* counter bumped only
+/// on rejoin (failure reports carry the generation they observed, so a
+/// report about a since-replaced transport is discarded — while two
+/// simultaneous death reports both land), a rejoin tally, and a condvar
+/// for waiters (zero-live-stream sends, the reconnect monitor).
+pub(crate) struct HealthState {
+    pub(crate) generation: AtomicU64,
+    pub(crate) rejoined: AtomicU64,
+    pub(crate) sync: Mutex<()>,
+    pub(crate) cv: Condvar,
+}
+
+impl HealthState {
+    pub(crate) fn new() -> HealthState {
+        HealthState {
+            generation: AtomicU64::new(0),
+            rejoined: AtomicU64::new(0),
+            sync: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl Default for HealthState {
+    fn default() -> Self {
+        HealthState::new()
+    }
+}
+
+/// Point-in-time health report of a path (`mpw_path_status`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PathStatus {
+    /// Established streams (live + dead).
+    pub nstreams: usize,
+    /// Streams currently able to carry traffic.
+    pub live: usize,
+    /// Indices of dead streams.
+    pub dead: Vec<usize>,
+    /// Streams the next send stripes over (after any degraded clamp).
+    pub active_streams: usize,
+    /// The active count the path would use at full health.
+    pub preferred_active: usize,
+    /// Total streams re-absorbed by rejoin over the path's lifetime.
+    pub rejoined: u64,
+    /// Whether resilient framing is enabled.
+    pub resilient: bool,
+    /// Whether background reconnection is enabled.
+    pub reconnect_enabled: bool,
+}
+
+// ---------------------------------------------------------------------------
+// Frame I/O over a path's streams.
+// ---------------------------------------------------------------------------
+
+/// The current control stream: sticky — rotates (to the next live
+/// index, cyclically) only when the current one is dead. Returns
+/// `AllStreamsDead` when nothing is live.
+fn ctrl_stream(path: &Path) -> Result<usize> {
+    loop {
+        let c = path.cur_ctrl.load(Ordering::SeqCst);
+        if path.stream_alive(c) {
+            return Ok(c);
+        }
+        match path.next_live_after(c) {
+            None => return Err(MpwError::AllStreamsDead),
+            Some(i) => {
+                // CAS so concurrent rotations settle on one choice.
+                let _ = path.cur_ctrl.compare_exchange(c, i, Ordering::SeqCst, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Write one frame (header + payload) under a single tx lock; pacing is
+/// applied to DATA frames only.
+fn write_frame(
+    path: &Path,
+    s: usize,
+    kind: u8,
+    msg_seq: u64,
+    attempt: u32,
+    payload: &[u8],
+    flush: bool,
+) -> Result<()> {
+    let hdr = encode_frame_hdr(kind, msg_seq, attempt, payload.len() as u32);
+    let slot = &path.streams[s];
+    let mut tx = slot.tx.lock().unwrap();
+    if kind == KIND_DATA {
+        tx.pacer.acquire(payload.len());
+    }
+    tx.w.write_all(&hdr)?;
+    tx.w.write_all(payload)?;
+    if flush {
+        tx.w.flush()?;
+    }
+    Ok(())
+}
+
+/// One blocking read of a full frame off stream `s`, honouring the
+/// inbox discipline shared by every frame consumer: check the inbox for
+/// a parked frame of `want` before blocking, fail fast on dead streams,
+/// and re-check the inbox once the rx lock is held (the previous lock
+/// holder may have parked our frame while we waited). The returned
+/// frame is *any* kind — the caller routes or parks foreign frames.
+fn read_raw_frame(path: &Path, s: usize, want: u8) -> Result<(FrameHdr, Vec<u8>)> {
+    if let Some(f) = path.streams[s].inbox.take(want) {
+        return Ok(f);
+    }
+    if !path.stream_alive(s) {
+        return Err(MpwError::StreamDead { stream: s });
+    }
+    let mut rx = path.streams[s].rx.lock().unwrap();
+    if let Some(f) = path.streams[s].inbox.take(want) {
+        return Ok(f);
+    }
+    let mut hb = [0u8; FRAME_HDR_LEN];
+    rx.read_exact(&mut hb)?;
+    let hdr = decode_frame_hdr(&hb)?;
+    let mut payload = vec![0u8; hdr.len as usize];
+    rx.read_exact(&mut payload)?;
+    Ok((hdr, payload))
+}
+
+/// Read frames from stream `s` until one of kind `want` arrives; frames
+/// for other consumers are parked in the stream's inbox (releasing the
+/// lock between frames so a consumer blocked on the rx mutex can
+/// collect them).
+fn read_frame(path: &Path, s: usize, want: u8) -> Result<(FrameHdr, Vec<u8>)> {
+    loop {
+        let (hdr, payload) = read_raw_frame(path, s, want)?;
+        if hdr.kind == want {
+            return Ok((hdr, payload));
+        }
+        path.streams[s].inbox.push(hdr, payload);
+    }
+}
+
+/// Write an ACK frame on stream `s` (flushes immediately).
+fn write_ack(
+    path: &Path,
+    s: usize,
+    msg_seq: u64,
+    attempt: u32,
+    status: u8,
+    detail: u16,
+) -> Result<()> {
+    let d = detail.to_be_bytes();
+    write_frame(path, s, KIND_ACK, msg_seq, attempt, &[status, d[0], d[1]], true)
+}
+
+/// Send one stream's segment as chunked DATA frames.
+fn send_segment(
+    path: &Path,
+    s: usize,
+    msg_seq: u64,
+    attempt: u32,
+    data: &[u8],
+    chunk: usize,
+) -> Result<()> {
+    for c in stripe::chunks(0..data.len(), chunk) {
+        write_frame(path, s, KIND_DATA, msg_seq, attempt, &data[c], false)?;
+    }
+    path.streams[s].tx.lock().unwrap().w.flush()?;
+    Ok(())
+}
+
+/// Fold one already-buffered DATA frame into the segment buffer:
+/// returns the new fill level, skipping stale frames from aborted
+/// attempts / re-sent messages, erroring on frames from the future.
+fn consume_data(
+    hdr: FrameHdr,
+    payload: &[u8],
+    msg_seq: u64,
+    attempt: u32,
+    out: &mut [u8],
+    got: usize,
+    s: usize,
+) -> Result<usize> {
+    if hdr.msg_seq == msg_seq && hdr.attempt == attempt {
+        let end = got + payload.len();
+        if end > out.len() {
+            return Err(MpwError::Protocol(format!(
+                "data overrun on stream {s}: segment {} got {end}",
+                out.len()
+            )));
+        }
+        out[got..end].copy_from_slice(payload);
+        Ok(end)
+    } else if hdr.msg_seq < msg_seq || (hdr.msg_seq == msg_seq && hdr.attempt < attempt) {
+        // stale frame from an aborted attempt or duplicated message
+        Ok(got)
+    } else {
+        Err(MpwError::Protocol(format!(
+            "data frame from the future on stream {s}: msg {} attempt {} while receiving \
+             msg {msg_seq} attempt {attempt}",
+            hdr.msg_seq, hdr.attempt
+        )))
+    }
+}
+
+/// Receive one stream's segment. Follows the same inbox routing
+/// discipline as [`read_frame`], but current-attempt DATA payloads are
+/// read **directly into the caller's buffer** — no per-chunk allocation
+/// or extra copy on the bulk-transfer hot path; only stale/foreign
+/// frames are buffered.
+fn recv_segment(path: &Path, s: usize, msg_seq: u64, attempt: u32, out: &mut [u8]) -> Result<()> {
+    let mut got = 0usize;
+    while got < out.len() {
+        if let Some((hdr, payload)) = path.streams[s].inbox.take(KIND_DATA) {
+            got = consume_data(hdr, &payload, msg_seq, attempt, out, got, s)?;
+            continue;
+        }
+        if !path.stream_alive(s) {
+            return Err(MpwError::StreamDead { stream: s });
+        }
+        let mut rx = path.streams[s].rx.lock().unwrap();
+        // Re-check after acquiring: the previous lock holder may have
+        // parked a frame for us while we waited.
+        if let Some((hdr, payload)) = path.streams[s].inbox.take(KIND_DATA) {
+            drop(rx);
+            got = consume_data(hdr, &payload, msg_seq, attempt, out, got, s)?;
+            continue;
+        }
+        let mut hb = [0u8; FRAME_HDR_LEN];
+        rx.read_exact(&mut hb)?;
+        let hdr = decode_frame_hdr(&hb)?;
+        let len = hdr.len as usize;
+        // Fast path only when the payload fits the remaining buffer —
+        // an overrun falls through to the buffered path so the stream
+        // stays frame-aligned while consume_data reports the error.
+        if hdr.kind == KIND_DATA
+            && hdr.msg_seq == msg_seq
+            && hdr.attempt == attempt
+            && got + len <= out.len()
+        {
+            let end = got + len;
+            rx.read_exact(&mut out[got..end])?;
+            got = end;
+            continue;
+        }
+        // slow path: stale or foreign frame — buffer, then route or skip
+        let mut payload = vec![0u8; len];
+        rx.read_exact(&mut payload)?;
+        drop(rx);
+        if hdr.kind == KIND_DATA {
+            got = consume_data(hdr, &payload, msg_seq, attempt, out, got, s)?;
+        } else {
+            path.streams[s].inbox.push(hdr, payload);
+        }
+    }
+    Ok(())
+}
+
+/// Consume and discard an aborted (or duplicated) attempt's DATA
+/// frames from the streams this end still considers alive. Without the
+/// drain, a sender whose segment workers are parked on TCP backpressure
+/// could never finish the attempt's barrier — and therefore never read
+/// the NACK/re-ack that tells it to move on. Errors are ignored (dead
+/// streams fail fast; the retry protocol owns recovery).
+fn drain_attempt(path: &Path, ctrl: &CtrlMsg, msg_seq: u64, attempt: u32) {
+    let total = ctrl.total.min(usize::MAX as u64) as usize;
+    let segs = stripe::segments(total, ctrl.streams.len());
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ctrl.streams.len());
+    for (i, seg) in segs.iter().enumerate() {
+        let si = ctrl.streams[i] as usize;
+        if seg.is_empty() || !path.stream_alive(si) {
+            continue;
+        }
+        let len = seg.len();
+        jobs.push(Box::new(move || {
+            // Frame-aligned discard loop: memory stays bounded by one
+            // frame (whatever length the CTRL advertised), stale older
+            // frames are swallowed, and anything newer — or any other
+            // kind — is parked untouched so no live traffic is lost.
+            let mut remaining = len;
+            while remaining > 0 {
+                match read_raw_frame(path, si, KIND_DATA) {
+                    Ok((h, p)) => {
+                        if h.kind == KIND_DATA && h.msg_seq == msg_seq && h.attempt == attempt {
+                            remaining = remaining.saturating_sub(p.len().max(1));
+                        } else if h.kind == KIND_DATA
+                            && (h.msg_seq < msg_seq
+                                || (h.msg_seq == msg_seq && h.attempt < attempt))
+                        {
+                            // even older stale frame: discard, keep going
+                        } else {
+                            // newer traffic or a foreign kind: not ours
+                            path.streams[si].inbox.push(h, p);
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+        }));
+    }
+    crate::util::pool::scope(jobs);
+}
+
+/// Outcome of the sender's ACK wait.
+enum AckOutcome {
+    /// Receiver confirmed full delivery.
+    Delivered,
+    /// Receiver aborted the attempt; `Some(i)` names a stream it found
+    /// dead (so the sender can exclude it without waiting for its own
+    /// I/O to fail).
+    Retry(Option<usize>),
+}
+
+fn wait_ack(path: &Path, s: usize, msg_seq: u64, attempt: u32) -> Result<AckOutcome> {
+    loop {
+        let (hdr, payload) = read_ack_frame(path, s)?;
+        if hdr.msg_seq < msg_seq {
+            continue; // duplicate ack for an earlier message
+        }
+        if hdr.msg_seq > msg_seq {
+            return Err(MpwError::Protocol(format!(
+                "ack for future message {} while waiting on {msg_seq}",
+                hdr.msg_seq
+            )));
+        }
+        if payload.len() != 3 {
+            return Err(MpwError::Protocol("malformed ack frame".into()));
+        }
+        if payload[0] == ACK_OK {
+            // any attempt counts: delivery is per message, not per attempt
+            return Ok(AckOutcome::Delivered);
+        }
+        if hdr.attempt < attempt {
+            continue; // NACK for an attempt we already abandoned
+        }
+        let detail = u16::from_be_bytes([payload[1], payload[2]]);
+        let dead = if detail == NO_DETAIL || detail as usize >= path.nstreams() {
+            None
+        } else {
+            Some(detail as usize)
+        };
+        return Ok(AckOutcome::Retry(dead));
+    }
+}
+
+/// [`read_frame`] specialised for the sender's ACK wait: a duplicate
+/// CTRL for an incoming message this end already delivered is
+/// re-acknowledged *here* instead of parked — otherwise a peer
+/// retransmitting after a lost final ack (while this end is itself
+/// blocked in a send, so no `recv` is running to absorb the duplicate)
+/// would deadlock both sides.
+fn read_ack_frame(path: &Path, s: usize) -> Result<(FrameHdr, Vec<u8>)> {
+    loop {
+        let (hdr, payload) = read_raw_frame(path, s, KIND_ACK)?;
+        if hdr.kind == KIND_ACK {
+            return Ok((hdr, payload));
+        }
+        if hdr.kind == KIND_CTRL && hdr.msg_seq < path.res_recv_seq.load(Ordering::Relaxed) {
+            // retransmission of a message we already delivered (the peer
+            // lost our final ack): re-acknowledge in place, then drain
+            // the resent data — the peer's segment workers may be parked
+            // on TCP backpressure and cannot reach their own ack wait
+            // until those bytes are consumed
+            let _ = write_ack(path, s, hdr.msg_seq, hdr.attempt, ACK_OK, NO_DETAIL);
+            if let Ok(ctrl) = parse_ctrl(&payload) {
+                drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
+            }
+            continue;
+        }
+        path.streams[s].inbox.push(hdr, payload);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resilient send / recv.
+// ---------------------------------------------------------------------------
+
+fn max_attempts(path: &Path) -> u32 {
+    path.nstreams() as u32 * 2 + 8
+}
+
+/// Hard (non-retryable) protocol failure: force-close the path before
+/// surfacing the error so the peer's blocking reads/ack-waits fail fast
+/// instead of hanging in a protocol state this end can no longer
+/// advance — the same failure-propagation rule streams follow, applied
+/// to the whole path.
+fn fatal(path: &Path, e: MpwError) -> MpwError {
+    path.shutdown_all_streams();
+    e
+}
+
+/// Resilient `MPW_Send`: stripe over the live streams, isolate failures,
+/// retry the whole message over survivors until the receiver confirms
+/// delivery. Caller holds the path's send gate.
+pub(crate) fn send(path: &Path, buf: &[u8]) -> Result<usize> {
+    let t0 = Instant::now();
+    let msg_seq = path.res_send_seq.load(Ordering::Relaxed);
+    for attempt in 0..max_attempts(path) {
+        let gen = path.health_generation();
+        let live = path.live_stream_indices();
+        if live.is_empty() {
+            path.wait_for_any_live()?;
+            continue;
+        }
+        let c = match ctrl_stream(path) {
+            Ok(c) => c,
+            Err(_) => continue, // raced a death; re-evaluate liveness
+        };
+        let want = path.tuning().active_streams().clamp(1, path.nstreams());
+        let k = want.min(live.len());
+        let mut used: Vec<u16> = Vec::with_capacity(k);
+        used.push(c as u16);
+        for &i in &live {
+            if i != c && used.len() < k {
+                used.push(i as u16);
+            }
+        }
+        let dead: Vec<u16> =
+            (0..path.nstreams()).filter(|&i| !path.stream_alive(i)).map(|i| i as u16).collect();
+        let ctrl = encode_ctrl(buf.len() as u64, &used, &dead);
+        if write_frame(path, c, KIND_CTRL, msg_seq, attempt, &ctrl, true).is_err() {
+            path.mark_stream_dead(c, gen);
+            continue;
+        }
+        // Frames carry a u32 length validated against MAX_FRAME_PAYLOAD on
+        // the receiving side; cap the per-frame chunk accordingly.
+        let chunk = path.tuning().chunk().min(MAX_FRAME_PAYLOAD);
+        let segs = stripe::segments(buf.len(), used.len());
+        let mut results: Vec<Result<()>> = Vec::new();
+        results.resize_with(used.len(), || Ok(()));
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(used.len());
+            for ((&si, seg), out) in used.iter().zip(segs).zip(results.iter_mut()) {
+                if seg.is_empty() {
+                    continue;
+                }
+                let data = &buf[seg];
+                jobs.push(Box::new(move || {
+                    *out = send_segment(path, si as usize, msg_seq, attempt, data, chunk);
+                }));
+            }
+            crate::util::pool::scope(jobs);
+        }
+        let mut failed = false;
+        for (&si, r) in used.iter().zip(&results) {
+            if let Err(e) = r {
+                match e {
+                    MpwError::Io(_) | MpwError::StreamDead { .. } => {
+                        path.mark_stream_dead(si as usize, gen);
+                        failed = true;
+                    }
+                    // a protocol error cannot be healed by retrying
+                    _ => {
+                        let e = MpwError::Protocol(format!("send worker failed: {e}"));
+                        return Err(fatal(path, e));
+                    }
+                }
+            }
+        }
+        if failed {
+            continue;
+        }
+        match wait_ack(path, c, msg_seq, attempt) {
+            Ok(AckOutcome::Delivered) => {
+                path.res_send_seq.fetch_add(1, Ordering::Relaxed);
+                path.observe_send(buf.len(), t0.elapsed());
+                return Ok(buf.len());
+            }
+            Ok(AckOutcome::Retry(dead)) => {
+                if let Some(d) = dead {
+                    path.mark_stream_dead(d, gen);
+                }
+                continue;
+            }
+            Err(MpwError::Io(_)) | Err(MpwError::StreamDead { .. }) => {
+                path.mark_stream_dead(c, gen);
+                continue;
+            }
+            Err(e) => return Err(fatal(path, e)),
+        }
+    }
+    Err(fatal(
+        path,
+        MpwError::Protocol(format!("resilient send of message {msg_seq} did not converge")),
+    ))
+}
+
+/// Destination of a resilient receive.
+pub(crate) enum RecvTarget<'a> {
+    /// Fixed-size receive: the message length must match exactly.
+    Fixed(&'a mut [u8]),
+    /// Dynamic receive into a growable cache (`MPW_DRecv` semantics —
+    /// the length travels in the CTRL frame, no separate header needed).
+    Dynamic(&'a mut Vec<u8>),
+}
+
+/// Resilient `MPW_Recv`: follow the sender's CTRL stream list, isolate
+/// failed streams, NACK aborted attempts and deliver exactly once.
+/// Caller holds the path's recv gate.
+pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
+    let msg_seq = path.res_recv_seq.load(Ordering::Relaxed);
+    for _round in 0..max_attempts(path) {
+        let gen = path.health_generation();
+        if path.live_stream_indices().is_empty() {
+            path.wait_for_any_live()?;
+            continue;
+        }
+        let c = match ctrl_stream(path) {
+            Ok(c) => c,
+            Err(_) => continue,
+        };
+        let (hdr, payload) = match read_frame(path, c, KIND_CTRL) {
+            Ok(f) => f,
+            Err(MpwError::Io(_)) | Err(MpwError::StreamDead { .. }) => {
+                path.mark_stream_dead(c, gen);
+                continue;
+            }
+            Err(e) => return Err(fatal(path, e)),
+        };
+        let ctrl = parse_ctrl(&payload).map_err(|e| fatal(path, e))?;
+        if hdr.msg_seq < msg_seq {
+            // duplicate of an already-delivered message (our ack was lost):
+            // re-acknowledge, then drain the retransmission so the sender
+            // is not left parked on backpressure mid-resend
+            let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_OK, NO_DETAIL);
+            drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
+            continue;
+        }
+        if hdr.msg_seq > msg_seq {
+            let e = MpwError::Protocol(format!(
+                "ctrl for future message {} while expecting {msg_seq}",
+                hdr.msg_seq
+            ));
+            return Err(fatal(path, e));
+        }
+        if ctrl.streams.is_empty()
+            || ctrl.streams.len() > path.nstreams()
+            || ctrl.streams.iter().any(|&i| (i as usize) >= path.nstreams())
+        {
+            let e = MpwError::Protocol(format!(
+                "ctrl stream list invalid on a {}-stream path",
+                path.nstreams()
+            ));
+            return Err(fatal(path, e));
+        }
+        // Duplicates would put two segment readers on one stream's rx,
+        // interleaving their frames arbitrarily — reject like any other
+        // malformed list.
+        let mut listed = vec![false; path.nstreams()];
+        for &i in &ctrl.streams {
+            if std::mem::replace(&mut listed[i as usize], true) {
+                let e = MpwError::Protocol(format!("ctrl stream list names stream {i} twice"));
+                return Err(fatal(path, e));
+            }
+        }
+        // Apply the sender's death gossip: failures only the sender could
+        // observe (its writes failed, and degraded striping means it will
+        // never touch the stream again) would otherwise leave our slot
+        // alive forever — blocking the rejoin daemon from ever accepting
+        // the reconnect.
+        for &d in &ctrl.dead {
+            if (d as usize) < path.nstreams() && path.stream_alive(d as usize) {
+                let _ = path.inject_stream_failure(d as usize);
+            }
+        }
+        // If the sender picked a stream we already know is dead, short-cut
+        // with a NACK naming it — this is how a receiver-side-only failure
+        // (sender's writes still "succeed" into the dying socket) routes
+        // the sender around the stream without waiting for its I/O error.
+        // The aborted attempt is then *drained*: the sender's segment
+        // workers may be parked on TCP backpressure writing the healthy
+        // streams, and its retry barrier cannot complete (nor the NACK be
+        // read) until someone consumes those bytes.
+        if let Some(&d) = ctrl.streams.iter().find(|&&i| !path.stream_alive(i as usize)) {
+            let _ = write_ack(path, c, msg_seq, hdr.attempt, ACK_RETRY, d);
+            drain_attempt(path, &ctrl, msg_seq, hdr.attempt);
+            continue;
+        }
+        let buf: &mut [u8] = match &mut target {
+            RecvTarget::Fixed(b) => {
+                if ctrl.total != b.len() as u64 {
+                    let e = MpwError::Protocol(format!(
+                        "message length {} does not match posted recv of {} bytes",
+                        ctrl.total,
+                        b.len()
+                    ));
+                    return Err(fatal(path, e));
+                }
+                &mut b[..]
+            }
+            RecvTarget::Dynamic(v) => {
+                if ctrl.total > super::dynamic::MAX_DYNAMIC {
+                    let e = MpwError::Protocol(format!(
+                        "dynamic message length {} too large",
+                        ctrl.total
+                    ));
+                    return Err(fatal(path, e));
+                }
+                let t = ctrl.total as usize;
+                if v.len() < t {
+                    v.resize(t, 0);
+                }
+                &mut v[..t]
+            }
+        };
+        let total = buf.len();
+        let attempt = hdr.attempt;
+        // Split the buffer into disjoint per-stream segments (same
+        // arithmetic as the sender's stripe::segments call), mapped to
+        // the ctrl frame's explicit stream indices.
+        let parts: Vec<(usize, &mut [u8])> = stripe::split_mut(buf, ctrl.streams.len())
+            .into_iter()
+            .enumerate()
+            .filter(|(_, head)| !head.is_empty())
+            .map(|(i, head)| (ctrl.streams[i] as usize, head))
+            .collect();
+        let part_streams: Vec<usize> = parts.iter().map(|(s, _)| *s).collect();
+        let mut results: Vec<Result<()>> = Vec::new();
+        results.resize_with(parts.len(), || Ok(()));
+        {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts.len());
+            for ((si, part), out) in parts.into_iter().zip(results.iter_mut()) {
+                jobs.push(Box::new(move || {
+                    *out = recv_segment(path, si, msg_seq, attempt, part);
+                }));
+            }
+            crate::util::pool::scope(jobs);
+        }
+        let mut first_dead: Option<usize> = None;
+        for (&si, r) in part_streams.iter().zip(&results) {
+            if let Err(e) = r {
+                match e {
+                    MpwError::Io(_) | MpwError::StreamDead { .. } => {
+                        path.mark_stream_dead(si, gen);
+                        first_dead.get_or_insert(si);
+                    }
+                    _ => {
+                        let e = MpwError::Protocol(format!("recv worker failed: {e}"));
+                        return Err(fatal(path, e));
+                    }
+                }
+            }
+        }
+        if let Some(d) = first_dead {
+            let _ = write_ack(path, c, msg_seq, attempt, ACK_RETRY, d as u16);
+            continue;
+        }
+        if write_ack(path, c, msg_seq, attempt, ACK_OK, NO_DETAIL).is_err() {
+            // The message is delivered; a failed ack only means the sender
+            // will retransmit, and the duplicate is absorbed by the
+            // stale-ctrl branch of the next recv.
+            path.mark_stream_dead(c, gen);
+        }
+        path.res_recv_seq.fetch_add(1, Ordering::Relaxed);
+        return Ok(total);
+    }
+    Err(fatal(
+        path,
+        MpwError::Protocol(format!("resilient recv of message {msg_seq} did not converge")),
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Background rejoin: client-side reconnect monitor.
+// ---------------------------------------------------------------------------
+
+/// Background thread that redials dead streams of a *connecting-end*
+/// path according to its
+/// [`ReconnectPolicy`](super::config::ReconnectPolicy). Dropping the
+/// monitor stops the thread (without blocking on in-flight attempts).
+pub struct ReconnectMonitor {
+    stop: Arc<AtomicBool>,
+    weak: Weak<Path>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Spawn a reconnect monitor for `path`. The monitor holds only a weak
+/// reference: it exits on its own when the path is dropped.
+pub fn spawn_reconnect_monitor(path: &Arc<Path>) -> ReconnectMonitor {
+    let weak = Arc::downgrade(path);
+    let stop = Arc::new(AtomicBool::new(false));
+    let (w2, s2) = (weak.clone(), stop.clone());
+    let handle = std::thread::Builder::new()
+        .name("mpwide-rejoin".into())
+        .spawn(move || monitor_loop(w2, s2))
+        .expect("spawn reconnect monitor");
+    ReconnectMonitor { stop, weak, handle: Some(handle) }
+}
+
+/// Per-stream reconnect bookkeeping of the monitor.
+struct StreamBackoff {
+    attempts: u32,
+    delay: Duration,
+    /// Earliest time the next attempt may run (what actually enforces
+    /// the exponential backoff — condvar wakeups arrive much faster).
+    next_at: Instant,
+}
+
+fn monitor_loop(weak: Weak<Path>, stop: Arc<AtomicBool>) {
+    let mut backoff: HashMap<usize, StreamBackoff> = HashMap::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let path = match weak.upgrade() {
+            Some(p) => p,
+            None => return,
+        };
+        if path.is_closed() {
+            return;
+        }
+        let policy = path.reconnect_policy();
+        let remote = path.remote_endpoint();
+        let has_remote = remote.is_some();
+        if !policy.enabled {
+            // stale entries must not drive the wakeup schedule below
+            backoff.clear();
+        }
+        if policy.enabled {
+            if let Some((addr, uuid)) = remote {
+                let n = path.nstreams();
+                for i in 0..n {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    if path.stream_alive(i) {
+                        backoff.remove(&i);
+                        continue;
+                    }
+                    let now = Instant::now();
+                    let st = backoff.entry(i).or_insert(StreamBackoff {
+                        attempts: 0,
+                        delay: policy.base_delay,
+                        next_at: now,
+                    });
+                    if policy.max_attempts > 0 && st.attempts >= policy.max_attempts {
+                        continue;
+                    }
+                    if now < st.next_at {
+                        continue; // backoff window still open
+                    }
+                    st.attempts += 1;
+                    match reconnect_stream(&addr, uuid, i as u16, n as u16, policy.connect_timeout)
+                        .and_then(|pair| path.reinstall_stream(i, pair))
+                    {
+                        Ok(()) => {
+                            backoff.remove(&i);
+                        }
+                        Err(_) => {
+                            st.next_at = Instant::now() + st.delay;
+                            st.delay = (st.delay * 2).min(policy.max_delay);
+                        }
+                    }
+                }
+            }
+        }
+        // Sleep until the next backoff expiry or a health change (a death
+        // notification wakes the monitor immediately — attempts stay
+        // gated by next_at either way). Streams whose attempt budget is
+        // exhausted no longer schedule wakeups, and a monitor that can
+        // never act (policy disabled, or an accepted-side path with no
+        // remote to redial) idles at a slow heartbeat. The wait stays
+        // bounded — not indefinite — because the periodic weak-upgrade
+        // check is what lets the thread die with its path.
+        let idle = !policy.enabled || !has_remote;
+        let now = Instant::now();
+        let pending = backoff
+            .values()
+            .filter(|s| policy.max_attempts == 0 || s.attempts < policy.max_attempts)
+            .map(|s| s.next_at.saturating_duration_since(now))
+            .min();
+        let wait = match pending {
+            Some(d) if !idle => d.clamp(Duration::from_millis(5), Duration::from_millis(500)),
+            // healthy path, disabled policy, no remote, or exhausted
+            // budgets: slow heartbeat (deaths notify the condvar anyway;
+            // the periodic wake only services the weak/stop liveness
+            // checks)
+            _ => Duration::from_secs(2),
+        };
+        let g = path.health.sync.lock().unwrap();
+        let _ = path.health.cv.wait_timeout(g, wait).unwrap();
+        drop(path);
+    }
+}
+
+impl Drop for ReconnectMonitor {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(p) = self.weak.upgrade() {
+            let _g = p.health.sync.lock().unwrap();
+            p.health.cv.notify_all();
+        }
+        // Detach rather than join: an in-flight reconnect attempt may be
+        // mid connect_timeout; the thread exits at its next stop check.
+        let _ = self.handle.take();
+    }
+}
+
+/// Convenience for the common client setup: connect a path, wrap it in
+/// an `Arc` and start its reconnect monitor.
+pub fn connect_with_rejoin(
+    host: &str,
+    port: u16,
+    cfg: super::config::PathConfig,
+) -> Result<(Arc<Path>, ReconnectMonitor)> {
+    let path = Arc::new(Path::connect(host, port, cfg)?);
+    let monitor = spawn_reconnect_monitor(&path);
+    Ok((path, monitor))
+}
+
+// ---------------------------------------------------------------------------
+// Background rejoin: server-side daemon.
+// ---------------------------------------------------------------------------
+
+/// Accepted paths a listener is willing to rejoin streams into, keyed by
+/// path uuid.
+#[derive(Default)]
+pub struct RejoinRegistry {
+    map: Mutex<HashMap<u64, Weak<Path>>>,
+}
+
+impl RejoinRegistry {
+    /// Register a path under its uuid (called by
+    /// [`PathListener::accept_path_arc`](super::path::PathListener::accept_path_arc)).
+    pub fn register(&self, uuid: u64, path: &Arc<Path>) {
+        let mut m = self.map.lock().unwrap();
+        m.retain(|_, w| w.strong_count() > 0);
+        m.insert(uuid, Arc::downgrade(path));
+    }
+
+    /// Look up a registered, still-alive path.
+    pub fn lookup(&self, uuid: u64) -> Option<Arc<Path>> {
+        self.map.lock().unwrap().get(&uuid).and_then(Weak::upgrade)
+    }
+}
+
+/// Background acceptor that routes reconnecting streams back into their
+/// paths: a hello whose uuid matches a registered path replaces that
+/// path's dead stream at the hello's index. Unknown uuids are dropped.
+///
+/// Created with
+/// [`PathListener::into_rejoin_daemon`](super::path::PathListener::into_rejoin_daemon)
+/// once all expected paths have been accepted.
+pub struct RejoinDaemon {
+    stop: Arc<AtomicBool>,
+    port: u16,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl RejoinDaemon {
+    pub(crate) fn spawn(mut raw: RawPathListener, registry: Arc<RejoinRegistry>) -> RejoinDaemon {
+        let stop = Arc::new(AtomicBool::new(false));
+        let port = raw.port();
+        let s2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("mpwide-rejoin-daemon".into())
+            .spawn(move || loop {
+                if s2.load(Ordering::Relaxed) {
+                    return;
+                }
+                match raw.accept_hello() {
+                    Ok((stream, uuid, idx, n)) => {
+                        if s2.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if let Some(path) = registry.lookup(uuid) {
+                            let idx = idx as usize;
+                            // Only dead slots are eligible: a reconnect for
+                            // an alive stream is dropped rather than trusted
+                            // to retire the old socket — the uuid is a weak
+                            // shared secret, and honoring such a hello would
+                            // hand an on-path guesser a kill-and-splice
+                            // primitive on healthy streams. A death only the
+                            // peer observed reaches us via the CTRL frames'
+                            // dead-set gossip (or our own failing I/O), after
+                            // which the reconnect attempt lands.
+                            if n as usize == path.nstreams()
+                                && idx < path.nstreams()
+                                && !path.stream_alive(idx)
+                            {
+                                // Confirm before installing: the ack byte
+                                // must precede any framed traffic the path
+                                // could emit on the fresh socket.
+                                let mut stream = stream;
+                                if std::io::Write::write_all(&mut stream, &[REJOIN_ACK]).is_ok() {
+                                    if let Ok(pair) = StreamPair::from_tcp(stream) {
+                                        let _ = path.reinstall_stream(idx, pair);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    Err(_) => {
+                        // transient accept/handshake failure (or the stop
+                        // nudge): avoid a tight error loop
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            })
+            .expect("spawn rejoin daemon");
+        RejoinDaemon { stop, port, handle: Some(handle) }
+    }
+
+    /// The port the daemon keeps listening on.
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Stop the daemon and wait for its thread to exit.
+    pub fn stop(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.stop.store(true, Ordering::Relaxed);
+            // Nudge the blocking accept with a throwaway connection.
+            let _ = std::net::TcpStream::connect(("127.0.0.1", self.port));
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RejoinDaemon {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::config::PathConfig;
+    use crate::mpwide::transport::mem_path_pairs_killable;
+    use crate::util::Rng;
+
+    fn resilient_cfg(n: usize) -> PathConfig {
+        let mut cfg = PathConfig::with_streams(n);
+        cfg.autotune = false;
+        cfg.chunk_size = 16 * 1024;
+        cfg.resilience.enabled = true;
+        cfg
+    }
+
+    fn mem_resilient_paths(
+        n: usize,
+    ) -> (Path, Path, Vec<crate::mpwide::transport::KillSwitch>) {
+        let (l, r, kills) = mem_path_pairs_killable(n);
+        let cfg = resilient_cfg(n);
+        let a = Path::from_pairs(l, cfg.clone()).unwrap();
+        let b = Path::from_pairs(r, cfg).unwrap();
+        (a, b, kills)
+    }
+
+    #[test]
+    fn frame_hdr_roundtrip() {
+        let h = encode_frame_hdr(KIND_DATA, 42, 3, 1000);
+        let d = decode_frame_hdr(&h).unwrap();
+        assert_eq!(d, FrameHdr { kind: KIND_DATA, msg_seq: 42, attempt: 3, len: 1000 });
+    }
+
+    #[test]
+    fn frame_hdr_rejects_garbage() {
+        let mut h = encode_frame_hdr(KIND_CTRL, 1, 0, 4);
+        h[0] = 0x00;
+        assert!(decode_frame_hdr(&h).is_err(), "bad magic");
+        let mut h = encode_frame_hdr(KIND_CTRL, 1, 0, 4);
+        h[1] = 9;
+        assert!(decode_frame_hdr(&h).is_err(), "bad kind");
+        let h = encode_frame_hdr(KIND_DATA, 1, 0, (MAX_FRAME_PAYLOAD + 1) as u32);
+        assert!(decode_frame_hdr(&h).is_err(), "oversized payload");
+    }
+
+    #[test]
+    fn ctrl_payload_roundtrip() {
+        let p = encode_ctrl(1u64 << 33, &[0, 2, 5], &[1]);
+        let c = parse_ctrl(&p).unwrap();
+        assert_eq!(c, CtrlMsg { total: 1u64 << 33, streams: vec![0, 2, 5], dead: vec![1] });
+        let p = encode_ctrl(7, &[0], &[]);
+        assert_eq!(parse_ctrl(&p).unwrap().dead, Vec::<u16>::new());
+        assert!(parse_ctrl(&p[..5]).is_err(), "truncated");
+        assert!(parse_ctrl(&p[..p.len() - 1]).is_err(), "truncated dead list");
+        assert!(parse_ctrl(&encode_ctrl(1, &[], &[])).is_err(), "empty stream list");
+    }
+
+    #[test]
+    fn framebox_routes_by_kind_in_order() {
+        let b = FrameBox::default();
+        b.push(FrameHdr { kind: KIND_ACK, msg_seq: 1, attempt: 0, len: 0 }, vec![]);
+        b.push(FrameHdr { kind: KIND_DATA, msg_seq: 2, attempt: 0, len: 1 }, vec![7]);
+        b.push(FrameHdr { kind: KIND_DATA, msg_seq: 3, attempt: 0, len: 1 }, vec![8]);
+        assert_eq!(b.take(KIND_CTRL), None);
+        assert_eq!(b.take(KIND_DATA).unwrap().0.msg_seq, 2, "fifo per kind");
+        assert_eq!(b.take(KIND_ACK).unwrap().0.msg_seq, 1);
+        assert_eq!(b.take(KIND_DATA).unwrap().1, vec![8]);
+        assert_eq!(b.take(KIND_DATA), None);
+    }
+
+    #[test]
+    fn resilient_roundtrip_multi_stream() {
+        let (a, b, _kills) = mem_resilient_paths(4);
+        let mut msg = vec![0u8; 300_000];
+        Rng::new(21).fill_bytes(&mut msg);
+        let m2 = msg.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 300_000];
+            b.recv(&mut buf).unwrap();
+            b.recv(&mut buf).unwrap();
+            buf
+        });
+        a.send(&msg).unwrap();
+        a.send(&msg).unwrap(); // sequence numbers advance per message
+        assert_eq!(t.join().unwrap(), m2);
+    }
+
+    #[test]
+    fn resilient_empty_message_and_barrier() {
+        let (a, b, _kills) = mem_resilient_paths(3);
+        let t = std::thread::spawn(move || {
+            let mut empty: [u8; 0] = [];
+            b.recv(&mut empty).unwrap();
+            b.barrier().unwrap();
+        });
+        a.send(&[]).unwrap();
+        a.barrier().unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn kill_one_stream_mid_transfer_completes_over_survivors() {
+        let (a, b, kills) = mem_resilient_paths(4);
+        let mut msg = vec![0u8; 2 << 20];
+        Rng::new(22).fill_bytes(&mut msg);
+        let m2 = msg.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 2 << 20];
+            for _ in 0..4 {
+                b.recv(&mut buf).unwrap();
+            }
+            (buf, b.status())
+        });
+        // sever stream 2 while messages are in flight
+        let killer = {
+            let k = kills[2].clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(3));
+                k.fire();
+            })
+        };
+        for _ in 0..4 {
+            a.send(&msg).unwrap();
+        }
+        killer.join().unwrap();
+        let (buf, status) = t.join().unwrap();
+        assert_eq!(buf, m2, "last message corrupted");
+        let st = a.status();
+        assert_eq!(st.nstreams, 4);
+        assert!(st.live >= 3, "only the killed stream may be dead: {st:?}");
+        assert!(status.live >= 3, "{status:?}");
+    }
+
+    #[test]
+    fn killed_control_stream_rotates() {
+        let (a, b, kills) = mem_resilient_paths(3);
+        let msg = vec![9u8; 100_000];
+        let m2 = msg.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 100_000];
+            b.recv(&mut buf).unwrap();
+            b.recv(&mut buf).unwrap();
+            buf
+        });
+        a.send(&msg).unwrap();
+        kills[0].fire(); // stream 0 is the initial control stream
+        a.send(&msg).unwrap();
+        assert_eq!(t.join().unwrap(), m2);
+        assert_eq!(a.status().dead, vec![0]);
+    }
+
+    #[test]
+    fn degraded_striping_clamps_active() {
+        let (a, b, kills) = mem_resilient_paths(4);
+        kills[1].fire();
+        kills[3].fire();
+        let msg = vec![5u8; 50_000];
+        let m2 = msg.clone();
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 50_000];
+            b.recv(&mut buf).unwrap();
+            buf
+        });
+        a.send(&msg).unwrap();
+        assert_eq!(t.join().unwrap(), m2);
+        let st = a.status();
+        assert_eq!(st.live, 2, "{st:?}");
+        assert!(st.active_streams <= 2, "striping past the live count: {st:?}");
+        assert_eq!(st.preferred_active, 4, "intent must survive degradation");
+    }
+
+    #[test]
+    fn all_streams_dead_errors_without_reconnect() {
+        let (a, _b, kills) = mem_resilient_paths(2);
+        for k in &kills {
+            k.fire();
+        }
+        match a.send(&[1, 2, 3]) {
+            Err(MpwError::AllStreamsDead) => {}
+            other => panic!("expected AllStreamsDead, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn resilient_dynamic_messages() {
+        let (a, b, _kills) = mem_resilient_paths(2);
+        let t = std::thread::spawn(move || b.drecv().unwrap());
+        a.dsend(&[3u8; 12_345]).unwrap();
+        assert_eq!(t.join().unwrap(), vec![3u8; 12_345]);
+    }
+
+    #[test]
+    fn resilient_send_recv_full_duplex() {
+        let (a, b, _kills) = mem_resilient_paths(3);
+        let ma = vec![1u8; 70_000];
+        let mb = vec![2u8; 40_000];
+        let (ma2, mb2) = (ma.clone(), mb.clone());
+        let t = std::thread::spawn(move || {
+            let mut buf = vec![0u8; 70_000];
+            b.send_recv(&mb2, &mut buf).unwrap();
+            assert_eq!(buf, ma2);
+        });
+        let mut buf = vec![0u8; 40_000];
+        a.send_recv(&ma, &mut buf).unwrap();
+        assert_eq!(buf, mb);
+        t.join().unwrap();
+    }
+}

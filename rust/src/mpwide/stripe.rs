@@ -28,6 +28,24 @@ pub fn segments(len: usize, nstreams: usize) -> Vec<Range<usize>> {
     (0..nstreams).map(|i| segment(len, nstreams, i)).collect()
 }
 
+/// Split `buf` into the `nseg` disjoint mutable per-stream segments of
+/// [`segments`], in order (empty segments included, so indices line up
+/// with stream positions). Shared by the socket receive path and the
+/// resilient receive path so the split arithmetic cannot diverge.
+pub fn split_mut(buf: &mut [u8], nseg: usize) -> Vec<&mut [u8]> {
+    let segs = segments(buf.len(), nseg);
+    let mut out = Vec::with_capacity(nseg);
+    let mut rest = buf;
+    let mut consumed = 0usize;
+    for seg in segs {
+        let (head, tail) = rest.split_at_mut(seg.end - consumed);
+        consumed = seg.end;
+        rest = tail;
+        out.push(head);
+    }
+    out
+}
+
 /// Iterator over the chunk ranges of a single stream segment: each chunk is
 /// at most `chunk_size` bytes (the unit handed to one low-level tcp call).
 pub fn chunks(seg: Range<usize>, chunk_size: usize) -> impl Iterator<Item = Range<usize>> {
@@ -73,6 +91,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn split_mut_matches_segments() {
+        let mut buf: Vec<u8> = (0..=99).collect();
+        let parts = split_mut(&mut buf, 3);
+        assert_eq!(parts.len(), 3);
+        let segs = segments(100, 3);
+        for (part, seg) in parts.iter().zip(&segs) {
+            assert_eq!(part.len(), seg.len());
+            assert_eq!(part[0], seg.start as u8, "segment starts misaligned");
+        }
+        // empty segments are preserved so indices line up
+        let mut tiny = [1u8, 2];
+        let parts = split_mut(&mut tiny, 4);
+        assert_eq!(parts.iter().map(|p| p.len()).collect::<Vec<_>>(), vec![1, 1, 0, 0]);
     }
 
     #[test]

@@ -69,6 +69,42 @@ impl<T: Read + Write + Send> HalfDuplex for IoHalf<T> {
     }
 }
 
+/// Lock-free "close this transport now" handle for one stream.
+///
+/// The resilience layer fires it when it isolates a failed stream: for a
+/// TCP stream this is `shutdown(fd, SHUT_RDWR)` (which unblocks any
+/// reader parked in `recv` on either end and makes the peer's next
+/// operation fail fast), for the in-memory transport it poisons both
+/// direction channels. Firing must never take the stream's tx/rx locks —
+/// those may be held by the very reader the shutdown is meant to unblock.
+#[derive(Clone, Default)]
+pub struct KillSwitch(Option<Arc<dyn Fn() + Send + Sync>>);
+
+impl KillSwitch {
+    /// A switch that does nothing (transports with no kill support).
+    pub fn none() -> KillSwitch {
+        KillSwitch(None)
+    }
+
+    /// Wrap a closing action.
+    pub fn new(f: impl Fn() + Send + Sync + 'static) -> KillSwitch {
+        KillSwitch(Some(Arc::new(f)))
+    }
+
+    /// Force-close the underlying transport (idempotent, lock-free).
+    pub fn fire(&self) {
+        if let Some(f) = &self.0 {
+            f();
+        }
+    }
+}
+
+impl std::fmt::Debug for KillSwitch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KillSwitch").field("armed", &self.0.is_some()).finish()
+    }
+}
+
 /// A full-duplex stream: independently owned tx/rx halves plus transport
 /// metadata. Building block handed to [`super::path::Path`].
 pub struct StreamPair {
@@ -81,6 +117,8 @@ pub struct StreamPair {
     /// Raw fd when backed by a real socket — lets `set_window` adjust
     /// SO_SNDBUF/SO_RCVBUF after creation.
     fd: Option<i32>,
+    /// Force-close handle (resilience layer failure isolation).
+    kill: KillSwitch,
 }
 
 impl std::fmt::Debug for StreamPair {
@@ -96,12 +134,27 @@ impl StreamPair {
         let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
         let fd = stream.as_raw_fd();
         let rx = stream.try_clone()?;
-        Ok(StreamPair { tx: Box::new(stream), rx: Box::new(rx), peer, fd: Some(fd) })
+        let kill = KillSwitch::new(move || {
+            shutdown_fd(fd);
+        });
+        Ok(StreamPair { tx: Box::new(stream), rx: Box::new(rx), peer, fd: Some(fd), kill })
     }
 
     /// Raw socket fd when TCP-backed (None for in-memory transports).
     pub fn raw_fd(&self) -> Option<i32> {
         self.fd
+    }
+
+    /// The stream's force-close handle.
+    pub fn kill_switch(&self) -> KillSwitch {
+        self.kill.clone()
+    }
+
+    /// Decompose into `(tx, rx, fd, kill)` — used when installing the
+    /// pair into a path's stream slot (the metadata fields are private).
+    #[allow(clippy::type_complexity)]
+    pub fn into_parts(self) -> (Box<dyn HalfDuplex>, Box<dyn HalfDuplex>, Option<i32>, KillSwitch) {
+        (self.tx, self.rx, self.fd, self.kill)
     }
 
     /// Set the TCP window (both SO_SNDBUF and SO_RCVBUF) on the underlying
@@ -164,6 +217,9 @@ mod sockopt {
 
     pub use values::{SOL_SOCKET, SO_RCVBUF, SO_SNDBUF};
 
+    /// `SHUT_RDWR` has value 2 on every supported platform.
+    pub const SHUT_RDWR: c_int = 2;
+
     extern "C" {
         pub fn setsockopt(
             fd: c_int,
@@ -179,6 +235,7 @@ mod sockopt {
             value: *mut c_void,
             len: *mut SockLen,
         ) -> c_int;
+        pub fn shutdown(fd: c_int, how: c_int) -> c_int;
     }
 }
 
@@ -226,6 +283,25 @@ pub fn set_socket_window(_fd: i32, _bytes: usize) -> Result<Option<usize>> {
     Ok(None)
 }
 
+/// Force both directions of a raw socket closed (`shutdown(2)`), waking
+/// any reader blocked on it — on this end *and* on the peer. This is how
+/// stream death propagates: whichever side detects the failure first
+/// shuts the socket down, and the other side's next read/write fails
+/// promptly instead of hanging. Errors are ignored (the fd may already
+/// be closed).
+#[cfg(unix)]
+pub fn shutdown_fd(fd: i32) {
+    // SAFETY: shutdown on an invalid/closed fd returns EBADF/ENOTCONN,
+    // which we deliberately ignore; no memory is touched.
+    unsafe {
+        let _ = sockopt::shutdown(fd, sockopt::SHUT_RDWR);
+    }
+}
+
+/// Non-unix fallback: nothing to do.
+#[cfg(not(unix))]
+pub fn shutdown_fd(_fd: i32) {}
+
 /// Encode the per-stream hello: which path this stream belongs to and its
 /// index, so a listener can group concurrently arriving streams (possibly
 /// from several clients) into complete paths.
@@ -255,9 +331,30 @@ pub fn decode_hello(h: &[u8; HELLO_LEN]) -> Result<(u64, u16, u16)> {
 /// Connect one TCP stream with retry until `timeout` (endpoints of a
 /// distributed run start in arbitrary order, so the connecting side polls).
 pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
+    connect_retry_counted(addr, timeout).0
+}
+
+/// [`connect_retry`] that also reports how many connect attempts were
+/// made (diagnostics and the no-busy-spin regression tests: attempts are
+/// bounded by the exponential backoff, so a short timeout cannot burn a
+/// core no matter how fast each attempt fails).
+pub fn connect_retry_counted(addr: &str, timeout: Duration) -> (Result<TcpStream>, u32) {
     let deadline = Instant::now() + timeout;
     let mut delay = Duration::from_millis(10);
+    let mut attempts: u32 = 0;
+    let timed_out = || MpwError::ConnectTimeout {
+        endpoint: addr.to_string(),
+        seconds: timeout.as_secs_f64(),
+    };
     loop {
+        attempts += 1;
+        // Per-attempt connect budget: never poll past the caller's
+        // deadline (a 200 ms timeout must not block 5 s in one attempt).
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return (Err(timed_out()), attempts);
+        }
+        let per_attempt = remaining.min(Duration::from_secs(5));
         // Re-resolve each attempt: DNS may converge while we wait.
         let attempt = addr
             .to_socket_addrs()
@@ -265,33 +362,30 @@ pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
             .and_then(|mut it| it.next())
             .ok_or_else(|| MpwError::Protocol(format!("cannot resolve {addr}")));
         match attempt {
-            Ok(sa) => match TcpStream::connect_timeout(&sa, Duration::from_secs(5)) {
-                Ok(s) => return Ok(s),
+            Ok(sa) => match TcpStream::connect_timeout(&sa, per_attempt) {
+                Ok(s) => return (Ok(s), attempts),
                 Err(_) if Instant::now() < deadline => {}
                 Err(e) => {
-                    return Err(if Instant::now() >= deadline {
-                        MpwError::ConnectTimeout {
-                            endpoint: addr.to_string(),
-                            seconds: timeout.as_secs_f64(),
-                        }
+                    let err = if Instant::now() >= deadline {
+                        timed_out()
                     } else {
                         MpwError::Io(e)
-                    })
+                    };
+                    return (Err(err), attempts);
                 }
             },
             Err(e) => {
                 if Instant::now() >= deadline {
-                    return Err(e);
+                    return (Err(e), attempts);
                 }
             }
         }
         if Instant::now() >= deadline {
-            return Err(MpwError::ConnectTimeout {
-                endpoint: addr.to_string(),
-                seconds: timeout.as_secs_f64(),
-            });
+            return (Err(timed_out()), attempts);
         }
-        std::thread::sleep(delay);
+        // Exponential backoff between attempts: instantly-failing
+        // connects (dead port, unresolvable name) must sleep, not spin.
+        std::thread::sleep(delay.min(deadline.saturating_duration_since(Instant::now())));
         delay = (delay * 2).min(Duration::from_millis(500));
     }
 }
@@ -304,12 +398,26 @@ pub fn connect_retry(addr: &str, timeout: Duration) -> Result<TcpStream> {
 struct ChanInner {
     buf: std::collections::VecDeque<u8>,
     closed: bool,
+    /// Hard failure injected via [`KillSwitch`]: unlike a graceful close
+    /// (reader sees EOF), a killed channel fails loudly on both ends —
+    /// the in-memory analogue of a reset TCP connection.
+    killed: bool,
 }
 
 #[derive(Default)]
 struct Chan {
     inner: Mutex<ChanInner>,
     cv: Condvar,
+}
+
+impl Chan {
+    /// Poison the channel: pending and future reads/writes fail.
+    fn kill(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.killed = true;
+        g.closed = true;
+        self.cv.notify_all();
+    }
 }
 
 /// Writer half of an in-memory channel; marks the channel closed on drop.
@@ -320,6 +428,9 @@ pub struct MemReader(Arc<Chan>);
 impl Write for MemWriter {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
         let mut g = self.0.inner.lock().unwrap();
+        if g.killed {
+            return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "channel killed"));
+        }
         g.buf.extend(buf.iter());
         self.0.cv.notify_all();
         Ok(buf.len())
@@ -340,6 +451,12 @@ impl Read for MemReader {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
         let mut g = self.0.inner.lock().unwrap();
         loop {
+            if g.killed && g.buf.is_empty() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionAborted,
+                    "channel killed",
+                ));
+            }
             if !g.buf.is_empty() {
                 let n = buf.len().min(g.buf.len());
                 for b in buf.iter_mut().take(n) {
@@ -395,17 +512,26 @@ impl HalfDuplex for MemRx {
 pub fn mem_pair() -> (StreamPair, StreamPair) {
     let ab = Arc::new(Chan::default()); // a -> b
     let ba = Arc::new(Chan::default()); // b -> a
+    let kill = {
+        let (ab, ba) = (ab.clone(), ba.clone());
+        KillSwitch::new(move || {
+            ab.kill();
+            ba.kill();
+        })
+    };
     let a = StreamPair {
         tx: Box::new(MemTx(MemWriter(ab.clone()))),
         rx: Box::new(MemRx(MemReader(ba.clone()))),
         peer: "mem:b".into(),
         fd: None,
+        kill: kill.clone(),
     };
     let b = StreamPair {
         tx: Box::new(MemTx(MemWriter(ba))),
         rx: Box::new(MemRx(MemReader(ab))),
         peer: "mem:a".into(),
         fd: None,
+        kill,
     };
     (a, b)
 }
@@ -420,6 +546,17 @@ pub fn mem_path_pairs(n: usize) -> (Vec<StreamPair>, Vec<StreamPair>) {
         right.push(b);
     }
     (left, right)
+}
+
+/// Like [`mem_path_pairs`] but also returns each stream's [`KillSwitch`]
+/// so fault-injection tests can sever individual streams mid-transfer
+/// (both directions of both ends fail, like a reset TCP connection).
+pub fn mem_path_pairs_killable(
+    n: usize,
+) -> (Vec<StreamPair>, Vec<StreamPair>, Vec<KillSwitch>) {
+    let (left, right) = mem_path_pairs(n);
+    let kills = left.iter().map(|p| p.kill_switch()).collect();
+    (left, right, kills)
 }
 
 // ---------------------------------------------------------------------------
@@ -445,14 +582,31 @@ impl RawPathListener {
         self.listener.local_addr().map(|a| a.port()).unwrap_or(0)
     }
 
+    /// Accept one TCP connection and read its hello header. Building
+    /// block shared by [`RawPathListener::accept_streams`] (grouping
+    /// fresh streams into complete paths) and the resilience layer's
+    /// rejoin daemon (routing a reconnected stream back into its old
+    /// slot by uuid + index).
+    ///
+    /// The hello read is bounded by a 10 s timeout so a client that
+    /// connects and then goes silent cannot wedge the acceptor (and the
+    /// rejoin daemon's stop path) forever; the socket is restored to
+    /// blocking mode before being returned.
+    pub fn accept_hello(&mut self) -> Result<(TcpStream, u64, u16, u16)> {
+        let (mut s, _) = self.listener.accept()?;
+        s.set_read_timeout(Some(Duration::from_secs(10)))?;
+        let mut hello = [0u8; HELLO_LEN];
+        Read::read_exact(&mut s, &mut hello)?;
+        s.set_read_timeout(None)?;
+        let (uuid, idx, n) = decode_hello(&hello)?;
+        Ok((s, uuid, idx, n))
+    }
+
     /// Block until one complete path (all `nstreams` streams, ordered by
     /// stream index) has arrived; returns its streams and uuid.
     pub fn accept_streams(&mut self) -> Result<(Vec<StreamPair>, u64)> {
         loop {
-            let (mut s, _) = self.listener.accept()?;
-            let mut hello = [0u8; HELLO_LEN];
-            Read::read_exact(&mut s, &mut hello)?;
-            let (uuid, idx, n) = decode_hello(&hello)?;
+            let (s, uuid, idx, n) = self.accept_hello()?;
             let slot = self.pending.entry(uuid).or_insert_with(|| {
                 let mut v = Vec::with_capacity(n as usize);
                 v.resize_with(n as usize, || None);
@@ -481,22 +635,57 @@ impl RawPathListener {
 }
 
 /// Connect `nstreams` handshaken TCP streams to `host:port`, all tagged
-/// with a fresh path uuid.
+/// with a fresh path uuid. Returns the streams and the uuid (the
+/// resilience layer reuses the uuid to rejoin individual streams later).
 pub fn connect_streams(
     host: &str,
     port: u16,
     nstreams: usize,
     timeout: Duration,
-) -> Result<Vec<StreamPair>> {
+) -> Result<(Vec<StreamPair>, u64)> {
     let addr = format!("{host}:{port}");
     let uuid = fresh_uuid();
     let mut pairs = Vec::with_capacity(nstreams);
     for i in 0..nstreams {
+        // NOTE: deliberately *not* reconnect_stream — initial creation
+        // has no confirmation byte (accept_streams slots the stream
+        // silently); only the rejoin protocol acknowledges.
         let mut s = connect_retry(&addr, timeout)?;
         Write::write_all(&mut s, &encode_hello(uuid, i as u16, nstreams as u16))?;
         pairs.push(StreamPair::from_tcp(s)?);
     }
-    Ok(pairs)
+    Ok((pairs, uuid))
+}
+
+/// Byte the rejoin acceptor sends once it has slotted a reconnected
+/// stream back into its path (before any other traffic on the socket).
+pub const REJOIN_ACK: u8 = 0xA6;
+
+/// Connect a *single* stream to `addr` and handshake it as stream `idx`
+/// of the existing path `uuid` — the client half of the rejoin protocol.
+/// The listener side recognises the known uuid, slots the fresh socket
+/// back into the dead stream's position and confirms with a
+/// [`REJOIN_ACK`] byte; only then does this side report success. Without
+/// the confirmation, a connect into a listener with *no* rejoin daemon
+/// (or a rejected hello) would look like a completed rejoin and flap the
+/// stream between live and dead forever.
+pub fn reconnect_stream(
+    addr: &str,
+    uuid: u64,
+    idx: u16,
+    nstreams: u16,
+    timeout: Duration,
+) -> Result<StreamPair> {
+    let mut s = connect_retry(addr, timeout)?;
+    Write::write_all(&mut s, &encode_hello(uuid, idx, nstreams))?;
+    s.set_read_timeout(Some(timeout.max(Duration::from_millis(100))))?;
+    let mut ack = [0u8; 1];
+    Read::read_exact(&mut s, &mut ack)?;
+    s.set_read_timeout(None)?;
+    if ack[0] != REJOIN_ACK {
+        return Err(MpwError::Protocol(format!("bad rejoin ack {:#04x}", ack[0])));
+    }
+    StreamPair::from_tcp(s)
 }
 
 /// Generate a path uuid: time + pid + counter. Uniqueness only needs to
@@ -574,10 +763,11 @@ mod tests {
         let t = std::thread::spawn(move || {
             connect_streams("127.0.0.1", port, 3, Duration::from_secs(5)).unwrap()
         });
-        let (server_side, _uuid) = listener.accept_streams().unwrap();
-        let client_side = t.join().unwrap();
+        let (server_side, uuid) = listener.accept_streams().unwrap();
+        let (client_side, client_uuid) = t.join().unwrap();
         assert_eq!(server_side.len(), 3);
         assert_eq!(client_side.len(), 3);
+        assert_eq!(uuid, client_uuid, "both ends must agree on the path uuid");
     }
 
     #[test]
@@ -588,7 +778,7 @@ mod tests {
             connect_streams("127.0.0.1", port, 1, Duration::from_secs(5)).unwrap()
         });
         let (server_side, _) = listener.accept_streams().unwrap();
-        let client_side = t.join().unwrap();
+        let (client_side, _) = t.join().unwrap();
         let granted = client_side[0].set_window(1 << 20).unwrap();
         assert!(granted.is_some());
         assert!(granted.unwrap() > 0);
@@ -600,6 +790,76 @@ mod tests {
         // Port 1 on localhost is almost certainly closed; refused, not hang.
         let r = connect_retry("127.0.0.1:1", Duration::from_millis(200));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn connect_retry_backs_off_instead_of_spinning() {
+        // Connects to a dead port fail in microseconds; without backoff a
+        // 250 ms window would burn tens of thousands of attempts on one
+        // core. The exponential backoff (10 ms doubling, capped) bounds
+        // it to a handful.
+        let t0 = Instant::now();
+        let (r, attempts) = connect_retry_counted("127.0.0.1:1", Duration::from_millis(250));
+        assert!(r.is_err());
+        assert!(attempts <= 16, "busy-spun: {attempts} attempts in 250 ms");
+        assert!(t0.elapsed() < Duration::from_secs(3), "overshot the deadline");
+    }
+
+    #[test]
+    fn mem_kill_fails_both_ends() {
+        let (mut a, mut b) = mem_pair();
+        let kill = a.kill_switch();
+        a.tx.write_all(b"pre").unwrap();
+        kill.fire();
+        // buffered bytes still drain, then the reader sees a hard error
+        let mut pre = [0u8; 3];
+        b.rx.read_exact(&mut pre).unwrap();
+        assert_eq!(&pre, b"pre");
+        assert!(b.rx.read_exact(&mut [0u8; 1]).is_err(), "killed reader must fail");
+        assert!(a.tx.write_all(b"x").is_err(), "killed writer must fail");
+        assert!(b.tx.write_all(b"x").is_err(), "kill severs both directions");
+    }
+
+    #[test]
+    fn mem_kill_wakes_blocked_reader() {
+        let (a, mut b) = mem_pair();
+        let kill = a.kill_switch();
+        let t = std::thread::spawn(move || b.rx.read_exact(&mut [0u8; 8]));
+        std::thread::sleep(Duration::from_millis(20));
+        kill.fire();
+        let r = t.join().unwrap();
+        assert!(r.is_err(), "blocked reader must be woken with an error");
+        drop(a);
+    }
+
+    #[test]
+    fn reconnect_stream_requires_acceptor_confirmation() {
+        let mut listener = RawPathListener::bind("127.0.0.1:0").unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            reconnect_stream(
+                &format!("127.0.0.1:{port}"),
+                0xABCD,
+                1,
+                4,
+                Duration::from_secs(5),
+            )
+            .unwrap()
+        });
+        let (mut s, uuid, idx, n) = listener.accept_hello().unwrap();
+        assert_eq!((uuid, idx, n), (0xABCD, 1, 4));
+        Write::write_all(&mut s, &[REJOIN_ACK]).unwrap();
+        let _ = t.join().unwrap();
+        drop(s);
+
+        // an unconfirmed reconnect (acceptor closes without the ack byte)
+        // must report failure, not a phantom rejoin
+        let t = std::thread::spawn(move || {
+            reconnect_stream(&format!("127.0.0.1:{port}"), 0xABCD, 1, 4, Duration::from_secs(5))
+        });
+        let (s2, _, _, _) = listener.accept_hello().unwrap();
+        drop(s2);
+        assert!(t.join().unwrap().is_err());
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Fault injection for the simulated WAN: deterministic stream-level
+//! failure schedules driven by simulated time.
+//!
+//! The real resilience layer ([`crate::mpwide::resilience`]) reacts to
+//! socket errors; in the simulator the same *decisions* (isolate the
+//! stream, retry the in-flight message over survivors, clamp striping
+//! to the live count, re-absorb on rejoin) are driven by a
+//! [`FaultSchedule`] instead — a sorted list of down/up events per
+//! stream. Canned scenarios cover the cases the `resilience_wan` bench
+//! and the fault-injection tests exercise: a single-stream blackout, a
+//! full-path flap, and a flappy stream that keeps dying and rejoining.
+
+/// One stream-level event at a simulated time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// Stream `stream` dies at time `t` (seconds).
+    Down {
+        /// Event time, simulated seconds.
+        t: f64,
+        /// Stream index.
+        stream: usize,
+    },
+    /// Stream `stream` finishes rejoining at time `t`.
+    Up {
+        /// Event time, simulated seconds.
+        t: f64,
+        /// Stream index.
+        stream: usize,
+    },
+}
+
+impl FaultEvent {
+    /// Event time, simulated seconds.
+    pub fn time(&self) -> f64 {
+        match self {
+            FaultEvent::Down { t, .. } | FaultEvent::Up { t, .. } => *t,
+        }
+    }
+
+    /// Stream the event applies to.
+    pub fn stream(&self) -> usize {
+        match self {
+            FaultEvent::Down { stream, .. } | FaultEvent::Up { stream, .. } => *stream,
+        }
+    }
+}
+
+/// A deterministic, time-sorted fault schedule.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// No faults (the control case).
+    pub fn none() -> FaultSchedule {
+        FaultSchedule::default()
+    }
+
+    /// Build from explicit events (sorted by time internally).
+    pub fn new(mut events: Vec<FaultEvent>) -> FaultSchedule {
+        events.sort_by(|a, b| a.time().partial_cmp(&b.time()).unwrap());
+        FaultSchedule { events }
+    }
+
+    /// Single-stream blackout: `stream` dies at `from` and rejoins at
+    /// `until`.
+    pub fn blackout(stream: usize, from: f64, until: f64) -> FaultSchedule {
+        assert!(from < until, "blackout must have positive duration");
+        FaultSchedule::new(vec![
+            FaultEvent::Down { t: from, stream },
+            FaultEvent::Up { t: until, stream },
+        ])
+    }
+
+    /// Full-path flap: every stream of an `nstreams` path dies at `from`
+    /// and rejoins at `until`.
+    pub fn path_flap(nstreams: usize, from: f64, until: f64) -> FaultSchedule {
+        assert!(from < until, "flap must have positive duration");
+        let mut ev = Vec::with_capacity(2 * nstreams);
+        for s in 0..nstreams {
+            ev.push(FaultEvent::Down { t: from, stream: s });
+            ev.push(FaultEvent::Up { t: until, stream: s });
+        }
+        FaultSchedule::new(ev)
+    }
+
+    /// Flappy reconnect: `stream` dies every `period` seconds starting
+    /// at `from`, rejoining half a period later, `cycles` times.
+    pub fn flappy(stream: usize, from: f64, period: f64, cycles: usize) -> FaultSchedule {
+        assert!(period > 0.0, "flap period must be positive");
+        let mut ev = Vec::with_capacity(2 * cycles);
+        for c in 0..cycles {
+            let t0 = from + c as f64 * period;
+            ev.push(FaultEvent::Down { t: t0, stream });
+            ev.push(FaultEvent::Up { t: t0 + period / 2.0, stream });
+        }
+        FaultSchedule::new(ev)
+    }
+
+    /// True when the schedule has no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The sorted events.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// The first `Down` event in the open-closed interval `(t0, t1]`
+    /// whose stream is in `used` — the event that aborts a transfer
+    /// occupying that window.
+    pub fn first_down_in(&self, t0: f64, t1: f64, used: &[usize]) -> Option<FaultEvent> {
+        self.events
+            .iter()
+            .find(|e| {
+                matches!(e, FaultEvent::Down { .. })
+                    && e.time() > t0
+                    && e.time() <= t1
+                    && used.contains(&e.stream())
+            })
+            .copied()
+    }
+
+    /// The earliest `Up` event strictly after `t` (what a zero-live-path
+    /// send waits for).
+    pub fn next_up_after(&self, t: f64) -> Option<FaultEvent> {
+        self.events
+            .iter()
+            .find(|e| matches!(e, FaultEvent::Up { .. }) && e.time() > t)
+            .copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blackout_orders_events() {
+        let f = FaultSchedule::blackout(2, 5.0, 9.0);
+        assert_eq!(f.events().len(), 2);
+        assert_eq!(f.events()[0], FaultEvent::Down { t: 5.0, stream: 2 });
+        assert_eq!(f.events()[1], FaultEvent::Up { t: 9.0, stream: 2 });
+    }
+
+    #[test]
+    fn path_flap_covers_all_streams() {
+        let f = FaultSchedule::path_flap(4, 1.0, 2.0);
+        let downs = f.events().iter().filter(|e| matches!(e, FaultEvent::Down { .. })).count();
+        let ups = f.events().iter().filter(|e| matches!(e, FaultEvent::Up { .. })).count();
+        assert_eq!((downs, ups), (4, 4));
+        assert!(f.events().windows(2).all(|w| w[0].time() <= w[1].time()));
+    }
+
+    #[test]
+    fn flappy_alternates() {
+        let f = FaultSchedule::flappy(1, 0.5, 2.0, 3);
+        assert_eq!(f.events().len(), 6);
+        assert_eq!(f.events()[0].time(), 0.5);
+        assert_eq!(f.events()[1].time(), 1.5);
+        assert_eq!(f.events()[2].time(), 2.5);
+    }
+
+    #[test]
+    fn first_down_in_respects_window_and_streams() {
+        let f = FaultSchedule::blackout(2, 5.0, 9.0);
+        assert_eq!(f.first_down_in(0.0, 4.9, &[2]), None, "before the window");
+        assert_eq!(f.first_down_in(0.0, 6.0, &[0, 1]), None, "stream not in use");
+        let hit = f.first_down_in(0.0, 6.0, &[1, 2]).unwrap();
+        assert_eq!(hit, FaultEvent::Down { t: 5.0, stream: 2 });
+        assert_eq!(f.first_down_in(5.0, 9.0, &[2]), None, "t0 is exclusive");
+    }
+
+    #[test]
+    fn next_up_after_finds_recovery() {
+        let f = FaultSchedule::path_flap(2, 1.0, 3.0);
+        assert_eq!(f.next_up_after(1.5).unwrap().time(), 3.0);
+        assert!(f.next_up_after(3.0).is_none());
+    }
+}

@@ -23,11 +23,13 @@
 //! are calibrated; see [`profiles`] and EXPERIMENTS.md for the
 //! paper-vs-measured comparison.
 
+pub mod faults;
 pub mod link;
 pub mod network;
 pub mod simpath;
 pub mod tcp_model;
 
+pub use faults::{FaultEvent, FaultSchedule};
 pub use link::{profiles, Direction, LinkProfile};
 pub use network::{simulate_duplex, simulate_oneway, OneWayResult};
 pub use simpath::{AdaptiveSimPath, DriftingLink, LinkPhase, SimPath, SimTransferResult};

@@ -18,11 +18,12 @@
 
 use std::sync::Arc;
 
+use super::faults::{FaultEvent, FaultSchedule};
 use super::link::{Direction, LinkProfile};
 use super::network::{simulate_duplex, simulate_oneway, OneWayResult};
 use super::tcp_model::TcpFlow;
 use crate::mpwide::adapt::{AdaptiveController, TuneMode, TuningState};
-use crate::mpwide::{stripe, PathConfig};
+use crate::mpwide::{stripe, MpwError, PathConfig};
 use crate::util::Rng;
 
 /// Default receiver window when the user neither tunes nor autotunes:
@@ -242,6 +243,14 @@ impl DriftingLink {
 /// adaptive mode) feeds the observed goodput to the
 /// [`AdaptiveController`], applying its decisions exactly like
 /// `Path::send` does on real sockets.
+///
+/// With a [`FaultSchedule`] attached ([`AdaptiveSimPath::with_faults`])
+/// the path also mirrors the resilience layer: a `Down` event that
+/// lands mid-transfer on a stream in use aborts the attempt (the time
+/// already spent is charged), the stream is isolated, striping clamps
+/// to the live count, and the message retries over the survivors. `Up`
+/// events model completed rejoins and restore the preferred striping
+/// width.
 #[derive(Debug)]
 pub struct AdaptiveSimPath {
     schedule: DriftingLink,
@@ -250,6 +259,12 @@ pub struct AdaptiveSimPath {
     controller: AdaptiveController,
     rwnd: f64,
     clock: f64,
+    faults: FaultSchedule,
+    alive: Vec<bool>,
+    /// Index of the next unapplied fault event.
+    applied: usize,
+    retries: u64,
+    rejoins: u64,
 }
 
 impl AdaptiveSimPath {
@@ -257,10 +272,32 @@ impl AdaptiveSimPath {
     /// the **phase-0** link (exactly the real path's behaviour: windows
     /// are autotuned once, against the conditions seen at creation).
     pub fn new(schedule: DriftingLink, cfg: PathConfig) -> AdaptiveSimPath {
+        AdaptiveSimPath::with_faults(schedule, cfg, FaultSchedule::none())
+    }
+
+    /// Create with stream-fault injection.
+    pub fn with_faults(
+        schedule: DriftingLink,
+        cfg: PathConfig,
+        faults: FaultSchedule,
+    ) -> AdaptiveSimPath {
         let rwnd = SimPath::new(schedule.at(0.0).clone(), cfg.clone()).rwnd();
         let tuning = Arc::new(TuningState::from_config(&cfg));
         let controller = AdaptiveController::new(cfg.adapt.clone(), cfg.nstreams);
-        AdaptiveSimPath { schedule, cfg, tuning, controller, rwnd, clock: 0.0 }
+        let alive = vec![true; cfg.nstreams];
+        AdaptiveSimPath {
+            schedule,
+            cfg,
+            tuning,
+            controller,
+            rwnd,
+            clock: 0.0,
+            faults,
+            alive,
+            applied: 0,
+            retries: 0,
+            rejoins: 0,
+        }
     }
 
     /// The live tuning knobs (set the initial active count here to model
@@ -274,42 +311,144 @@ impl AdaptiveSimPath {
         self.clock
     }
 
+    /// Transfers aborted by a mid-flight stream death (and retried).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Streams re-absorbed after an `Up` event.
+    pub fn rejoins(&self) -> u64 {
+        self.rejoins
+    }
+
+    /// Streams currently able to carry traffic.
+    pub fn live_streams(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
     /// Advance the clock without traffic (compute phases between
     /// exchanges).
     pub fn advance(&mut self, seconds: f64) {
         self.clock += seconds.max(0.0);
     }
 
+    /// Apply every fault event at or before the current clock, mirroring
+    /// `Path::mark_stream_dead` / `Path::reinstall_stream`.
+    fn apply_faults(&mut self) {
+        while self.applied < self.faults.events().len()
+            && self.faults.events()[self.applied].time() <= self.clock
+        {
+            let ev = self.faults.events()[self.applied];
+            self.applied += 1;
+            let s = ev.stream();
+            if s >= self.alive.len() {
+                continue;
+            }
+            match ev {
+                FaultEvent::Down { .. } => {
+                    if self.alive[s] {
+                        self.alive[s] = false;
+                        self.on_health_change();
+                    }
+                }
+                FaultEvent::Up { .. } => {
+                    if !self.alive[s] {
+                        self.alive[s] = true;
+                        self.rejoins += 1;
+                        self.on_health_change();
+                    }
+                }
+            }
+        }
+    }
+
+    /// Degraded-mode striping: clamp the effective active count to the
+    /// live count and cap the controller's hill climb, exactly like the
+    /// socket path does.
+    fn on_health_change(&mut self) {
+        let live = self.live_streams().max(1);
+        self.tuning.apply_live_limit(live);
+        self.controller.set_ceiling(live);
+    }
+
     /// Simulate one full-duplex `MPW_SendRecv` of `bytes` per direction
     /// under the link profile in force *now*, then let the controller
-    /// react to the observed goodput.
+    /// react to the observed goodput. Panics if every stream is dead
+    /// with no recovery scheduled; use [`AdaptiveSimPath::try_send_recv`]
+    /// for fault schedules that may never recover.
     pub fn send_recv(&mut self, bytes: u64, seed: u64) -> SimTransferResult {
-        let link = self.schedule.at(self.clock).clone();
-        let active = self.tuning.active_streams().clamp(1, self.cfg.nstreams);
-        let chunk = self.tuning.chunk();
-        let pacing = self.tuning.pacing();
-        let mut rng = Rng::new(seed);
-        let rwnd = self.rwnd;
-        let mk_flows = || -> Vec<TcpFlow> {
-            stripe::segments(bytes as usize, active)
-                .into_iter()
-                .map(|seg| TcpFlow::new(seg.len() as f64, rwnd, pacing))
-                .collect()
-        };
-        let mut ab = mk_flows();
-        let mut ba = mk_flows();
-        let (ra, rb) = simulate_duplex(&mut ab, &mut ba, &link, &mut rng);
-        let call_overhead =
-            stripe::call_count(bytes as usize, active, chunk) as f64 * PER_CALL_OVERHEAD;
-        let res = SimTransferResult { ab: ra, ba: rb, rwnd: self.rwnd, call_overhead };
-        self.clock += res.ab.seconds.max(res.ba.seconds) + call_overhead;
-        if self.tuning.mode() == TuneMode::Adaptive {
-            let snapshot = self.tuning.snapshot();
-            let seconds = res.ab.seconds + call_overhead;
-            let decision = self.controller.observe(bytes as usize, seconds, &snapshot);
-            self.tuning.apply(&decision);
+        self.try_send_recv(bytes, seed)
+            .expect("all simulated streams dead with no recovery scheduled")
+    }
+
+    /// [`AdaptiveSimPath::send_recv`] with explicit failure: returns
+    /// `AllStreamsDead` when the whole path is down and the schedule has
+    /// no later `Up` event to wait for.
+    pub fn try_send_recv(
+        &mut self,
+        bytes: u64,
+        seed: u64,
+    ) -> crate::mpwide::Result<SimTransferResult> {
+        let mut seed = seed;
+        // Simulated time lost to aborted attempts and zero-live waits;
+        // charged against this exchange's goodput observation.
+        let mut waste = 0.0f64;
+        loop {
+            self.apply_faults();
+            let live: Vec<usize> =
+                (0..self.cfg.nstreams).filter(|&i| self.alive[i]).collect();
+            if live.is_empty() {
+                match self.faults.next_up_after(self.clock) {
+                    Some(up) => {
+                        // a full-path flap: the resilient send blocks in
+                        // wait_for_any_live until the first rejoin
+                        waste += up.time() - self.clock;
+                        self.clock = up.time();
+                        continue;
+                    }
+                    None => return Err(MpwError::AllStreamsDead),
+                }
+            }
+            let active =
+                self.tuning.active_streams().clamp(1, self.cfg.nstreams).min(live.len());
+            let used: Vec<usize> = live[..active].to_vec();
+            let chunk = self.tuning.chunk();
+            let pacing = self.tuning.pacing();
+            let link = self.schedule.at(self.clock).clone();
+            let rwnd = self.rwnd;
+            let mk_flows = || -> Vec<TcpFlow> {
+                stripe::segments(bytes as usize, active)
+                    .into_iter()
+                    .map(|seg| TcpFlow::new(seg.len() as f64, rwnd, pacing))
+                    .collect()
+            };
+            let mut ab = mk_flows();
+            let mut ba = mk_flows();
+            let mut rng = Rng::new(seed);
+            // decorrelate retry attempts without wall-clock entropy
+            seed = seed.wrapping_mul(0x5851_F42D_4C95_7F2D).wrapping_add(0x9E37_79B9);
+            let (ra, rb) = simulate_duplex(&mut ab, &mut ba, &link, &mut rng);
+            let call_overhead =
+                stripe::call_count(bytes as usize, active, chunk) as f64 * PER_CALL_OVERHEAD;
+            let d = ra.seconds.max(rb.seconds) + call_overhead;
+            if let Some(ev) = self.faults.first_down_in(self.clock, self.clock + d, &used) {
+                // a stream in use died mid-transfer: the attempt aborts at
+                // the event and the message retries over the survivors
+                waste += ev.time() - self.clock;
+                self.clock = ev.time();
+                self.retries += 1;
+                continue;
+            }
+            let res = SimTransferResult { ab: ra, ba: rb, rwnd: self.rwnd, call_overhead };
+            self.clock += d;
+            if self.tuning.mode() == TuneMode::Adaptive {
+                let snapshot = self.tuning.snapshot();
+                let seconds = res.ab.seconds + call_overhead + waste;
+                let decision = self.controller.observe(bytes as usize, seconds, &snapshot);
+                self.tuning.apply(&decision);
+            }
+            return Ok(res);
         }
-        res
     }
 }
 

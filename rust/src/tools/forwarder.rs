@@ -15,10 +15,9 @@
 
 use std::time::Duration;
 
-use crate::mpwide::errors::{MpwError, Result};
+use crate::mpwide::errors::Result;
 use crate::mpwide::path::{Path, PathListener};
 use crate::mpwide::relay::RelayStats;
-use crate::mpwide::transport::HalfDuplex;
 use crate::mpwide::PathConfig;
 
 /// Forwarder configuration.
@@ -53,78 +52,15 @@ pub fn run(listener: &mut PathListener, cfg: &ForwarderConfig) -> Result<RelaySt
 }
 
 /// Like [`crate::mpwide::relay::relay`] but optionally delaying each
-/// forwarded batch by `delay` (one-way propagation emulation).
+/// forwarded batch by `delay` (one-way propagation emulation). Thin
+/// wrapper over [`crate::mpwide::relay::relay_delayed`], so it shares
+/// the relay's dead-leg semantics: a hard stream error tears both paths
+/// down (unblocking the sibling pumps) and surfaces as
+/// [`crate::mpwide::MpwError::RelayBroken`] with the partial totals,
+/// instead of the forwarder hanging forever on the healthy leg's idle
+/// streams.
 pub fn relay_with_delay(a: &Path, b: &Path, delay: Option<Duration>) -> Result<RelayStats> {
-    if a.nstreams() != b.nstreams() {
-        return Err(MpwError::Config(format!(
-            "forwarder requires equal stream counts ({} vs {})",
-            a.nstreams(),
-            b.nstreams()
-        )));
-    }
-    let n = a.nstreams();
-    std::thread::scope(|scope| -> Result<RelayStats> {
-        let mut fwd = Vec::with_capacity(n);
-        let mut bwd = Vec::with_capacity(n);
-        for i in 0..n {
-            let (sa, sb) = (&a.streams[i], &b.streams[i]);
-            fwd.push(scope.spawn(move || pump_delayed(sa, sb, delay)));
-            bwd.push(scope.spawn(move || pump_delayed(sb, sa, delay)));
-        }
-        let mut stats = RelayStats { a_to_b: 0, b_to_a: 0 };
-        for h in fwd {
-            stats.a_to_b +=
-                h.join().map_err(|_| MpwError::WorkerPanic("forwarder fwd".into()))??;
-        }
-        for h in bwd {
-            stats.b_to_a +=
-                h.join().map_err(|_| MpwError::WorkerPanic("forwarder bwd".into()))??;
-        }
-        Ok(stats)
-    })
-}
-
-fn pump_delayed(
-    src: &crate::mpwide::path::StreamSlot,
-    dst: &crate::mpwide::path::StreamSlot,
-    delay: Option<Duration>,
-) -> Result<u64> {
-    let mut buf = vec![0u8; crate::mpwide::relay::RELAY_BUF];
-    let mut total = 0u64;
-    loop {
-        let n = {
-            let mut rx = src.rx.lock().unwrap();
-            match rx.read_some(&mut buf) {
-                Ok(0) => break,
-                Ok(n) => n,
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::ConnectionReset
-                        || e.kind() == std::io::ErrorKind::BrokenPipe =>
-                {
-                    break
-                }
-                Err(e) => return Err(e.into()),
-            }
-        };
-        if let Some(d) = delay {
-            std::thread::sleep(d);
-        }
-        let mut tx = dst.tx.lock().unwrap();
-        tx.pacer.acquire(n);
-        match HalfDuplex::write_all(&mut *tx.w, &buf[..n]) {
-            Ok(()) => {}
-            Err(e)
-                if e.kind() == std::io::ErrorKind::ConnectionReset
-                    || e.kind() == std::io::ErrorKind::BrokenPipe =>
-            {
-                break
-            }
-            Err(e) => return Err(e.into()),
-        }
-        tx.w.flush()?;
-        total += n as u64;
-    }
-    Ok(total)
+    crate::mpwide::relay::relay_delayed(a, b, delay)
 }
 
 /// Spawn a forwarder on a fresh port; returns the port and the join
@@ -160,7 +96,7 @@ mod tests {
         let (port, fwd) = spawn(2, None).unwrap();
         let t_a = std::thread::spawn(move || {
             let p = Path::connect("127.0.0.1", port, client_cfg(2)).unwrap();
-            p.send(&vec![7u8; 10_000]).unwrap();
+            p.send(&[7u8; 10_000]).unwrap();
             let mut buf = vec![0u8; 8];
             p.recv(&mut buf).unwrap();
             buf

@@ -28,7 +28,11 @@ pub struct TestRow {
 
 /// Master side: run the suite over an established path. `reps_for` maps
 /// a size to a repetition count (fewer reps for huge messages).
-pub fn run_master(path: &Path, sizes: &[usize], reps_for: impl Fn(usize) -> usize) -> Result<Vec<TestRow>> {
+pub fn run_master(
+    path: &Path,
+    sizes: &[usize],
+    reps_for: impl Fn(usize) -> usize,
+) -> Result<Vec<TestRow>> {
     let mut rows = Vec::with_capacity(sizes.len());
     // announce the plan: count, then (size, reps) pairs
     let mut plan = Vec::new();

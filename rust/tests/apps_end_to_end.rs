@@ -78,7 +78,8 @@ fn distributed_momentum_is_conserved() {
         }
     }
     for d in 0..3 {
-        assert!((total[d] - initial[d]).abs() < 5e-3, "momentum drift in {d}: {total:?} vs {initial:?}");
+        let drift = (total[d] - initial[d]).abs();
+        assert!(drift < 5e-3, "momentum drift in {d}: {total:?} vs {initial:?}");
     }
 }
 

@@ -91,13 +91,13 @@ fn datagather_runs_while_simulation_exchanges() {
         s.spawn(move || {
             let mut buf = vec![0u8; 50_000];
             for _ in 0..20 {
-                sim_server.send_recv(&vec![1u8; 50_000], &mut buf).unwrap();
+                sim_server.send_recv(&[1u8; 50_000], &mut buf).unwrap();
             }
         });
         s.spawn(move || {
             let mut buf = vec![0u8; 50_000];
             for _ in 0..20 {
-                sim_client.send_recv(&vec![2u8; 50_000], &mut buf).unwrap();
+                sim_client.send_recv(&[2u8; 50_000], &mut buf).unwrap();
             }
         });
         // the gather, concurrently

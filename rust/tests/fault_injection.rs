@@ -1,0 +1,176 @@
+//! Integration: netsim fault injection — stream blackout mid-send,
+//! full-path flap, flap with no recovery, flappy reconnect, and the
+//! adaptive controller's live-count ceiling. Mirrors the scenarios the
+//! `resilience_wan` bench measures, with hard assertions suitable for
+//! `cargo test`.
+
+use mpwide::mpwide::adapt::TuneMode;
+use mpwide::mpwide::{MpwError, PathConfig};
+use mpwide::netsim::{profiles, AdaptiveSimPath, DriftingLink, FaultSchedule, LinkProfile};
+
+const MB: u64 = 1024 * 1024;
+const MBF: f64 = 1024.0 * 1024.0;
+
+/// Amsterdam–Tokyo geometry with the stochastic terms zeroed so the
+/// stream-count arithmetic is exact (same construction as the
+/// `resilience_wan` bench).
+fn clean_link() -> LinkProfile {
+    let mut link = profiles::amsterdam_tokyo();
+    link.loss_ab = 0.0;
+    link.loss_ba = 0.0;
+    link.bg_ab = 0.0;
+    link.bg_ba = 0.0;
+    link.jitter = 0.0;
+    link.duplex_penalty = 0.0;
+    link
+}
+
+fn sim(nstreams: usize, faults: FaultSchedule) -> AdaptiveSimPath {
+    let mut cfg = PathConfig::with_streams(nstreams);
+    cfg.tcp_window = Some(8 << 20);
+    cfg.pacing_rate = Some(2.0 * MBF); // deterministic per-stream rate
+    cfg.resilience.enabled = true;
+    cfg.resilience.reconnect.enabled = true; // rejoin (Up events) needs it
+    AdaptiveSimPath::with_faults(DriftingLink::steady(clean_link()), cfg, faults)
+}
+
+/// Drive `count` exchanges; returns per-exchange (start, end) times.
+fn drive(p: &mut AdaptiveSimPath, count: usize, message: u64) -> Vec<(f64, f64)> {
+    let mut out = Vec::with_capacity(count);
+    let mut seed = 4_000;
+    for _ in 0..count {
+        let t0 = p.clock();
+        p.send_recv(message, seed);
+        seed += 1;
+        out.push((t0, p.clock()));
+    }
+    out
+}
+
+#[test]
+fn kill_one_of_four_mid_send_completes_at_three_quarters_goodput() {
+    let message = 32 * MB;
+    // Baseline: healthy 4-stream exchanges.
+    let mut base = sim(4, FaultSchedule::none());
+    let base_times = drive(&mut base, 8, message);
+    let base_goodput = message as f64 / (base_times[5].1 - base_times[5].0);
+
+    // Fault: stream 2 dies inside the 4th exchange and never returns.
+    let t_kill = base_times[3].0 + 0.5 * (base_times[3].1 - base_times[3].0);
+    let mut faulty = sim(4, FaultSchedule::blackout(2, t_kill, 1e9));
+    let times = drive(&mut faulty, 8, message);
+
+    assert!(faulty.retries() >= 1, "the kill must land mid-transfer");
+    assert_eq!(faulty.live_streams(), 3);
+    // every message completed (drive would have panicked otherwise); the
+    // steady degraded goodput keeps >= (N-1)/N of baseline
+    let degraded_goodput = message as f64 / (times[6].1 - times[6].0);
+    let floor = 3.0 / 4.0;
+    assert!(
+        degraded_goodput >= floor * base_goodput,
+        "degraded {:.2} MB/s < {floor} x baseline {:.2} MB/s",
+        degraded_goodput / MBF,
+        base_goodput / MBF
+    );
+}
+
+#[test]
+fn full_path_flap_stalls_then_recovers() {
+    let message = 16 * MB;
+    let mut healthy = sim(4, FaultSchedule::none());
+    let per_exchange = {
+        let t = drive(&mut healthy, 2, message);
+        t[1].1 - t[1].0
+    };
+    // all four streams die inside the second exchange; rejoin 30 s later
+    let flap_at = 1.5 * per_exchange;
+    let back_at = flap_at + 30.0;
+    let mut p = sim(4, FaultSchedule::path_flap(4, flap_at, back_at));
+    let times = drive(&mut p, 3, message);
+    assert!(p.retries() >= 1);
+    assert_eq!(p.rejoins(), 4, "all streams rejoin at the flap end");
+    assert_eq!(p.live_streams(), 4);
+    // the interrupted exchange could only finish after the rejoin
+    assert!(
+        times[1].1 >= back_at,
+        "exchange 1 finished at {:.1}s, before the {back_at:.1}s recovery",
+        times[1].1
+    );
+    // post-recovery exchanges run at full speed again
+    let post = times[2].1 - times[2].0;
+    assert!(post <= 1.2 * per_exchange, "post-flap exchange too slow: {post:.2}s");
+}
+
+#[test]
+fn flap_without_recovery_errors_all_streams_dead() {
+    let message = 16 * MB;
+    let faults = FaultSchedule::new(vec![
+        mpwide::netsim::FaultEvent::Down { t: 0.5, stream: 0 },
+        mpwide::netsim::FaultEvent::Down { t: 0.5, stream: 1 },
+    ]);
+    let mut p = sim(2, faults);
+    let mut seed = 1;
+    let mut saw_error = false;
+    for _ in 0..4 {
+        match p.try_send_recv(message, seed) {
+            Ok(_) => seed += 1,
+            Err(MpwError::AllStreamsDead) => {
+                saw_error = true;
+                break;
+            }
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+    assert!(saw_error, "a dead path with no scheduled recovery must error");
+}
+
+#[test]
+fn flappy_reconnect_completes_everything_and_reabsorbs() {
+    let message = 16 * MB;
+    let mut p = sim(4, FaultSchedule::flappy(1, 2.0, 10.0, 3));
+    let times = drive(&mut p, 12, message);
+    assert_eq!(times.len(), 12, "every exchange must complete");
+    assert!(p.rejoins() >= 2, "flappy stream must rejoin repeatedly: {}", p.rejoins());
+    // drive past the last Up event so the stream is re-absorbed
+    while p.clock() < 2.0 + 2.0 * 10.0 + 5.0 + 1.0 {
+        p.send_recv(message, 99);
+    }
+    assert_eq!(p.live_streams(), 4, "flappy stream must end re-absorbed");
+    assert_eq!(p.tuning().active_streams(), 4);
+}
+
+#[test]
+fn adaptive_controller_respects_live_ceiling_and_reclimbs() {
+    let message = 32 * MB;
+    let mut cfg = PathConfig::with_streams(8);
+    cfg.tcp_window = Some(8 << 20);
+    cfg.pacing_rate = Some(2.0 * MBF);
+    cfg.adapt.mode = TuneMode::Adaptive;
+    cfg.adapt.cooldown = 0;
+    let down_at = 30.0;
+    let up_at = 200.0;
+    let mut p = AdaptiveSimPath::with_faults(
+        DriftingLink::steady(clean_link()),
+        cfg,
+        FaultSchedule::blackout(5, down_at, up_at),
+    );
+    let mut seed = 7;
+    while p.clock() < up_at - 1.0 {
+        p.send_recv(message, seed);
+        seed += 1;
+        if p.clock() > down_at {
+            assert!(
+                p.tuning().active_streams() <= 7,
+                "striping over a dead stream at t={:.1}",
+                p.clock()
+            );
+        }
+    }
+    // after the rejoin the ceiling lifts; the controller may climb again
+    while p.clock() < up_at + 100.0 {
+        p.send_recv(message, seed);
+        seed += 1;
+    }
+    assert_eq!(p.live_streams(), 8);
+    assert!(p.tuning().active_streams() >= 7, "{}", p.tuning().active_streams());
+}

@@ -1,10 +1,13 @@
 //! Integration: forwarder topologies — single hop, a chain of two
 //! forwarders (the multi-forwarder deployments of Groen et al. 2011),
-//! delay injection, and multi-stream relays.
+//! delay injection, multi-stream relays, and relay behaviour when one
+//! leg's path dies mid-pump.
 
 use std::time::{Duration, Instant};
 
-use mpwide::mpwide::{Path, PathConfig};
+use mpwide::mpwide::relay::relay;
+use mpwide::mpwide::transport::{mem_path_pairs, mem_path_pairs_killable};
+use mpwide::mpwide::{MpwError, Path, PathConfig};
 use mpwide::tools::forwarder;
 use mpwide::util::Rng;
 
@@ -83,17 +86,54 @@ fn forwarder_delay_affects_oneway_latency() {
 }
 
 #[test]
+fn relay_returns_partial_stats_when_one_leg_dies_mid_pump() {
+    // Regression: a hard stream error on one leg used to leave the other
+    // pumps parked in reads forever — relay() hung instead of reporting.
+    let (l, fl, kills) = mem_path_pairs_killable(3);
+    let (fr, r) = mem_path_pairs(3);
+    let left = Path::from_pairs(l, cfg(3)).unwrap();
+    let fwd_l = Path::from_pairs(fl, cfg(3)).unwrap();
+    let fwd_r = Path::from_pairs(fr, cfg(3)).unwrap();
+    let right = Path::from_pairs(r, cfg(3)).unwrap();
+
+    let t_relay = std::thread::spawn(move || relay(&fwd_l, &fwd_r));
+    let t_right = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 30_000];
+        right.recv(&mut buf).unwrap();
+        buf
+    });
+    let mut msg = vec![0u8; 30_000];
+    Rng::new(23).fill_bytes(&mut msg);
+    left.send(&msg).unwrap();
+    assert_eq!(t_right.join().unwrap(), msg, "healthy relay must still forward");
+
+    // sever one stream of the left leg while the relay idles on it; the
+    // relay must notice, tear down and return — within a bounded time
+    let t0 = Instant::now();
+    kills[2].fire();
+    match t_relay.join().unwrap() {
+        Err(MpwError::RelayBroken { a_to_b, b_to_a, .. }) => {
+            let hdr = mpwide::mpwide::path::ACTIVE_HEADER_LEN as u64;
+            assert_eq!(a_to_b, 30_000 + hdr, "partial stats must be preserved");
+            assert_eq!(b_to_a, 0);
+        }
+        other => panic!("expected RelayBroken, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "relay hung on the dead leg");
+}
+
+#[test]
 fn forwarder_full_duplex_under_delay() {
     let (port, _fwd) = forwarder::spawn(2, Some(Duration::from_millis(3))).unwrap();
     let t_b = std::thread::spawn(move || {
         let p = Path::connect("127.0.0.1", port, cfg(2)).unwrap();
         let mut buf = vec![0u8; 100_000];
-        p.send_recv(&vec![5u8; 60_000], &mut buf).unwrap();
+        p.send_recv(&[5u8; 60_000], &mut buf).unwrap();
         assert_eq!(buf, vec![4u8; 100_000]);
     });
     let a = Path::connect("127.0.0.1", port, cfg(2)).unwrap();
     let mut buf = vec![0u8; 60_000];
-    a.send_recv(&vec![4u8; 100_000], &mut buf).unwrap();
+    a.send_recv(&[4u8; 100_000], &mut buf).unwrap();
     assert_eq!(buf, vec![5u8; 60_000]);
     t_b.join().unwrap();
 }

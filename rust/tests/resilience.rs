@@ -1,0 +1,208 @@
+//! Integration: fault-tolerant paths over real sockets and the
+//! in-memory transport — stream failure detection, degraded-mode
+//! striping, automatic rejoin (reconnect monitor + rejoin daemon), and
+//! the path-status surface.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpwide::mpwide::resilience::connect_with_rejoin;
+use mpwide::mpwide::transport::mem_path_pairs_killable;
+use mpwide::mpwide::{MpwError, Path, PathConfig, PathListener};
+use mpwide::util::Rng;
+
+fn resilient_cfg(n: usize) -> PathConfig {
+    let mut cfg = PathConfig::with_streams(n);
+    cfg.autotune = false;
+    cfg.chunk_size = 64 * 1024;
+    cfg.resilience.enabled = true;
+    cfg
+}
+
+fn rejoin_cfg(n: usize) -> PathConfig {
+    let mut cfg = resilient_cfg(n);
+    cfg.resilience.reconnect.enabled = true;
+    cfg.resilience.reconnect.base_delay = Duration::from_millis(10);
+    cfg.resilience.reconnect.connect_timeout = Duration::from_secs(2);
+    cfg.resilience.reconnect.rejoin_wait = Duration::from_secs(10);
+    cfg
+}
+
+fn wait_for_live(path: &Path, want: usize, timeout: Duration) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if path.status().live >= want {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+#[test]
+fn tcp_stream_death_rejoin_and_reabsorb() {
+    let cfg = rejoin_cfg(4);
+    let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+    let port = listener.port();
+
+    const LEN: usize = 1 << 20;
+    let client = std::thread::spawn(move || {
+        let (path, _monitor) = connect_with_rejoin("127.0.0.1", port, cfg).unwrap();
+        let mut msg = vec![0u8; LEN];
+        for i in 0..3u64 {
+            Rng::new(100 + i).fill_bytes(&mut msg);
+            path.send(&msg).unwrap();
+        }
+        // the monitor must re-establish the injected-dead stream
+        assert!(
+            wait_for_live(&path, 4, Duration::from_secs(10)),
+            "client never re-absorbed the stream: {:?}",
+            path.status()
+        );
+        Rng::new(103).fill_bytes(&mut msg);
+        path.send(&msg).unwrap();
+        path.status()
+    });
+
+    let server: Arc<Path> = listener.accept_path_arc().unwrap();
+    let daemon = listener.into_rejoin_daemon();
+    let mut buf = vec![0u8; LEN];
+    let mut expect = vec![0u8; LEN];
+
+    // message 0 over a fully healthy path
+    server.recv(&mut buf).unwrap();
+    Rng::new(100).fill_bytes(&mut expect);
+    assert_eq!(buf, expect);
+
+    // sever stream 1 server-side: the shutdown propagates to the client,
+    // whose monitor redials; the daemon slots the socket back in
+    server.inject_stream_failure(1).unwrap();
+    assert_eq!(server.status().live, 3);
+
+    for i in 1..3u64 {
+        server.recv(&mut buf).unwrap();
+        Rng::new(100 + i).fill_bytes(&mut expect);
+        assert_eq!(buf, expect, "message {i} corrupted during degradation");
+    }
+
+    assert!(
+        wait_for_live(&server, 4, Duration::from_secs(10)),
+        "server never saw the rejoin: {:?}",
+        server.status()
+    );
+    let st = server.status();
+    assert_eq!(st.rejoined, 1, "{st:?}");
+    assert!(st.dead.is_empty(), "{st:?}");
+
+    // message 3 arrives over the re-absorbed full stripe set
+    server.recv(&mut buf).unwrap();
+    Rng::new(103).fill_bytes(&mut expect);
+    assert_eq!(buf, expect, "post-rejoin message corrupted");
+
+    let client_status = client.join().unwrap();
+    assert_eq!(client_status.live, 4, "{client_status:?}");
+    assert_eq!(client_status.rejoined, 1, "{client_status:?}");
+    assert_eq!(
+        client_status.active_streams, 4,
+        "rejoined stream must be re-absorbed into striping: {client_status:?}"
+    );
+    drop(daemon);
+}
+
+#[test]
+fn tcp_resilient_path_with_autotune() {
+    // The creation-time autotuner must keep working when its probe
+    // traffic runs over the resilient framing.
+    let mut cfg = PathConfig::with_streams(2);
+    cfg.resilience.enabled = true;
+    cfg.autotune = true;
+    let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+    let port = listener.port();
+    let t = std::thread::spawn(move || {
+        let p = Path::connect("127.0.0.1", port, cfg).unwrap();
+        let msg = vec![3u8; 100_000];
+        p.send(&msg).unwrap();
+        p.barrier().unwrap();
+    });
+    let server = listener.accept_path().unwrap();
+    let mut buf = vec![0u8; 100_000];
+    server.recv(&mut buf).unwrap();
+    assert_eq!(buf, vec![3u8; 100_000]);
+    server.barrier().unwrap();
+    t.join().unwrap();
+}
+
+#[test]
+fn mem_degraded_send_recv_after_double_failure() {
+    let (l, r, kills) = mem_path_pairs_killable(4);
+    let cfg = resilient_cfg(4);
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    kills[0].fire(); // includes the initial control stream
+    kills[2].fire();
+    let mut msg = vec![0u8; 500_000];
+    Rng::new(9).fill_bytes(&mut msg);
+    let m2 = msg.clone();
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 500_000];
+        b.recv(&mut buf).unwrap();
+        (buf, b.status())
+    });
+    a.send(&msg).unwrap();
+    let (buf, bs) = t.join().unwrap();
+    assert_eq!(buf, m2);
+    assert_eq!(a.status().live, 2, "{:?}", a.status());
+    assert_eq!(bs.live, 2, "{bs:?}");
+}
+
+#[test]
+fn mem_all_dead_with_reconnect_times_out() {
+    let (l, _r, kills) = mem_path_pairs_killable(2);
+    let mut cfg = rejoin_cfg(2);
+    cfg.resilience.reconnect.rejoin_wait = Duration::from_millis(150);
+    let a = Path::from_pairs(l, cfg).unwrap();
+    for k in &kills {
+        k.fire();
+    }
+    let t0 = Instant::now();
+    match a.send(&[1, 2, 3]) {
+        Err(MpwError::AllStreamsDead) => {}
+        other => panic!("expected AllStreamsDead, got {other:?}"),
+    }
+    // no monitor is running (no remote endpoint on a mem path), so the
+    // send must give up after roughly rejoin_wait, not hang
+    assert!(t0.elapsed() < Duration::from_secs(5));
+}
+
+#[test]
+fn close_is_sticky_and_fails_fast() {
+    let (l, _r, _kills) = mem_path_pairs_killable(2);
+    let mut cfg = rejoin_cfg(2);
+    cfg.resilience.reconnect.rejoin_wait = Duration::from_secs(30); // must not be waited out
+    let a = Path::from_pairs(l, cfg).unwrap();
+    a.close();
+    assert!(a.is_closed());
+    let t0 = Instant::now();
+    match a.send(&[1, 2, 3]) {
+        Err(MpwError::AllStreamsDead) => {}
+        other => panic!("expected AllStreamsDead on a closed path, got {other:?}"),
+    }
+    // the closed flag gates the zero-live wait: no rejoin_wait stall
+    assert!(t0.elapsed() < Duration::from_secs(5), "closed path waited for rejoin");
+}
+
+#[test]
+fn status_reports_preferred_vs_effective_striping() {
+    let (l, _r, kills) = mem_path_pairs_killable(3);
+    let a = Path::from_pairs(l, resilient_cfg(3)).unwrap();
+    let st = a.status();
+    assert_eq!((st.nstreams, st.live, st.active_streams), (3, 3, 3));
+    assert!(st.resilient);
+    kills[1].fire();
+    a.inject_stream_failure(1).unwrap();
+    let st = a.status();
+    assert_eq!(st.live, 2);
+    assert_eq!(st.dead, vec![1]);
+    assert_eq!(st.active_streams, 2, "degraded clamp missing: {st:?}");
+    assert_eq!(st.preferred_active, 3, "intent lost: {st:?}");
+}

@@ -148,7 +148,10 @@ fn cli_cp_roundtrip_via_processes() {
     let bin = env!("CARGO_BIN_EXE_mpwide");
     let port = "16131";
     let mut server = std::process::Command::new(bin)
-        .args(["cp-serve", "--port", port, "--dir", dest.to_str().unwrap(), "--streams", "4", "--no-autotune"])
+        .args([
+            "cp-serve", "--port", port, "--dir", dest.to_str().unwrap(), "--streams", "4",
+            "--no-autotune",
+        ])
         .spawn()
         .unwrap();
     // client retries until the server listens (connect_retry handles it)
