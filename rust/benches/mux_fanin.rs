@@ -1,0 +1,193 @@
+//! **Experiment MX1 — channel fan-in over one shared striped path.**
+//!
+//! 32 concurrent logical channels (the "many clients / many couplings"
+//! deployment of §1.2–§1.3) share ONE 4-stream path whose per-stream
+//! software pacing models the London–Poznań WAN bottleneck (capacity
+//! split across the streams, as the autotuner would). The mux pump
+//! interleaves the channels round-robin with a 64 KiB chunk budget; the
+//! full resilient framing runs underneath, so the measured overhead is
+//! the real production stack: channel header + resilience frames +
+//! striping + vectored writes.
+//!
+//! Reported (and asserted, so CI catches mux regressions):
+//!   * **aggregate goodput** of the 32-way fan-in ≥ 70% of the
+//!     single-channel saturation figure over the same path (the mux tax
+//!     must stay small);
+//!   * **fairness**: at the mid-run snapshot, the max/min ratio of
+//!     per-channel bytes handed to the wire ≤ 3 (round-robin must hold
+//!     under contention);
+//!   * every channel's payload arrives complete.
+//!
+//! `--quick` (or BENCH_QUICK=1) runs a reduced grid for the CI
+//! bench-smoke job. Results are emitted as BENCH_mux_fanin.json.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpwide::benchlib::{banner, BenchJson, Table};
+use mpwide::mpwide::mux::{Channel, MuxConfig, MuxEndpoint};
+use mpwide::mpwide::transport::mem_path_pairs;
+use mpwide::mpwide::{Path, PathConfig};
+use mpwide::netsim::profiles;
+use mpwide::util::Rng;
+
+const MB: u64 = 1024 * 1024;
+const MBF: f64 = 1024.0 * 1024.0;
+const NSTREAMS: usize = 4;
+const NCHANNELS: u32 = 32;
+const CHUNK_BUDGET: usize = 64 * 1024;
+
+/// Build one muxed path pair: in-memory transport, per-stream pacing at
+/// the WAN link's fair share (the netsim London–Poznań profile), full
+/// resilient framing underneath the channels.
+fn endpoints(pace_per_stream: f64) -> (MuxEndpoint, MuxEndpoint) {
+    let mut cfg = PathConfig::with_streams(NSTREAMS);
+    cfg.autotune = false;
+    cfg.chunk_size = 1 << 20;
+    cfg.pacing_rate = Some(pace_per_stream);
+    cfg.resilience.enabled = true;
+    let (l, r) = mem_path_pairs(NSTREAMS);
+    let a = Arc::new(Path::from_pairs(l, cfg.clone()).expect("left path"));
+    let b = Arc::new(Path::from_pairs(r, cfg).expect("right path"));
+    let mux_cfg = MuxConfig { chunk_budget: CHUNK_BUDGET, high_water: 256 << 20 };
+    (
+        MuxEndpoint::start_cfg(a, mux_cfg.clone()).expect("mux cfg"),
+        MuxEndpoint::start_cfg(b, mux_cfg).expect("mux cfg"),
+    )
+}
+
+/// Message size every channel's byte budget is cut into (several
+/// messages per channel so queues stay saturated across the whole run).
+const MSG: usize = 256 * 1024;
+
+/// Drive `per_ch` bytes over each of `nch` channels (as `per_ch / MSG`
+/// messages, all queued up front so the pump rotation is saturated) and
+/// return (elapsed seconds, per-channel **sent-bytes** snapshot taken
+/// at ≥ 50% aggregate). Fairness is measured on the sender side:
+/// `sent_bytes` advances per budget-sized frame the pump hands to the
+/// wire, so the snapshot has chunk granularity — the receiver's
+/// delivered counter only moves per whole message, which would make a
+/// mid-run ratio meaningless.
+fn drive(nch: u32, per_ch: usize) -> (f64, Vec<u64>) {
+    assert_eq!(per_ch % MSG, 0, "per-channel bytes must be whole messages");
+    let msgs = per_ch / MSG;
+    let link = profiles::london_poznan();
+    let (a, b) = endpoints(link.capacity / NSTREAMS as f64);
+    let tx: Vec<Channel> = (0..nch).map(|id| a.open(id).unwrap()).collect();
+    let rx: Vec<Channel> = (0..nch).map(|id| b.open(id).unwrap()).collect();
+    let total = nch as u64 * per_ch as u64;
+    let mut payload = vec![0u8; MSG];
+    Rng::new(7_000).fill_bytes(&mut payload[..8]);
+    let t0 = Instant::now();
+    for ch in &tx {
+        for _ in 0..msgs {
+            ch.send(&payload).unwrap();
+        }
+    }
+    let snapshot = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for ch in &rx {
+            let ch = ch.clone();
+            handles.push(s.spawn(move || {
+                let mut got = 0usize;
+                for _ in 0..msgs {
+                    got += ch.recv().unwrap().len();
+                }
+                assert_eq!(got, per_ch, "channel {} payload truncated", ch.id());
+            }));
+        }
+        // mid-run fairness snapshot: first poll at >= 50% aggregate
+        let half = total / 2;
+        let poll_t0 = Instant::now();
+        let snap = loop {
+            let stats = a.channel_stats();
+            let sum: u64 = stats.iter().map(|c| c.sent_bytes).sum();
+            if sum >= half || poll_t0.elapsed() > Duration::from_secs(300) {
+                break stats;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        snap
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let per_channel: Vec<u64> = snapshot.iter().map(|c| c.sent_bytes).collect();
+    (elapsed, per_channel)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || matches!(std::env::var("BENCH_QUICK").as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let total: u64 = if quick { 16 * MB } else { 64 * MB };
+    let per_ch = (total / NCHANNELS as u64) as usize;
+
+    banner("MX1: 32-channel fan-in over one shared 4-stream WAN path");
+    println!(
+        "London-Poznan pacing, {NSTREAMS} streams, {NCHANNELS} channels x {} KiB, \
+         {CHUNK_BUDGET}-byte budget{}",
+        per_ch / 1024,
+        if quick { " (quick grid)" } else { "" }
+    );
+
+    // single-channel saturation: the same byte total, one channel
+    let (single_secs, _) = drive(1, total as usize);
+    let single_goodput = total as f64 / single_secs;
+
+    // 32-way fan-in
+    let (fanin_secs, per_channel) = drive(NCHANNELS, per_ch);
+    let agg_goodput = total as f64 / fanin_secs;
+    let ratio = agg_goodput / single_goodput;
+    let ch_max = per_channel.iter().copied().max().unwrap_or(0);
+    let ch_min = per_channel.iter().copied().min().unwrap_or(0);
+    let fairness = ch_max as f64 / ch_min.max(1) as f64;
+
+    let mut t = Table::new(&["case", "goodput MB/s", "vs single", "max/min"]);
+    t.row(&[
+        "1 channel (saturation)".to_string(),
+        format!("{:.2}", single_goodput / MBF),
+        "1.000".to_string(),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        format!("{NCHANNELS} channels"),
+        format!("{:.2}", agg_goodput / MBF),
+        format!("{ratio:.3}"),
+        format!("{fairness:.2}"),
+    ]);
+    t.print();
+    println!("\naggregate / single-channel: {ratio:.3}   (required >= 0.70)");
+    println!("per-channel byte ratio    : {fairness:.2}    (required <= 3.00)");
+
+    let series: Vec<f64> = per_channel.iter().map(|&b| b as f64 / MBF).collect();
+    let mut json = BenchJson::new("mux_fanin");
+    json.text("scenario", "32 channels muxed over one resilient 4-stream paced path")
+        .num("nstreams", NSTREAMS as f64)
+        .num("nchannels", NCHANNELS as f64)
+        .num("chunk_budget", CHUNK_BUDGET as f64)
+        .num("total_mb", (total / MB) as f64)
+        .num("single_channel_mbps", single_goodput / MBF)
+        .num("aggregate_mbps", agg_goodput / MBF)
+        .num("aggregate_ratio", ratio)
+        .num("fairness_max_min_ratio", fairness)
+        .num("quick", if quick { 1.0 } else { 0.0 })
+        .series("midrun_per_channel_sent_mb", &series);
+    match json.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_mux_fanin.json: {e}"),
+    }
+
+    let mut failed = false;
+    if ratio < 0.70 {
+        eprintln!("FAIL: aggregate goodput ratio {ratio:.3} < 0.70");
+        failed = true;
+    }
+    if fairness > 3.0 {
+        eprintln!("FAIL: per-channel byte ratio {fairness:.2} > 3.0 (min {ch_min}, max {ch_max})");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -39,6 +39,16 @@
 //! | `MPW_PathStatus`         | [`mpw_path_status`]         |
 //! | `MPW_setReconnectPolicy` | [`mpw_set_reconnect_policy`] |
 //! | `MPW_ServeRejoins`       | [`mpw_serve_rejoins`]       |
+//!
+//! Channel multiplexing extensions (`mpwide::mux` — many logical
+//! channels over one shared path):
+//!
+//! | Extension                | Here                        |
+//! |--------------------------|-----------------------------|
+//! | `MPW_OpenChannel`        | [`mpw_open_channel`]        |
+//! | `MPW_ChannelSend`        | [`mpw_channel_send`]        |
+//! | `MPW_ChannelRecv`        | [`mpw_channel_recv`]        |
+//! | `MPW_CloseChannel`       | [`mpw_close_channel`]       |
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -46,6 +56,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 use super::adapt::{TuneMode, TuneSnapshot};
 use super::config::{PathConfig, ReconnectPolicy};
 use super::errors::{MpwError, Result};
+use super::mux::{Channel, MuxEndpoint};
 use super::nonblocking::{NbeHandle, NbeOp};
 use super::path::{Path, PathListener};
 use super::relay;
@@ -53,14 +64,29 @@ use super::resilience::{self, PathStatus, ReconnectMonitor, RejoinDaemon};
 
 struct Context {
     paths: HashMap<i32, Arc<Path>>,
-    handles: HashMap<i32, NbeHandle>,
+    /// In-flight non-blocking handles, tagged with the path id they
+    /// operate on (the mux interlock needs the association).
+    handles: HashMap<i32, (i32, NbeHandle)>,
     listeners: HashMap<u16, PathListener>,
     /// Background reconnect monitors, keyed by path id.
     monitors: HashMap<i32, ReconnectMonitor>,
     /// Background rejoin daemons, keyed by listen port.
     daemons: HashMap<u16, RejoinDaemon>,
+    /// Mux endpoints, keyed by the path id they multiplex (created
+    /// lazily by the first `mpw_open_channel` on a path).
+    muxes: HashMap<i32, MuxEndpoint>,
+    /// Open channel handles, keyed by channel handle id.
+    channels: HashMap<i32, Channel>,
+    /// Count of blocking facade operations in flight outside the
+    /// registry lock (plain data-plane calls, `mpw_wait` joins), keyed
+    /// by **path instance** ([`busy_key`]) rather than path id — ids are
+    /// reused after finalize/destroy, instances never are (each guard
+    /// pins its instance alive). The mux interlock must see these paths
+    /// as busy.
+    busy: HashMap<usize, usize>,
     next_path: i32,
     next_handle: i32,
+    next_channel: i32,
 }
 
 static CTX: OnceLock<Mutex<Context>> = OnceLock::new();
@@ -73,8 +99,12 @@ fn ctx() -> &'static Mutex<Context> {
             listeners: HashMap::new(),
             monitors: HashMap::new(),
             daemons: HashMap::new(),
+            muxes: HashMap::new(),
+            channels: HashMap::new(),
+            busy: HashMap::new(),
             next_path: 0,
             next_handle: 0,
+            next_channel: 0,
         })
     })
 }
@@ -90,22 +120,30 @@ pub fn mpw_init() {
 /// peer that will not speak again. Abandoned handles used to leak in
 /// the global table until `mpw_wait`; finalize now owns their cleanup.
 pub fn mpw_finalize() {
-    let (paths, handles, listeners, monitors, daemons) = {
+    let (paths, handles, listeners, monitors, daemons, muxes, channels) = {
         let mut c = ctx().lock().unwrap();
         c.next_path = 0;
         c.next_handle = 0;
+        c.next_channel = 0;
         (
             std::mem::take(&mut c.paths),
             std::mem::take(&mut c.handles),
             std::mem::take(&mut c.listeners),
             std::mem::take(&mut c.monitors),
             std::mem::take(&mut c.daemons),
+            std::mem::take(&mut c.muxes),
+            std::mem::take(&mut c.channels),
         )
     };
     // Drop outside the context lock: monitor drops notify their paths,
     // and handle drops must not serialize behind the registry.
     drop(monitors);
     drop(daemons);
+    // Mux endpoints first: their shutdown closes the multiplexed paths
+    // and joins the pump/dispatcher workers; channel handles are inert
+    // once their endpoint is gone.
+    drop(channels);
+    drop(muxes);
     // Close every path first (sticky flag + force-closed streams):
     // detached workers of unfinished handles are parked in blocking
     // reads holding their own Arc<Path>, and without this they (and
@@ -115,7 +153,7 @@ pub fn mpw_finalize() {
     for p in paths.values() {
         p.close();
     }
-    for (_, h) in handles {
+    for (_, (_path_id, h)) in handles {
         if h.is_finished() {
             let _ = h.wait(); // join + discard the completed result
         }
@@ -132,6 +170,71 @@ fn with_path<T>(id: i32, f: impl FnOnce(&Arc<Path>) -> Result<T>) -> Result<T> {
         c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?
     };
     f(&p)
+}
+
+/// Look up a path for a *data-plane* operation: once a path is
+/// multiplexed its dispatcher owns the receive side and its pump owns
+/// message framing, so plain sends/recvs would wedge behind (or
+/// corrupt) the channel traffic — reject them instead. Tuning knobs
+/// (`mpw_set_chunk_size`, …) stay allowed through [`with_path`].
+fn data_path(c: &Context, id: i32) -> Result<Arc<Path>> {
+    if c.muxes.contains_key(&id) {
+        return Err(MpwError::Config(format!(
+            "path {id} is multiplexed; use mpw_channel_send/mpw_channel_recv on its channels"
+        )));
+    }
+    c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))
+}
+
+fn with_data_path<T>(id: i32, f: impl FnOnce(&Arc<Path>) -> Result<T>) -> Result<T> {
+    let (p, _guard) = {
+        let mut c = ctx().lock().unwrap();
+        let p = data_path(&c, id)?;
+        // mark the path busy while the (possibly blocking) operation
+        // runs outside the lock, so mpw_open_channel cannot start a mux
+        // dispatcher beside it
+        let guard = mark_busy(&mut c, &[&p]);
+        (p, guard)
+    };
+    f(&p)
+}
+
+/// Identity of a path *instance* for the busy map: the `Arc` allocation
+/// address. Guards keep their instances alive, so a key can never be
+/// reused while a guard referencing it exists.
+fn busy_key(p: &Arc<Path>) -> usize {
+    Arc::as_ptr(p) as usize
+}
+
+/// RAII marker for paths with a blocking facade call in flight. Created
+/// under the registry lock; the drop re-locks, so it must never be
+/// dropped while the registry lock is held.
+struct BusyGuard {
+    held: Vec<Arc<Path>>,
+}
+
+fn mark_busy(c: &mut Context, paths: &[&Arc<Path>]) -> BusyGuard {
+    let mut held = Vec::with_capacity(paths.len());
+    for p in paths {
+        *c.busy.entry(busy_key(p)).or_insert(0) += 1;
+        held.push(Arc::clone(p));
+    }
+    BusyGuard { held }
+}
+
+impl Drop for BusyGuard {
+    fn drop(&mut self) {
+        let mut c = ctx().lock().unwrap();
+        for p in &self.held {
+            let k = busy_key(p);
+            if let Some(b) = c.busy.get_mut(&k) {
+                *b -= 1;
+                if *b == 0 {
+                    c.busy.remove(&k);
+                }
+            }
+        }
+    }
 }
 
 /// `MPW_CreatePath` (connecting side): open a path of `nstreams` tcp
@@ -210,12 +313,22 @@ pub fn mpw_serve_rejoins(port: u16) -> Result<()> {
 /// of leaking with its sockets — once destroyed, the path is gone from
 /// the table and finalize could no longer reach it.
 pub fn mpw_destroy_path(id: i32) -> Result<()> {
-    let (path, monitor) = {
+    let (path, monitor, mux) = {
         let mut c = ctx().lock().unwrap();
         let p = c.paths.remove(&id).ok_or(MpwError::UnknownId(id))?;
-        (p, c.monitors.remove(&id))
+        let monitor = c.monitors.remove(&id);
+        let mux = c.muxes.remove(&id);
+        if let Some(m) = &mux {
+            // stale channel handles would pin the destroyed path's
+            // memory (and queued messages) in the registry until finalize
+            c.channels.retain(|_, ch| !m.owns(ch));
+        }
+        (p, monitor, mux)
     };
     drop(monitor);
+    // a multiplexed path is torn down through its endpoint (joins the
+    // pump/dispatcher); stale channel handles report the shutdown
+    drop(mux);
     path.close();
     drop(path);
     Ok(())
@@ -223,22 +336,22 @@ pub fn mpw_destroy_path(id: i32) -> Result<()> {
 
 /// `MPW_Send`.
 pub fn mpw_send(id: i32, buf: &[u8]) -> Result<usize> {
-    with_path(id, |p| p.send(buf))
+    with_data_path(id, |p| p.send(buf))
 }
 
 /// `MPW_Recv`.
 pub fn mpw_recv(id: i32, buf: &mut [u8]) -> Result<usize> {
-    with_path(id, |p| p.recv(buf))
+    with_data_path(id, |p| p.recv(buf))
 }
 
 /// `MPW_SendRecv`.
 pub fn mpw_send_recv(id: i32, sbuf: &[u8], rbuf: &mut [u8]) -> Result<()> {
-    with_path(id, |p| p.send_recv(sbuf, rbuf))
+    with_data_path(id, |p| p.send_recv(sbuf, rbuf))
 }
 
 /// `MPW_DSendRecv` (dynamic sizes; returns the received message).
 pub fn mpw_dsend_recv(id: i32, sbuf: &[u8]) -> Result<Vec<u8>> {
-    with_path(id, |p| {
+    with_data_path(id, |p| {
         let mut cache = Vec::new();
         let n = p.dsend_recv(sbuf, &mut cache)?;
         cache.truncate(n);
@@ -248,30 +361,30 @@ pub fn mpw_dsend_recv(id: i32, sbuf: &[u8]) -> Result<Vec<u8>> {
 
 /// `MPW_Barrier`.
 pub fn mpw_barrier(id: i32) -> Result<()> {
-    with_path(id, |p| p.barrier())
+    with_data_path(id, |p| p.barrier())
 }
 
 /// `MPW_Cycle`: receive `recv_len` bytes from path `recv_id` while sending
 /// `buf` over path `send_id`.
 pub fn mpw_cycle(recv_id: i32, send_id: i32, buf: &[u8], recv_len: usize) -> Result<Vec<u8>> {
-    let (pr, ps) = {
-        let c = ctx().lock().unwrap();
-        (
-            c.paths.get(&recv_id).cloned().ok_or(MpwError::UnknownId(recv_id))?,
-            c.paths.get(&send_id).cloned().ok_or(MpwError::UnknownId(send_id))?,
-        )
+    let (pr, ps, _guard) = {
+        let mut c = ctx().lock().unwrap();
+        let pr = data_path(&c, recv_id)?;
+        let ps = data_path(&c, send_id)?;
+        let guard = mark_busy(&mut c, &[&pr, &ps]);
+        (pr, ps, guard)
     };
     relay::cycle(&pr, &ps, buf, recv_len)
 }
 
 /// `MPW_DCycle` (dynamic sizes).
 pub fn mpw_dcycle(recv_id: i32, send_id: i32, buf: &[u8]) -> Result<Vec<u8>> {
-    let (pr, ps) = {
-        let c = ctx().lock().unwrap();
-        (
-            c.paths.get(&recv_id).cloned().ok_or(MpwError::UnknownId(recv_id))?,
-            c.paths.get(&send_id).cloned().ok_or(MpwError::UnknownId(send_id))?,
-        )
+    let (pr, ps, _guard) = {
+        let mut c = ctx().lock().unwrap();
+        let pr = data_path(&c, recv_id)?;
+        let ps = data_path(&c, send_id)?;
+        let guard = mark_busy(&mut c, &[&pr, &ps]);
+        (pr, ps, guard)
     };
     let mut cache = Vec::new();
     let n = relay::dcycle(&pr, &ps, buf, &mut cache)?;
@@ -281,42 +394,52 @@ pub fn mpw_dcycle(recv_id: i32, send_id: i32, buf: &[u8]) -> Result<Vec<u8>> {
 
 /// `MPW_Relay`: forward all traffic between two paths until both close.
 pub fn mpw_relay(a: i32, b: i32) -> Result<relay::RelayStats> {
-    let (pa, pb) = {
-        let c = ctx().lock().unwrap();
-        (
-            c.paths.get(&a).cloned().ok_or(MpwError::UnknownId(a))?,
-            c.paths.get(&b).cloned().ok_or(MpwError::UnknownId(b))?,
-        )
+    let (pa, pb, _guard) = {
+        let mut c = ctx().lock().unwrap();
+        let pa = data_path(&c, a)?;
+        let pb = data_path(&c, b)?;
+        let guard = mark_busy(&mut c, &[&pa, &pb]);
+        (pa, pb, guard)
     };
     relay::relay(&pa, &pb)
 }
 
 /// `MPW_ISendRecv`: start a non-blocking exchange; returns a handle id.
 pub fn mpw_isend_recv(id: i32, op: NbeOp) -> Result<i32> {
-    let p = {
-        let c = ctx().lock().unwrap();
-        c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?
-    };
-    let h = NbeHandle::start(p, op);
+    // One critical section for lookup + start + registration: the
+    // worker must already be visible in the handle table when the lock
+    // is released, or `mpw_open_channel`'s in-flight interlock could
+    // miss it and start a mux dispatcher beside a live plain recv.
+    // (`NbeHandle::start` only spawns the worker thread; it does no I/O
+    // on the caller's side, so holding the registry lock is cheap.)
     let mut c = ctx().lock().unwrap();
+    let p = data_path(&c, id)?;
+    let h = NbeHandle::start(p, op);
     let hid = c.next_handle;
     c.next_handle += 1;
-    c.handles.insert(hid, h);
+    c.handles.insert(hid, (id, h));
     Ok(hid)
 }
 
 /// `MPW_Has_NBE_Finished`.
 pub fn mpw_has_nbe_finished(hid: i32) -> Result<bool> {
     let c = ctx().lock().unwrap();
-    c.handles.get(&hid).map(|h| h.is_finished()).ok_or(MpwError::UnknownId(hid))
+    c.handles.get(&hid).map(|(_, h)| h.is_finished()).ok_or(MpwError::UnknownId(hid))
 }
 
 /// `MPW_Wait`: block on a non-blocking exchange; returns the received
 /// bytes for receiving operations.
 pub fn mpw_wait(hid: i32) -> Result<Option<Vec<u8>>> {
-    let h = {
+    let (h, _guard) = {
         let mut c = ctx().lock().unwrap();
-        c.handles.remove(&hid).ok_or(MpwError::UnknownId(hid))?
+        let (path_id, h) = c.handles.remove(&hid).ok_or(MpwError::UnknownId(hid))?;
+        // the join below blocks outside the lock while the worker may
+        // still be on the path; keep the path marked busy so the mux
+        // interlock cannot slip a dispatcher in beside it (if the path
+        // was already destroyed, there is nothing left to protect)
+        let path = c.paths.get(&path_id).cloned();
+        let guard = path.as_ref().map(|p| mark_busy(&mut c, &[p]));
+        (h, guard)
     };
     h.wait()
 }
@@ -400,6 +523,84 @@ pub fn mpw_set_reconnect_policy(id: i32, policy: ReconnectPolicy) -> Result<()> 
 /// `MPW_DNSResolve`.
 pub fn mpw_dns_resolve(host: &str) -> Result<String> {
     super::dns::dns_resolve(host)
+}
+
+// ---------------------------------------------------------------------------
+// Channel multiplexing (mux extension).
+// ---------------------------------------------------------------------------
+
+/// `MPW_OpenChannel` (mux extension): open logical channel `channel` on
+/// path `path_id`, multiplexing it over the shared striped path. The
+/// first open on a path wraps it in a [`MuxEndpoint`] — from then on
+/// all traffic on that path must go through channels. Both ends must
+/// open the same channel number (like agreeing on a port). Returns a
+/// channel handle id for `mpw_channel_send` / `mpw_channel_recv`.
+pub fn mpw_open_channel(path_id: i32, channel: u32) -> Result<i32> {
+    let mut c = ctx().lock().unwrap();
+    let path = c.paths.get(&path_id).cloned().ok_or(MpwError::UnknownId(path_id))?;
+    // An unfinished non-blocking handle owns reads/writes on the path;
+    // starting the mux dispatcher beside it would interleave plain and
+    // framed traffic. Refuse until the caller waits the handles out.
+    let fresh = !c.muxes.contains_key(&path_id);
+    let busy = c.handles.values().any(|(pid, h)| *pid == path_id && !h.is_finished())
+        || c.busy.get(&busy_key(&path)).copied().unwrap_or(0) > 0;
+    if fresh && busy {
+        return Err(MpwError::Config(format!(
+            "path {path_id} has in-flight operations (non-blocking handles or blocking \
+             calls); finish them before multiplexing"
+        )));
+    }
+    let opened = c.muxes.entry(path_id).or_insert_with(|| MuxEndpoint::start(path)).open(channel);
+    let ch = match opened {
+        Ok(ch) => ch,
+        Err(e) => {
+            // a failed FIRST open must not leave the path marked as
+            // multiplexed (plain calls would be rejected forever with a
+            // misleading error); restore the pre-call state. The removed
+            // endpoint is dropped AFTER the registry lock is released —
+            // its teardown joins worker threads, and every other facade
+            // call would stall behind that otherwise.
+            let rollback = if fresh { c.muxes.remove(&path_id) } else { None };
+            drop(c);
+            drop(rollback);
+            return Err(e);
+        }
+    };
+    let id = c.next_channel;
+    c.next_channel += 1;
+    c.channels.insert(id, ch);
+    Ok(id)
+}
+
+fn with_channel(id: i32) -> Result<Channel> {
+    // clone the handle out so blocking channel ops never hold the
+    // global registry lock
+    let c = ctx().lock().unwrap();
+    c.channels.get(&id).cloned().ok_or(MpwError::UnknownId(id))
+}
+
+/// `MPW_ChannelSend` (mux extension): queue one message on a channel.
+/// Blocks only on the channel's high-water backpressure; the sender
+/// pump interleaves it fairly with every other channel on the path.
+pub fn mpw_channel_send(id: i32, buf: &[u8]) -> Result<()> {
+    with_channel(id)?.send(buf)
+}
+
+/// `MPW_ChannelRecv` (mux extension): receive the next message on a
+/// channel (blocking; message-oriented like `MPW_DRecv`).
+pub fn mpw_channel_recv(id: i32) -> Result<Vec<u8>> {
+    with_channel(id)?.recv()
+}
+
+/// `MPW_CloseChannel` (mux extension): flush the channel's queued
+/// messages, send the CLOSE frame and release the handle id.
+pub fn mpw_close_channel(id: i32) -> Result<()> {
+    let ch = {
+        let mut c = ctx().lock().unwrap();
+        c.channels.remove(&id).ok_or(MpwError::UnknownId(id))?
+    };
+    ch.flush()?;
+    ch.close()
 }
 
 #[cfg(test)]
@@ -575,6 +776,45 @@ mod tests {
         assert!(mpw_serve_rejoins(port).is_err(), "listener already consumed");
         let client = t.join().unwrap();
         drop(client);
+        mpw_finalize();
+    }
+
+    #[test]
+    fn channels_over_facade() {
+        let _g = API_LOCK.lock().unwrap();
+        mpw_init();
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            // server side uses the library API directly (shared CTX is
+            // the client's)
+            let p = Arc::new(listener.accept_path().unwrap());
+            let mux = super::super::mux::MuxEndpoint::start(p);
+            let bulk = mux.open(1).unwrap();
+            let ctl = mux.open(2).unwrap();
+            let got = bulk.recv().unwrap();
+            ctl.send(b"ack").unwrap();
+            ctl.flush().unwrap();
+            // hold the endpoint open until the client's CLOSE lands, so
+            // the client-side flush/close never races a dying path
+            assert!(matches!(bulk.recv(), Err(MpwError::ChannelClosed { .. })));
+            got
+        });
+        let path_id = mpw_create_path_cfg("127.0.0.1", port, cfg).unwrap();
+        let bulk = mpw_open_channel(path_id, 1).unwrap();
+        let ctl = mpw_open_channel(path_id, 2).unwrap();
+        assert!(mpw_open_channel(99, 1).is_err(), "unknown path id");
+        assert!(
+            mpw_send(path_id, b"raw").is_err(),
+            "plain data-plane calls on a multiplexed path must be rejected"
+        );
+        mpw_channel_send(bulk, &[3u8; 50_000]).unwrap();
+        assert_eq!(mpw_channel_recv(ctl).unwrap(), b"ack");
+        mpw_close_channel(bulk).unwrap();
+        assert!(mpw_channel_send(bulk, b"x").is_err(), "handle released");
+        assert_eq!(t.join().unwrap(), vec![3u8; 50_000]);
         mpw_finalize();
     }
 

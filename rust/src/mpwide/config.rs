@@ -58,21 +58,51 @@ pub struct ResilienceConfig {
     /// format (both ends must agree) and adds a per-message delivery
     /// acknowledgement.
     pub enabled: bool,
+    /// Progress timeout on the resilient **sender's ACK wait**: if the
+    /// receiver's delivery acknowledgement has not arrived within this
+    /// budget, the current control stream is force-closed and the send
+    /// retries over the survivors. This closes the documented
+    /// control-stream divergence window (a rejoin half-completing
+    /// exactly as the control stream dies could leave the two ends
+    /// waiting on different streams until TCP gave up). `None` disables
+    /// the watchdog (the pre-timeout behaviour). When set, it must
+    /// comfortably exceed the worst-case time for one whole message to
+    /// be *consumed* by the peer — resilient sends are rendezvous sends,
+    /// so the budget covers the peer's compute/scheduling delay before
+    /// its matching `recv`, not just wire time. Couplings with unbounded
+    /// gaps between exchanges should leave this `None`.
+    pub ack_timeout: Option<Duration>,
     /// Background reconnection of dead streams (connecting end only).
     pub reconnect: ReconnectPolicy,
 }
 
 impl ResilienceConfig {
-    /// Resilient framing on, background rejoin on (WAN production preset).
+    /// Resilient framing on, background rejoin on, ACK progress watchdog
+    /// armed at 10 minutes (WAN production preset). The generous budget
+    /// tolerates real coupling imbalance — a peer minutes late to its
+    /// exchange point is normal, a sender parked for tens of minutes is
+    /// the divergence hang the watchdog exists to break. Tighten it for
+    /// latency-bound deployments; set `ack_timeout: None` for couplings
+    /// whose inter-exchange gaps are genuinely unbounded.
     pub fn wan() -> Self {
         ResilienceConfig {
             enabled: true,
+            ack_timeout: Some(Duration::from_secs(600)),
             reconnect: ReconnectPolicy { enabled: true, ..Default::default() },
         }
     }
 
     /// Validate the resilience parameters.
     pub fn validate(&self) -> crate::mpwide::Result<()> {
+        if let Some(t) = self.ack_timeout {
+            if t.is_zero() {
+                // a zero budget would kill the control stream before the
+                // receiver could possibly consume anything
+                return Err(crate::mpwide::MpwError::Config(
+                    "resilience ack_timeout must be positive".into(),
+                ));
+            }
+        }
         let r = &self.reconnect;
         if r.base_delay > r.max_delay {
             return Err(crate::mpwide::MpwError::Config(format!(
@@ -244,7 +274,17 @@ mod tests {
         assert!(!c.resilience.reconnect.enabled);
         let w = ResilienceConfig::wan();
         assert!(w.enabled && w.reconnect.enabled);
+        assert!(w.ack_timeout.is_some(), "wan preset arms the ACK watchdog");
         assert!(w.validate().is_ok());
+    }
+
+    #[test]
+    fn resilience_validation_rejects_zero_ack_timeout() {
+        let mut c = PathConfig::default();
+        c.resilience.ack_timeout = Some(Duration::ZERO);
+        assert!(c.validate().is_err(), "a zero ACK budget kills every send");
+        c.resilience.ack_timeout = Some(Duration::from_millis(100));
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use super::errors::{MpwError, Result};
 use super::path::Path;
+use super::stripe::SplitBuf;
 
 /// Upper bound accepted for a dynamic message (guards against a corrupted
 /// or malicious header causing an absurd allocation).
@@ -21,13 +22,24 @@ impl Path {
     /// interleave mid-message. In resilient mode no separate header is
     /// needed: the message length travels in the per-message CTRL frame.
     pub fn dsend(&self, buf: &[u8]) -> Result<()> {
+        self.dsend_split(&[], buf)
+    }
+
+    /// [`Path::dsend`] of a two-part logical message (`head ++ tail`)
+    /// without concatenating the parts — the striping layer resolves
+    /// segments and chunks through [`SplitBuf`] and the transport writes
+    /// header + payload with one vectored call. This is how the mux
+    /// layer ships a channel-frame header in front of a payload chunk
+    /// with zero copies.
+    pub fn dsend_split(&self, head: &[u8], tail: &[u8]) -> Result<()> {
         let _gate = self.send_gate.lock().unwrap();
+        let buf = SplitBuf { head, tail };
         if self.resilient() {
             super::resilience::send(self, buf)?;
             return Ok(());
         }
         self.send_header(buf.len() as u64)?;
-        self.send_ungated(buf)?;
+        self.send_split_ungated(buf)?;
         Ok(())
     }
 

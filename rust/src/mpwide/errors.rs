@@ -40,6 +40,12 @@ pub enum MpwError {
     /// Every stream of a path is dead and no rejoin arrived in time.
     AllStreamsDead,
 
+    /// A mux channel is closed (either end) and fully drained.
+    ChannelClosed {
+        /// The channel id.
+        channel: u32,
+    },
+
     /// A relay/forwarder pump hit a hard stream error mid-flight; the
     /// relay was torn down. Carries the bytes moved before the failure so
     /// callers still get partial accounting.
@@ -69,6 +75,9 @@ impl fmt::Display for MpwError {
             }
             MpwError::AllStreamsDead => {
                 write!(f, "all streams of the path are dead and no rejoin arrived")
+            }
+            MpwError::ChannelClosed { channel } => {
+                write!(f, "channel {channel} is closed")
             }
             MpwError::RelayBroken { a_to_b, b_to_a, detail } => write!(
                 f,
@@ -106,6 +115,12 @@ mod tests {
         assert_eq!(e.to_string(), "unknown id 7");
         let e = MpwError::ConnectTimeout { endpoint: "x:1".into(), seconds: 2.0 };
         assert!(e.to_string().contains("x:1"));
+    }
+
+    #[test]
+    fn channel_closed_display() {
+        let e = MpwError::ChannelClosed { channel: 12 };
+        assert!(e.to_string().contains("channel 12"));
     }
 
     #[test]

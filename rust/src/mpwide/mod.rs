@@ -43,6 +43,23 @@
 //! the rejoin knobs ([`config::ReconnectPolicy`]) and the facade calls
 //! (`mpw_path_status`, `mpw_set_reconnect_policy`) are documented in
 //! [`resilience`].
+//!
+//! ## Channel multiplexing
+//!
+//! One tuned, resilient path is expensive to set up and cheap to share:
+//! the [`mux`] session layer multiplexes many logical **channels** over
+//! a single path, so several concurrent couplings (a solver boundary
+//! exchange, a DataGather sync, a bulk file transfer) reuse one WAN
+//! fat-pipe instead of opening one path each. Channel frames carry a
+//! channel id and per-channel message sequence on top of the path's
+//! framing; a per-path dispatcher routes inbound frames to per-channel
+//! queues, and the sender pump interleaves channels round-robin with a
+//! chunk budget so bulk traffic cannot starve latency-sensitive
+//! channels. Frame headers ride in front of payload chunks through the
+//! scatter send path ([`stripe::SplitBuf`] + vectored writes) — never
+//! copy-assembled. The facade surface is `mpw_open_channel`,
+//! `mpw_channel_send`, `mpw_channel_recv`, `mpw_close_channel`; the
+//! guarantees/limitations contract is documented in [`mux`].
 
 pub mod adapt;
 pub mod api;
@@ -51,6 +68,7 @@ pub mod config;
 pub mod dns;
 pub mod dynamic;
 pub mod errors;
+pub mod mux;
 pub mod nonblocking;
 pub mod pacing;
 pub mod path;
@@ -62,5 +80,6 @@ pub mod transport;
 pub use adapt::{AdaptConfig, TuneMode, TuneSnapshot};
 pub use config::{PathConfig, ReconnectPolicy, ResilienceConfig};
 pub use errors::{MpwError, Result};
+pub use mux::{Channel, ChannelStats, MsgLink, MuxConfig, MuxEndpoint};
 pub use path::{Path, PathListener};
 pub use resilience::{PathStatus, ReconnectMonitor, RejoinDaemon};

@@ -1,0 +1,1292 @@
+//! Channel multiplexing over a shared path (`mpwide::mux`).
+//!
+//! The paper positions MPWide for client-server coupling and for running
+//! several concurrent applications (DataGather next to a live solver
+//! coupling) between the same two sites. Before this module, each of
+//! those logical conversations needed its **own path** — its own TCP
+//! stream bundle, its own autotune round, its own firewall holes — which
+//! is exactly what the WAN setting penalizes. `mux` multiplexes many
+//! logical **channels** over one shared striped path, so N couplings
+//! reuse a single tuned, resilient WAN fat-pipe instead of opening N
+//! paths.
+//!
+//! A [`MuxEndpoint`] wraps an established [`Path`] (both ends must wrap
+//! theirs) and runs two background workers:
+//!
+//! * the **sender pump** drains per-channel outbound queues onto the
+//!   path, interleaving channels **round-robin with a chunk budget**
+//!   ([`MuxConfig::chunk_budget`]): a bulk file transfer is cut into
+//!   budget-sized frames between which every other channel gets a turn,
+//!   so it cannot starve a latency-sensitive coupling;
+//! * the **dispatcher** reads frames off the path and routes them into
+//!   per-channel inbound queues by channel id.
+//!
+//! Each frame is one path message whose payload is
+//! `[channel header][payload chunk]`; the header travels in front of
+//! the chunk via the path's scatter send
+//! ([`Path::dsend_split`]) — striped, chunked and written with vectored
+//! I/O, never copy-assembled. Under a resilient path the channel frames
+//! ride *on top of* the resilience framing, so stream death, degraded
+//! striping and rejoin remain invisible to channels.
+//!
+//! ### Guarantees
+//!
+//! * **Delivery**: a message accepted by [`Channel::send`] is delivered
+//!   exactly once to the peer channel's [`Channel::recv`], or the
+//!   endpoint reports a fatal path error to every channel.
+//! * **Per-channel ordering**: messages on one channel arrive in send
+//!   order (verified by per-message sequence numbers; a violation is a
+//!   protocol error, not silent reordering). No ordering is promised
+//!   *across* channels — that independence is the point.
+//! * **Fairness**: the pump gives every channel with queued data one
+//!   budget-sized turn per rotation; a channel's wait for the wire is
+//!   bounded by `(channels - 1) × chunk_budget` bytes regardless of how
+//!   much bulk data another channel has queued.
+//! * **Backpressure**: [`Channel::send`] blocks once the channel's
+//!   queued-but-unsent bytes exceed [`MuxConfig::high_water`], so one
+//!   producer cannot balloon the process.
+//!
+//! ### Limitations
+//!
+//! * A muxed path belongs to the mux: once wrapped, all traffic must go
+//!   through channels (the dispatcher owns the path's receive side).
+//! * Inbound messages queue unboundedly on a channel nobody `recv`s —
+//!   the dispatcher must never block on a slow consumer, or it would
+//!   head-of-line-block every other channel. Pair producers with
+//!   consumers, as every MPWide application already does.
+//! * Both ends must agree on channel ids (like ports); opening is not
+//!   negotiated. A frame for a never-opened id creates the channel
+//!   state, so open order across the two ends is free. The flip side:
+//!   state for an id the peer used but this side never opens is kept
+//!   (drained, a few hundred bytes) after the peer's CLOSE, so that a
+//!   late local `open` still observes the close instead of hanging
+//!   (lease/expiry for unbounded ephemeral-id workloads is a ROADMAP
+//!   follow-up). An id may be *reused* after a close, but only once
+//!   **both** ends have closed and drained it — reopening while the
+//!   peer's old state lingers looks like traffic on a closed channel
+//!   (a protocol error); synchronize reuse at the application level,
+//!   e.g. over a control channel.
+//! * Fairness is byte-based, not deadline-based: a channel's latency is
+//!   bounded by one full rotation of budget-sized frames, which on a
+//!   slow link can still be long — size `chunk_budget` for the link.
+//! * Over a **resilient** path every frame is a rendezvous path message
+//!   (delivery-ACKed), so the single pump runs stop-and-wait at
+//!   `chunk_budget` granularity: long-fat-pipe goodput is bounded near
+//!   `chunk_budget / RTT`. Size `chunk_budget` toward the path's
+//!   bandwidth-delay product for resilient WAN deployments (the knob is
+//!   per endpoint and does not need to match the peer); a windowed,
+//!   pipelined pump is a ROADMAP follow-up.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::errors::{MpwError, Result};
+use super::path::Path;
+
+/// Sanity byte opening every channel frame.
+pub const MUX_MAGIC: u8 = 0xC4;
+/// Frame kinds: a non-final chunk of a channel message.
+pub const CH_DATA: u8 = 1;
+/// The final chunk of a channel message (a small message is a single
+/// `CH_FIN` frame).
+pub const CH_FIN: u8 = 2;
+/// Channel opened by the peer (informational; state is auto-created on
+/// first frame either way).
+pub const CH_OPEN: u8 = 3;
+/// Peer closed the channel; no further frames for this id will follow.
+pub const CH_CLOSE: u8 = 4;
+/// Channel frame header size: magic + kind + channel + msg_seq + len.
+pub const MUX_HDR_LEN: usize = 1 + 1 + 4 + 8 + 4;
+/// Upper bound on a single channel frame payload (a corrupted header
+/// must not trigger an absurd allocation).
+pub const MAX_MUX_PAYLOAD: usize = 64 << 20;
+
+/// Decoded channel frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MuxHdr {
+    /// Frame kind (`CH_*`).
+    pub kind: u8,
+    /// Channel id the frame belongs to.
+    pub channel: u32,
+    /// Per-channel message sequence number (same for every chunk of one
+    /// message; the ordering check on delivery).
+    pub msg_seq: u64,
+    /// Payload length in bytes.
+    pub len: u32,
+}
+
+/// Encode a channel frame header.
+pub fn encode_mux_hdr(kind: u8, channel: u32, msg_seq: u64, len: u32) -> [u8; MUX_HDR_LEN] {
+    let mut h = [0u8; MUX_HDR_LEN];
+    h[0] = MUX_MAGIC;
+    h[1] = kind;
+    h[2..6].copy_from_slice(&channel.to_be_bytes());
+    h[6..14].copy_from_slice(&msg_seq.to_be_bytes());
+    h[14..18].copy_from_slice(&len.to_be_bytes());
+    h
+}
+
+/// Decode and validate a channel frame header.
+pub fn decode_mux_hdr(h: &[u8; MUX_HDR_LEN]) -> Result<MuxHdr> {
+    if h[0] != MUX_MAGIC {
+        return Err(MpwError::Protocol(format!("bad channel frame magic {:#04x}", h[0])));
+    }
+    let kind = h[1];
+    if !(CH_DATA..=CH_CLOSE).contains(&kind) {
+        return Err(MpwError::Protocol(format!("bad channel frame kind {kind}")));
+    }
+    let channel = u32::from_be_bytes(h[2..6].try_into().unwrap());
+    let msg_seq = u64::from_be_bytes(h[6..14].try_into().unwrap());
+    let len = u32::from_be_bytes(h[14..18].try_into().unwrap());
+    if len as usize > MAX_MUX_PAYLOAD {
+        return Err(MpwError::Protocol(format!("channel frame payload {len} exceeds bound")));
+    }
+    if (kind == CH_OPEN || kind == CH_CLOSE) && len != 0 {
+        return Err(MpwError::Protocol(format!(
+            "control channel frame (kind {kind}) carries {len} payload bytes"
+        )));
+    }
+    Ok(MuxHdr { kind, channel, msg_seq, len })
+}
+
+/// Mux tuning knobs.
+#[derive(Debug, Clone)]
+pub struct MuxConfig {
+    /// Largest payload the pump sends from one channel before giving
+    /// every other channel a turn — the fairness quantum. Bigger values
+    /// amortize per-frame overhead; smaller values tighten the latency
+    /// bound for small messages sharing the path with bulk transfers.
+    pub chunk_budget: usize,
+    /// Per-channel cap on queued-but-unsent bytes; [`Channel::send`]
+    /// blocks above it (a single oversized message is always accepted
+    /// once the queue is empty).
+    pub high_water: usize,
+}
+
+impl Default for MuxConfig {
+    fn default() -> Self {
+        MuxConfig { chunk_budget: 256 * 1024, high_water: 16 << 20 }
+    }
+}
+
+impl MuxConfig {
+    /// Validate the knobs.
+    pub fn validate(&self) -> Result<()> {
+        if self.chunk_budget == 0 {
+            return Err(MpwError::Config("mux chunk_budget must be >= 1".into()));
+        }
+        if self.chunk_budget > MAX_MUX_PAYLOAD {
+            return Err(MpwError::Config(format!(
+                "mux chunk_budget {} exceeds the {MAX_MUX_PAYLOAD}-byte frame bound",
+                self.chunk_budget
+            )));
+        }
+        if self.high_water == 0 {
+            return Err(MpwError::Config("mux high_water must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+/// One queued outbound message (owned while queued; chunks are sliced
+/// out of it zero-copy by the pump).
+struct OutMsg {
+    data: Vec<u8>,
+    off: usize,
+    seq: u64,
+}
+
+/// Per-channel state, both directions.
+#[derive(Default)]
+struct ChanState {
+    /// Incarnation counter (endpoint-local): a reused channel id gets a
+    /// fresh generation, so stale [`Channel`] handles from the previous
+    /// incarnation report `ChannelClosed` instead of silently aliasing
+    /// the new conversation.
+    gen: u64,
+    /// The local application opened this channel (vs. auto-created from
+    /// an inbound frame).
+    locally_opened: bool,
+    open_sent: bool,
+    local_closed: bool,
+    close_sent: bool,
+    remote_closed: bool,
+    /// A chunk of this channel's head message is being written to the
+    /// path right now (outside the state lock); gates CLOSE and gc.
+    in_flight: bool,
+    // inbound
+    partial: Vec<u8>,
+    ready: VecDeque<Vec<u8>>,
+    next_recv_seq: u64,
+    // outbound
+    outq: VecDeque<OutMsg>,
+    out_bytes: usize,
+    next_send_seq: u64,
+    /// FIFO tickets for senders parked on the high-water mark: a parked
+    /// sender enqueues only when its ticket reaches `park_head`, and the
+    /// fast paths stand down while anyone is parked — otherwise a later
+    /// send could overtake a blocked one and break per-channel ordering.
+    park_head: u64,
+    park_tail: u64,
+    // stats
+    delivered_bytes: u64,
+    sent_bytes: u64,
+    last_delivery_ticket: u64,
+}
+
+/// Point-in-time statistics of one channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChannelStats {
+    /// Channel id.
+    pub id: u32,
+    /// Payload bytes of fully delivered inbound messages.
+    pub delivered_bytes: u64,
+    /// Payload bytes handed to the wire so far.
+    pub sent_bytes: u64,
+    /// Outbound bytes queued but not yet sent.
+    pub queued_bytes: usize,
+    /// Inbound messages delivered but not yet `recv`ed.
+    pub ready_msgs: usize,
+    /// Global delivery ticket of this channel's most recent completed
+    /// inbound message (endpoint-wide monotonic counter; lets tests and
+    /// diagnostics compare delivery *order* across channels).
+    pub last_delivery_ticket: u64,
+}
+
+struct MuxState {
+    chans: HashMap<u32, ChanState>,
+    /// Channel ids in open order — the round-robin rotation order.
+    order: Vec<u32>,
+    /// Next rotation position.
+    cursor: usize,
+    /// Endpoint-wide counter of completed inbound messages.
+    delivery_ticket: u64,
+    /// Generation source for [`ChanState::gen`].
+    next_gen: u64,
+    /// Fatal path/protocol error, reported to every channel operation.
+    dead: Option<String>,
+    shutdown: bool,
+}
+
+struct MuxInner {
+    path: Arc<Path>,
+    cfg: MuxConfig,
+    st: Mutex<MuxState>,
+    /// Wakes the sender pump (new outbound work, close, shutdown).
+    send_cv: Condvar,
+    /// Wakes producers blocked on the high-water mark.
+    space_cv: Condvar,
+    /// Wakes consumers blocked in `recv`.
+    recv_cv: Condvar,
+}
+
+/// What the pump sends next (selected under the state lock, sent
+/// outside it).
+enum PumpJob {
+    Open(u32),
+    Close(u32),
+    Chunk { id: u32, msg: OutMsg, end: usize, fin: bool },
+}
+
+/// One end of a multiplexed path. See the module docs for the model.
+pub struct MuxEndpoint {
+    inner: Arc<MuxInner>,
+    pump: Option<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
+}
+
+impl MuxEndpoint {
+    /// Wrap `path` with the default [`MuxConfig`]. The endpoint takes
+    /// over the path: all further traffic must go through channels, and
+    /// shutting the endpoint down closes the path.
+    pub fn start(path: Arc<Path>) -> MuxEndpoint {
+        MuxEndpoint::start_cfg(path, MuxConfig::default()).expect("default MuxConfig is valid")
+    }
+
+    /// Wrap `path` with explicit knobs.
+    pub fn start_cfg(path: Arc<Path>, cfg: MuxConfig) -> Result<MuxEndpoint> {
+        cfg.validate()?;
+        let inner = Arc::new(MuxInner {
+            path,
+            cfg,
+            st: Mutex::new(MuxState {
+                chans: HashMap::new(),
+                order: Vec::new(),
+                cursor: 0,
+                delivery_ticket: 0,
+                next_gen: 0,
+                dead: None,
+                shutdown: false,
+            }),
+            send_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            recv_cv: Condvar::new(),
+        });
+        let pump = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("mpwide-mux-pump".into())
+                .spawn(move || pump_loop(&inner))
+                .expect("spawn mux pump")
+        };
+        let dispatcher = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("mpwide-mux-dispatch".into())
+                .spawn(move || dispatch_loop(&inner))
+                .expect("spawn mux dispatcher")
+        };
+        Ok(MuxEndpoint { inner, pump: Some(pump), dispatcher: Some(dispatcher) })
+    }
+
+    /// The multiplexed path.
+    pub fn path(&self) -> &Arc<Path> {
+        &self.inner.path
+    }
+
+    /// Open (or adopt) channel `id`. Both ends must open the same id,
+    /// like agreeing on a port; opening twice is an error.
+    pub fn open(&self, id: u32) -> Result<Channel> {
+        let mut st = self.inner.st.lock().unwrap();
+        check_alive(&st)?;
+        let known = st.chans.contains_key(&id);
+        let ch = ensure_chan(&mut st, id);
+        if ch.locally_opened {
+            return Err(MpwError::Config(format!("channel {id} is already open")));
+        }
+        ch.locally_opened = true;
+        if known {
+            // the peer evidently knows the channel already (its frames
+            // created the state) — no OPEN needed
+            ch.open_sent = true;
+        }
+        let gen = ch.gen;
+        drop(st);
+        self.inner.send_cv.notify_all();
+        Ok(Channel { id, gen, inner: self.inner.clone() })
+    }
+
+    /// Statistics of every live channel, ascending by id.
+    pub fn channel_stats(&self) -> Vec<ChannelStats> {
+        let st = self.inner.st.lock().unwrap();
+        let mut out: Vec<ChannelStats> = st
+            .chans
+            .iter()
+            .map(|(&id, c)| ChannelStats {
+                id,
+                delivered_bytes: c.delivered_bytes,
+                sent_bytes: c.sent_bytes,
+                queued_bytes: c.out_bytes,
+                ready_msgs: c.ready.len(),
+                last_delivery_ticket: c.last_delivery_ticket,
+            })
+            .collect();
+        out.sort_by_key(|c| c.id);
+        out
+    }
+
+    /// The fatal error that killed the endpoint, if any.
+    pub fn dead_reason(&self) -> Option<String> {
+        self.inner.st.lock().unwrap().dead.clone()
+    }
+
+    /// Whether `ch` is a handle of this endpoint (registry cleanup:
+    /// destroying a path must release its channel handles too).
+    pub fn owns(&self, ch: &Channel) -> bool {
+        Arc::ptr_eq(&self.inner, &ch.inner)
+    }
+
+    /// Shut the endpoint down: wake every blocked operation, close the
+    /// underlying path (which unblocks the workers) and join the
+    /// workers. Idempotent.
+    pub fn shutdown(&mut self) {
+        {
+            let mut st = self.inner.st.lock().unwrap();
+            st.shutdown = true;
+            self.inner.send_cv.notify_all();
+            self.inner.space_cv.notify_all();
+            self.inner.recv_cv.notify_all();
+        }
+        self.inner.path.close();
+        if let Some(h) = self.pump.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MuxEndpoint {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for MuxEndpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let st = self.inner.st.lock().unwrap();
+        f.debug_struct("MuxEndpoint")
+            .field("channels", &st.chans.len())
+            .field("dead", &st.dead)
+            .finish()
+    }
+}
+
+/// A logical channel of a [`MuxEndpoint`]. Cheap to clone (handles share
+/// the channel); message-oriented like the dynamic path API.
+#[derive(Clone)]
+pub struct Channel {
+    id: u32,
+    /// The incarnation this handle refers to; a reused id's fresh state
+    /// carries a newer generation and stale handles observe
+    /// `ChannelClosed`.
+    gen: u64,
+    inner: Arc<MuxInner>,
+}
+
+impl Channel {
+    /// The channel id.
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// This handle's incarnation of the channel state, if it still
+    /// exists — a reused id's newer generation is invisible to stale
+    /// handles (they observe `ChannelClosed` instead of aliasing it).
+    fn chan<'a>(&self, st: &'a MuxState) -> Option<&'a ChanState> {
+        st.chans.get(&self.id).filter(|c| c.gen == self.gen)
+    }
+
+    /// Mutable variant of [`Channel::chan`].
+    fn chan_mut<'a>(&self, st: &'a mut MuxState) -> Option<&'a mut ChanState> {
+        st.chans.get_mut(&self.id).filter(|c| c.gen == self.gen)
+    }
+
+    /// Queue `data` for transmission as one message. Blocks only on the
+    /// channel's [`MuxConfig::high_water`] backpressure, never on the
+    /// wire. Returns once the message is queued.
+    pub fn send(&self, data: &[u8]) -> Result<()> {
+        self.send_owned(data.to_vec())
+    }
+
+    /// [`Channel::send`] of an already-owned buffer — queued as-is, no
+    /// copy (the `isend` path and producers that build their message in
+    /// a `Vec` anyway).
+    pub fn send_owned(&self, data: Vec<u8>) -> Result<()> {
+        match self.queue_or_park(data)? {
+            None => Ok(()),
+            Some((data, ticket)) => self.wait_and_enqueue(data, ticket),
+        }
+    }
+
+    /// One atomic admission step shared by the blocking and non-blocking
+    /// send paths: queue immediately when nobody is parked and there is
+    /// room (`Ok(None)`), otherwise hand back the buffer together with a
+    /// freshly assigned FIFO park ticket (`Ok(Some(..))`). The ticket is
+    /// taken **here, in program order**, so a later send can never
+    /// overtake an earlier one that fell back to parking — regardless of
+    /// how the parked waiters' threads are scheduled.
+    fn queue_or_park(&self, data: Vec<u8>) -> Result<Option<(Vec<u8>, u64)>> {
+        let mut st = self.inner.st.lock().unwrap();
+        check_alive(&st)?;
+        let ch = self
+            .chan_mut(&mut st)
+            .ok_or(MpwError::ChannelClosed { channel: self.id })?;
+        if ch.local_closed || ch.remote_closed {
+            return Err(MpwError::ChannelClosed { channel: self.id });
+        }
+        if ch.park_head == ch.park_tail && admit(ch, data.len(), self.inner.cfg.high_water) {
+            enqueue(ch, data);
+            drop(st);
+            self.inner.send_cv.notify_all();
+            return Ok(None);
+        }
+        let ticket = ch.park_tail;
+        ch.park_tail += 1;
+        Ok(Some((data, ticket)))
+    }
+
+    /// Park until `ticket` reaches the head of the channel's FIFO *and*
+    /// the high-water mark admits the message, then enqueue. Error exits
+    /// (endpoint dead, channel closed) leave the ticket unreleased on
+    /// purpose: those conditions are permanent and every other parked
+    /// sender observes them too.
+    fn wait_and_enqueue(&self, data: Vec<u8>, ticket: u64) -> Result<()> {
+        let mut st = self.inner.st.lock().unwrap();
+        loop {
+            check_alive(&st)?;
+            let Some(ch) = self.chan(&st) else {
+                return Err(MpwError::ChannelClosed { channel: self.id });
+            };
+            if ch.local_closed || ch.remote_closed {
+                return Err(MpwError::ChannelClosed { channel: self.id });
+            }
+            if ch.park_head == ticket && admit(ch, data.len(), self.inner.cfg.high_water) {
+                break;
+            }
+            st = self.inner.space_cv.wait(st).unwrap();
+        }
+        let ch = self.chan_mut(&mut st).expect("checked in the loop");
+        ch.park_head += 1;
+        enqueue(ch, data);
+        drop(st);
+        self.inner.send_cv.notify_all();
+        // the next parked ticket (if any) watches park_head via space_cv
+        self.inner.space_cv.notify_all();
+        Ok(())
+    }
+
+    /// Receive the next message, blocking until one is available.
+    /// Returns [`MpwError::ChannelClosed`] once the channel is closed
+    /// (either end) **and** every delivered message has been drained.
+    pub fn recv(&self) -> Result<Vec<u8>> {
+        let mut st = self.inner.st.lock().unwrap();
+        loop {
+            if let Some(ch) = self.chan_mut(&mut st) {
+                if let Some(msg) = ch.ready.pop_front() {
+                    gc_chan(&mut st, self.id);
+                    drop(st);
+                    self.inner.space_cv.notify_all();
+                    return Ok(msg);
+                }
+                if ch.remote_closed || ch.local_closed {
+                    return Err(MpwError::ChannelClosed { channel: self.id });
+                }
+            } else {
+                return Err(MpwError::ChannelClosed { channel: self.id });
+            }
+            check_alive(&st)?;
+            st = self.inner.recv_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Like [`Channel::recv`] but non-blocking: `Ok(None)` when no
+    /// message is currently available.
+    pub fn try_recv(&self) -> Result<Option<Vec<u8>>> {
+        let mut st = self.inner.st.lock().unwrap();
+        if let Some(ch) = self.chan_mut(&mut st) {
+            if let Some(msg) = ch.ready.pop_front() {
+                gc_chan(&mut st, self.id);
+                drop(st);
+                self.inner.space_cv.notify_all();
+                return Ok(Some(msg));
+            }
+            if ch.remote_closed || ch.local_closed {
+                return Err(MpwError::ChannelClosed { channel: self.id });
+            }
+        } else {
+            return Err(MpwError::ChannelClosed { channel: self.id });
+        }
+        check_alive(&st)?;
+        Ok(None)
+    }
+
+    /// Block until every queued outbound byte of this channel has been
+    /// handed to the path — and, in resilient mode, acknowledged by the
+    /// peer (resilient sends are rendezvous sends). Call before
+    /// dropping the endpoint: [`MuxEndpoint::shutdown`] is abrupt and
+    /// discards still-queued messages.
+    pub fn flush(&self) -> Result<()> {
+        let mut st = self.inner.st.lock().unwrap();
+        loop {
+            check_alive(&st)?;
+            match self.chan(&st) {
+                None => return Ok(()), // fully closed and drained
+                Some(ch) => {
+                    if ch.outq.is_empty() && !ch.in_flight {
+                        return Ok(());
+                    }
+                }
+            }
+            st = self.inner.space_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Close the channel: already-queued messages are still sent, then a
+    /// CLOSE frame tells the peer no more will follow. Idempotent.
+    pub fn close(&self) -> Result<()> {
+        let mut st = self.inner.st.lock().unwrap();
+        if let Some(ch) = self.chan_mut(&mut st) {
+            ch.local_closed = true;
+        }
+        drop(st);
+        self.inner.send_cv.notify_all();
+        self.inner.recv_cv.notify_all();
+        // producers blocked on the high-water mark must observe the close
+        self.inner.space_cv.notify_all();
+        Ok(())
+    }
+
+    /// Start a non-blocking send (`MPW_ISendRecv` pattern): the message
+    /// is queued and flushed by the pump while the caller computes.
+    /// When there is room below the high-water mark — the common case —
+    /// the queue push happens inline and the returned handle is already
+    /// finished (no worker thread); only a send that would block on
+    /// backpressure falls back to a worker, which carries a park ticket
+    /// assigned *here*, so per-channel send order holds even across the
+    /// worker handoff.
+    pub fn isend(&self, data: Vec<u8>) -> super::nonblocking::NbeHandle {
+        match self.queue_or_park(data) {
+            Ok(None) => super::nonblocking::NbeHandle::ready(Ok(None)),
+            Ok(Some((data, ticket))) => {
+                let ch = self.clone();
+                super::nonblocking::NbeHandle::spawn(move || {
+                    ch.wait_and_enqueue(data, ticket).map(|()| None)
+                })
+            }
+            Err(e) => super::nonblocking::NbeHandle::ready(Err(e)),
+        }
+    }
+
+    /// Start a non-blocking receive; `wait()` returns the message. A
+    /// message already delivered to the channel completes inline (no
+    /// worker thread) — mirrors the `isend` fast path.
+    ///
+    /// With **several** `irecv`s outstanding on one channel, which
+    /// handle receives which message is unspecified (their workers race
+    /// for the queue); the channel itself stays FIFO. Issue one at a
+    /// time — the latency-hiding pattern — when assignment order
+    /// matters.
+    pub fn irecv(&self) -> super::nonblocking::NbeHandle {
+        match self.try_recv() {
+            Ok(Some(msg)) => super::nonblocking::NbeHandle::ready(Ok(Some(msg))),
+            Ok(None) => {
+                let ch = self.clone();
+                super::nonblocking::NbeHandle::spawn(move || ch.recv().map(Some))
+            }
+            Err(e) => super::nonblocking::NbeHandle::ready(Err(e)),
+        }
+    }
+}
+
+impl std::fmt::Debug for Channel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Channel").field("id", &self.id).finish()
+    }
+}
+
+/// THE high-water admission rule, shared by the blocking and
+/// non-blocking send paths so backpressure policy cannot drift between
+/// them: a message is admitted when the queue is empty (a single
+/// oversized message must always be sendable) or when it fits under the
+/// mark.
+fn admit(ch: &ChanState, len: usize, high_water: usize) -> bool {
+    ch.out_bytes == 0 || ch.out_bytes + len <= high_water
+}
+
+/// Enqueue bookkeeping shared by the blocking and non-blocking send
+/// paths (sequence number, byte accounting, queue push).
+fn enqueue(ch: &mut ChanState, data: Vec<u8>) {
+    let seq = ch.next_send_seq;
+    ch.next_send_seq += 1;
+    ch.out_bytes += data.len();
+    ch.outq.push_back(OutMsg { data, off: 0, seq });
+}
+
+fn check_alive(st: &MuxState) -> Result<()> {
+    if let Some(msg) = &st.dead {
+        return Err(MpwError::Protocol(format!("mux endpoint failed: {msg}")));
+    }
+    if st.shutdown {
+        return Err(MpwError::Protocol("mux endpoint is shut down".into()));
+    }
+    Ok(())
+}
+
+/// Get-or-create channel state (inbound frames may precede the local
+/// `open`), registering the id in the rotation order.
+fn ensure_chan(st: &mut MuxState, id: u32) -> &mut ChanState {
+    let gen = st.next_gen;
+    let order = &mut st.order;
+    let mut created = false;
+    let ch = st.chans.entry(id).or_insert_with(|| {
+        order.push(id);
+        created = true;
+        ChanState { gen, ..ChanState::default() }
+    });
+    if created {
+        st.next_gen += 1;
+    }
+    ch
+}
+
+/// Drop a channel's state once both ends closed it and everything is
+/// drained (frees the id's slot in the rotation).
+///
+/// State the peer created but this side never opened is deliberately
+/// *retained* after the peer's CLOSE: erasing it would forget
+/// `remote_closed` (a later local `open` would block in `recv` forever
+/// instead of reporting `ChannelClosed`) and would discard messages a
+/// fire-and-close producer sent for a late opener to drain — the "open
+/// order across the two ends is free" guarantee depends on both. The
+/// cost is one `ChanState` per never-opened id **including any
+/// undrained `ready` payloads**; a lease/expiry bounding that retention
+/// for ephemeral-id workloads is a ROADMAP follow-up.
+fn gc_chan(st: &mut MuxState, id: u32) {
+    let done = match st.chans.get(&id) {
+        Some(c) => {
+            c.local_closed
+                && c.close_sent
+                && c.remote_closed
+                && !c.in_flight
+                && c.ready.is_empty()
+                && c.outq.is_empty()
+        }
+        None => false,
+    };
+    if done {
+        st.chans.remove(&id);
+        if let Some(pos) = st.order.iter().position(|&x| x == id) {
+            st.order.remove(pos);
+            if st.cursor > pos {
+                st.cursor -= 1;
+            }
+        }
+        if !st.order.is_empty() {
+            st.cursor %= st.order.len();
+        } else {
+            st.cursor = 0;
+        }
+    }
+}
+
+/// Select the pump's next frame: scan the rotation from the cursor and
+/// take one budget-bounded unit of work from the first channel that has
+/// any, advancing the cursor past it (the fairness rule).
+fn pick_job(st: &mut MuxState, budget: usize) -> Option<PumpJob> {
+    let n = st.order.len();
+    for k in 0..n {
+        let pos = (st.cursor + k) % n;
+        let id = st.order[pos];
+        let Some(ch) = st.chans.get_mut(&id) else { continue };
+        if ch.locally_opened && !ch.open_sent {
+            ch.open_sent = true;
+            st.cursor = (pos + 1) % n;
+            return Some(PumpJob::Open(id));
+        }
+        if let Some(msg) = ch.outq.pop_front() {
+            let end = (msg.off + budget).min(msg.data.len());
+            let fin = end == msg.data.len();
+            let take = end - msg.off;
+            ch.out_bytes -= take;
+            ch.sent_bytes += take as u64;
+            ch.in_flight = true;
+            st.cursor = (pos + 1) % n;
+            return Some(PumpJob::Chunk { id, msg, end, fin });
+        }
+        if ch.local_closed && !ch.close_sent && !ch.in_flight {
+            ch.close_sent = true;
+            st.cursor = (pos + 1) % n;
+            return Some(PumpJob::Close(id));
+        }
+    }
+    None
+}
+
+fn pump_loop(inner: &Arc<MuxInner>) {
+    let budget = inner.cfg.chunk_budget;
+    loop {
+        let job = {
+            let mut st = inner.st.lock().unwrap();
+            loop {
+                if st.shutdown || st.dead.is_some() {
+                    return;
+                }
+                if let Some(job) = pick_job(&mut st, budget) {
+                    break job;
+                }
+                st = inner.send_cv.wait(st).unwrap();
+            }
+        };
+        // producers may be blocked on the bytes we just claimed
+        inner.space_cv.notify_all();
+        let sent = match &job {
+            PumpJob::Open(id) => {
+                let hdr = encode_mux_hdr(CH_OPEN, *id, 0, 0);
+                inner.path.dsend_split(&hdr, &[])
+            }
+            PumpJob::Close(id) => {
+                let hdr = encode_mux_hdr(CH_CLOSE, *id, 0, 0);
+                inner.path.dsend_split(&hdr, &[])
+            }
+            PumpJob::Chunk { id, msg, end, fin } => {
+                let kind = if *fin { CH_FIN } else { CH_DATA };
+                let chunk = &msg.data[msg.off..*end];
+                let hdr = encode_mux_hdr(kind, *id, msg.seq, chunk.len() as u32);
+                inner.path.dsend_split(&hdr, chunk)
+            }
+        };
+        let mut st = inner.st.lock().unwrap();
+        match job {
+            PumpJob::Chunk { id, msg, end, fin } => {
+                if let Some(ch) = st.chans.get_mut(&id) {
+                    ch.in_flight = false;
+                    if !fin && sent.is_ok() {
+                        let mut msg = msg;
+                        msg.off = end;
+                        ch.outq.push_front(msg);
+                    }
+                }
+            }
+            PumpJob::Close(id) => {
+                // the CLOSE just sent may have been the channel's last
+                // pending duty — without this, the side that closes
+                // *second* (its gc triggers in recv/route already ran)
+                // would keep the state forever and the id could never
+                // be reused here
+                gc_chan(&mut st, id);
+            }
+            PumpJob::Open(_) => {}
+        }
+        // flush() waiters watch in_flight/outq through this condvar
+        inner.space_cv.notify_all();
+        match sent {
+            Ok(()) => {}
+            Err(e) => {
+                if !st.shutdown {
+                    st.dead = Some(format!("mux send failed: {e}"));
+                }
+                inner.recv_cv.notify_all();
+                inner.space_cv.notify_all();
+                inner.send_cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+fn dispatch_loop(inner: &Arc<MuxInner>) {
+    let mut cache: Vec<u8> = Vec::new();
+    loop {
+        {
+            let st = inner.st.lock().unwrap();
+            if st.shutdown || st.dead.is_some() {
+                return;
+            }
+        }
+        let n = match inner.path.drecv_into(&mut cache) {
+            Ok(n) => n,
+            Err(e) => {
+                let mut st = inner.st.lock().unwrap();
+                if !st.shutdown && st.dead.is_none() {
+                    st.dead = Some(format!("mux receive failed: {e}"));
+                }
+                inner.recv_cv.notify_all();
+                inner.space_cv.notify_all();
+                inner.send_cv.notify_all();
+                return;
+            }
+        };
+        if let Err(e) = route_frame(inner, &cache[..n]) {
+            let mut st = inner.st.lock().unwrap();
+            if st.dead.is_none() {
+                st.dead = Some(e.to_string());
+            }
+            inner.recv_cv.notify_all();
+            inner.space_cv.notify_all();
+            inner.send_cv.notify_all();
+            // a protocol violation is unrecoverable: fail the path too so
+            // the peer does not hang on a dispatcher that stopped reading
+            inner.path.shutdown_all_streams();
+            return;
+        }
+    }
+}
+
+/// Validate one inbound frame and fold it into the channel state.
+fn route_frame(inner: &Arc<MuxInner>, frame: &[u8]) -> Result<()> {
+    if frame.len() < MUX_HDR_LEN {
+        return Err(MpwError::Protocol(format!("short channel frame ({} bytes)", frame.len())));
+    }
+    let hdr = decode_mux_hdr(frame[..MUX_HDR_LEN].try_into().expect("sized slice"))?;
+    let payload = &frame[MUX_HDR_LEN..];
+    if payload.len() != hdr.len as usize {
+        return Err(MpwError::Protocol(format!(
+            "channel frame length mismatch: header says {}, message carries {}",
+            hdr.len,
+            payload.len()
+        )));
+    }
+    let mut st = inner.st.lock().unwrap();
+    match hdr.kind {
+        CH_OPEN => {
+            ensure_chan(&mut st, hdr.channel);
+        }
+        CH_CLOSE => {
+            let ch = ensure_chan(&mut st, hdr.channel);
+            ch.remote_closed = true;
+            gc_chan(&mut st, hdr.channel);
+            drop(st);
+            inner.recv_cv.notify_all();
+        }
+        CH_DATA | CH_FIN => {
+            let ticket = st.delivery_ticket + 1;
+            let ch = ensure_chan(&mut st, hdr.channel);
+            if ch.remote_closed {
+                return Err(MpwError::Protocol(format!(
+                    "data frame on channel {} after its CLOSE",
+                    hdr.channel
+                )));
+            }
+            if hdr.msg_seq != ch.next_recv_seq {
+                return Err(MpwError::Protocol(format!(
+                    "channel {} ordering violated: frame for message {} while expecting {}",
+                    hdr.channel, hdr.msg_seq, ch.next_recv_seq
+                )));
+            }
+            // MAX_MUX_PAYLOAD bounds one frame; the reassembled message
+            // must be bounded too, or a peer that never sends FIN could
+            // grow the buffer without limit (same guard as the dynamic
+            // and resilience layers)
+            let total = ch.partial.len() as u64 + payload.len() as u64;
+            if total > super::dynamic::MAX_DYNAMIC {
+                return Err(MpwError::Protocol(format!(
+                    "channel {} message exceeds the {}-byte bound",
+                    hdr.channel,
+                    super::dynamic::MAX_DYNAMIC
+                )));
+            }
+            ch.partial.extend_from_slice(payload);
+            if hdr.kind == CH_FIN {
+                let msg = std::mem::take(&mut ch.partial);
+                ch.delivered_bytes += msg.len() as u64;
+                ch.ready.push_back(msg);
+                ch.next_recv_seq += 1;
+                ch.last_delivery_ticket = ticket;
+                st.delivery_ticket = ticket;
+                drop(st);
+                inner.recv_cv.notify_all();
+            }
+        }
+        _ => unreachable!("decode_mux_hdr validated the kind"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Message links: the abstraction that makes tools channel-aware.
+// ---------------------------------------------------------------------------
+
+/// Anything that can move whole dynamic-size messages: a [`Path`]
+/// (`dsend`/`drecv`) or a mux [`Channel`]. Tools written against this
+/// trait (DataGather, mpw-cp) run unchanged over a dedicated path *or*
+/// over one channel of a shared path.
+pub trait MsgLink {
+    /// Send one whole message.
+    fn send_msg(&self, buf: &[u8]) -> Result<()>;
+    /// Receive one whole message.
+    fn recv_msg(&self) -> Result<Vec<u8>>;
+    /// Receive one whole message into a reusable cache; returns its
+    /// length. The default allocates via [`MsgLink::recv_msg`].
+    fn recv_msg_into(&self, cache: &mut Vec<u8>) -> Result<usize> {
+        let msg = self.recv_msg()?;
+        let n = msg.len();
+        if cache.len() < n {
+            cache.resize(n, 0);
+        }
+        cache[..n].copy_from_slice(&msg);
+        Ok(n)
+    }
+}
+
+impl MsgLink for Path {
+    fn send_msg(&self, buf: &[u8]) -> Result<()> {
+        self.dsend(buf)
+    }
+    fn recv_msg(&self) -> Result<Vec<u8>> {
+        self.drecv()
+    }
+    fn recv_msg_into(&self, cache: &mut Vec<u8>) -> Result<usize> {
+        self.drecv_into(cache)
+    }
+}
+
+impl MsgLink for Channel {
+    fn send_msg(&self, buf: &[u8]) -> Result<()> {
+        self.send(buf)
+    }
+    fn recv_msg(&self) -> Result<Vec<u8>> {
+        self.recv()
+    }
+    fn recv_msg_into(&self, cache: &mut Vec<u8>) -> Result<usize> {
+        // recv already yields an owned buffer; swap it in instead of
+        // copying (the transfer loops call this per 8 MB chunk)
+        let mut msg = self.recv()?;
+        let n = msg.len();
+        std::mem::swap(cache, &mut msg);
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpwide::config::PathConfig;
+    use crate::mpwide::transport::mem_path_pairs;
+    use crate::util::Rng;
+
+    fn mem_endpoints(n: usize, cfg: MuxConfig) -> (MuxEndpoint, MuxEndpoint) {
+        let (l, r) = mem_path_pairs(n);
+        let mut pc = PathConfig::with_streams(n);
+        pc.autotune = false;
+        pc.chunk_size = 64 * 1024;
+        let a = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
+        let b = Arc::new(Path::from_pairs(r, pc).unwrap());
+        (
+            MuxEndpoint::start_cfg(a, cfg.clone()).unwrap(),
+            MuxEndpoint::start_cfg(b, cfg).unwrap(),
+        )
+    }
+
+    #[test]
+    fn mux_hdr_roundtrip() {
+        let h = encode_mux_hdr(CH_DATA, 7, 42, 1000);
+        let d = decode_mux_hdr(&h).unwrap();
+        assert_eq!(d, MuxHdr { kind: CH_DATA, channel: 7, msg_seq: 42, len: 1000 });
+    }
+
+    #[test]
+    fn mux_hdr_rejects_garbage() {
+        let mut h = encode_mux_hdr(CH_FIN, 1, 0, 4);
+        h[0] = 0;
+        assert!(decode_mux_hdr(&h).is_err(), "bad magic");
+        let mut h = encode_mux_hdr(CH_FIN, 1, 0, 4);
+        h[1] = 99;
+        assert!(decode_mux_hdr(&h).is_err(), "bad kind");
+        let h = encode_mux_hdr(CH_DATA, 1, 0, (MAX_MUX_PAYLOAD + 1) as u32);
+        assert!(decode_mux_hdr(&h).is_err(), "oversized payload");
+        let h = encode_mux_hdr(CH_OPEN, 1, 0, 4);
+        assert!(decode_mux_hdr(&h).is_err(), "OPEN with payload");
+    }
+
+    #[test]
+    fn two_channels_roundtrip() {
+        let (a, b) = mem_endpoints(2, MuxConfig::default());
+        let a1 = a.open(1).unwrap();
+        let a2 = a.open(2).unwrap();
+        let b1 = b.open(1).unwrap();
+        let b2 = b.open(2).unwrap();
+        let mut m1 = vec![0u8; 100_000];
+        let mut m2 = vec![0u8; 5_000];
+        Rng::new(31).fill_bytes(&mut m1);
+        Rng::new(32).fill_bytes(&mut m2);
+        a1.send(&m1).unwrap();
+        a2.send(&m2).unwrap();
+        assert_eq!(b1.recv().unwrap(), m1);
+        assert_eq!(b2.recv().unwrap(), m2);
+        // reverse direction over the same shared path
+        b2.send(&m1).unwrap();
+        assert_eq!(a2.recv().unwrap(), m1);
+    }
+
+    #[test]
+    fn per_channel_ordering_holds() {
+        let (a, b) = mem_endpoints(1, MuxConfig { chunk_budget: 1024, high_water: 1 << 20 });
+        let tx = a.open(9).unwrap();
+        let rx = b.open(9).unwrap();
+        for i in 0..20u32 {
+            let mut m = i.to_be_bytes().to_vec();
+            m.resize(3_000, i as u8);
+            tx.send(&m).unwrap();
+        }
+        for i in 0..20u32 {
+            let m = rx.recv().unwrap();
+            assert_eq!(u32::from_be_bytes(m[..4].try_into().unwrap()), i, "reordered");
+        }
+    }
+
+    #[test]
+    fn bulk_does_not_starve_small_channels() {
+        // The bulk channel queues a big message FIRST; small messages on
+        // other channels queued afterwards must still be delivered before
+        // the bulk completes (global delivery tickets make the order
+        // deterministic — a strict-FIFO mux would fail this).
+        let cfg = MuxConfig { chunk_budget: 16 * 1024, high_water: 64 << 20 };
+        // paced path: the pump needs tens of milliseconds for the bulk
+        // message while enqueueing the small one takes microseconds, so
+        // the ticket comparison below cannot be raced by scheduling
+        let (l, r) = mem_path_pairs(2);
+        let mut pc = PathConfig::with_streams(2);
+        pc.autotune = false;
+        pc.chunk_size = 64 * 1024;
+        pc.pacing_rate = Some(32.0 * 1024.0 * 1024.0);
+        let pa = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
+        let pb = Arc::new(Path::from_pairs(r, pc).unwrap());
+        let a = MuxEndpoint::start_cfg(pa, cfg.clone()).unwrap();
+        let b = MuxEndpoint::start_cfg(pb, cfg).unwrap();
+        let bulk_tx = a.open(1).unwrap();
+        let small_tx = a.open(2).unwrap();
+        let bulk_rx = b.open(1).unwrap();
+        let small_rx = b.open(2).unwrap();
+        let big = vec![7u8; 4 << 20];
+        bulk_tx.send(&big).unwrap();
+        small_tx.send(&[1, 2, 3]).unwrap();
+        assert_eq!(small_rx.recv().unwrap(), vec![1, 2, 3]);
+        assert_eq!(bulk_rx.recv().unwrap(), big);
+        let stats = b.channel_stats();
+        let t_bulk = stats.iter().find(|c| c.id == 1).unwrap().last_delivery_ticket;
+        let t_small = stats.iter().find(|c| c.id == 2).unwrap().last_delivery_ticket;
+        assert!(
+            t_small < t_bulk,
+            "small message (ticket {t_small}) must beat the bulk transfer (ticket {t_bulk})"
+        );
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let (a, b) = mem_endpoints(1, MuxConfig::default());
+        let tx = a.open(4).unwrap();
+        let rx = b.open(4).unwrap();
+        tx.send(b"last words").unwrap();
+        tx.close().unwrap();
+        assert_eq!(rx.recv().unwrap(), b"last words");
+        match rx.recv() {
+            Err(MpwError::ChannelClosed { channel: 4 }) => {}
+            other => panic!("expected ChannelClosed, got {other:?}"),
+        }
+        match tx.send(b"x") {
+            Err(MpwError::ChannelClosed { channel: 4 }) => {}
+            other => panic!("expected ChannelClosed on closed send, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn channel_id_reusable_after_both_ends_close() {
+        let (a, b) = mem_endpoints(1, MuxConfig::default());
+        let tx = a.open(6).unwrap();
+        let rx = b.open(6).unwrap();
+        tx.send(b"gen1").unwrap();
+        assert_eq!(rx.recv().unwrap(), b"gen1");
+        tx.close().unwrap();
+        assert!(matches!(rx.recv(), Err(MpwError::ChannelClosed { .. })));
+        rx.close().unwrap();
+        // both ends quiesce the id (CLOSE frames exchanged + gc) …
+        let t0 = std::time::Instant::now();
+        loop {
+            let a_gone = a.channel_stats().iter().all(|c| c.id != 6);
+            let b_gone = b.channel_stats().iter().all(|c| c.id != 6);
+            if a_gone && b_gone {
+                break;
+            }
+            assert!(t0.elapsed().as_secs() < 5, "closed channel state never gc'd");
+            std::thread::yield_now();
+        }
+        // … after which the id is reusable with fresh sequence state
+        let tx2 = a.open(6).unwrap();
+        let rx2 = b.open(6).unwrap();
+        tx2.send(b"gen2").unwrap();
+        assert_eq!(rx2.recv().unwrap(), b"gen2");
+    }
+
+    #[test]
+    fn empty_message_roundtrips() {
+        let (a, b) = mem_endpoints(1, MuxConfig::default());
+        let tx = a.open(0).unwrap();
+        let rx = b.open(0).unwrap();
+        tx.send(&[]).unwrap();
+        tx.send(b"after").unwrap();
+        assert_eq!(rx.recv().unwrap(), Vec::<u8>::new());
+        assert_eq!(rx.recv().unwrap(), b"after");
+    }
+
+    #[test]
+    fn open_twice_rejected_and_unopened_frames_adopted() {
+        let (a, b) = mem_endpoints(1, MuxConfig::default());
+        let tx = a.open(5).unwrap();
+        assert!(a.open(5).is_err(), "double open");
+        // peer sends before this end opens: state is auto-created and
+        // adopted by the later open
+        tx.send(b"early").unwrap();
+        let t0 = std::time::Instant::now();
+        while b.channel_stats().iter().all(|c| c.id != 5) {
+            assert!(t0.elapsed().as_secs() < 5, "frame never arrived");
+            std::thread::yield_now();
+        }
+        let rx = b.open(5).unwrap();
+        assert_eq!(rx.recv().unwrap(), b"early");
+    }
+
+    #[test]
+    fn nonblocking_channel_ops() {
+        let (a, b) = mem_endpoints(2, MuxConfig::default());
+        let tx = a.open(3).unwrap();
+        let rx = b.open(3).unwrap();
+        let h = rx.irecv();
+        let _ = h.is_finished(); // polling is allowed at any time
+        let _ = tx.isend(vec![9u8; 10_000]).wait().unwrap();
+        assert_eq!(h.wait().unwrap().unwrap(), vec![9u8; 10_000]);
+    }
+
+    #[test]
+    fn resilient_path_carries_channels_through_stream_death() {
+        use crate::mpwide::transport::mem_path_pairs_killable;
+        let (l, r, kills) = mem_path_pairs_killable(4);
+        let mut pc = PathConfig::with_streams(4);
+        pc.autotune = false;
+        pc.chunk_size = 32 * 1024;
+        pc.resilience.enabled = true;
+        let pa = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
+        let pb = Arc::new(Path::from_pairs(r, pc).unwrap());
+        let a = MuxEndpoint::start(pa);
+        let b = MuxEndpoint::start(pb);
+        let tx = a.open(1).unwrap();
+        let rx = b.open(1).unwrap();
+        let mut msg = vec![0u8; 1 << 20];
+        Rng::new(77).fill_bytes(&mut msg);
+        tx.send(&msg).unwrap();
+        assert_eq!(rx.recv().unwrap(), msg);
+        // kill a (non-control) stream; the resilience layer routes around
+        // it and the channels never notice
+        kills[2].fire();
+        tx.send(&msg).unwrap();
+        assert_eq!(rx.recv().unwrap(), msg);
+        assert!(a.path().status().live >= 3);
+    }
+
+    #[test]
+    fn path_death_surfaces_to_channels() {
+        use crate::mpwide::transport::mem_path_pairs_killable;
+        let (l, r, kills) = mem_path_pairs_killable(1);
+        let mut pc = PathConfig::with_streams(1);
+        pc.autotune = false;
+        let pa = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
+        let pb = Arc::new(Path::from_pairs(r, pc).unwrap());
+        let a = MuxEndpoint::start(pa);
+        let b = MuxEndpoint::start(pb);
+        let tx = a.open(1).unwrap();
+        let rx = b.open(1).unwrap();
+        tx.send(b"ok").unwrap();
+        assert_eq!(rx.recv().unwrap(), b"ok");
+        for k in &kills {
+            k.fire();
+        }
+        // the dispatcher dies on the failed path; blocked and future recvs
+        // must error, not hang
+        let t0 = std::time::Instant::now();
+        loop {
+            match rx.recv() {
+                Ok(_) => {}
+                Err(_) => break,
+            }
+            assert!(t0.elapsed().as_secs() < 10, "recv hung on a dead path");
+        }
+        assert!(b.dead_reason().is_some());
+    }
+
+    #[test]
+    fn msg_link_is_object_safe_and_uniform() {
+        let (a, b) = mem_endpoints(1, MuxConfig::default());
+        let tx = a.open(2).unwrap();
+        let rx = b.open(2).unwrap();
+        let dl: &dyn MsgLink = &tx;
+        dl.send_msg(b"via trait").unwrap();
+        let dr: &dyn MsgLink = &rx;
+        assert_eq!(dr.recv_msg().unwrap(), b"via trait");
+        let mut cache = Vec::new();
+        dl.send_msg(b"cached").unwrap();
+        let n = dr.recv_msg_into(&mut cache).unwrap();
+        assert_eq!(&cache[..n], b"cached");
+    }
+}

@@ -29,36 +29,59 @@ pub enum NbeOp {
 pub struct NbeHandle {
     done: Arc<AtomicBool>,
     join: Option<JoinHandle<Result<Option<Vec<u8>>>>>,
+    /// Result of an operation that completed inline (no worker thread;
+    /// the mux `isend` fast path).
+    ready: Option<Result<Option<Vec<u8>>>>,
 }
 
 impl NbeHandle {
     /// `MPW_ISendRecv`: start the operation on a worker thread.
     pub fn start(path: Arc<Path>, op: NbeOp) -> NbeHandle {
+        NbeHandle::spawn(move || match op {
+            NbeOp::Send(buf) => path.send(&buf).map(|_| None),
+            NbeOp::Recv(n) => {
+                let mut buf = vec![0u8; n];
+                path.recv(&mut buf).map(|_| Some(buf))
+            }
+            NbeOp::SendRecv(sbuf, n) => {
+                let mut buf = vec![0u8; n];
+                path.send_recv(&sbuf, &mut buf).map(|_| Some(buf))
+            }
+            NbeOp::DSendRecv(sbuf) => {
+                let mut cache = Vec::new();
+                path.dsend_recv(&sbuf, &mut cache).map(|n| {
+                    cache.truncate(n);
+                    Some(cache)
+                })
+            }
+        })
+    }
+
+    /// Run an arbitrary blocking operation under the non-blocking handle
+    /// discipline (poll with [`NbeHandle::is_finished`], harvest with
+    /// [`NbeHandle::wait`], detach on drop). The mux layer uses this for
+    /// channel-level `isend`/`irecv`, so channels compose with the same
+    /// latency-hiding pattern paths do.
+    pub fn spawn(
+        f: impl FnOnce() -> Result<Option<Vec<u8>>> + Send + 'static,
+    ) -> NbeHandle {
         let done = Arc::new(AtomicBool::new(false));
         let done2 = done.clone();
         let join = std::thread::spawn(move || {
-            let result = match op {
-                NbeOp::Send(buf) => path.send(&buf).map(|_| None),
-                NbeOp::Recv(n) => {
-                    let mut buf = vec![0u8; n];
-                    path.recv(&mut buf).map(|_| Some(buf))
-                }
-                NbeOp::SendRecv(sbuf, n) => {
-                    let mut buf = vec![0u8; n];
-                    path.send_recv(&sbuf, &mut buf).map(|_| Some(buf))
-                }
-                NbeOp::DSendRecv(sbuf) => {
-                    let mut cache = Vec::new();
-                    path.dsend_recv(&sbuf, &mut cache).map(|n| {
-                        cache.truncate(n);
-                        Some(cache)
-                    })
-                }
-            };
+            let result = f();
             done2.store(true, Ordering::Release);
             result
         });
-        NbeHandle { done, join: Some(join) }
+        NbeHandle { done, join: Some(join), ready: None }
+    }
+
+    /// A handle whose operation already completed inline — no worker
+    /// thread at all. `is_finished` is immediately true and `wait`
+    /// returns `result` directly. Used by queue-only operations (mux
+    /// `isend` with room below the high-water mark) so the non-blocking
+    /// API costs nothing when nothing would block.
+    pub fn ready(result: Result<Option<Vec<u8>>>) -> NbeHandle {
+        NbeHandle { done: Arc::new(AtomicBool::new(true)), join: None, ready: Some(result) }
     }
 
     /// `MPW_Has_NBE_Finished`: poll without blocking.
@@ -69,6 +92,9 @@ impl NbeHandle {
     /// `MPW_Wait`: block until completion; returns the received buffer for
     /// receiving operations, `None` for pure sends.
     pub fn wait(mut self) -> Result<Option<Vec<u8>>> {
+        if let Some(r) = self.ready.take() {
+            return r;
+        }
         let join = self.join.take().expect("wait called twice");
         join.join().map_err(|_| MpwError::WorkerPanic("non-blocking worker".into()))?
     }

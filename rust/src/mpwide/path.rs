@@ -24,7 +24,7 @@ use super::config::{PathConfig, ReconnectPolicy};
 use super::errors::{MpwError, Result};
 use super::pacing::Pacer;
 use super::resilience::{self, FrameBox, HealthState, PathStatus, RejoinDaemon, RejoinRegistry};
-use super::stripe;
+use super::stripe::{self, SplitBuf};
 use super::transport::{connect_streams, HalfDuplex, KillSwitch, RawPathListener, StreamPair};
 
 /// Wire size of the per-message active-stream header (u16, big endian,
@@ -85,6 +85,12 @@ pub struct Path {
     /// Resilient framing enabled (cached from the config at creation;
     /// both ends must agree, like every other MPWide knob).
     resilient: bool,
+    /// Progress budget for the resilient sender's ACK wait (cached from
+    /// the config; `None` disables the watchdog).
+    ack_timeout: Option<Duration>,
+    /// Timer thread firing the control stream's kill switch when an ACK
+    /// wait exceeds its budget (lazily spawned on first armed wait).
+    pub(crate) ack_watchdog: resilience::AckWatchdog,
     /// Sticky closed flag: set by [`Path::close`], never cleared. Gates
     /// rejoin so a closed path cannot be resurrected by its monitor.
     closed: AtomicBool,
@@ -142,6 +148,7 @@ impl Path {
         let controller =
             Mutex::new(AdaptiveController::new(cfg.adapt.clone(), streams.len()));
         let resilient = cfg.resilience.enabled;
+        let ack_timeout = cfg.resilience.ack_timeout;
         let reconnect = cfg.resilience.reconnect.clone();
         Ok(Path {
             streams,
@@ -156,6 +163,8 @@ impl Path {
             res_send_seq: AtomicU64::new(0),
             res_recv_seq: AtomicU64::new(0),
             resilient,
+            ack_timeout,
+            ack_watchdog: resilience::AckWatchdog::new(),
             closed: AtomicBool::new(false),
             reconnect: Mutex::new(reconnect),
             remote: Mutex::new(None),
@@ -293,6 +302,20 @@ impl Path {
     /// Send without taking the send gate (callers that already hold it:
     /// the dynamic-message layer).
     pub(crate) fn send_ungated(&self, buf: &[u8]) -> Result<usize> {
+        self.send_split_ungated(SplitBuf::plain(buf))
+    }
+
+    /// `MPW_Send` of a two-part logical message (`head ++ tail`) without
+    /// concatenating the parts: segments and chunks are resolved through
+    /// [`SplitBuf::slice`] and written with one vectored call each. This
+    /// is the mux layer's hot path (channel-frame header + payload).
+    pub fn send_split(&self, head: &[u8], tail: &[u8]) -> Result<usize> {
+        let _gate = self.send_gate.lock().unwrap();
+        self.send_split_ungated(SplitBuf { head, tail })
+    }
+
+    /// [`Path::send_split`] without taking the send gate.
+    pub(crate) fn send_split_ungated(&self, buf: SplitBuf<'_>) -> Result<usize> {
         if self.resilient {
             return resilience::send(self, buf);
         }
@@ -319,7 +342,8 @@ impl Path {
                     if seg.is_empty() {
                         continue;
                     }
-                    let data = &buf[seg];
+                    let (h, t) = buf.slice(seg);
+                    let data = SplitBuf { head: h, tail: t };
                     jobs.push(Box::new(move || *out = Self::send_worker(slot, data, chunk)));
                 }
                 crate::util::pool::scope(jobs);
@@ -485,6 +509,11 @@ impl Path {
     /// Whether resilient framing is active on this path.
     pub fn resilient(&self) -> bool {
         self.resilient
+    }
+
+    /// The configured ACK progress budget, if any (resilient mode).
+    pub(crate) fn ack_timeout(&self) -> Option<Duration> {
+        self.ack_timeout
     }
 
     /// Whether stream `i` can currently carry traffic.
@@ -687,6 +716,7 @@ impl Path {
             active_streams: self.tuning.active_streams(),
             preferred_active: self.tuning.preferred_active(),
             rejoined: self.health.rejoined.load(Ordering::SeqCst),
+            ack_timeouts: self.ack_watchdog.fired(),
             resilient: self.resilient,
             reconnect_enabled: self.reconnect.lock().unwrap().enabled,
         }
@@ -708,6 +738,7 @@ impl Path {
             self.closed.store(true, Ordering::SeqCst);
             self.health.cv.notify_all();
         }
+        self.ack_watchdog.stop();
         self.shutdown_all_streams();
     }
 
@@ -724,11 +755,12 @@ impl Path {
         }
     }
 
-    fn send_worker(slot: &StreamSlot, data: &[u8], chunk: usize) -> Result<()> {
+    fn send_worker(slot: &StreamSlot, data: SplitBuf<'_>, chunk: usize) -> Result<()> {
         let mut tx = slot.tx.lock().unwrap();
         for c in stripe::chunks(0..data.len(), chunk) {
             tx.pacer.acquire(c.len());
-            tx.w.write_all(&data[c])?;
+            let (h, t) = data.slice(c);
+            tx.w.write_vectored_all(&[h, t])?;
         }
         tx.w.flush()?;
         Ok(())
@@ -740,6 +772,14 @@ impl Path {
             rx.read_exact(&mut data[c])?;
         }
         Ok(())
+    }
+}
+
+impl Drop for Path {
+    fn drop(&mut self) {
+        // The ACK watchdog's timer thread holds no reference to the
+        // path; tell it to exit (close() already did for closed paths).
+        self.ack_watchdog.stop();
     }
 }
 

@@ -116,6 +116,89 @@ pub fn relay_delayed(a: &Path, b: &Path, delay: Option<Duration>) -> Result<Rela
     })
 }
 
+/// Channel-aware relay: forward whole **messages** between two paths in
+/// both directions until either side closes. Unlike the byte-level
+/// [`relay`], which splices stream `i` of one path to stream `i` of the
+/// other (and therefore requires equal stream counts), the message
+/// relay re-sends each dynamic message through the far path's own
+/// striping — so mux channel frames (ids, sequence numbers) survive the
+/// hop intact **across legs with different stream counts, chunk sizes
+/// or resilience settings**. This is what makes a forwarder a valid hop
+/// for multiplexed traffic: N channels cross the relay as N interleaved
+/// frame streams without the relay knowing or caring which is which.
+///
+/// A clean close of either leg (EOF-like errors) ends the relay with
+/// `Ok`; a hard error tears both paths down and surfaces as
+/// [`MpwError::RelayBroken`] with the partial totals, exactly like the
+/// byte relay.
+pub fn relay_messages(a: &Path, b: &Path) -> Result<RelayStats> {
+    let mut ab: (u64, Option<MpwError>) = (0, None);
+    let mut ba: (u64, Option<MpwError>) = (0, None);
+    {
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+            Box::new(|| ab = pump_messages_guarded(a, b)),
+            Box::new(|| ba = pump_messages_guarded(b, a)),
+        ];
+        crate::util::pool::scope(jobs);
+    }
+    let stats = RelayStats { a_to_b: ab.0, b_to_a: ba.0 };
+    match ab.1.or(ba.1) {
+        None => Ok(stats),
+        Some(e) => Err(MpwError::RelayBroken {
+            a_to_b: stats.a_to_b,
+            b_to_a: stats.b_to_a,
+            detail: e.to_string(),
+        }),
+    }
+}
+
+/// One direction of the message relay plus teardown: any end (clean or
+/// hard) force-closes both paths so the sibling pump unblocks — a
+/// message relay session is one-shot by design.
+fn pump_messages_guarded(src: &Path, dst: &Path) -> (u64, Option<MpwError>) {
+    let mut cache = Vec::new();
+    let mut total = 0u64;
+    let err = loop {
+        match src.drecv_into(&mut cache) {
+            Ok(n) => {
+                if let Err(e) = dst.dsend(&cache[..n]) {
+                    break classify_relay_end(e);
+                }
+                // counted only once the far leg accepted it, so the
+                // partial totals in RelayBroken mean the same thing as
+                // the byte relay's
+                total += n as u64;
+            }
+            Err(e) => break classify_relay_end(e),
+        }
+    };
+    src.shutdown_all_streams();
+    dst.shutdown_all_streams();
+    (total, err)
+}
+
+/// Separate the normal ways a message-relay leg ends (peer closed its
+/// path, or the sibling pump tore the session down) from genuine
+/// failures.
+fn classify_relay_end(e: MpwError) -> Option<MpwError> {
+    let clean = match &e {
+        MpwError::Io(io) => matches!(
+            io.kind(),
+            std::io::ErrorKind::UnexpectedEof
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::BrokenPipe
+        ),
+        MpwError::AllStreamsDead | MpwError::StreamDead { .. } => true,
+        _ => false,
+    };
+    if clean {
+        None
+    } else {
+        Some(e)
+    }
+}
+
 /// [`pump`] plus teardown: a hard pump error force-closes every stream
 /// of both paths so sibling pumps parked in reads unblock instead of
 /// hanging the relay.
@@ -297,6 +380,34 @@ mod tests {
         }
         // the left endpoint sees the teardown as stream errors, not a hang
         assert!(left.send(&[1u8; 64]).is_err());
+    }
+
+    #[test]
+    fn message_relay_bridges_unequal_stream_counts() {
+        // left(2 streams) <-> [fwd_l(2) | fwd_r(3)] <-> right(3 streams):
+        // the byte relay would reject this; the message relay re-stripes
+        // each hop, so channel frames survive unequal legs.
+        let (left, fwd_l) = mem_paths(2);
+        let (fwd_r, right) = {
+            let (l, r) = mem_path_pairs(3);
+            let mut cfg = PathConfig::with_streams(3);
+            cfg.autotune = false;
+            (Path::from_pairs(l, cfg.clone()).unwrap(), Path::from_pairs(r, cfg).unwrap())
+        };
+        let t_relay = std::thread::spawn(move || relay_messages(&fwd_l, &fwd_r));
+        let t_right = std::thread::spawn(move || {
+            let m = right.drecv().unwrap();
+            right.dsend(&m).unwrap(); // echo
+            m
+        });
+        left.dsend(&[5u8; 10_000]).unwrap();
+        let back = left.drecv().unwrap();
+        assert_eq!(back, vec![5u8; 10_000]);
+        assert_eq!(t_right.join().unwrap(), vec![5u8; 10_000]);
+        drop(left); // clean close ends the relay session
+        let stats = t_relay.join().unwrap().unwrap();
+        assert_eq!(stats.a_to_b, 10_000);
+        assert_eq!(stats.b_to_a, 10_000);
     }
 
     #[test]

@@ -75,12 +75,25 @@
 //! the receiver already delivered; the duplicate is detected by
 //! sequence number and re-acknowledged on the receiver's next `recv`
 //! (or, if this end is itself blocked in a send, by the ACK wait
-//! itself). One known divergence window remains: if the control stream
-//! dies in the sub-RTT interval while *another* stream's rejoin is
+//! itself). The formerly documented divergence window — a control-stream
+//! death in the sub-RTT interval while *another* stream's rejoin is
 //! half-installed (one end confirmed, the other still awaiting its
-//! [`REJOIN_ACK`]), the two ends can rotate to different control
-//! streams and stall until one side's I/O fails; a progress timeout on
-//! the ACK wait would close it and is tracked as a ROADMAP item.
+//! [`REJOIN_ACK`]) could rotate the two ends to different control
+//! streams and stall both until one side's I/O failed — is now closed by
+//! the ACK progress watchdog: with
+//! [`ResilienceConfig::ack_timeout`](super::config::ResilienceConfig::ack_timeout)
+//! set, a sender whose delivery acknowledgement does not arrive within
+//! the budget force-closes its control stream and retries over the
+//! survivors, re-converging both ends through the ordinary rotation
+//! rule. The watchdog is off by default (resilient sends are rendezvous
+//! sends, so the budget must exceed the worst-case time for the peer to
+//! *consume* a whole message); the
+//! [`ResilienceConfig::wan`](super::config::ResilienceConfig::wan)
+//! preset arms it at 10 minutes. The watchdog covers the ACK *wait*
+//! only: a sender whose segment **writes** are stalled by TCP
+//! backpressure (possible in the same divergence scenario when the
+//! message exceeds the socket buffers) still waits for TCP's own
+//! timeout — write-side progress timeouts are a ROADMAP follow-up.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -90,8 +103,8 @@ use std::time::{Duration, Instant};
 
 use super::errors::{MpwError, Result};
 use super::path::Path;
-use super::stripe;
-use super::transport::{reconnect_stream, RawPathListener, StreamPair, REJOIN_ACK};
+use super::stripe::{self, SplitBuf};
+use super::transport::{reconnect_stream, KillSwitch, RawPathListener, StreamPair, REJOIN_ACK};
 
 /// Sanity byte opening every resilient frame.
 pub const FRAME_MAGIC: u8 = 0xF5;
@@ -248,6 +261,143 @@ impl FrameBox {
 }
 
 // ---------------------------------------------------------------------------
+// ACK progress watchdog.
+// ---------------------------------------------------------------------------
+
+/// Progress watchdog for the resilient sender's ACK wait.
+///
+/// The sender's ACK wait is a blocking read on the control stream; if
+/// the two ends ever diverge on which stream that is (the half-completed
+/// rejoin racing a control-stream death — the divergence window formerly
+/// documented as a limitation), the read would block until TCP gave up.
+/// The watchdog closes that window: `arm` registers a deadline and the
+/// control stream's [`KillSwitch`]; if `disarm` does not happen first, a
+/// lazily spawned timer thread fires the switch, the blocked read fails
+/// fast, the stream is isolated, and the send retries over survivors —
+/// the exact path any other stream death takes.
+///
+/// One watchdog (and at most one timer thread) exists per path; arming
+/// and disarming are two uncontended mutex operations on the send path.
+pub(crate) struct AckWatchdog {
+    shared: Arc<WdShared>,
+}
+
+struct WdShared {
+    st: Mutex<WdState>,
+    cv: Condvar,
+}
+
+struct WdState {
+    /// Monotonic arm token: a stale disarm (or a stale expiry) of a
+    /// previous wait must not touch the current one.
+    token: u64,
+    deadline: Option<Instant>,
+    kill: Option<KillSwitch>,
+    fired: u64,
+    spawned: bool,
+    stop: bool,
+}
+
+impl AckWatchdog {
+    pub(crate) fn new() -> AckWatchdog {
+        AckWatchdog {
+            shared: Arc::new(WdShared {
+                st: Mutex::new(WdState {
+                    token: 0,
+                    deadline: None,
+                    kill: None,
+                    fired: 0,
+                    spawned: false,
+                    stop: false,
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Register a deadline; returns the token to pass to `disarm`.
+    /// Spawns the timer thread on first use.
+    pub(crate) fn arm(&self, kill: KillSwitch, timeout: Duration) -> u64 {
+        let mut g = self.shared.st.lock().unwrap();
+        if !g.spawned {
+            g.spawned = true;
+            let shared = self.shared.clone();
+            let handle = std::thread::Builder::new()
+                .name("mpwide-ack-watchdog".into())
+                .spawn(move || watchdog_loop(shared))
+                .expect("spawn ack watchdog");
+            // detached deliberately: the thread exits via the stop flag
+            drop(handle);
+        }
+        g.token += 1;
+        g.deadline = Some(Instant::now() + timeout);
+        g.kill = Some(kill);
+        self.shared.cv.notify_all();
+        g.token
+    }
+
+    /// Cancel the deadline registered under `token` (no-op if the
+    /// watchdog already fired or a newer wait re-armed).
+    pub(crate) fn disarm(&self, token: u64) {
+        let mut g = self.shared.st.lock().unwrap();
+        if g.token == token {
+            g.deadline = None;
+            g.kill = None;
+        }
+    }
+
+    /// How many times the watchdog fired over the path's lifetime.
+    pub(crate) fn fired(&self) -> u64 {
+        self.shared.st.lock().unwrap().fired
+    }
+
+    /// Stop the timer thread (called when the path closes / drops).
+    pub(crate) fn stop(&self) {
+        let mut g = self.shared.st.lock().unwrap();
+        g.stop = true;
+        g.deadline = None;
+        g.kill = None;
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Default for AckWatchdog {
+    fn default() -> Self {
+        AckWatchdog::new()
+    }
+}
+
+fn watchdog_loop(shared: Arc<WdShared>) {
+    let mut g = shared.st.lock().unwrap();
+    loop {
+        if g.stop {
+            return;
+        }
+        match g.deadline {
+            None => {
+                g = shared.cv.wait(g).unwrap();
+            }
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    let kill = g.kill.take();
+                    g.deadline = None;
+                    g.fired += 1;
+                    drop(g);
+                    if let Some(k) = kill {
+                        k.fire();
+                    }
+                    g = shared.st.lock().unwrap();
+                } else {
+                    let (g2, _) = shared.cv.wait_timeout(g, d - now).unwrap();
+                    g = g2;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Path health.
 // ---------------------------------------------------------------------------
 
@@ -295,6 +445,9 @@ pub struct PathStatus {
     pub preferred_active: usize,
     /// Total streams re-absorbed by rejoin over the path's lifetime.
     pub rejoined: u64,
+    /// Times the ACK progress watchdog fired (each one force-closed the
+    /// then-current control stream and re-routed the in-flight send).
+    pub ack_timeouts: u64,
     /// Whether resilient framing is enabled.
     pub resilient: bool,
     /// Whether background reconnection is enabled.
@@ -325,14 +478,18 @@ fn ctrl_stream(path: &Path) -> Result<usize> {
 }
 
 /// Write one frame (header + payload) under a single tx lock; pacing is
-/// applied to DATA frames only.
+/// applied to DATA frames only. The payload is a [`SplitBuf`] so both
+/// contiguous payloads (CTRL/ACK — `SplitBuf::plain`) and the data hot
+/// path's (head, tail) scatter pairs share one frame-write discipline;
+/// header and payload parts go out in a single vectored write — no
+/// copy-assemble, one syscall on socket transports.
 fn write_frame(
     path: &Path,
     s: usize,
     kind: u8,
     msg_seq: u64,
     attempt: u32,
-    payload: &[u8],
+    payload: SplitBuf<'_>,
     flush: bool,
 ) -> Result<()> {
     let hdr = encode_frame_hdr(kind, msg_seq, attempt, payload.len() as u32);
@@ -341,8 +498,7 @@ fn write_frame(
     if kind == KIND_DATA {
         tx.pacer.acquire(payload.len());
     }
-    tx.w.write_all(&hdr)?;
-    tx.w.write_all(payload)?;
+    tx.w.write_vectored_all(&[&hdr[..], payload.head, payload.tail])?;
     if flush {
         tx.w.flush()?;
     }
@@ -398,7 +554,7 @@ fn write_ack(
     detail: u16,
 ) -> Result<()> {
     let d = detail.to_be_bytes();
-    write_frame(path, s, KIND_ACK, msg_seq, attempt, &[status, d[0], d[1]], true)
+    write_frame(path, s, KIND_ACK, msg_seq, attempt, SplitBuf::plain(&[status, d[0], d[1]]), true)
 }
 
 /// Send one stream's segment as chunked DATA frames.
@@ -407,11 +563,12 @@ fn send_segment(
     s: usize,
     msg_seq: u64,
     attempt: u32,
-    data: &[u8],
+    data: SplitBuf<'_>,
     chunk: usize,
 ) -> Result<()> {
     for c in stripe::chunks(0..data.len(), chunk) {
-        write_frame(path, s, KIND_DATA, msg_seq, attempt, &data[c], false)?;
+        let (h, t) = data.slice(c);
+        write_frame(path, s, KIND_DATA, msg_seq, attempt, SplitBuf { head: h, tail: t }, false)?;
     }
     path.streams[s].tx.lock().unwrap().w.flush()?;
     Ok(())
@@ -640,8 +797,10 @@ fn fatal(path: &Path, e: MpwError) -> MpwError {
 
 /// Resilient `MPW_Send`: stripe over the live streams, isolate failures,
 /// retry the whole message over survivors until the receiver confirms
-/// delivery. Caller holds the path's send gate.
-pub(crate) fn send(path: &Path, buf: &[u8]) -> Result<usize> {
+/// delivery. Caller holds the path's send gate. The message is a
+/// [`SplitBuf`] so a framing layer's header + payload need no
+/// concatenation (plain sends pass `SplitBuf::plain`).
+pub(crate) fn send(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
     let t0 = Instant::now();
     let msg_seq = path.res_send_seq.load(Ordering::Relaxed);
     for attempt in 0..max_attempts(path) {
@@ -667,7 +826,8 @@ pub(crate) fn send(path: &Path, buf: &[u8]) -> Result<usize> {
         let dead: Vec<u16> =
             (0..path.nstreams()).filter(|&i| !path.stream_alive(i)).map(|i| i as u16).collect();
         let ctrl = encode_ctrl(buf.len() as u64, &used, &dead);
-        if write_frame(path, c, KIND_CTRL, msg_seq, attempt, &ctrl, true).is_err() {
+        if write_frame(path, c, KIND_CTRL, msg_seq, attempt, SplitBuf::plain(&ctrl), true).is_err()
+        {
             path.mark_stream_dead(c, gen);
             continue;
         }
@@ -683,7 +843,8 @@ pub(crate) fn send(path: &Path, buf: &[u8]) -> Result<usize> {
                 if seg.is_empty() {
                     continue;
                 }
-                let data = &buf[seg];
+                let (h, t) = buf.slice(seg);
+                let data = SplitBuf { head: h, tail: t };
                 jobs.push(Box::new(move || {
                     *out = send_segment(path, si as usize, msg_seq, attempt, data, chunk);
                 }));
@@ -709,7 +870,20 @@ pub(crate) fn send(path: &Path, buf: &[u8]) -> Result<usize> {
         if failed {
             continue;
         }
-        match wait_ack(path, c, msg_seq, attempt) {
+        // The ACK wait is the one place the sender can block on a stream
+        // the peer may no longer be watching (the divergence window); a
+        // configured progress timeout force-closes the control stream so
+        // the wait fails over to the normal retry path.
+        let ack = if let Some(t) = path.ack_timeout() {
+            let kill = path.streams[c].meta.lock().unwrap().kill.clone();
+            let token = path.ack_watchdog.arm(kill, t);
+            let r = wait_ack(path, c, msg_seq, attempt);
+            path.ack_watchdog.disarm(token);
+            r
+        } else {
+            wait_ack(path, c, msg_seq, attempt)
+        };
+        match ack {
             Ok(AckOutcome::Delivered) => {
                 path.res_send_seq.fetch_add(1, Ordering::Relaxed);
                 path.observe_send(buf.len(), t0.elapsed());

@@ -46,6 +46,51 @@ pub fn split_mut(buf: &mut [u8], nseg: usize) -> Vec<&mut [u8]> {
     out
 }
 
+/// A logical message made of two borrowed parts (`head ++ tail`) that is
+/// striped and chunked **without ever being concatenated**: each
+/// byte-range of the logical message resolves to at most one slice of
+/// each part, and the transport writes them with one vectored call.
+///
+/// This is the zero-copy building block of the mux hot path (an 18-byte
+/// channel-frame header in front of a payload chunk) and of any other
+/// header-plus-body send; a plain message is simply `head = &[]`.
+#[derive(Clone, Copy)]
+pub struct SplitBuf<'a> {
+    /// First part of the logical message (usually a small header).
+    pub head: &'a [u8],
+    /// Second part (usually the payload).
+    pub tail: &'a [u8],
+}
+
+impl<'a> SplitBuf<'a> {
+    /// A split buffer with an empty head (plain message).
+    pub fn plain(tail: &'a [u8]) -> SplitBuf<'a> {
+        SplitBuf { head: &[], tail }
+    }
+
+    /// Total logical length, bytes.
+    pub fn len(&self) -> usize {
+        self.head.len() + self.tail.len()
+    }
+
+    /// True when both parts are empty.
+    pub fn is_empty(&self) -> bool {
+        self.head.is_empty() && self.tail.is_empty()
+    }
+
+    /// Resolve a byte range of the logical message to (head part, tail
+    /// part) — either may be empty. Panics if the range exceeds the
+    /// logical length, like slicing would.
+    pub fn slice(&self, r: Range<usize>) -> (&'a [u8], &'a [u8]) {
+        let h = self.head.len();
+        let hs = r.start.min(h);
+        let he = r.end.min(h);
+        let ts = r.start.max(h) - h;
+        let te = r.end.max(h) - h;
+        (&self.head[hs..he], &self.tail[ts..te])
+    }
+}
+
 /// Iterator over the chunk ranges of a single stream segment: each chunk is
 /// at most `chunk_size` bytes (the unit handed to one low-level tcp call).
 pub fn chunks(seg: Range<usize>, chunk_size: usize) -> impl Iterator<Item = Range<usize>> {
@@ -153,5 +198,40 @@ mod tests {
     #[should_panic]
     fn segment_index_out_of_range_panics() {
         segment(10, 2, 2);
+    }
+
+    #[test]
+    fn split_buf_slices_across_the_seam() {
+        let head = [1u8, 2, 3];
+        let tail = [4u8, 5, 6, 7];
+        let sb = SplitBuf { head: &head, tail: &tail };
+        assert_eq!(sb.len(), 7);
+        assert!(!sb.is_empty());
+        // entirely inside the head
+        assert_eq!(sb.slice(0..2), (&head[0..2], &tail[0..0]));
+        // straddling the seam
+        assert_eq!(sb.slice(1..5), (&head[1..3], &tail[0..2]));
+        // entirely inside the tail
+        assert_eq!(sb.slice(4..7), (&head[3..3], &tail[1..4]));
+        // empty range at the seam
+        assert_eq!(sb.slice(3..3), (&head[3..3], &tail[0..0]));
+        assert!(SplitBuf::plain(&[]).is_empty());
+    }
+
+    #[test]
+    fn split_buf_reassembles_under_any_chunking() {
+        let head: Vec<u8> = (0..10).collect();
+        let tail: Vec<u8> = (10..64).collect();
+        let sb = SplitBuf { head: &head, tail: &tail };
+        for chunk in [1usize, 3, 7, 10, 11, 64, 100] {
+            let mut out = Vec::new();
+            for c in chunks(0..sb.len(), chunk) {
+                let (h, t) = sb.slice(c);
+                out.extend_from_slice(h);
+                out.extend_from_slice(t);
+            }
+            let want: Vec<u8> = (0..64).collect();
+            assert_eq!(out, want, "chunk={chunk}");
+        }
     }
 }

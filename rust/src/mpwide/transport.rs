@@ -26,6 +26,19 @@ pub const HELLO_LEN: usize = 4 + 8 + 2 + 2 + 8;
 pub trait HalfDuplex: Send {
     /// Write the whole buffer.
     fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()>;
+    /// Write several buffers as one logical contiguous write (frame
+    /// header + payload on the mux/resilience hot path). The default
+    /// falls back to sequential `write_all`s; socket transports override
+    /// it with a real `writev` so the header needs no copy-assemble step
+    /// and no extra syscall.
+    fn write_vectored_all(&mut self, bufs: &[&[u8]]) -> std::io::Result<()> {
+        for b in bufs {
+            if !b.is_empty() {
+                self.write_all(b)?;
+            }
+        }
+        Ok(())
+    }
     /// Read exactly `buf.len()` bytes.
     fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()>;
     /// Read up to `buf.len()` bytes; `Ok(0)` signals end-of-stream. Used by
@@ -35,9 +48,69 @@ pub trait HalfDuplex: Send {
     fn flush(&mut self) -> std::io::Result<()>;
 }
 
+/// Largest gather list [`write_vectored_loop`] accepts — callers pass at
+/// most a frame header plus the two halves of a
+/// [`SplitBuf`](super::stripe::SplitBuf), and the fixed bound keeps the
+/// per-chunk hot path free of heap allocation.
+pub(crate) const MAX_GATHER: usize = 8;
+
+/// Drive `Write::write_vectored` to completion over `bufs`, restarting
+/// after partial writes without copying (manual cursor instead of
+/// `IoSlice::advance_slices`, which is newer than our MSRV). The slice
+/// table lives on the stack — no allocation per syscall.
+pub(crate) fn write_vectored_loop<W: Write>(w: &mut W, bufs: &[&[u8]]) -> std::io::Result<()> {
+    assert!(bufs.len() <= MAX_GATHER, "gather list exceeds MAX_GATHER");
+    let mut i = 0usize; // first unfinished buffer
+    let mut off = 0usize; // bytes of bufs[i] already written
+    while i < bufs.len() {
+        if off >= bufs[i].len() {
+            i += 1;
+            off = 0;
+            continue;
+        }
+        let mut slices: [std::io::IoSlice<'_>; MAX_GATHER] =
+            std::array::from_fn(|_| std::io::IoSlice::new(&[]));
+        let mut cnt = 0usize;
+        slices[cnt] = std::io::IoSlice::new(&bufs[i][off..]);
+        cnt += 1;
+        for b in &bufs[i + 1..] {
+            if !b.is_empty() {
+                slices[cnt] = std::io::IoSlice::new(b);
+                cnt += 1;
+            }
+        }
+        let mut n = match w.write_vectored(&slices[..cnt]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "vectored write returned 0",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while n > 0 && i < bufs.len() {
+            let avail = bufs[i].len() - off;
+            if n >= avail {
+                n -= avail;
+                i += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
 impl HalfDuplex for TcpStream {
     fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
         Write::write_all(self, buf)
+    }
+    fn write_vectored_all(&mut self, bufs: &[&[u8]]) -> std::io::Result<()> {
+        write_vectored_loop(self, bufs)
     }
     fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
         Read::read_exact(self, buf)
@@ -481,6 +554,19 @@ impl HalfDuplex for MemTx {
     fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
         Write::write_all(&mut self.0, buf)
     }
+    fn write_vectored_all(&mut self, bufs: &[&[u8]]) -> std::io::Result<()> {
+        // one lock + one wakeup for the whole gather, mirroring the
+        // single-syscall TCP override
+        let mut g = self.0 .0.inner.lock().unwrap();
+        if g.killed {
+            return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "channel killed"));
+        }
+        for b in bufs {
+            g.buf.extend(b.iter());
+        }
+        self.0 .0.cv.notify_all();
+        Ok(())
+    }
     fn read_exact(&mut self, _buf: &mut [u8]) -> std::io::Result<()> {
         Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "write-only half"))
     }
@@ -725,6 +811,39 @@ mod tests {
         assert!(decode_hello(&h).is_err());
         let h = encode_hello(1, 0, 0);
         assert!(decode_hello(&h).is_err());
+    }
+
+    #[test]
+    fn vectored_write_preserves_order_across_parts() {
+        let (mut a, mut b) = mem_pair();
+        a.tx.write_vectored_all(&[&b"head"[..], &[], &b"tail"[..]]).unwrap();
+        let mut buf = [0u8; 8];
+        b.rx.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"headtail");
+    }
+
+    #[test]
+    fn write_vectored_loop_handles_partial_writes() {
+        // A writer that accepts at most 3 bytes per call forces the loop
+        // to re-anchor its cursor across buffer boundaries.
+        struct Trickle(Vec<u8>);
+        impl Write for Trickle {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                let n = buf.len().min(3);
+                self.0.extend_from_slice(&buf[..n]);
+                Ok(n)
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut t = Trickle(Vec::new());
+        write_vectored_loop(&mut t, &[&b"abcd"[..], &[], &b"efghij"[..]]).unwrap();
+        assert_eq!(t.0, b"abcdefghij");
+        // all-empty gathers are a no-op
+        let mut t = Trickle(Vec::new());
+        write_vectored_loop(&mut t, &[&[], &[]]).unwrap();
+        assert!(t.0.is_empty());
     }
 
     #[test]

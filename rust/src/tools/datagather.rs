@@ -16,7 +16,7 @@ use std::collections::HashMap;
 use std::path::Path as FsPath;
 
 use crate::mpwide::errors::{MpwError, Result};
-use crate::mpwide::path::Path;
+use crate::mpwide::mux::MsgLink;
 
 /// One file entry in the sync manifest.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -126,11 +126,16 @@ pub fn diff_needed(remote: &[Entry], local: &HashMap<String, Entry>) -> Vec<u32>
         .collect()
 }
 
-/// Source side: run one sync round of `root` over `path`.
-pub fn sync_once(path: &Path, root: &FsPath) -> Result<SyncStats> {
+/// Source side: run one sync round of `root` over `path` — a whole
+/// [`Path`](crate::mpwide::path::Path) or one mux
+/// [`Channel`](crate::mpwide::mux::Channel), so the gather runs
+/// *concurrently with the simulation it collects from* over the same
+/// shared WAN path (the paper's intended deployment, without a second
+/// path).
+pub fn sync_once<L: MsgLink + ?Sized>(path: &L, root: &FsPath) -> Result<SyncStats> {
     let entries = scan(root)?;
-    path.dsend(&encode_manifest(&entries))?;
-    let wanted_raw = path.drecv()?;
+    path.send_msg(&encode_manifest(&entries))?;
+    let wanted_raw = path.recv_msg()?;
     if wanted_raw.len() % 4 != 0 {
         return Err(MpwError::Protocol("malformed want-list".into()));
     }
@@ -153,9 +158,9 @@ pub fn sync_once(path: &Path, root: &FsPath) -> Result<SyncStats> {
 
 /// Destination side: serve one sync round into `dest`. Returns the
 /// number of files received.
-pub fn serve_once(path: &Path, dest: &FsPath) -> Result<usize> {
+pub fn serve_once<L: MsgLink + ?Sized>(path: &L, dest: &FsPath) -> Result<usize> {
     std::fs::create_dir_all(dest)?;
-    let manifest = decode_manifest(&path.drecv()?)?;
+    let manifest = decode_manifest(&path.recv_msg()?)?;
     let local: HashMap<String, Entry> = scan(dest)?
         .into_iter()
         .map(|e| (e.rel.replace("__", "/"), e))
@@ -165,7 +170,7 @@ pub fn serve_once(path: &Path, dest: &FsPath) -> Result<usize> {
     for idx in &needed {
         reply.extend_from_slice(&idx.to_be_bytes());
     }
-    path.dsend(&reply)?;
+    path.send_msg(&reply)?;
     for _ in 0..needed.len() {
         super::mpwcp::recv_file(path, dest)?;
     }
@@ -175,6 +180,7 @@ pub fn serve_once(path: &Path, dest: &FsPath) -> Result<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mpwide::path::Path;
     use crate::mpwide::transport::mem_path_pairs;
     use crate::mpwide::PathConfig;
     use std::path::PathBuf;
@@ -226,6 +232,46 @@ mod tests {
         let entries = scan(&dir).unwrap();
         let rels: Vec<&str> = entries.iter().map(|e| e.rel.as_str()).collect();
         assert_eq!(rels, vec!["sub/a.txt", "z.txt"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sync_over_a_mux_channel_beside_live_traffic() {
+        // The gather runs over ONE channel of a shared path while a
+        // "solver coupling" exchanges messages on another — the
+        // channel-aware deployment the paper's DataGather wants.
+        use crate::mpwide::mux::MuxEndpoint;
+        use std::sync::Arc;
+        let dir = tmpdir("muxsync");
+        let src = dir.join("src");
+        let dst = dir.join("dst");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(src.join("snap.dat"), vec![9u8; 20_000]).unwrap();
+
+        let (l, r) = mem_path_pairs(2);
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false;
+        let pa = Arc::new(Path::from_pairs(l, cfg.clone()).unwrap());
+        let pb = Arc::new(Path::from_pairs(r, cfg).unwrap());
+        let a = MuxEndpoint::start(pa);
+        let b = MuxEndpoint::start(pb);
+        let gather_tx = a.open(1).unwrap();
+        let gather_rx = b.open(1).unwrap();
+        let solver_a = a.open(2).unwrap();
+        let solver_b = b.open(2).unwrap();
+
+        let t = std::thread::spawn(move || serve_once(&gather_rx, &dst).unwrap());
+        // concurrent coupling traffic on the sibling channel
+        solver_a.send(&[1u8; 4096]).unwrap();
+        let stats = sync_once(&gather_tx, &src).unwrap();
+        assert_eq!(solver_b.recv().unwrap(), vec![1u8; 4096]);
+        assert_eq!(t.join().unwrap(), 1);
+        assert_eq!(stats.shipped, 1);
+        assert_eq!(
+            std::fs::read(dir.join("dst/snap.dat")).unwrap(),
+            vec![9u8; 20_000],
+            "file corrupted crossing the shared path"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -51,6 +51,32 @@ pub fn run(listener: &mut PathListener, cfg: &ForwarderConfig) -> Result<RelaySt
     relay_with_delay(&a, &b, cfg.delay)
 }
 
+/// Channel-aware forwarder: accept two paths and relay whole
+/// **messages** between them ([`crate::mpwide::relay::relay_messages`]),
+/// so multiplexed channel frames (`mpwide::mux`) cross the hop intact —
+/// including between legs with *different* stream counts, which the
+/// byte-level [`run`] must reject. Use this variant when the endpoints
+/// run mux endpoints over their paths to the forwarder.
+pub fn run_channels(listener: &mut PathListener) -> Result<RelayStats> {
+    let a = listener.accept_path()?;
+    let b = listener.accept_path()?;
+    crate::mpwide::relay::relay_messages(&a, &b)
+}
+
+/// Spawn a channel-aware forwarder on a fresh port; returns the port
+/// and the join handle producing its relay stats. Legs may use any
+/// stream counts (each hello declares its own).
+pub fn spawn_channels(
+    nstreams: usize,
+) -> Result<(u16, std::thread::JoinHandle<Result<RelayStats>>)> {
+    let mut cfg = PathConfig::with_streams(nstreams);
+    cfg.autotune = false;
+    let mut listener = PathListener::bind(0, cfg)?;
+    let port = listener.port();
+    let handle = std::thread::spawn(move || run_channels(&mut listener));
+    Ok((port, handle))
+}
+
 /// Like [`crate::mpwide::relay::relay`] but optionally delaying each
 /// forwarded batch by `delay` (one-way propagation emulation). Thin
 /// wrapper over [`crate::mpwide::relay::relay_delayed`], so it shares
@@ -138,6 +164,41 @@ mod tests {
         assert!(per_barrier >= Duration::from_millis(7), "{per_barrier:?}");
         assert!(per_barrier < Duration::from_millis(40), "{per_barrier:?}");
         t_b.join().unwrap();
+    }
+
+    #[test]
+    fn mux_channels_cross_the_forwarder() {
+        use crate::mpwide::mux::MuxEndpoint;
+        use std::sync::Arc;
+        let (port, fwd) = spawn_channels(1).unwrap();
+        let t_a = std::thread::spawn(move || {
+            let p = Arc::new(Path::connect("127.0.0.1", port, client_cfg(2)).unwrap());
+            let mux = MuxEndpoint::start(p);
+            let c1 = mux.open(1).unwrap();
+            let c2 = mux.open(2).unwrap();
+            c1.send(&[7u8; 20_000]).unwrap();
+            c2.send(b"telemetry").unwrap();
+            let echo = c1.recv().unwrap();
+            drop(mux); // closes the path → ends the relay session
+            echo
+        });
+        let t_b = std::thread::spawn(move || {
+            // the far leg deliberately uses a different stream count
+            let p = Arc::new(Path::connect("127.0.0.1", port, client_cfg(3)).unwrap());
+            let mux = MuxEndpoint::start(p);
+            let c1 = mux.open(1).unwrap();
+            let c2 = mux.open(2).unwrap();
+            let bulk = c1.recv().unwrap();
+            let small = c2.recv().unwrap();
+            c1.send(&bulk).unwrap();
+            c1.flush().unwrap(); // the endpoint drop below is abrupt
+            (bulk, small)
+        });
+        let (bulk, small) = t_b.join().unwrap();
+        assert_eq!(bulk, vec![7u8; 20_000]);
+        assert_eq!(small, b"telemetry");
+        assert_eq!(t_a.join().unwrap(), vec![7u8; 20_000]);
+        let _ = fwd.join().unwrap(); // session ends when a leg closes
     }
 
     #[test]

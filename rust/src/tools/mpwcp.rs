@@ -12,7 +12,7 @@ use std::io::{Read, Write};
 use std::path::{Path as FsPath, PathBuf};
 
 use crate::mpwide::errors::{MpwError, Result};
-use crate::mpwide::path::Path;
+use crate::mpwide::mux::MsgLink;
 
 /// Transfer buffer size (bytes read from disk per dynamic message).
 pub const IO_CHUNK: usize = 8 << 20;
@@ -32,9 +32,17 @@ pub struct CpStats {
     pub crc: u32,
 }
 
-/// Send one file over an established path. `remote_name` is the name the
-/// receiver stores it under (sanitized server-side).
-pub fn send_file(path: &Path, file: &FsPath, remote_name: &str) -> Result<CpStats> {
+/// Send one file over an established message link — a whole
+/// [`Path`](crate::mpwide::path::Path) or one mux
+/// [`Channel`](crate::mpwide::mux::Channel) of a shared path, so a file
+/// transfer can ride alongside a live coupling.
+/// `remote_name` is the name the receiver stores it under (sanitized
+/// server-side).
+pub fn send_file<L: MsgLink + ?Sized>(
+    path: &L,
+    file: &FsPath,
+    remote_name: &str,
+) -> Result<CpStats> {
     let mut f = File::open(file)?;
     let size = f.metadata()?.len();
 
@@ -44,7 +52,7 @@ pub fn send_file(path: &Path, file: &FsPath, remote_name: &str) -> Result<CpStat
     header.extend_from_slice(&(name_bytes.len() as u16).to_be_bytes());
     header.extend_from_slice(name_bytes);
     header.extend_from_slice(&size.to_be_bytes());
-    path.dsend(&header)?;
+    path.send_msg(&header)?;
 
     let t0 = std::time::Instant::now();
     let mut hasher = crc32fast::Hasher::new();
@@ -54,15 +62,15 @@ pub fn send_file(path: &Path, file: &FsPath, remote_name: &str) -> Result<CpStat
         let want = ((size - sent) as usize).min(IO_CHUNK);
         f.read_exact(&mut buf[..want])?;
         hasher.update(&buf[..want]);
-        path.dsend(&buf[..want])?;
+        path.send_msg(&buf[..want])?;
         sent += want as u64;
     }
     let crc = hasher.finalize();
-    path.dsend(&crc.to_be_bytes())?;
+    path.send_msg(&crc.to_be_bytes())?;
     let seconds = t0.elapsed().as_secs_f64();
 
     // wait for the receiver's verdict
-    let ack = path.drecv()?;
+    let ack = path.recv_msg()?;
     if ack.len() != 8 {
         return Err(MpwError::Protocol("short mpw-cp ack".into()));
     }
@@ -74,8 +82,11 @@ pub fn send_file(path: &Path, file: &FsPath, remote_name: &str) -> Result<CpStat
 }
 
 /// Receive one file into `dest_dir`. Returns (stored path, bytes, crc).
-pub fn recv_file(path: &Path, dest_dir: &FsPath) -> Result<(PathBuf, u64, u32)> {
-    let header = path.drecv()?;
+pub fn recv_file<L: MsgLink + ?Sized>(
+    path: &L,
+    dest_dir: &FsPath,
+) -> Result<(PathBuf, u64, u32)> {
+    let header = path.recv_msg()?;
     if header.len() < 10 {
         return Err(MpwError::Protocol("short mpw-cp header".into()));
     }
@@ -98,20 +109,20 @@ pub fn recv_file(path: &Path, dest_dir: &FsPath) -> Result<(PathBuf, u64, u32)> 
     let mut cache = Vec::new();
     let mut got = 0u64;
     while got < size {
-        let n = path.drecv_into(&mut cache)?;
+        let n = path.recv_msg_into(&mut cache)?;
         hasher.update(&cache[..n]);
         out.write_all(&cache[..n])?;
         got += n as u64;
     }
     out.flush()?;
-    let crc_msg = path.drecv()?;
+    let crc_msg = path.recv_msg()?;
     if crc_msg.len() != 4 {
         return Err(MpwError::Protocol("short crc trailer".into()));
     }
     let want_crc = u32::from_be_bytes(crc_msg.try_into().unwrap());
     let crc = hasher.finalize();
     let verdict = if crc == want_crc { ACK_OK } else { ACK_BAD };
-    path.dsend(&verdict.to_be_bytes())?;
+    path.send_msg(&verdict.to_be_bytes())?;
     if crc != want_crc {
         return Err(MpwError::Protocol(format!("crc mismatch: {crc:#x} != {want_crc:#x}")));
     }
@@ -120,7 +131,7 @@ pub fn recv_file(path: &Path, dest_dir: &FsPath) -> Result<(PathBuf, u64, u32)> 
 
 /// Server loop: accept files on `path` until the peer closes. Returns
 /// the number of files received.
-pub fn serve(path: &Path, dest_dir: &FsPath) -> Result<usize> {
+pub fn serve<L: MsgLink + ?Sized>(path: &L, dest_dir: &FsPath) -> Result<usize> {
     std::fs::create_dir_all(dest_dir)?;
     let mut count = 0;
     loop {
@@ -136,6 +147,8 @@ pub fn serve(path: &Path, dest_dir: &FsPath) -> Result<usize> {
             {
                 return Ok(count)
             }
+            // a mux channel signals the peer's close explicitly
+            Err(MpwError::ChannelClosed { .. }) => return Ok(count),
             Err(e) => return Err(e),
         }
     }
@@ -144,6 +157,7 @@ pub fn serve(path: &Path, dest_dir: &FsPath) -> Result<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::mpwide::path::Path;
     use crate::mpwide::transport::mem_path_pairs;
     use crate::mpwide::PathConfig;
     use crate::util::Rng;

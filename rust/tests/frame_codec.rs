@@ -1,0 +1,182 @@
+//! Property-style codec tests for the wire encoders: the resilience
+//! frame header + CTRL payload and the mux channel frame header.
+//!
+//! Every case is driven by the crate's seeded deterministic RNG (no new
+//! dependencies, exactly reproducible failures): random-value
+//! round-trips, exhaustive truncation, and random byte corruption. The
+//! corruption properties assert the *safety contract* of a decoder
+//! facing a hostile or damaged stream: it must never panic, and
+//! anything it accepts must satisfy the documented invariants.
+
+use mpwide::mpwide::mux::{
+    decode_mux_hdr, encode_mux_hdr, MuxHdr, CH_CLOSE, CH_DATA, CH_FIN, CH_OPEN, MAX_MUX_PAYLOAD,
+    MUX_HDR_LEN,
+};
+use mpwide::mpwide::resilience::{
+    decode_frame_hdr, encode_ctrl, encode_frame_hdr, parse_ctrl, FrameHdr, FRAME_HDR_LEN,
+    KIND_ACK, KIND_CTRL, KIND_DATA, MAX_FRAME_PAYLOAD,
+};
+use mpwide::util::Rng;
+
+const ITERS: usize = 2_000;
+
+// ---------------------------------------------------------------------------
+// Resilience frame header.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resilience_frame_hdr_roundtrips_random_values() {
+    let mut rng = Rng::new(0xF0A1);
+    for _ in 0..ITERS {
+        let kind = [KIND_CTRL, KIND_DATA, KIND_ACK][rng.urange(0, 3)];
+        let msg_seq = rng.next_u64();
+        let attempt = rng.next_u64() as u32;
+        let len = rng.range(0, MAX_FRAME_PAYLOAD as u64 + 1) as u32;
+        let h = encode_frame_hdr(kind, msg_seq, attempt, len);
+        let d = decode_frame_hdr(&h).expect("valid header must decode");
+        assert_eq!(d, FrameHdr { kind, msg_seq, attempt, len });
+    }
+}
+
+#[test]
+fn resilience_frame_hdr_corruption_is_rejected_or_sane() {
+    let mut rng = Rng::new(0xF0A2);
+    for _ in 0..ITERS {
+        let mut h = encode_frame_hdr(
+            [KIND_CTRL, KIND_DATA, KIND_ACK][rng.urange(0, 3)],
+            rng.next_u64(),
+            rng.next_u64() as u32,
+            rng.range(0, MAX_FRAME_PAYLOAD as u64 + 1) as u32,
+        );
+        let flips = rng.urange(1, 4);
+        for _ in 0..flips {
+            let pos = rng.urange(0, FRAME_HDR_LEN);
+            h[pos] ^= rng.range(1, 256) as u8;
+        }
+        // must never panic; anything accepted must honour the invariants
+        if let Ok(d) = decode_frame_hdr(&h) {
+            assert!((KIND_CTRL..=KIND_ACK).contains(&d.kind), "kind {} escaped", d.kind);
+            assert!(d.len as usize <= MAX_FRAME_PAYLOAD, "len {} escaped the bound", d.len);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resilience CTRL payload.
+// ---------------------------------------------------------------------------
+
+fn random_ctrl(rng: &mut Rng) -> (u64, Vec<u16>, Vec<u16>) {
+    let total = rng.next_u64() >> 8;
+    let k = rng.urange(1, 65);
+    let streams: Vec<u16> = (0..k).map(|_| rng.range(0, 256) as u16).collect();
+    let d = rng.urange(0, 9);
+    let dead: Vec<u16> = (0..d).map(|_| rng.range(0, 256) as u16).collect();
+    (total, streams, dead)
+}
+
+#[test]
+fn ctrl_payload_roundtrips_random_values() {
+    let mut rng = Rng::new(0xC7A1);
+    for _ in 0..ITERS {
+        let (total, streams, dead) = random_ctrl(&mut rng);
+        let p = encode_ctrl(total, &streams, &dead);
+        let c = parse_ctrl(&p).expect("valid ctrl must parse");
+        assert_eq!(c.total, total);
+        assert_eq!(c.streams, streams);
+        assert_eq!(c.dead, dead);
+    }
+}
+
+#[test]
+fn ctrl_payload_every_truncation_is_rejected() {
+    let mut rng = Rng::new(0xC7A2);
+    for _ in 0..200 {
+        let (total, streams, dead) = random_ctrl(&mut rng);
+        let p = encode_ctrl(total, &streams, &dead);
+        for cut in 0..p.len() {
+            assert!(
+                parse_ctrl(&p[..cut]).is_err(),
+                "truncated ctrl ({cut}/{} bytes, k={}, d={}) must not parse",
+                p.len(),
+                streams.len(),
+                dead.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn ctrl_payload_corruption_never_panics() {
+    let mut rng = Rng::new(0xC7A3);
+    for _ in 0..ITERS {
+        let (total, streams, dead) = random_ctrl(&mut rng);
+        let mut p = encode_ctrl(total, &streams, &dead);
+        let flips = rng.urange(1, 5);
+        for _ in 0..flips {
+            let pos = rng.urange(0, p.len());
+            p[pos] ^= rng.range(1, 256) as u8;
+        }
+        // the decoder must stay total: reject or return a structurally
+        // consistent message, never panic on hostile bytes
+        if let Ok(c) = parse_ctrl(&p) {
+            assert!(!c.streams.is_empty(), "parser accepted an empty stream list");
+            // accepted lists must be exactly what the length accounting
+            // implies — no trailing garbage can have been skipped
+            assert_eq!(p.len(), 12 + 2 * c.streams.len() + 2 * c.dead.len());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mux channel frame header.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mux_hdr_roundtrips_random_values() {
+    let mut rng = Rng::new(0xA0B1);
+    for _ in 0..ITERS {
+        let kind = [CH_DATA, CH_FIN][rng.urange(0, 2)];
+        let channel = rng.next_u64() as u32;
+        let msg_seq = rng.next_u64();
+        let len = rng.range(0, MAX_MUX_PAYLOAD as u64 + 1) as u32;
+        let h = encode_mux_hdr(kind, channel, msg_seq, len);
+        let d = decode_mux_hdr(&h).expect("valid header must decode");
+        assert_eq!(d, MuxHdr { kind, channel, msg_seq, len });
+        // control kinds round-trip too, but only with empty payloads
+        let h = encode_mux_hdr(CH_OPEN, channel, 0, 0);
+        assert_eq!(decode_mux_hdr(&h).unwrap().kind, CH_OPEN);
+    }
+}
+
+#[test]
+fn mux_hdr_control_frames_with_payload_rejected() {
+    for kind in [CH_OPEN, CH_CLOSE] {
+        let h = encode_mux_hdr(kind, 3, 0, 1);
+        assert!(decode_mux_hdr(&h).is_err(), "control frame with payload must be rejected");
+    }
+}
+
+#[test]
+fn mux_hdr_corruption_is_rejected_or_sane() {
+    let mut rng = Rng::new(0xA0B2);
+    for _ in 0..ITERS {
+        let mut h = encode_mux_hdr(
+            [CH_DATA, CH_FIN, CH_OPEN, CH_CLOSE][rng.urange(0, 4)],
+            rng.next_u64() as u32,
+            rng.next_u64(),
+            0,
+        );
+        let flips = rng.urange(1, 4);
+        for _ in 0..flips {
+            let pos = rng.urange(0, MUX_HDR_LEN);
+            h[pos] ^= rng.range(1, 256) as u8;
+        }
+        if let Ok(d) = decode_mux_hdr(&h) {
+            assert!((CH_DATA..=CH_CLOSE).contains(&d.kind), "kind {} escaped", d.kind);
+            assert!(d.len as usize <= MAX_MUX_PAYLOAD, "len {} escaped the bound", d.len);
+            if d.kind == CH_OPEN || d.kind == CH_CLOSE {
+                assert_eq!(d.len, 0, "control frame with payload accepted");
+            }
+        }
+    }
+}

@@ -1,0 +1,285 @@
+//! WAN scenario matrix for channel multiplexing: {2, 8, 32 channels} ×
+//! {clean link, mid-run stream blackout, full path flap + rejoin}.
+//!
+//! Every cell asserts the mux contract end to end:
+//!   * **delivery** — every message queued on every channel arrives
+//!     exactly once with intact content;
+//!   * **per-channel ordering** — each channel's messages arrive in
+//!     send order (message payloads embed `(channel, index)`);
+//!   * **no cross-channel starvation** — a bulk message queued *first*
+//!     on channel 0 must finish *after* every small channel's traffic
+//!     (checked via the endpoint's global delivery tickets, which a
+//!     strict-FIFO mux would fail deterministically).
+//!
+//! The clean and blackout cells run over the in-memory transport (the
+//! blackout kills one of four streams mid-run; the resilience layer
+//! stripes around it underneath the channels). The path-flap cell runs
+//! over real sockets with the full rejoin machinery — reconnect
+//! monitor, rejoin daemon — and kills **all** streams between two
+//! traffic batches.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpwide::mpwide::mux::{Channel, MuxConfig, MuxEndpoint};
+use mpwide::mpwide::resilience::connect_with_rejoin;
+use mpwide::mpwide::transport::mem_path_pairs_killable;
+use mpwide::mpwide::{Path, PathConfig, PathListener};
+use mpwide::util::Rng;
+
+const CHANNEL_COUNTS: [usize; 3] = [2, 8, 32];
+const SMALL_MSGS: u32 = 3;
+const SMALL_LEN: usize = 2 * 1024;
+const BULK_LEN: usize = 2 << 20;
+
+/// Deterministic payload for message `i` of channel `ch`: 8-byte
+/// `(ch, i)` prefix + seeded random body.
+fn msg_for(ch: u32, i: u32, len: usize) -> Vec<u8> {
+    let mut m = vec![0u8; len.max(8)];
+    m[0..4].copy_from_slice(&ch.to_be_bytes());
+    m[4..8].copy_from_slice(&i.to_be_bytes());
+    Rng::new(((ch as u64) << 32) | i as u64).fill_bytes(&mut m[8..]);
+    m
+}
+
+fn mux_cfg() -> MuxConfig {
+    // small quantum so the bulk message needs many rotations — the
+    // starvation property is meaningful at every channel count
+    MuxConfig { chunk_budget: 32 * 1024, high_water: 64 << 20 }
+}
+
+/// Per-stream pacing for every scenario path: rate-limiting the pump
+/// makes the starvation assertion deterministic — the producer queues
+/// all messages in microseconds while the bulk transfer needs tens of
+/// milliseconds of wire time, so the small channels are always queued
+/// before the pump could possibly finish the bulk message.
+const PACE_PER_STREAM: f64 = 32.0 * 1024.0 * 1024.0;
+
+/// Queue one bulk message on channel 0, then `SMALL_MSGS` small
+/// messages on every other channel.
+fn produce(channels: &[Channel]) {
+    channels[0].send(&msg_for(0, 0, BULK_LEN)).unwrap();
+    for (ci, ch) in channels.iter().enumerate().skip(1) {
+        for i in 0..SMALL_MSGS {
+            ch.send(&msg_for(ci as u32, i, SMALL_LEN)).unwrap();
+        }
+    }
+}
+
+/// Drain and verify one consumer side: content, per-channel ordering.
+fn consume(channels: &[Channel]) {
+    let mut handles = Vec::new();
+    for (ci, ch) in channels.iter().enumerate() {
+        let ch = ch.clone();
+        let ci = ci as u32;
+        handles.push(std::thread::spawn(move || {
+            let n = if ci == 0 { 1 } else { SMALL_MSGS };
+            for i in 0..n {
+                let len = if ci == 0 { BULK_LEN } else { SMALL_LEN };
+                let m = ch.recv().unwrap();
+                assert_eq!(
+                    m,
+                    msg_for(ci, i, len),
+                    "channel {ci}: message {i} corrupted or out of order"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+/// The starvation check: every small channel's last delivery must
+/// pre-date the bulk channel's delivery in the endpoint-global ticket
+/// order.
+fn assert_no_starvation(consumer: &MuxEndpoint, nch: usize) {
+    let stats = consumer.channel_stats();
+    let bulk_ticket = stats
+        .iter()
+        .find(|c| c.id == 0)
+        .expect("bulk channel stats missing")
+        .last_delivery_ticket;
+    for c in stats.iter().filter(|c| c.id != 0 && (c.id as usize) < nch) {
+        assert!(
+            c.last_delivery_ticket < bulk_ticket,
+            "channel {} (ticket {}) starved behind the bulk transfer (ticket {bulk_ticket})",
+            c.id,
+            c.last_delivery_ticket
+        );
+    }
+}
+
+fn open_all(ep: &MuxEndpoint, nch: usize) -> Vec<Channel> {
+    (0..nch as u32).map(|id| ep.open(id).unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Scenario: clean link.
+// ---------------------------------------------------------------------------
+
+fn run_clean(nch: usize) {
+    let (l, r, _kills) = mem_path_pairs_killable(4);
+    let mut pc = PathConfig::with_streams(4);
+    pc.autotune = false;
+    pc.chunk_size = 64 * 1024;
+    pc.pacing_rate = Some(PACE_PER_STREAM);
+    let a = MuxEndpoint::start_cfg(Arc::new(Path::from_pairs(l, pc.clone()).unwrap()), mux_cfg())
+        .unwrap();
+    let b =
+        MuxEndpoint::start_cfg(Arc::new(Path::from_pairs(r, pc).unwrap()), mux_cfg()).unwrap();
+    let tx = open_all(&a, nch);
+    let rx = open_all(&b, nch);
+    produce(&tx);
+    consume(&rx);
+    assert_no_starvation(&b, nch);
+}
+
+#[test]
+fn clean_link_2_channels() {
+    run_clean(2);
+}
+
+#[test]
+fn clean_link_8_channels() {
+    run_clean(8);
+}
+
+#[test]
+fn clean_link_32_channels() {
+    run_clean(32);
+}
+
+// ---------------------------------------------------------------------------
+// Scenario: one-of-four stream blackout mid-run (resilient path).
+// ---------------------------------------------------------------------------
+
+fn run_blackout(nch: usize) {
+    let (l, r, kills) = mem_path_pairs_killable(4);
+    let mut pc = PathConfig::with_streams(4);
+    pc.autotune = false;
+    pc.chunk_size = 32 * 1024;
+    pc.pacing_rate = Some(PACE_PER_STREAM);
+    pc.resilience.enabled = true;
+    let pa = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
+    let pb = Arc::new(Path::from_pairs(r, pc).unwrap());
+    let a = MuxEndpoint::start_cfg(pa, mux_cfg()).unwrap();
+    let b = MuxEndpoint::start_cfg(pb, mux_cfg()).unwrap();
+    let tx = open_all(&a, nch);
+    let rx = open_all(&b, nch);
+    // sever a non-control stream while the bulk transfer is in flight
+    let killer = {
+        let k = kills[2].clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            k.fire();
+        })
+    };
+    produce(&tx);
+    consume(&rx);
+    killer.join().unwrap();
+    assert_no_starvation(&b, nch);
+    let st = a.path().status();
+    assert!(st.live >= 3, "only the killed stream may be dead: {st:?}");
+}
+
+#[test]
+fn blackout_2_channels() {
+    run_blackout(2);
+}
+
+#[test]
+fn blackout_8_channels() {
+    run_blackout(8);
+}
+
+#[test]
+fn blackout_32_channels() {
+    run_blackout(32);
+}
+
+// ---------------------------------------------------------------------------
+// Scenario: full path flap with rejoin (TCP + monitor + daemon).
+// ---------------------------------------------------------------------------
+
+fn wait_for_live(path: &Path, want: usize, timeout: Duration) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if path.status().live >= want {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    false
+}
+
+fn run_path_flap(nch: usize) {
+    const NSTREAMS: usize = 4;
+    let mut cfg = PathConfig::with_streams(NSTREAMS);
+    cfg.autotune = false;
+    cfg.chunk_size = 32 * 1024;
+    cfg.pacing_rate = Some(PACE_PER_STREAM);
+    cfg.resilience.enabled = true;
+    cfg.resilience.reconnect.enabled = true;
+    cfg.resilience.reconnect.base_delay = Duration::from_millis(10);
+    cfg.resilience.reconnect.connect_timeout = Duration::from_secs(2);
+    cfg.resilience.reconnect.rejoin_wait = Duration::from_secs(15);
+
+    let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+    let port = listener.port();
+    let accept = std::thread::spawn({
+        let cfg = cfg.clone();
+        move || connect_with_rejoin("127.0.0.1", port, cfg).unwrap()
+    });
+    let server_path: Arc<Path> = listener.accept_path_arc().unwrap();
+    let daemon = listener.into_rejoin_daemon();
+    let (client_path, _monitor) = accept.join().unwrap();
+
+    let a = MuxEndpoint::start_cfg(client_path, mux_cfg()).unwrap();
+    let b = MuxEndpoint::start_cfg(server_path.clone(), mux_cfg()).unwrap();
+    let tx = open_all(&a, nch);
+    let rx = open_all(&b, nch);
+
+    // batch 1 over a healthy path
+    produce(&tx);
+    consume(&rx);
+    assert_no_starvation(&b, nch);
+
+    // the flap: every stream dies server-side. The client discovers the
+    // deaths through its own failing I/O and the receiver's NACK
+    // dead-stream reports — which requires traffic — so batch 2 is sent
+    // IMMEDIATELY: its retries drive the discovery, the monitor redials
+    // each discovered stream, and the daemon slots the sockets back in.
+    for i in 0..NSTREAMS {
+        server_path.inject_stream_failure(i).unwrap();
+    }
+    produce(&tx);
+    consume(&rx);
+
+    // with traffic done, every stream was either rejoined mid-batch or
+    // redialed right after discovery — the path must return to full
+    // health and stay there
+    assert!(
+        wait_for_live(&server_path, NSTREAMS, Duration::from_secs(20)),
+        "path never recovered from the flap: {:?}",
+        server_path.status()
+    );
+    let st = server_path.status();
+    assert!(st.rejoined >= NSTREAMS as u64, "expected a full rejoin: {st:?}");
+    drop(daemon);
+}
+
+#[test]
+fn path_flap_2_channels() {
+    run_path_flap(2);
+}
+
+#[test]
+fn path_flap_8_channels() {
+    run_path_flap(8);
+}
+
+#[test]
+fn path_flap_32_channels() {
+    run_path_flap(32);
+}

@@ -192,6 +192,58 @@ fn close_is_sticky_and_fails_fast() {
 }
 
 #[test]
+fn ack_progress_timeout_unsticks_a_stalled_sender() {
+    // A sender whose receiver never posts a recv (so the rendezvous ACK
+    // never arrives) stands in for the control-stream divergence window:
+    // the sender is parked in a blocking read nothing will ever satisfy.
+    // Without the watchdog this hangs until the transport gives up —
+    // forever, on the in-memory transport. With ack_timeout set, each
+    // control stream is force-closed after its budget and the send fails
+    // over to the retry path, ending in a bounded error instead.
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let _keep_peer_alive = r; // a dropped peer would fail fast by EOF instead
+    let mut cfg = resilient_cfg(2);
+    cfg.resilience.ack_timeout = Some(Duration::from_millis(150));
+    let a = Path::from_pairs(l, cfg).unwrap();
+    let t0 = Instant::now();
+    let res = a.send(&[7u8; 64 * 1024]);
+    assert!(res.is_err(), "nobody ever acked; the send must not report success");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "send did not fail in bounded time: {:?}",
+        t0.elapsed()
+    );
+    let st = a.status();
+    assert!(st.ack_timeouts >= 1, "watchdog never fired: {st:?}");
+}
+
+#[test]
+fn ack_timeout_does_not_fire_on_healthy_traffic() {
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let mut cfg = resilient_cfg(2);
+    cfg.resilience.ack_timeout = Some(Duration::from_secs(30));
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    let mut msg = vec![0u8; 200_000];
+    Rng::new(55).fill_bytes(&mut msg);
+    let m2 = msg.clone();
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 200_000];
+        for _ in 0..5 {
+            b.recv(&mut buf).unwrap();
+        }
+        buf
+    });
+    for _ in 0..5 {
+        a.send(&msg).unwrap();
+    }
+    assert_eq!(t.join().unwrap(), m2);
+    let st = a.status();
+    assert_eq!(st.ack_timeouts, 0, "watchdog misfired on healthy traffic: {st:?}");
+    assert_eq!(st.live, 2, "{st:?}");
+}
+
+#[test]
 fn status_reports_preferred_vs_effective_striping() {
     let (l, _r, kills) = mem_path_pairs_killable(3);
     let a = Path::from_pairs(l, resilient_cfg(3)).unwrap();
