@@ -49,7 +49,8 @@ fn endpoints(pace_per_stream: f64) -> (MuxEndpoint, MuxEndpoint) {
     let (l, r) = mem_path_pairs(NSTREAMS);
     let a = Arc::new(Path::from_pairs(l, cfg.clone()).expect("left path"));
     let b = Arc::new(Path::from_pairs(r, cfg).expect("right path"));
-    let mux_cfg = MuxConfig { chunk_budget: CHUNK_BUDGET, high_water: 256 << 20 };
+    let mux_cfg =
+        MuxConfig { chunk_budget: CHUNK_BUDGET, high_water: 256 << 20, ..MuxConfig::default() };
     (
         MuxEndpoint::start_cfg(a, mux_cfg.clone()).expect("mux cfg"),
         MuxEndpoint::start_cfg(b, mux_cfg).expect("mux cfg"),

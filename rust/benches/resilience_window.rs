@@ -1,0 +1,145 @@
+//! **Experiment RW1 — in-flight ACK windowing on a long fat pipe.**
+//!
+//! A resilient muxed path over the netsim `high-BDP-reference` link
+//! (10 Gbit/s at 120 ms RTT, modeled here as an in-memory transport
+//! with the profile's one-way propagation delay on every stream). With
+//! the default `ResilienceConfig::window = 1` every budget-sized
+//! channel frame is a rendezvous: CTRL + DATA out, ACK back, one full
+//! RTT per frame — goodput collapses to `chunk_budget / RTT` no matter
+//! how fat the pipe is. Raising the window lets the mux pump keep
+//! several delivery-ACKed frames in flight, so the same transfer costs
+//! `ceil(frames / window)` round trips instead of `frames`.
+//!
+//! Reported (and asserted, so CI catches windowing regressions):
+//!   * **windowed goodput ≥ 3× the window=1 baseline** on the same
+//!     link (the theoretical gain at window 8 is ~8×; 3× leaves head
+//!     room for scheduling noise);
+//!   * every message arrives complete and in order.
+//!
+//! `--quick` (or BENCH_QUICK=1) runs a reduced message count for the
+//! CI bench-smoke job. Results are emitted as
+//! BENCH_resilience_window.json.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpwide::benchlib::{banner, BenchJson, Table};
+use mpwide::mpwide::mux::{MuxConfig, MuxEndpoint};
+use mpwide::mpwide::transport::mem_path_pairs_latency;
+use mpwide::mpwide::{Path, PathConfig};
+use mpwide::netsim::profiles;
+use mpwide::util::Rng;
+
+const MBF: f64 = 1024.0 * 1024.0;
+const NSTREAMS: usize = 2;
+/// One mux frame per message: budget == message size.
+const MSG: usize = 64 * 1024;
+
+/// Build one muxed resilient path pair whose every stream carries the
+/// high-BDP link's one-way propagation delay.
+fn endpoints(window: usize, delay: Duration) -> (MuxEndpoint, MuxEndpoint) {
+    let mut cfg = PathConfig::with_streams(NSTREAMS);
+    cfg.autotune = false;
+    cfg.chunk_size = MSG;
+    cfg.resilience.enabled = true;
+    cfg.resilience.window = window;
+    let (l, r) = mem_path_pairs_latency(NSTREAMS, delay);
+    let a = Arc::new(Path::from_pairs(l, cfg.clone()).expect("left path"));
+    let b = Arc::new(Path::from_pairs(r, cfg).expect("right path"));
+    let mux_cfg = MuxConfig { chunk_budget: MSG, high_water: 256 << 20, ..MuxConfig::default() };
+    (
+        MuxEndpoint::start_cfg(a, mux_cfg.clone()).expect("mux cfg"),
+        MuxEndpoint::start_cfg(b, mux_cfg).expect("mux cfg"),
+    )
+}
+
+/// Send `msgs` MSG-sized messages over one channel and return elapsed
+/// seconds until the receiver has every byte.
+fn drive(window: usize, delay: Duration, msgs: usize) -> f64 {
+    let (a, b) = endpoints(window, delay);
+    let tx = a.open(1).unwrap();
+    let rx = b.open(1).unwrap();
+    let mut payload = vec![0u8; MSG];
+    Rng::new(9_000 + window as u64).fill_bytes(&mut payload[..16]);
+    let t0 = Instant::now();
+    let reader = std::thread::spawn(move || {
+        for i in 0..msgs {
+            let m = rx.recv().unwrap();
+            assert_eq!(m.len(), MSG, "message {i} truncated");
+        }
+    });
+    for _ in 0..msgs {
+        tx.send(&payload).unwrap();
+    }
+    reader.join().unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+    tx.flush().unwrap(); // drain in-flight ACKs before teardown
+    elapsed
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || matches!(std::env::var("BENCH_QUICK").as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let msgs = if quick { 8 } else { 24 };
+    let window = 8usize;
+
+    let link = profiles::high_bdp();
+    // the in-memory delay models one-way propagation: RTT / 2
+    let delay = Duration::from_secs_f64(link.rtt / 2.0);
+    let total = (msgs * MSG) as f64;
+
+    banner("RW1: resilient ACK windowing on the high-BDP reference link");
+    println!(
+        "{} ({} ms RTT), {NSTREAMS} streams, {msgs} x {} KiB frames{}",
+        link.name,
+        (link.rtt * 1000.0) as u64,
+        MSG / 1024,
+        if quick { " (quick grid)" } else { "" }
+    );
+
+    let base_secs = drive(1, delay, msgs);
+    let base_goodput = total / base_secs;
+    let win_secs = drive(window, delay, msgs);
+    let win_goodput = total / win_secs;
+    let speedup = win_goodput / base_goodput;
+
+    let mut t = Table::new(&["case", "seconds", "goodput MB/s", "speedup"]);
+    t.row(&[
+        "window 1 (rendezvous)".to_string(),
+        format!("{base_secs:.3}"),
+        format!("{:.3}", base_goodput / MBF),
+        "1.000".to_string(),
+    ]);
+    t.row(&[
+        format!("window {window}"),
+        format!("{win_secs:.3}"),
+        format!("{:.3}", win_goodput / MBF),
+        format!("{speedup:.2}"),
+    ]);
+    t.print();
+    println!("\nwindowed / rendezvous goodput: {speedup:.2}   (required >= 3.00)");
+
+    let mut json = BenchJson::new("resilience_window");
+    json.text("scenario", "windowed resilient mux on the high-BDP reference link")
+        .text("link", link.name)
+        .num("rtt_ms", link.rtt * 1000.0)
+        .num("nstreams", NSTREAMS as f64)
+        .num("window", window as f64)
+        .num("messages", msgs as f64)
+        .num("msg_bytes", MSG as f64)
+        .num("baseline_secs", base_secs)
+        .num("windowed_secs", win_secs)
+        .num("baseline_mbps", base_goodput / MBF)
+        .num("windowed_mbps", win_goodput / MBF)
+        .num("speedup", speedup)
+        .num("quick", if quick { 1.0 } else { 0.0 });
+    match json.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_resilience_window.json: {e}"),
+    }
+
+    if speedup < 3.0 {
+        eprintln!("FAIL: windowed goodput speedup {speedup:.2} < 3.0");
+        std::process::exit(1);
+    }
+}

@@ -145,6 +145,11 @@ pub struct TuneSnapshot {
     /// Controller's smoothed goodput estimate, bytes/second (None until
     /// the first qualifying sample; always None in static mode).
     pub ewma_rate: Option<f64>,
+    /// In-flight resilient send window (1 = rendezvous sends).
+    pub window: usize,
+    /// Ceiling the controller may raise the window to
+    /// ([`ResilienceConfig::window`](super::config::ResilienceConfig::window)).
+    pub window_max: usize,
 }
 
 const MODE_STATIC: u8 = 0;
@@ -170,6 +175,13 @@ pub struct TuningState {
     chunk: AtomicUsize,
     pacing_bits: AtomicU64,
     mode: AtomicU8,
+    /// In-flight resilient send window (1 = rendezvous sends). Written
+    /// by the controller / facade, read by the resilience layer's
+    /// windowed sender on every send.
+    window: AtomicUsize,
+    /// Hard ceiling for `window` — the configured
+    /// [`ResilienceConfig::window`](super::config::ResilienceConfig::window).
+    window_max: AtomicUsize,
 }
 
 impl TuningState {
@@ -182,6 +194,8 @@ impl TuningState {
             chunk: AtomicUsize::new(chunk.max(1)),
             pacing_bits: AtomicU64::new(PACING_OFF),
             mode: AtomicU8::new(MODE_STATIC),
+            window: AtomicUsize::new(1),
+            window_max: AtomicUsize::new(1),
         };
         s.set_pacing(pacing);
         s.set_mode(mode);
@@ -190,7 +204,34 @@ impl TuningState {
 
     /// Initial state for a path configured with `cfg`.
     pub fn from_config(cfg: &super::config::PathConfig) -> TuningState {
-        TuningState::new(cfg.nstreams, cfg.chunk_size, cfg.pacing_rate, cfg.adapt.mode)
+        let s = TuningState::new(cfg.nstreams, cfg.chunk_size, cfg.pacing_rate, cfg.adapt.mode);
+        s.init_window(cfg.resilience.window.max(1));
+        s
+    }
+
+    /// Seed both the current window and its ceiling (path creation).
+    pub fn init_window(&self, w: usize) {
+        self.window_max.store(w.max(1), Ordering::Relaxed);
+        self.window.store(w.max(1), Ordering::Relaxed);
+    }
+
+    /// Current in-flight send window (1 = rendezvous sends).
+    pub fn window(&self) -> usize {
+        self.window.load(Ordering::Relaxed)
+    }
+
+    /// The configured window ceiling.
+    pub fn window_max(&self) -> usize {
+        self.window_max.load(Ordering::Relaxed)
+    }
+
+    /// Set the in-flight window, clamped to `[1, window_max]` — the
+    /// controller may narrow a configured window (congestion: in-flight
+    /// messages just sit in a queue) and re-widen it, but never exceed
+    /// what the path was configured to pipeline.
+    pub fn set_window(&self, w: usize) {
+        let max = self.window_max.load(Ordering::Relaxed);
+        self.window.store(w.clamp(1, max.max(1)), Ordering::Relaxed);
     }
 
     /// Streams the next operation stripes over.
@@ -274,6 +315,9 @@ impl TuningState {
         if let Some(p) = d.pacing {
             self.set_pacing(p);
         }
+        if let Some(w) = d.window {
+            self.set_window(w);
+        }
     }
 
     /// Snapshot the knobs (controller rate is filled in by
@@ -285,6 +329,8 @@ impl TuningState {
             pacing_rate: self.pacing(),
             mode: self.mode(),
             ewma_rate: None,
+            window: self.window(),
+            window_max: self.window_max(),
         }
     }
 }
@@ -299,12 +345,18 @@ pub struct Decision {
     pub chunk: Option<usize>,
     /// New per-stream pacing rate (`Some(None)` = disable pacing).
     pub pacing: Option<Option<f64>>,
+    /// New in-flight send window (clamped to the configured ceiling by
+    /// [`TuningState::set_window`]).
+    pub window: Option<usize>,
 }
 
 impl Decision {
     /// True when nothing changes.
     pub fn is_hold(&self) -> bool {
-        self.active.is_none() && self.chunk.is_none() && self.pacing.is_none()
+        self.active.is_none()
+            && self.chunk.is_none()
+            && self.pacing.is_none()
+            && self.window.is_none()
     }
 }
 
@@ -457,6 +509,24 @@ impl AdaptiveController {
                 }
             }
         }
+        // In-flight send window (resilient paths only — the ceiling is 1
+        // everywhere else): on a long-RTT path deeper pipelining is what
+        // recovers the goodput a rendezvous-per-message protocol leaves
+        // on the table, so keep doubling toward the configured ceiling
+        // while samples improve; a collapse means the extra in-flight
+        // bytes are queueing behind a congested bottleneck — halve back.
+        if current.window_max > 1 {
+            if collapsed {
+                if current.window > 1 {
+                    d.window = Some((current.window / 2).max(1));
+                }
+            } else if self.last_rate > 0.0
+                && (rate - self.last_rate) / self.last_rate > self.cfg.improve_frac
+                && current.window < current.window_max
+            {
+                d.window = Some((current.window * 2).min(current.window_max));
+            }
+        }
         self.last_rate = rate;
 
         let goal_active = d.active.unwrap_or(active).max(1);
@@ -534,6 +604,8 @@ mod tests {
             pacing_rate: None,
             mode: TuneMode::Adaptive,
             ewma_rate: None,
+            window: 1,
+            window_max: 1,
         }
     }
 
@@ -548,10 +620,60 @@ mod tests {
         assert_eq!(t.pacing(), None);
         t.set_mode(TuneMode::Static);
         assert_eq!(t.mode(), TuneMode::Static);
-        t.apply(&Decision { active: Some(3), chunk: Some(4096), pacing: Some(Some(1e6)) });
+        t.apply(&Decision {
+            active: Some(3),
+            chunk: Some(4096),
+            pacing: Some(Some(1e6)),
+            window: None,
+        });
         assert_eq!(t.active_streams(), 3);
         assert_eq!(t.chunk(), 4096);
         assert_eq!(t.pacing(), Some(1e6));
+    }
+
+    #[test]
+    fn window_clamps_to_configured_ceiling() {
+        let t = TuningState::new(4, 1 << 20, None, TuneMode::Adaptive);
+        assert_eq!(t.window(), 1, "windowing defaults off");
+        t.init_window(8);
+        assert_eq!((t.window(), t.window_max()), (8, 8));
+        t.set_window(3);
+        assert_eq!(t.window(), 3);
+        t.set_window(100);
+        assert_eq!(t.window(), 8, "window must not exceed the ceiling");
+        t.set_window(0);
+        assert_eq!(t.window(), 1, "window floor is 1");
+        t.apply(&Decision { window: Some(4), ..Default::default() });
+        assert_eq!(t.window(), 4);
+    }
+
+    #[test]
+    fn controller_widens_window_on_improvement_and_narrows_on_collapse() {
+        let mut c = AdaptiveController::new(test_cfg(), 4);
+        let mut s = TuneSnapshot { window: 2, window_max: 16, ..snap(4) };
+        // sample 1 establishes last_rate; sample 2 improves on it
+        let d = c.observe(64 * MB, 1.0, &s);
+        assert_eq!(d.window, None, "no baseline yet");
+        let d = c.observe(64 * MB, 0.5, &s);
+        assert_eq!(d.window, Some(4), "improvement must double the window");
+        s.window = 16;
+        // collapse: rate falls far below best (the EWMA needs a few
+        // samples to drain below the drop threshold)
+        let mut narrowed = None;
+        for _ in 0..10 {
+            let d = c.observe(64 * MB, 100.0, &s);
+            if d.window.is_some() {
+                narrowed = d.window;
+                break;
+            }
+        }
+        assert_eq!(narrowed, Some(8), "collapse must halve the window");
+        // a non-resilient path (ceiling 1) never gets window decisions
+        let mut c = AdaptiveController::new(test_cfg(), 4);
+        let s1 = snap(4);
+        c.observe(64 * MB, 1.0, &s1);
+        let d = c.observe(64 * MB, 0.5, &s1);
+        assert_eq!(d.window, None);
     }
 
     #[test]

@@ -50,7 +50,36 @@ impl Default for ReconnectPolicy {
 }
 
 /// Fault-tolerance settings for a path (the `mpwide::resilience` layer).
-#[derive(Debug, Clone, PartialEq, Default)]
+///
+/// # Examples
+///
+/// A windowed resilient path over the in-memory transport — the sends
+/// post into the in-flight window instead of waiting one RTT each, and
+/// the flush confirms delivery of all of them:
+///
+/// ```
+/// use mpwide::mpwide::{Path, PathConfig};
+/// # use mpwide::mpwide::transport::mem_path_pairs;
+/// let mut cfg = PathConfig::with_streams(2);
+/// cfg.autotune = false;
+/// cfg.resilience.enabled = true;
+/// cfg.resilience.window = 4; // pipeline up to 4 unacknowledged sends
+/// let (l, r) = mem_path_pairs(2);
+/// let a = Path::from_pairs(l, cfg.clone()).unwrap();
+/// let b = Path::from_pairs(r, cfg).unwrap();
+/// let t = std::thread::spawn(move || {
+///     let mut buf = vec![0u8; 1000];
+///     for _ in 0..3 {
+///         b.recv(&mut buf).unwrap();
+///     }
+/// });
+/// for _ in 0..3 {
+///     a.send(&[5u8; 1000]).unwrap(); // posted, not yet acknowledged
+/// }
+/// a.flush().unwrap(); // every posted message is now confirmed delivered
+/// t.join().unwrap();
+/// ```
+#[derive(Debug, Clone, PartialEq)]
 pub struct ResilienceConfig {
     /// Frame every message so single-stream failures are detected and
     /// isolated, with the in-flight message retried over the surviving
@@ -67,13 +96,52 @@ pub struct ResilienceConfig {
     /// waiting on different streams until TCP gave up). `None` disables
     /// the watchdog (the pre-timeout behaviour). When set, it must
     /// comfortably exceed the worst-case time for one whole message to
-    /// be *consumed* by the peer — resilient sends are rendezvous sends,
-    /// so the budget covers the peer's compute/scheduling delay before
-    /// its matching `recv`, not just wire time. Couplings with unbounded
-    /// gaps between exchanges should leave this `None`.
+    /// be *consumed* by the peer — with `window == 1`, resilient sends
+    /// are rendezvous sends, so the budget covers the peer's
+    /// compute/scheduling delay before its matching `recv`, not just
+    /// wire time; with `window > 1` the watchdog guards progress on the
+    /// *oldest unacknowledged* message and is re-armed every time that
+    /// message advances. Couplings with unbounded gaps between
+    /// exchanges should leave this `None`.
     pub ack_timeout: Option<Duration>,
+    /// Maximum number of resilient messages in flight (posted but not
+    /// yet acknowledged) before a send blocks reaping ACKs. `1` (the
+    /// default) preserves the classic rendezvous semantics: every send
+    /// returns only after the peer has consumed the message, exactly
+    /// like MPWide's paired send/recv. Values `> 1` pipeline sends —
+    /// `Path::send` may return as soon as the message is written and
+    /// *posted*, with delivery confirmed asynchronously as later sends
+    /// reap ACKs (a delivery failure then surfaces on a later send,
+    /// [`Path::flush`](super::path::Path::flush),
+    /// [`Path::barrier`](super::path::Path::barrier), or close). On a
+    /// high-bandwidth-delay-product link this removes the
+    /// one-round-trip-per-message goodput cap. The wire format is
+    /// unchanged — the window is a sender-side discipline, so the two
+    /// ends may use different window sizes.
+    pub window: usize,
+    /// Deadline on individual **segment writes** (`SO_SNDTIMEO`-style):
+    /// a resilient sender stalled by TCP backpressure — e.g. the peer
+    /// died without resetting the connection, or the path diverged
+    /// mid-rejoin — fails the write after this budget instead of riding
+    /// the kernel's own (minutes-long) timeout, letting the resilience
+    /// layer mark the stream dead and retry over the survivors. `None`
+    /// (default) keeps the OS behaviour. Only effective on socket-backed
+    /// streams; the in-memory test transport ignores it.
+    pub write_timeout: Option<Duration>,
     /// Background reconnection of dead streams (connecting end only).
     pub reconnect: ReconnectPolicy,
+}
+
+impl Default for ResilienceConfig {
+    fn default() -> Self {
+        ResilienceConfig {
+            enabled: false,
+            ack_timeout: None,
+            window: 1,
+            write_timeout: None,
+            reconnect: ReconnectPolicy::default(),
+        }
+    }
 }
 
 impl ResilienceConfig {
@@ -88,6 +156,8 @@ impl ResilienceConfig {
         ResilienceConfig {
             enabled: true,
             ack_timeout: Some(Duration::from_secs(600)),
+            window: 8,
+            write_timeout: None,
             reconnect: ReconnectPolicy { enabled: true, ..Default::default() },
         }
     }
@@ -100,6 +170,32 @@ impl ResilienceConfig {
                 // receiver could possibly consume anything
                 return Err(crate::mpwide::MpwError::Config(
                     "resilience ack_timeout must be positive".into(),
+                ));
+            }
+        }
+        if self.window == 0 {
+            // a zero window can never post anything: every send would
+            // deadlock waiting for space that cannot open up
+            return Err(crate::mpwide::MpwError::Config(
+                "resilience window must be >= 1".into(),
+            ));
+        }
+        if self.window > super::resilience::MAX_WINDOW {
+            // the receiver bounds its reorder stash (and rejects CTRL
+            // sequences) by MAX_WINDOW — a wider sender would be
+            // treated as a protocol violation by its peer
+            return Err(crate::mpwide::MpwError::Config(format!(
+                "resilience window {} exceeds MAX_WINDOW ({})",
+                self.window,
+                super::resilience::MAX_WINDOW
+            )));
+        }
+        if let Some(t) = self.write_timeout {
+            if t.is_zero() {
+                // SO_SNDTIMEO of zero means "block forever" to the
+                // kernel — the opposite of what the caller asked for
+                return Err(crate::mpwide::MpwError::Config(
+                    "resilience write_timeout must be positive".into(),
                 ));
             }
         }
@@ -284,6 +380,38 @@ mod tests {
         c.resilience.ack_timeout = Some(Duration::ZERO);
         assert!(c.validate().is_err(), "a zero ACK budget kills every send");
         c.resilience.ack_timeout = Some(Duration::from_millis(100));
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn resilience_defaults_to_rendezvous_window() {
+        let c = ResilienceConfig::default();
+        assert_eq!(c.window, 1, "default must preserve rendezvous send semantics");
+        assert!(c.write_timeout.is_none());
+        let w = ResilienceConfig::wan();
+        assert!(w.window > 1, "wan preset should pipeline sends");
+        assert!(w.validate().is_ok());
+    }
+
+    #[test]
+    fn resilience_validation_rejects_zero_window() {
+        let mut c = PathConfig::default();
+        c.resilience.window = 0;
+        assert!(c.validate().is_err(), "a zero window can never post a message");
+        c.resilience.window = 1;
+        assert!(c.validate().is_ok());
+        c.resilience.window = crate::mpwide::resilience::MAX_WINDOW;
+        assert!(c.validate().is_ok());
+        c.resilience.window = crate::mpwide::resilience::MAX_WINDOW + 1;
+        assert!(c.validate().is_err(), "window beyond the receiver's reorder bound");
+    }
+
+    #[test]
+    fn resilience_validation_rejects_zero_write_timeout() {
+        let mut c = PathConfig::default();
+        c.resilience.write_timeout = Some(Duration::ZERO);
+        assert!(c.validate().is_err(), "SO_SNDTIMEO(0) means block forever");
+        c.resilience.write_timeout = Some(Duration::from_secs(1));
         assert!(c.validate().is_ok());
     }
 

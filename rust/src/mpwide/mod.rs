@@ -42,7 +42,13 @@
 //! the fresh socket back into its old position. Stream-death semantics,
 //! the rejoin knobs ([`config::ReconnectPolicy`]) and the facade calls
 //! (`mpw_path_status`, `mpw_set_reconnect_policy`) are documented in
-//! [`resilience`].
+//! [`resilience`]. Delivery is acknowledged per message; by default a
+//! resilient send is a rendezvous (one RTT per message), and setting
+//! [`config::ResilienceConfig::window`] `> 1` pipelines up to that
+//! many posted-but-unacknowledged messages with out-of-order ACK
+//! accounting and selective retry — [`Path::flush`](path::Path::flush)
+//! or a barrier drains the window. The byte-exact wire formats live in
+//! `docs/PROTOCOL.md`.
 //!
 //! ## Channel multiplexing
 //!

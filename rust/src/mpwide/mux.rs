@@ -59,9 +59,10 @@
 //!   state, so open order across the two ends is free. The flip side:
 //!   state for an id the peer used but this side never opens is kept
 //!   (drained, a few hundred bytes) after the peer's CLOSE, so that a
-//!   late local `open` still observes the close instead of hanging
-//!   (lease/expiry for unbounded ephemeral-id workloads is a ROADMAP
-//!   follow-up). An id may be *reused* after a close, but only once
+//!   late local `open` still observes the close instead of hanging;
+//!   bound that retention for unbounded ephemeral-id workloads with
+//!   the [`MuxConfig::tombstone_ttl`] lease. An id may be *reused*
+//!   after a close, but only once
 //!   **both** ends have closed and drained it — reopening while the
 //!   peer's old state lingers looks like traffic on a closed channel
 //!   (a protocol error); synchronize reuse at the application level,
@@ -69,17 +70,23 @@
 //! * Fairness is byte-based, not deadline-based: a channel's latency is
 //!   bounded by one full rotation of budget-sized frames, which on a
 //!   slow link can still be long — size `chunk_budget` for the link.
-//! * Over a **resilient** path every frame is a rendezvous path message
-//!   (delivery-ACKed), so the single pump runs stop-and-wait at
-//!   `chunk_budget` granularity: long-fat-pipe goodput is bounded near
-//!   `chunk_budget / RTT`. Size `chunk_budget` toward the path's
-//!   bandwidth-delay product for resilient WAN deployments (the knob is
-//!   per endpoint and does not need to match the peer); a windowed,
-//!   pipelined pump is a ROADMAP follow-up.
+//! * Over a **resilient** path every frame is a delivery-ACKed path
+//!   message. With the default
+//!   [`ResilienceConfig::window`](super::config::ResilienceConfig::window)
+//!   of 1 the single pump runs stop-and-wait at `chunk_budget`
+//!   granularity, bounding long-fat-pipe goodput near
+//!   `chunk_budget / RTT`. Raise the window to pipeline: the pump then
+//!   keeps up to `window` budget-sized frames in flight on the path's
+//!   send window and drains the window whenever it goes idle, so
+//!   goodput scales toward `window × chunk_budget / RTT`. Size
+//!   `window × chunk_budget` toward the path's bandwidth-delay product
+//!   for resilient WAN deployments (both knobs are per endpoint and do
+//!   not need to match the peer).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::errors::{MpwError, Result};
 use super::path::Path;
@@ -162,11 +169,21 @@ pub struct MuxConfig {
     /// blocks above it (a single oversized message is always accepted
     /// once the queue is empty).
     pub high_water: usize,
+    /// Lease on *tombstone* state: per-id state the peer created and
+    /// closed but this side never opened, retained so that a late local
+    /// [`MuxEndpoint::open`] still observes the close (see the module
+    /// docs). `None` (the default) retains such state for the
+    /// endpoint's lifetime; `Some(ttl)` drops it once it has sat closed
+    /// **and drained** for `ttl`, after which a late `open` treats the
+    /// id as never used (its `recv` would block like any fresh
+    /// channel's). Size the lease well above the application's
+    /// worst-case open skew.
+    pub tombstone_ttl: Option<Duration>,
 }
 
 impl Default for MuxConfig {
     fn default() -> Self {
-        MuxConfig { chunk_budget: 256 * 1024, high_water: 16 << 20 }
+        MuxConfig { chunk_budget: 256 * 1024, high_water: 16 << 20, tombstone_ttl: None }
     }
 }
 
@@ -184,6 +201,9 @@ impl MuxConfig {
         }
         if self.high_water == 0 {
             return Err(MpwError::Config("mux high_water must be >= 1".into()));
+        }
+        if self.tombstone_ttl.is_some_and(|ttl| ttl.is_zero()) {
+            return Err(MpwError::Config("mux tombstone_ttl must be positive".into()));
         }
         Ok(())
     }
@@ -215,6 +235,10 @@ struct ChanState {
     /// A chunk of this channel's head message is being written to the
     /// path right now (outside the state lock); gates CLOSE and gc.
     in_flight: bool,
+    /// When this state became a tombstone — closed by the peer while
+    /// never locally opened. Starts the [`MuxConfig::tombstone_ttl`]
+    /// lease; cleared if a local `open` adopts the state after all.
+    tombstone_since: Option<Instant>,
     // inbound
     partial: Vec<u8>,
     ready: VecDeque<Vec<u8>>,
@@ -290,6 +314,23 @@ enum PumpJob {
 }
 
 /// One end of a multiplexed path. See the module docs for the model.
+///
+/// # Examples
+///
+/// ```
+/// use std::sync::Arc;
+/// use mpwide::mpwide::{MuxEndpoint, Path, PathConfig};
+/// # use mpwide::mpwide::transport::mem_path_pairs;
+/// let mut cfg = PathConfig::with_streams(2);
+/// cfg.autotune = false;
+/// let (l, r) = mem_path_pairs(2);
+/// let a = MuxEndpoint::start(Arc::new(Path::from_pairs(l, cfg.clone()).unwrap()));
+/// let b = MuxEndpoint::start(Arc::new(Path::from_pairs(r, cfg).unwrap()));
+/// // both ends agree on channel ids, like ports
+/// let (tx, rx) = (a.open(1).unwrap(), b.open(1).unwrap());
+/// tx.send(b"solver boundary data").unwrap();
+/// assert_eq!(rx.recv().unwrap(), b"solver boundary data");
+/// ```
 pub struct MuxEndpoint {
     inner: Arc<MuxInner>,
     pump: Option<JoinHandle<()>>,
@@ -356,6 +397,7 @@ impl MuxEndpoint {
             return Err(MpwError::Config(format!("channel {id} is already open")));
         }
         ch.locally_opened = true;
+        ch.tombstone_since = None; // adopted: the lease no longer applies
         if known {
             // the peer evidently knows the channel already (its frames
             // created the state) — no OPEN needed
@@ -585,23 +627,31 @@ impl Channel {
 
     /// Block until every queued outbound byte of this channel has been
     /// handed to the path — and, in resilient mode, acknowledged by the
-    /// peer (resilient sends are rendezvous sends). Call before
+    /// peer: rendezvous sends (window 1) acknowledge inline, and for a
+    /// pipelined path ([`ResilienceConfig::window`] > 1) this drains
+    /// the path's in-flight send window before returning. Call before
     /// dropping the endpoint: [`MuxEndpoint::shutdown`] is abrupt and
     /// discards still-queued messages.
+    ///
+    /// [`ResilienceConfig::window`]: super::config::ResilienceConfig::window
     pub fn flush(&self) -> Result<()> {
         let mut st = self.inner.st.lock().unwrap();
         loop {
             check_alive(&st)?;
             match self.chan(&st) {
-                None => return Ok(()), // fully closed and drained
+                None => break, // fully closed and drained
                 Some(ch) => {
                     if ch.outq.is_empty() && !ch.in_flight {
-                        return Ok(());
+                        break;
                     }
                 }
             }
             st = self.inner.space_cv.wait(st).unwrap();
         }
+        drop(st);
+        // handed to the path may still mean "posted into the send
+        // window, unacknowledged" — drain it before reporting done
+        self.inner.path.flush()
     }
 
     /// Close the channel: already-queued messages are still sent, then a
@@ -722,8 +772,9 @@ fn ensure_chan(st: &mut MuxState, id: u32) -> &mut ChanState {
 /// fire-and-close producer sent for a late opener to drain — the "open
 /// order across the two ends is free" guarantee depends on both. The
 /// cost is one `ChanState` per never-opened id **including any
-/// undrained `ready` payloads**; a lease/expiry bounding that retention
-/// for ephemeral-id workloads is a ROADMAP follow-up.
+/// undrained `ready` payloads**; [`MuxConfig::tombstone_ttl`] leases
+/// that retention for ephemeral-id workloads (see
+/// [`sweep_tombstones`]).
 fn gc_chan(st: &mut MuxState, id: u32) {
     let done = match st.chans.get(&id) {
         Some(c) => {
@@ -749,6 +800,44 @@ fn gc_chan(st: &mut MuxState, id: u32) {
         } else {
             st.cursor = 0;
         }
+    }
+}
+
+/// Expire leased tombstones: state for ids the peer closed but this
+/// side never opened, retained so a late `open` observes the close
+/// (see [`gc_chan`]). Under a [`MuxConfig::tombstone_ttl`] lease such
+/// state is dropped once it has sat closed and drained for the ttl —
+/// an `open` later than that behaves like a never-used id. Runs in the
+/// pump, which wakes at least once per ttl while the endpoint idles.
+fn sweep_tombstones(st: &mut MuxState, ttl: Option<Duration>) {
+    let Some(ttl) = ttl else { return };
+    let expired: Vec<u32> = st
+        .chans
+        .iter()
+        .filter(|(_, c)| {
+            !c.locally_opened
+                && c.remote_closed
+                && c.ready.is_empty()
+                && c.tombstone_since.is_some_and(|t0| t0.elapsed() >= ttl)
+        })
+        .map(|(&id, _)| id)
+        .collect();
+    if expired.is_empty() {
+        return;
+    }
+    for id in expired {
+        st.chans.remove(&id);
+        if let Some(pos) = st.order.iter().position(|&x| x == id) {
+            st.order.remove(pos);
+            if st.cursor > pos {
+                st.cursor -= 1;
+            }
+        }
+    }
+    if st.order.is_empty() {
+        st.cursor = 0;
+    } else {
+        st.cursor %= st.order.len();
     }
 }
 
@@ -787,6 +876,11 @@ fn pick_job(st: &mut MuxState, budget: usize) -> Option<PumpJob> {
 
 fn pump_loop(inner: &Arc<MuxInner>) {
     let budget = inner.cfg.chunk_budget;
+    // Frames were handed to the path since the last window drain: on
+    // going idle the pump flushes the path once (outside the state
+    // lock) before parking, so a windowed resilient path never sits on
+    // unacknowledged frames while the queues look drained.
+    let mut dirty = false;
     loop {
         let job = {
             let mut st = inner.st.lock().unwrap();
@@ -794,11 +888,38 @@ fn pump_loop(inner: &Arc<MuxInner>) {
                 if st.shutdown || st.dead.is_some() {
                     return;
                 }
+                sweep_tombstones(&mut st, inner.cfg.tombstone_ttl);
                 if let Some(job) = pick_job(&mut st, budget) {
-                    break job;
+                    break Some(job);
                 }
-                st = inner.send_cv.wait(st).unwrap();
+                if dirty {
+                    break None; // drain the path window outside the lock
+                }
+                st = match inner.cfg.tombstone_ttl {
+                    // the lease needs periodic sweeps even while idle
+                    Some(ttl) => inner.send_cv.wait_timeout(st, ttl).unwrap().0,
+                    None => inner.send_cv.wait(st).unwrap(),
+                };
             }
+        };
+        let Some(job) = job else {
+            // idle with frames outstanding: push the path's in-flight
+            // send window through to the peer's ACKs before sleeping
+            let drained = inner.path.flush();
+            dirty = false;
+            if let Err(e) = drained {
+                let mut st = inner.st.lock().unwrap();
+                if !st.shutdown && st.dead.is_none() {
+                    st.dead = Some(format!("mux window drain failed: {e}"));
+                }
+                inner.recv_cv.notify_all();
+                inner.space_cv.notify_all();
+                inner.send_cv.notify_all();
+                return;
+            }
+            // Channel::flush waiters recheck queue + window through this
+            inner.space_cv.notify_all();
+            continue;
         };
         // producers may be blocked on the bytes we just claimed
         inner.space_cv.notify_all();
@@ -843,7 +964,7 @@ fn pump_loop(inner: &Arc<MuxInner>) {
         // flush() waiters watch in_flight/outq through this condvar
         inner.space_cv.notify_all();
         match sent {
-            Ok(()) => {}
+            Ok(()) => dirty = true,
             Err(e) => {
                 if !st.shutdown {
                     st.dead = Some(format!("mux send failed: {e}"));
@@ -917,6 +1038,9 @@ fn route_frame(inner: &Arc<MuxInner>, frame: &[u8]) -> Result<()> {
         CH_CLOSE => {
             let ch = ensure_chan(&mut st, hdr.channel);
             ch.remote_closed = true;
+            if !ch.locally_opened && ch.tombstone_since.is_none() {
+                ch.tombstone_since = Some(Instant::now());
+            }
             gc_chan(&mut st, hdr.channel);
             drop(st);
             inner.recv_cv.notify_all();
@@ -1083,7 +1207,8 @@ mod tests {
 
     #[test]
     fn per_channel_ordering_holds() {
-        let (a, b) = mem_endpoints(1, MuxConfig { chunk_budget: 1024, high_water: 1 << 20 });
+        let (a, b) =
+            mem_endpoints(1, MuxConfig { chunk_budget: 1024, high_water: 1 << 20, ..MuxConfig::default() });
         let tx = a.open(9).unwrap();
         let rx = b.open(9).unwrap();
         for i in 0..20u32 {
@@ -1103,7 +1228,8 @@ mod tests {
         // other channels queued afterwards must still be delivered before
         // the bulk completes (global delivery tickets make the order
         // deterministic — a strict-FIFO mux would fail this).
-        let cfg = MuxConfig { chunk_budget: 16 * 1024, high_water: 64 << 20 };
+        let cfg =
+            MuxConfig { chunk_budget: 16 * 1024, high_water: 64 << 20, ..MuxConfig::default() };
         // paced path: the pump needs tens of milliseconds for the bulk
         // message while enqueueing the small one takes microseconds, so
         // the ticket comparison below cannot be raced by scheduling
@@ -1178,6 +1304,40 @@ mod tests {
         let rx2 = b.open(6).unwrap();
         tx2.send(b"gen2").unwrap();
         assert_eq!(rx2.recv().unwrap(), b"gen2");
+    }
+
+    #[test]
+    fn tombstone_lease_expires_never_opened_state() {
+        let ttl = std::time::Duration::from_millis(50);
+        let cfg = MuxConfig { tombstone_ttl: Some(ttl), ..MuxConfig::default() };
+        let (a, b) = mem_endpoints(1, cfg);
+        // `a` opens and closes id 8; `b` never opens it. The OPEN and
+        // CLOSE frames leave drained tombstone state on `b` …
+        let tx = a.open(8).unwrap();
+        tx.close().unwrap();
+        let t0 = std::time::Instant::now();
+        while b.channel_stats().iter().all(|c| c.id != 8) {
+            assert!(t0.elapsed().as_secs() < 5, "tombstone state never appeared");
+            std::thread::yield_now();
+        }
+        // … which the lease expires instead of retaining forever
+        let t0 = std::time::Instant::now();
+        while b.channel_stats().iter().any(|c| c.id == 8) {
+            assert!(t0.elapsed().as_secs() < 5, "tombstone never expired");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // an open later than the lease sees a fresh, never-used id
+        let late = b.open(8).unwrap();
+        assert!(late.try_recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn zero_tombstone_ttl_rejected() {
+        let cfg = MuxConfig {
+            tombstone_ttl: Some(std::time::Duration::ZERO),
+            ..MuxConfig::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

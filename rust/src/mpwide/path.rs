@@ -60,6 +60,32 @@ pub(crate) struct StreamSlot {
 }
 
 /// A communication path between two endpoints.
+///
+/// The central MPWide abstraction: 1–256 parallel TCP streams driven as
+/// one logical connection, with striping, chunking, pacing and (opt-in)
+/// resilience and windowed pipelining layered on top. Construct with
+/// [`Path::connect`] / [`PathListener::accept_path`] for sockets, or
+/// [`Path::from_pairs`] over any transport.
+///
+/// # Examples
+///
+/// ```
+/// use mpwide::mpwide::{Path, PathConfig};
+/// # use mpwide::mpwide::transport::mem_path_pairs;
+/// let mut cfg = PathConfig::with_streams(4);
+/// cfg.autotune = false; // autotuning needs the two-sided probe protocol
+/// let (l, r) = mem_path_pairs(4);
+/// let a = Path::from_pairs(l, cfg.clone()).unwrap();
+/// let b = Path::from_pairs(r, cfg).unwrap();
+/// let msg = vec![42u8; 100_000];
+/// let t = std::thread::spawn(move || {
+///     let mut buf = vec![0u8; 100_000]; // sizes must match, like MPI
+///     b.recv(&mut buf).unwrap();
+///     buf
+/// });
+/// a.send(&msg).unwrap();
+/// assert_eq!(t.join().unwrap(), msg);
+/// ```
 pub struct Path {
     pub(crate) streams: Vec<StreamSlot>,
     cfg: Mutex<PathConfig>,
@@ -91,6 +117,15 @@ pub struct Path {
     /// Timer thread firing the control stream's kill switch when an ACK
     /// wait exceeds its budget (lazily spawned on first armed wait).
     pub(crate) ack_watchdog: resilience::AckWatchdog,
+    /// Windowed sender state: messages posted but not yet acknowledged
+    /// (empty and inert while `resilience.window == 1`).
+    pub(crate) send_window: resilience::SendWindow,
+    /// Receiver-side stash for messages a pipelining peer completed out
+    /// of turn (see [`resilience::MAX_WINDOW`]).
+    pub(crate) recv_reorder: resilience::ReorderBuf,
+    /// `SO_SNDTIMEO`-style write deadline (cached from the config;
+    /// reapplied to every rejoined stream).
+    write_timeout: Option<Duration>,
     /// Sticky closed flag: set by [`Path::close`], never cleared. Gates
     /// rejoin so a closed path cannot be resurrected by its monitor.
     closed: AtomicBool,
@@ -130,6 +165,11 @@ impl Path {
                 p.set_window(win)?;
             }
         }
+        if let Some(t) = cfg.resilience.write_timeout {
+            for p in &pairs {
+                p.set_send_timeout(Some(t))?;
+            }
+        }
         let peer = pairs[0].peer.clone();
         let streams: Vec<StreamSlot> = pairs
             .into_iter()
@@ -149,6 +189,7 @@ impl Path {
             Mutex::new(AdaptiveController::new(cfg.adapt.clone(), streams.len()));
         let resilient = cfg.resilience.enabled;
         let ack_timeout = cfg.resilience.ack_timeout;
+        let write_timeout = cfg.resilience.write_timeout;
         let reconnect = cfg.resilience.reconnect.clone();
         Ok(Path {
             streams,
@@ -165,6 +206,9 @@ impl Path {
             resilient,
             ack_timeout,
             ack_watchdog: resilience::AckWatchdog::new(),
+            send_window: resilience::SendWindow::default(),
+            recv_reorder: resilience::ReorderBuf::default(),
+            write_timeout,
             closed: AtomicBool::new(false),
             reconnect: Mutex::new(reconnect),
             remote: Mutex::new(None),
@@ -460,14 +504,62 @@ impl Path {
         rx_res
     }
 
+    /// Drain the resilient send window: block until every message the
+    /// windowed sender has posted is acknowledged by the peer (see
+    /// [`ResilienceConfig::window`](super::config::ResilienceConfig::window)),
+    /// surfacing any deferred pipeline failure. A no-op on
+    /// non-resilient paths and with the default `window == 1`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use mpwide::mpwide::{Path, PathConfig};
+    /// # use mpwide::mpwide::transport::mem_path_pairs;
+    /// let mut cfg = PathConfig::with_streams(2);
+    /// cfg.autotune = false;
+    /// cfg.resilience.enabled = true;
+    /// cfg.resilience.window = 4; // pipeline up to 4 in-flight messages
+    /// let (l, r) = mem_path_pairs(2);
+    /// let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    /// let b = Path::from_pairs(r, cfg).unwrap();
+    /// let t = std::thread::spawn(move || {
+    ///     let mut buf = vec![0u8; 1000];
+    ///     for _ in 0..3 {
+    ///         b.recv(&mut buf).unwrap();
+    ///     }
+    /// });
+    /// for _ in 0..3 {
+    ///     a.send(&vec![7u8; 1000]).unwrap(); // posts without waiting
+    /// }
+    /// a.flush().unwrap(); // all three confirmed delivered
+    /// t.join().unwrap();
+    /// ```
+    pub fn flush(&self) -> Result<()> {
+        if !self.resilient {
+            return Ok(());
+        }
+        let _gate = self.send_gate.lock().unwrap();
+        resilience::drain_window(self)
+    }
+
+    /// The sender's in-flight window limit (≥ 1; reads the live tunable
+    /// so the adaptive controller can widen or narrow it mid-run).
+    pub(crate) fn send_window_limit(&self) -> usize {
+        self.tuning.window().max(1)
+    }
+
     /// `MPW_Barrier`: synchronize the two ends — each side sends a token
     /// byte on stream 0 and waits for the peer's. In resilient mode the
-    /// token exchange is a pair of resilient empty messages, so a
-    /// barrier survives stream death like any other operation.
+    /// token exchange is a pair of resilient empty messages — so a
+    /// barrier survives stream death like any other operation — followed
+    /// by a window drain: when the barrier returns, everything this end
+    /// sent before it is confirmed delivered, even with `window > 1`.
     pub fn barrier(&self) -> Result<()> {
         if self.resilient {
             let mut empty: [u8; 0] = [];
-            return self.send_recv(&[], &mut empty);
+            self.send_recv(&[], &mut empty)?;
+            let _gate = self.send_gate.lock().unwrap();
+            return resilience::drain_window(self);
         }
         const TOKEN: u8 = 0xB7;
         let slot = &self.streams[0];
@@ -613,6 +705,10 @@ impl Path {
         if let Some(win) = self.cfg.lock().unwrap().tcp_window {
             let _ = pair.set_window(win);
         }
+        // the write deadline is per-socket state: reapply to the fresh fd
+        if let Some(t) = self.write_timeout {
+            let _ = pair.set_send_timeout(Some(t));
+        }
         let (tx, rx, fd, kill) = pair.into_parts();
         {
             // meta first: once the old tx/rx halves are dropped their fd
@@ -682,6 +778,7 @@ impl Path {
         let probe = super::config::ResilienceConfig {
             enabled: self.resilient,
             reconnect: policy.clone(),
+            ..Default::default()
         };
         probe.validate()?;
         *self.reconnect.lock().unwrap() = policy;
@@ -717,6 +814,7 @@ impl Path {
             preferred_active: self.tuning.preferred_active(),
             rejoined: self.health.rejoined.load(Ordering::SeqCst),
             ack_timeouts: self.ack_watchdog.fired(),
+            window_in_flight: self.send_window.in_flight(),
             resilient: self.resilient,
             reconnect_enabled: self.reconnect.lock().unwrap().enabled,
         }

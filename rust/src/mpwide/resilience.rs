@@ -55,16 +55,37 @@
 //! so both ends converge on the same control stream without
 //! negotiation.
 //!
-//! ### Semantics: resilient sends are rendezvous sends
+//! ### Semantics: rendezvous by default, pipelined by request
 //!
-//! Because delivery is ACK-confirmed, a resilient `send` completes only
-//! once the receiver's matching `recv` has consumed the message —
-//! MPI's `Ssend` semantics, not the buffered semantics of non-resilient
-//! mode. Two ends that both do `send(..)` then `recv(..)` therefore
-//! deadlock (each waits for the other's ack). Symmetric exchanges must
-//! use `send_recv` / `dsend_recv` (which run both directions
-//! concurrently), `barrier`, or non-blocking handles — the patterns
-//! MPWide applications already use.
+//! With the default window of 1, delivery being ACK-confirmed means a
+//! resilient `send` completes only once the receiver's matching `recv`
+//! has consumed the message — MPI's `Ssend` semantics, not the buffered
+//! semantics of non-resilient mode. Two ends that both do `send(..)`
+//! then `recv(..)` therefore deadlock (each waits for the other's ack).
+//! Symmetric exchanges must use `send_recv` / `dsend_recv` (which run
+//! both directions concurrently), `barrier`, or non-blocking handles —
+//! the patterns MPWide applications already use.
+//!
+//! ### In-flight windowing
+//!
+//! With [`ResilienceConfig::window`](super::config::ResilienceConfig::window)
+//! `> 1` the sender *pipelines*: a send **posts** its message (writes
+//! CTRL + DATA, keeping an owned retransmit copy) and returns, and
+//! delivery acknowledgements are **reaped** out of order as later sends
+//! fill the window, or by an explicit drain (`Path::flush`, `barrier`,
+//! a window-full send). On a high-bandwidth-delay-product link this
+//! lifts the `message/RTT` goodput cap of the rendezvous protocol —
+//! the exact regime the paper targets. The wire format is unchanged
+//! (the window is a sender-side discipline; per-message seq/attempt
+//! counters already order everything), so the two ends may use
+//! different windows. Selective retry resends only the NACKed or
+//! timed-out message; a control-stream death reposts everything still
+//! in flight, and the receiver re-acknowledges duplicates by sequence
+//! number. The receiver keeps a bounded reorder stash (at most
+//! [`MAX_WINDOW`] messages) for messages a retry delivered ahead of
+//! their turn. A delivery failure in the pipeline *poisons* it: the
+//! error surfaces on a later send, `flush`, or `barrier` — callers that
+//! need per-message confirmation keep `window = 1`.
 //!
 //! ### Limitations
 //!
@@ -85,15 +106,20 @@
 //! set, a sender whose delivery acknowledgement does not arrive within
 //! the budget force-closes its control stream and retries over the
 //! survivors, re-converging both ends through the ordinary rotation
-//! rule. The watchdog is off by default (resilient sends are rendezvous
-//! sends, so the budget must exceed the worst-case time for the peer to
-//! *consume* a whole message); the
+//! rule. The watchdog is off by default (with `window = 1` resilient
+//! sends are rendezvous sends, so the budget must exceed the worst-case
+//! time for the peer to *consume* a whole message); the
 //! [`ResilienceConfig::wan`](super::config::ResilienceConfig::wan)
-//! preset arms it at 10 minutes. The watchdog covers the ACK *wait*
-//! only: a sender whose segment **writes** are stalled by TCP
+//! preset arms it at 10 minutes. With `window > 1` the watchdog tracks
+//! *oldest-unacked progress*: the deadline re-arms whenever the oldest
+//! in-flight message changes (is acknowledged or reposted on a new
+//! control stream), so a pipelined sender only trips it when the head
+//! of the window stalls. Segment **writes** stalled by TCP
 //! backpressure (possible in the same divergence scenario when the
-//! message exceeds the socket buffers) still waits for TCP's own
-//! timeout — write-side progress timeouts are a ROADMAP follow-up.
+//! message exceeds the socket buffers) are covered separately by
+//! [`ResilienceConfig::write_timeout`](super::config::ResilienceConfig::write_timeout),
+//! an `SO_SNDTIMEO`-style deadline on socket transports; without it a
+//! stalled writer still rides TCP's own timeout.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -124,6 +150,15 @@ const ACK_OK: u8 = 0;
 const ACK_RETRY: u8 = 1;
 /// "No dead stream to report" in an ACK's detail field.
 const NO_DETAIL: u16 = u16::MAX;
+
+/// Hard ceiling on [`ResilienceConfig::window`](super::config::ResilienceConfig::window).
+///
+/// Bounds the receiver's reorder stash (out-of-turn messages a
+/// pipelining sender completed early) and lets the receiver reject a
+/// CTRL whose sequence lies beyond any window the peer could legally
+/// have open — the windowed analogue of the old "ctrl for future
+/// message" check.
+pub const MAX_WINDOW: usize = 64;
 
 /// Decoded frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -248,9 +283,23 @@ impl FrameBox {
 
     /// Take the oldest parked frame of `kind`, if any.
     fn take(&self, kind: u8) -> Option<(FrameHdr, Vec<u8>)> {
+        self.take_where(kind, |_| true)
+    }
+
+    /// Take the oldest parked frame of `kind` matching `pred`, leaving
+    /// non-matching frames in place (they belong to another consumer —
+    /// e.g. a pipelined later message — and must keep their order).
+    fn take_where(&self, kind: u8, pred: impl Fn(&FrameHdr) -> bool) -> Option<(FrameHdr, Vec<u8>)> {
         let mut q = self.q.lock().unwrap();
-        let pos = q.iter().position(|(h, _)| h.kind == kind)?;
+        let pos = q.iter().position(|(h, _)| h.kind == kind && pred(h))?;
         q.remove(pos)
+    }
+
+    /// Drop parked DATA frames with `msg_seq <= seq`: once a message is
+    /// delivered, stale duplicates of its segments (reposts that raced
+    /// the delivery) can never be consumed and would otherwise leak.
+    fn purge_data_through(&self, seq: u64) {
+        self.q.lock().unwrap().retain(|(h, _)| h.kind != KIND_DATA || h.msg_seq > seq);
     }
 
     /// Discard every parked frame (stream rejoin: frames parked off the
@@ -448,6 +497,9 @@ pub struct PathStatus {
     /// Times the ACK progress watchdog fired (each one force-closed the
     /// then-current control stream and re-routed the in-flight send).
     pub ack_timeouts: u64,
+    /// Messages posted by the windowed sender and not yet acknowledged
+    /// (always 0 with `window == 1`).
+    pub window_in_flight: usize,
     /// Whether resilient framing is enabled.
     pub resilient: bool,
     /// Whether background reconnection is enabled.
@@ -512,14 +564,29 @@ fn write_frame(
 /// holder may have parked our frame while we waited). The returned
 /// frame is *any* kind — the caller routes or parks foreign frames.
 fn read_raw_frame(path: &Path, s: usize, want: u8) -> Result<(FrameHdr, Vec<u8>)> {
-    if let Some(f) = path.streams[s].inbox.take(want) {
+    read_raw_frame_where(path, s, want, |_| true)
+}
+
+/// [`read_raw_frame`] with a header predicate on the inbox takes: a
+/// consumer interested only in *some* frames of `want` (e.g. a segment
+/// worker that must not steal a pipelined later message's DATA) leaves
+/// non-matching parked frames for their rightful consumer. Frames read
+/// off the wire are returned regardless — the caller routes or parks
+/// them.
+fn read_raw_frame_where(
+    path: &Path,
+    s: usize,
+    want: u8,
+    pred: impl Fn(&FrameHdr) -> bool,
+) -> Result<(FrameHdr, Vec<u8>)> {
+    if let Some(f) = path.streams[s].inbox.take_where(want, &pred) {
         return Ok(f);
     }
     if !path.stream_alive(s) {
         return Err(MpwError::StreamDead { stream: s });
     }
     let mut rx = path.streams[s].rx.lock().unwrap();
-    if let Some(f) = path.streams[s].inbox.take(want) {
+    if let Some(f) = path.streams[s].inbox.take_where(want, &pred) {
         return Ok(f);
     }
     let mut hb = [0u8; FRAME_HDR_LEN];
@@ -614,9 +681,14 @@ fn consume_data(
 /// or extra copy on the bulk-transfer hot path; only stale/foreign
 /// frames are buffered.
 fn recv_segment(path: &Path, s: usize, msg_seq: u64, attempt: u32, out: &mut [u8]) -> Result<()> {
+    // Only claim parked DATA that is ours or stale: a pipelining sender
+    // can put a *later* message's (or a reposted later attempt's) DATA
+    // on this stream, and that frame belongs to whichever worker ends
+    // up receiving it — stealing it here would lose the bytes.
+    let ours = |h: &FrameHdr| h.msg_seq < msg_seq || (h.msg_seq == msg_seq && h.attempt <= attempt);
     let mut got = 0usize;
     while got < out.len() {
-        if let Some((hdr, payload)) = path.streams[s].inbox.take(KIND_DATA) {
+        if let Some((hdr, payload)) = path.streams[s].inbox.take_where(KIND_DATA, ours) {
             got = consume_data(hdr, &payload, msg_seq, attempt, out, got, s)?;
             continue;
         }
@@ -626,7 +698,7 @@ fn recv_segment(path: &Path, s: usize, msg_seq: u64, attempt: u32, out: &mut [u8
         let mut rx = path.streams[s].rx.lock().unwrap();
         // Re-check after acquiring: the previous lock holder may have
         // parked a frame for us while we waited.
-        if let Some((hdr, payload)) = path.streams[s].inbox.take(KIND_DATA) {
+        if let Some((hdr, payload)) = path.streams[s].inbox.take_where(KIND_DATA, ours) {
             drop(rx);
             got = consume_data(hdr, &payload, msg_seq, attempt, out, got, s)?;
             continue;
@@ -652,9 +724,12 @@ fn recv_segment(path: &Path, s: usize, msg_seq: u64, attempt: u32, out: &mut [u8
         let mut payload = vec![0u8; len];
         rx.read_exact(&mut payload)?;
         drop(rx);
-        if hdr.kind == KIND_DATA {
+        if hdr.kind == KIND_DATA && ours(&hdr) {
             got = consume_data(hdr, &payload, msg_seq, attempt, out, got, s)?;
         } else {
+            // Foreign kind, or DATA from a pipelined later message /
+            // later attempt that overtook us on the wire: park it for
+            // its consumer.
             path.streams[s].inbox.push(hdr, payload);
         }
     }
@@ -683,18 +758,23 @@ fn drain_attempt(path: &Path, ctrl: &CtrlMsg, msg_seq: u64, attempt: u32) {
             // frames are swallowed, and anything newer — or any other
             // kind — is parked untouched so no live traffic is lost.
             let mut remaining = len;
+            // Inbox takes are predicate-filtered so a pipelined later
+            // message's parked DATA is never cycled through (a take +
+            // push-back would reorder it behind frames parked later).
+            let ours = |h: &FrameHdr| {
+                h.msg_seq < msg_seq || (h.msg_seq == msg_seq && h.attempt <= attempt)
+            };
             while remaining > 0 {
-                match read_raw_frame(path, si, KIND_DATA) {
+                match read_raw_frame_where(path, si, KIND_DATA, ours) {
                     Ok((h, p)) => {
                         if h.kind == KIND_DATA && h.msg_seq == msg_seq && h.attempt == attempt {
                             remaining = remaining.saturating_sub(p.len().max(1));
-                        } else if h.kind == KIND_DATA
-                            && (h.msg_seq < msg_seq
-                                || (h.msg_seq == msg_seq && h.attempt < attempt))
-                        {
+                        } else if h.kind == KIND_DATA && ours(&h) {
                             // even older stale frame: discard, keep going
                         } else {
-                            // newer traffic or a foreign kind: not ours
+                            // newer traffic or a foreign kind: not ours —
+                            // read fresh off the wire, so this park does
+                            // not reorder anything already queued
                             path.streams[si].inbox.push(h, p);
                             break;
                         }
@@ -761,12 +841,16 @@ fn read_ack_frame(path: &Path, s: usize) -> Result<(FrameHdr, Vec<u8>)> {
         if hdr.kind == KIND_ACK {
             return Ok((hdr, payload));
         }
-        if hdr.kind == KIND_CTRL && hdr.msg_seq < path.res_recv_seq.load(Ordering::Relaxed) {
-            // retransmission of a message we already delivered (the peer
-            // lost our final ack): re-acknowledge in place, then drain
-            // the resent data — the peer's segment workers may be parked
-            // on TCP backpressure and cannot reach their own ack wait
-            // until those bytes are consumed
+        if hdr.kind == KIND_CTRL
+            && (hdr.msg_seq < path.res_recv_seq.load(Ordering::Relaxed)
+                || path.recv_reorder.contains(hdr.msg_seq))
+        {
+            // retransmission of a message we already delivered — or one
+            // already complete in the reorder stash (the peer lost our
+            // ack): re-acknowledge in place, then drain the resent data
+            // — the peer's segment workers may be parked on TCP
+            // backpressure and cannot reach their own ack wait until
+            // those bytes are consumed
             let _ = write_ack(path, s, hdr.msg_seq, hdr.attempt, ACK_OK, NO_DETAIL);
             if let Ok(ctrl) = parse_ctrl(&payload) {
                 drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
@@ -795,81 +879,123 @@ fn fatal(path: &Path, e: MpwError) -> MpwError {
     e
 }
 
+/// Outcome of posting one attempt of a message onto the wire.
+enum PostOutcome {
+    /// CTRL + every segment fully written; `ctrl` is the control stream
+    /// used, `gen` the health generation the post observed.
+    Written { ctrl: usize, gen: u64 },
+    /// A stream died mid-post (already marked dead); the caller should
+    /// re-evaluate liveness and retry with the next attempt number.
+    Again,
+}
+
+/// Write one attempt of a message: pick the control stream, build the
+/// stripe list from the live set, write CTRL (with in-band death
+/// gossip), then fan the segments out over the worker pool. Shared by
+/// the rendezvous sender and the windowed pipeline — retryable stream
+/// deaths come back as [`PostOutcome::Again`], only protocol failures
+/// no retry can heal are `Err` (callers wrap those in [`fatal`]).
+fn write_attempt(path: &Path, msg_seq: u64, attempt: u32, buf: SplitBuf<'_>) -> Result<PostOutcome> {
+    let gen = path.health_generation();
+    let live = path.live_stream_indices();
+    if live.is_empty() {
+        path.wait_for_any_live()?;
+        return Ok(PostOutcome::Again);
+    }
+    let c = match ctrl_stream(path) {
+        Ok(c) => c,
+        Err(_) => return Ok(PostOutcome::Again), // raced a death; re-evaluate liveness
+    };
+    let want = path.tuning().active_streams().clamp(1, path.nstreams());
+    let k = want.min(live.len());
+    let mut used: Vec<u16> = Vec::with_capacity(k);
+    used.push(c as u16);
+    for &i in &live {
+        if i != c && used.len() < k {
+            used.push(i as u16);
+        }
+    }
+    let dead: Vec<u16> =
+        (0..path.nstreams()).filter(|&i| !path.stream_alive(i)).map(|i| i as u16).collect();
+    let ctrl = encode_ctrl(buf.len() as u64, &used, &dead);
+    if write_frame(path, c, KIND_CTRL, msg_seq, attempt, SplitBuf::plain(&ctrl), true).is_err() {
+        path.mark_stream_dead(c, gen);
+        return Ok(PostOutcome::Again);
+    }
+    // Frames carry a u32 length validated against MAX_FRAME_PAYLOAD on
+    // the receiving side; cap the per-frame chunk accordingly.
+    let chunk = path.tuning().chunk().min(MAX_FRAME_PAYLOAD);
+    let segs = stripe::segments(buf.len(), used.len());
+    let mut results: Vec<Result<()>> = Vec::new();
+    results.resize_with(used.len(), || Ok(()));
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(used.len());
+        for ((&si, seg), out) in used.iter().zip(segs).zip(results.iter_mut()) {
+            if seg.is_empty() {
+                continue;
+            }
+            let (h, t) = buf.slice(seg);
+            let data = SplitBuf { head: h, tail: t };
+            jobs.push(Box::new(move || {
+                *out = send_segment(path, si as usize, msg_seq, attempt, data, chunk);
+            }));
+        }
+        crate::util::pool::scope(jobs);
+    }
+    let mut failed = false;
+    for (&si, r) in used.iter().zip(&results) {
+        if let Err(e) = r {
+            match e {
+                MpwError::Io(_) | MpwError::StreamDead { .. } => {
+                    path.mark_stream_dead(si as usize, gen);
+                    failed = true;
+                }
+                // a protocol error cannot be healed by retrying
+                _ => return Err(MpwError::Protocol(format!("send worker failed: {e}"))),
+            }
+        }
+    }
+    if failed {
+        Ok(PostOutcome::Again)
+    } else {
+        Ok(PostOutcome::Written { ctrl: c, gen })
+    }
+}
+
 /// Resilient `MPW_Send`: stripe over the live streams, isolate failures,
-/// retry the whole message over survivors until the receiver confirms
-/// delivery. Caller holds the path's send gate. The message is a
-/// [`SplitBuf`] so a framing layer's header + payload need no
-/// concatenation (plain sends pass `SplitBuf::plain`).
+/// retry over survivors until the receiver confirms delivery. Caller
+/// holds the path's send gate. The message is a [`SplitBuf`] so a
+/// framing layer's header + payload need no concatenation (plain sends
+/// pass `SplitBuf::plain`).
+///
+/// With [`ResilienceConfig::window`](super::config::ResilienceConfig::window)
+/// `== 1` this is a rendezvous send (returns only after the ACK). With
+/// a wider window it *posts* the message and returns, reaping
+/// acknowledgements as the window fills — see the module docs.
 pub(crate) fn send(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
+    if path.send_window_limit() <= 1 {
+        // The window may have been narrowed at runtime (autotuner or
+        // reconfiguration) while messages were still in flight: drain
+        // them first so rendezvous ordering is restored before this
+        // message posts.
+        drain_window(path)?;
+        send_rendezvous(path, buf)
+    } else {
+        send_windowed(path, buf)
+    }
+}
+
+/// One-message-at-a-time resilient send: post, wait for the ACK, retry
+/// on NACK / stream death. The original MPWide pairing discipline.
+fn send_rendezvous(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
     let t0 = Instant::now();
     let msg_seq = path.res_send_seq.load(Ordering::Relaxed);
     for attempt in 0..max_attempts(path) {
-        let gen = path.health_generation();
-        let live = path.live_stream_indices();
-        if live.is_empty() {
-            path.wait_for_any_live()?;
-            continue;
-        }
-        let c = match ctrl_stream(path) {
-            Ok(c) => c,
-            Err(_) => continue, // raced a death; re-evaluate liveness
+        let (c, gen) = match write_attempt(path, msg_seq, attempt, buf) {
+            Ok(PostOutcome::Written { ctrl, gen }) => (ctrl, gen),
+            Ok(PostOutcome::Again) => continue,
+            Err(e) => return Err(fatal(path, e)),
         };
-        let want = path.tuning().active_streams().clamp(1, path.nstreams());
-        let k = want.min(live.len());
-        let mut used: Vec<u16> = Vec::with_capacity(k);
-        used.push(c as u16);
-        for &i in &live {
-            if i != c && used.len() < k {
-                used.push(i as u16);
-            }
-        }
-        let dead: Vec<u16> =
-            (0..path.nstreams()).filter(|&i| !path.stream_alive(i)).map(|i| i as u16).collect();
-        let ctrl = encode_ctrl(buf.len() as u64, &used, &dead);
-        if write_frame(path, c, KIND_CTRL, msg_seq, attempt, SplitBuf::plain(&ctrl), true).is_err()
-        {
-            path.mark_stream_dead(c, gen);
-            continue;
-        }
-        // Frames carry a u32 length validated against MAX_FRAME_PAYLOAD on
-        // the receiving side; cap the per-frame chunk accordingly.
-        let chunk = path.tuning().chunk().min(MAX_FRAME_PAYLOAD);
-        let segs = stripe::segments(buf.len(), used.len());
-        let mut results: Vec<Result<()>> = Vec::new();
-        results.resize_with(used.len(), || Ok(()));
-        {
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(used.len());
-            for ((&si, seg), out) in used.iter().zip(segs).zip(results.iter_mut()) {
-                if seg.is_empty() {
-                    continue;
-                }
-                let (h, t) = buf.slice(seg);
-                let data = SplitBuf { head: h, tail: t };
-                jobs.push(Box::new(move || {
-                    *out = send_segment(path, si as usize, msg_seq, attempt, data, chunk);
-                }));
-            }
-            crate::util::pool::scope(jobs);
-        }
-        let mut failed = false;
-        for (&si, r) in used.iter().zip(&results) {
-            if let Err(e) = r {
-                match e {
-                    MpwError::Io(_) | MpwError::StreamDead { .. } => {
-                        path.mark_stream_dead(si as usize, gen);
-                        failed = true;
-                    }
-                    // a protocol error cannot be healed by retrying
-                    _ => {
-                        let e = MpwError::Protocol(format!("send worker failed: {e}"));
-                        return Err(fatal(path, e));
-                    }
-                }
-            }
-        }
-        if failed {
-            continue;
-        }
         // The ACK wait is the one place the sender can block on a stream
         // the peer may no longer be watching (the divergence window); a
         // configured progress timeout force-closes the control stream so
@@ -908,6 +1034,243 @@ pub(crate) fn send(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
     ))
 }
 
+// ---------------------------------------------------------------------------
+// Windowed (pipelined) sender.
+// ---------------------------------------------------------------------------
+
+/// One posted-but-unacknowledged message in the send window.
+struct Posted {
+    /// Its sequence number.
+    seq: u64,
+    /// Attempt number of the last full post (retries bump it).
+    attempt: u32,
+    /// Owned retransmit copy — selective retry needs the bytes after
+    /// the caller's `send` has long returned.
+    data: Vec<u8>,
+    /// When the message was first posted (goodput accounting).
+    t0: Instant,
+}
+
+/// Mutable state of the windowed sender, guarded by [`SendWindow`]'s
+/// mutex (which is uncontended in practice — the path's send gate
+/// already serializes senders; the mutex exists for interior
+/// mutability and the occasional `flush` from another thread).
+#[derive(Default)]
+struct SendState {
+    /// In-flight messages, oldest first.
+    outstanding: VecDeque<Posted>,
+    /// A terminal pipeline failure, replayed (as a Protocol error) on
+    /// every later send/flush: the failed message was reported complete
+    /// to its caller, so the path cannot silently resume.
+    poisoned: Option<String>,
+}
+
+/// Sliding-window state of a path's resilient sender (a Path field;
+/// empty and inert while `window == 1`).
+#[derive(Default)]
+pub(crate) struct SendWindow {
+    st: Mutex<SendState>,
+}
+
+impl SendWindow {
+    /// Number of posted-but-unacknowledged messages.
+    pub(crate) fn in_flight(&self) -> usize {
+        self.st.lock().unwrap().outstanding.len()
+    }
+}
+
+fn poisoned_err(msg: &str) -> MpwError {
+    MpwError::Protocol(format!("windowed send pipeline failed: {msg}"))
+}
+
+/// Record a terminal pipeline failure: drop the in-flight set (their
+/// delivery can no longer be confirmed) and remember the error for
+/// every later operation on this path.
+fn poison(st: &mut SendState, e: &MpwError) {
+    st.outstanding.clear();
+    if st.poisoned.is_none() {
+        st.poisoned = Some(e.to_string());
+    }
+}
+
+/// Post `msg_seq` until one attempt gets CTRL + all segments onto the
+/// wire, starting from attempt `start`; returns the attempt number that
+/// succeeded. Shares the rendezvous sender's per-message attempt
+/// budget.
+fn post_attempt(path: &Path, msg_seq: u64, start: u32, data: &[u8]) -> Result<u32> {
+    let mut attempt = start;
+    while attempt < max_attempts(path) {
+        match write_attempt(path, msg_seq, attempt, SplitBuf::plain(data))? {
+            PostOutcome::Written { .. } => return Ok(attempt),
+            PostOutcome::Again => attempt += 1,
+        }
+    }
+    Err(MpwError::Protocol(format!("resilient send of message {msg_seq} did not converge")))
+}
+
+/// Repost every in-flight message, oldest first, after losing the ACK
+/// channel: we cannot know which of them the receiver delivered, and
+/// duplicates are re-acknowledged by sequence number on the other end.
+fn repost_all(path: &Path, st: &mut SendState) -> Result<()> {
+    for slot in st.outstanding.iter_mut() {
+        let a = post_attempt(path, slot.seq, slot.attempt + 1, &slot.data)?;
+        slot.attempt = a;
+    }
+    Ok(())
+}
+
+/// Block until the in-flight set shrinks below its entry size (at least
+/// one message reaped) or the pipeline fails. Selective retry: a NACK
+/// reposts only the named message over the survivors; losing the ACK
+/// channel itself reposts everything. A configured
+/// [`ack_timeout`](super::config::ResilienceConfig::ack_timeout) is
+/// applied as an *oldest-unacked progress* deadline — re-armed only
+/// when the head of the window (or the control stream under it)
+/// changes, so acks for younger messages never extend it.
+fn reap_some(path: &Path, st: &mut SendState) -> Result<()> {
+    let want_below = st.outstanding.len();
+    // Convergence budget: every round either reaps, reposts after a
+    // marked death, or absorbs a stale/duplicate ack — and there are at
+    // most MAX_WINDOW in-flight messages and max_attempts stream
+    // failures to burn through.
+    let budget = max_attempts(path) + 2 * MAX_WINDOW as u32;
+    let mut armed: Option<(u64, u64, usize)> = None; // (token, oldest seq, ctrl)
+    let mut round = 0u32;
+    let result = loop {
+        if st.outstanding.len() < want_below {
+            break Ok(());
+        }
+        if round >= budget {
+            break Err(MpwError::Protocol("windowed resilient send did not converge".into()));
+        }
+        round += 1;
+        let gen = path.health_generation();
+        if path.live_stream_indices().is_empty() {
+            if let Some((t, _, _)) = armed.take() {
+                path.ack_watchdog.disarm(t);
+            }
+            match path.wait_for_any_live().and_then(|()| repost_all(path, st)) {
+                Ok(()) => continue,
+                Err(e) => break Err(e),
+            }
+        }
+        let c = match ctrl_stream(path) {
+            Ok(c) => c,
+            Err(_) => continue, // raced a death; re-evaluate liveness
+        };
+        if let Some(t) = path.ack_timeout() {
+            let oldest = st.outstanding.front().map(|p| p.seq).unwrap_or(0);
+            let rearm = armed.map(|(_, s, cc)| s != oldest || cc != c).unwrap_or(true);
+            if rearm {
+                if let Some((tok, _, _)) = armed.take() {
+                    path.ack_watchdog.disarm(tok);
+                }
+                let kill = path.streams[c].meta.lock().unwrap().kill.clone();
+                armed = Some((path.ack_watchdog.arm(kill, t), oldest, c));
+            }
+        }
+        let (hdr, payload) = match read_ack_frame(path, c) {
+            Ok(f) => f,
+            Err(MpwError::Io(_)) | Err(MpwError::StreamDead { .. }) => {
+                if let Some((t, _, _)) = armed.take() {
+                    path.ack_watchdog.disarm(t);
+                }
+                path.mark_stream_dead(c, gen);
+                match repost_all(path, st) {
+                    Ok(()) => continue,
+                    Err(e) => break Err(e),
+                }
+            }
+            Err(e) => break Err(e),
+        };
+        if payload.len() != 3 {
+            break Err(MpwError::Protocol("malformed ack frame".into()));
+        }
+        let pos = match st.outstanding.iter().position(|p| p.seq == hdr.msg_seq) {
+            Some(p) => p,
+            None => continue, // duplicate ack for an already-reaped message
+        };
+        if payload[0] == ACK_OK {
+            // any attempt counts: delivery is per message, not per attempt
+            let p = st.outstanding.remove(pos).expect("position came from this deque");
+            path.observe_send(p.data.len(), p.t0.elapsed());
+            continue;
+        }
+        if hdr.attempt < st.outstanding[pos].attempt {
+            continue; // NACK for an attempt we already abandoned
+        }
+        let detail = u16::from_be_bytes([payload[1], payload[2]]);
+        if detail != NO_DETAIL && (detail as usize) < path.nstreams() {
+            path.mark_stream_dead(detail as usize, gen);
+        }
+        // Selective retry: only the NACKed message goes out again.
+        let next = st.outstanding[pos].attempt + 1;
+        match post_attempt(path, st.outstanding[pos].seq, next, &st.outstanding[pos].data) {
+            Ok(a) => st.outstanding[pos].attempt = a,
+            Err(e) => break Err(e),
+        }
+    };
+    if let Some((t, _, _)) = armed {
+        path.ack_watchdog.disarm(t);
+    }
+    result
+}
+
+/// Pipelined resilient send: reap until the window has a free slot,
+/// post the message (keeping an owned copy for retransmission), and
+/// return without waiting for its ACK.
+fn send_windowed(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
+    let t0 = Instant::now();
+    let limit = path.send_window_limit();
+    let mut st = path.send_window.st.lock().unwrap();
+    if let Some(msg) = &st.poisoned {
+        return Err(poisoned_err(msg));
+    }
+    while st.outstanding.len() >= limit {
+        if let Err(e) = reap_some(path, &mut st) {
+            poison(&mut st, &e);
+            return Err(fatal(path, e));
+        }
+    }
+    let msg_seq = path.res_send_seq.load(Ordering::Relaxed);
+    let mut data = Vec::with_capacity(buf.len());
+    data.extend_from_slice(buf.head);
+    data.extend_from_slice(buf.tail);
+    match post_attempt(path, msg_seq, 0, &data) {
+        Ok(a) => {
+            path.res_send_seq.fetch_add(1, Ordering::Relaxed);
+            st.outstanding.push_back(Posted { seq: msg_seq, attempt: a, data, t0 });
+            Ok(buf.len())
+        }
+        Err(e) => {
+            poison(&mut st, &e);
+            Err(fatal(path, e))
+        }
+    }
+}
+
+/// Drain the send window: block until every posted message is
+/// acknowledged or the pipeline fails. No-op when nothing is in flight
+/// (including every `window == 1` path). Called from `Path::flush`,
+/// `Path::barrier`, the mux pump's idle drain, and the rendezvous
+/// fallback after a runtime window narrowing.
+pub(crate) fn drain_window(path: &Path) -> Result<()> {
+    let mut st = path.send_window.st.lock().unwrap();
+    if st.outstanding.is_empty() && st.poisoned.is_none() {
+        return Ok(());
+    }
+    if let Some(msg) = &st.poisoned {
+        return Err(poisoned_err(msg));
+    }
+    while !st.outstanding.is_empty() {
+        if let Err(e) = reap_some(path, &mut st) {
+            poison(&mut st, &e);
+            return Err(fatal(path, e));
+        }
+    }
+    Ok(())
+}
+
 /// Destination of a resilient receive.
 pub(crate) enum RecvTarget<'a> {
     /// Fixed-size receive: the message length must match exactly.
@@ -917,12 +1280,142 @@ pub(crate) enum RecvTarget<'a> {
     Dynamic(&'a mut Vec<u8>),
 }
 
+/// Receiver-side stash for messages a pipelining sender completed out
+/// of turn: a selective retry can finish `seq + 1` before `seq`
+/// arrives intact. Keyed by sequence number; bounded by [`MAX_WINDOW`]
+/// entries because the receiver rejects CTRLs beyond `expected +
+/// MAX_WINDOW` (no sender can legally have more in flight). A Path
+/// field; empty and inert against rendezvous peers.
+#[derive(Default)]
+pub(crate) struct ReorderBuf {
+    q: Mutex<HashMap<u64, Vec<u8>>>,
+}
+
+impl ReorderBuf {
+    /// Whether `seq` is already complete in the stash (its sender must
+    /// be re-acknowledged, not re-served).
+    pub(crate) fn contains(&self, seq: u64) -> bool {
+        self.q.lock().unwrap().contains_key(&seq)
+    }
+
+    fn insert(&self, seq: u64, data: Vec<u8>) {
+        self.q.lock().unwrap().insert(seq, data);
+    }
+
+    fn remove(&self, seq: u64) -> Option<Vec<u8>> {
+        self.q.lock().unwrap().remove(&seq)
+    }
+}
+
+/// Copy a stashed (already fully received) message into the caller's
+/// target, enforcing the same length contract as a wire delivery.
+fn deliver_stashed(target: &mut RecvTarget<'_>, data: Vec<u8>) -> Result<usize> {
+    match target {
+        RecvTarget::Fixed(b) => {
+            if data.len() != b.len() {
+                return Err(MpwError::Protocol(format!(
+                    "message length {} does not match posted recv of {} bytes",
+                    data.len(),
+                    b.len()
+                )));
+            }
+            b.copy_from_slice(&data);
+            Ok(data.len())
+        }
+        RecvTarget::Dynamic(v) => {
+            let t = data.len();
+            if v.len() < t {
+                v.resize(t, 0);
+            }
+            v[..t].copy_from_slice(&data);
+            Ok(t)
+        }
+    }
+}
+
+/// Post-delivery bookkeeping shared by wire and stash deliveries:
+/// advance the expected sequence, then purge parked DATA duplicates of
+/// the delivered prefix (reposts that raced the delivery would
+/// otherwise sit in the inboxes forever).
+fn finish_delivery(path: &Path, delivered: u64) {
+    path.res_recv_seq.fetch_add(1, Ordering::Relaxed);
+    for s in &path.streams {
+        s.inbox.purge_data_through(delivered);
+    }
+}
+
+/// Fan one attempt's striped segment receive out over the worker pool.
+/// Returns `Ok(None)` when the message is complete in `buf`,
+/// `Ok(Some(s))` when stream `s` died mid-receive (the caller NACKs
+/// naming it), and `Err` only for protocol failures no retry can heal
+/// (the caller wraps those in [`fatal`]).
+fn recv_attempt_body(
+    path: &Path,
+    ctrl: &CtrlMsg,
+    msg_seq: u64,
+    attempt: u32,
+    gen: u64,
+    buf: &mut [u8],
+) -> Result<Option<usize>> {
+    // Split the buffer into disjoint per-stream segments (same
+    // arithmetic as the sender's stripe::segments call), mapped to
+    // the ctrl frame's explicit stream indices.
+    let parts: Vec<(usize, &mut [u8])> = stripe::split_mut(buf, ctrl.streams.len())
+        .into_iter()
+        .enumerate()
+        .filter(|(_, head)| !head.is_empty())
+        .map(|(i, head)| (ctrl.streams[i] as usize, head))
+        .collect();
+    let part_streams: Vec<usize> = parts.iter().map(|(s, _)| *s).collect();
+    let mut results: Vec<Result<()>> = Vec::new();
+    results.resize_with(parts.len(), || Ok(()));
+    {
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts.len());
+        for ((si, part), out) in parts.into_iter().zip(results.iter_mut()) {
+            jobs.push(Box::new(move || {
+                *out = recv_segment(path, si, msg_seq, attempt, part);
+            }));
+        }
+        crate::util::pool::scope(jobs);
+    }
+    let mut first_dead: Option<usize> = None;
+    for (&si, r) in part_streams.iter().zip(&results) {
+        if let Err(e) = r {
+            match e {
+                MpwError::Io(_) | MpwError::StreamDead { .. } => {
+                    path.mark_stream_dead(si, gen);
+                    first_dead.get_or_insert(si);
+                }
+                _ => return Err(MpwError::Protocol(format!("recv worker failed: {e}"))),
+            }
+        }
+    }
+    Ok(first_dead)
+}
+
 /// Resilient `MPW_Recv`: follow the sender's CTRL stream list, isolate
 /// failed streams, NACK aborted attempts and deliver exactly once.
 /// Caller holds the path's recv gate.
+///
+/// Sequence discipline against a pipelining sender: the expected
+/// message is received straight into the caller's buffer; a message up
+/// to [`MAX_WINDOW`] ahead of it (the peer's window, or a selective
+/// retry that overtook the head) is received into a side buffer,
+/// acknowledged, and stashed until its turn; anything beyond that
+/// bound is a protocol violation.
 pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
     let msg_seq = path.res_recv_seq.load(Ordering::Relaxed);
-    for _round in 0..max_attempts(path) {
+    // An earlier recv may have completed this message out of turn:
+    // deliver from the stash without touching the wire.
+    if let Some(data) = path.recv_reorder.remove(msg_seq) {
+        let total = deliver_stashed(&mut target, data).map_err(|e| fatal(path, e))?;
+        finish_delivery(path, msg_seq);
+        return Ok(total);
+    }
+    // Beyond the rendezvous budget, each round may also complete one of
+    // the peer's up-to-MAX_WINDOW pipelined future messages (stashed,
+    // not delivered) or absorb its duplicate.
+    for _round in 0..max_attempts(path) + 2 * MAX_WINDOW as u32 {
         let gen = path.health_generation();
         if path.live_stream_indices().is_empty() {
             path.wait_for_any_live()?;
@@ -941,17 +1434,18 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
             Err(e) => return Err(fatal(path, e)),
         };
         let ctrl = parse_ctrl(&payload).map_err(|e| fatal(path, e))?;
-        if hdr.msg_seq < msg_seq {
-            // duplicate of an already-delivered message (our ack was lost):
-            // re-acknowledge, then drain the retransmission so the sender
-            // is not left parked on backpressure mid-resend
+        if hdr.msg_seq < msg_seq || path.recv_reorder.contains(hdr.msg_seq) {
+            // duplicate of an already-delivered (or already-stashed)
+            // message — our ack was lost: re-acknowledge, then drain the
+            // retransmission so the sender is not left parked on
+            // backpressure mid-resend
             let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_OK, NO_DETAIL);
             drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
             continue;
         }
-        if hdr.msg_seq > msg_seq {
+        if hdr.msg_seq > msg_seq + MAX_WINDOW as u64 {
             let e = MpwError::Protocol(format!(
-                "ctrl for future message {} while expecting {msg_seq}",
+                "ctrl for message {} beyond any valid send window while expecting {msg_seq}",
                 hdr.msg_seq
             ));
             return Err(fatal(path, e));
@@ -995,87 +1489,85 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
         // streams, and its retry barrier cannot complete (nor the NACK be
         // read) until someone consumes those bytes.
         if let Some(&d) = ctrl.streams.iter().find(|&&i| !path.stream_alive(i as usize)) {
-            let _ = write_ack(path, c, msg_seq, hdr.attempt, ACK_RETRY, d);
-            drain_attempt(path, &ctrl, msg_seq, hdr.attempt);
+            let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_RETRY, d);
+            drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
             continue;
         }
-        let buf: &mut [u8] = match &mut target {
-            RecvTarget::Fixed(b) => {
-                if ctrl.total != b.len() as u64 {
-                    let e = MpwError::Protocol(format!(
-                        "message length {} does not match posted recv of {} bytes",
-                        ctrl.total,
-                        b.len()
-                    ));
-                    return Err(fatal(path, e));
-                }
-                &mut b[..]
-            }
-            RecvTarget::Dynamic(v) => {
-                if ctrl.total > super::dynamic::MAX_DYNAMIC {
-                    let e = MpwError::Protocol(format!(
-                        "dynamic message length {} too large",
-                        ctrl.total
-                    ));
-                    return Err(fatal(path, e));
-                }
-                let t = ctrl.total as usize;
-                if v.len() < t {
-                    v.resize(t, 0);
-                }
-                &mut v[..t]
-            }
-        };
-        let total = buf.len();
-        let attempt = hdr.attempt;
-        // Split the buffer into disjoint per-stream segments (same
-        // arithmetic as the sender's stripe::segments call), mapped to
-        // the ctrl frame's explicit stream indices.
-        let parts: Vec<(usize, &mut [u8])> = stripe::split_mut(buf, ctrl.streams.len())
-            .into_iter()
-            .enumerate()
-            .filter(|(_, head)| !head.is_empty())
-            .map(|(i, head)| (ctrl.streams[i] as usize, head))
-            .collect();
-        let part_streams: Vec<usize> = parts.iter().map(|(s, _)| *s).collect();
-        let mut results: Vec<Result<()>> = Vec::new();
-        results.resize_with(parts.len(), || Ok(()));
-        {
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(parts.len());
-            for ((si, part), out) in parts.into_iter().zip(results.iter_mut()) {
-                jobs.push(Box::new(move || {
-                    *out = recv_segment(path, si, msg_seq, attempt, part);
-                }));
-            }
-            crate::util::pool::scope(jobs);
-        }
-        let mut first_dead: Option<usize> = None;
-        for (&si, r) in part_streams.iter().zip(&results) {
-            if let Err(e) = r {
-                match e {
-                    MpwError::Io(_) | MpwError::StreamDead { .. } => {
-                        path.mark_stream_dead(si, gen);
-                        first_dead.get_or_insert(si);
-                    }
-                    _ => {
-                        let e = MpwError::Protocol(format!("recv worker failed: {e}"));
+        if hdr.msg_seq == msg_seq {
+            // The expected message: receive straight into the caller's
+            // buffer — no extra copy on the hot path.
+            let buf: &mut [u8] = match &mut target {
+                RecvTarget::Fixed(b) => {
+                    if ctrl.total != b.len() as u64 {
+                        let e = MpwError::Protocol(format!(
+                            "message length {} does not match posted recv of {} bytes",
+                            ctrl.total,
+                            b.len()
+                        ));
                         return Err(fatal(path, e));
                     }
+                    &mut b[..]
+                }
+                RecvTarget::Dynamic(v) => {
+                    if ctrl.total > super::dynamic::MAX_DYNAMIC {
+                        let e = MpwError::Protocol(format!(
+                            "dynamic message length {} too large",
+                            ctrl.total
+                        ));
+                        return Err(fatal(path, e));
+                    }
+                    let t = ctrl.total as usize;
+                    if v.len() < t {
+                        v.resize(t, 0);
+                    }
+                    &mut v[..t]
+                }
+            };
+            let total = buf.len();
+            match recv_attempt_body(path, &ctrl, msg_seq, hdr.attempt, gen, buf) {
+                Err(e) => return Err(fatal(path, e)),
+                Ok(Some(d)) => {
+                    let _ = write_ack(path, c, msg_seq, hdr.attempt, ACK_RETRY, d as u16);
+                    continue;
+                }
+                Ok(None) => {
+                    if write_ack(path, c, msg_seq, hdr.attempt, ACK_OK, NO_DETAIL).is_err() {
+                        // The message is delivered; a failed ack only means
+                        // the sender will retransmit, and the duplicate is
+                        // absorbed by the stale-ctrl branch of the next recv.
+                        path.mark_stream_dead(c, gen);
+                    }
+                    finish_delivery(path, msg_seq);
+                    return Ok(total);
                 }
             }
         }
-        if let Some(d) = first_dead {
-            let _ = write_ack(path, c, msg_seq, attempt, ACK_RETRY, d as u16);
-            continue;
+        // A future message within the window: the sender pipelined ahead,
+        // or a selective retry overtook the expected head. Receive it
+        // into a side buffer (its length contract is its own, not the
+        // posted target's), acknowledge, stash for its turn.
+        if ctrl.total > super::dynamic::MAX_DYNAMIC {
+            let e = MpwError::Protocol(format!(
+                "pipelined message length {} too large",
+                ctrl.total
+            ));
+            return Err(fatal(path, e));
         }
-        if write_ack(path, c, msg_seq, attempt, ACK_OK, NO_DETAIL).is_err() {
-            // The message is delivered; a failed ack only means the sender
-            // will retransmit, and the duplicate is absorbed by the
-            // stale-ctrl branch of the next recv.
-            path.mark_stream_dead(c, gen);
+        let mut side = vec![0u8; ctrl.total as usize];
+        match recv_attempt_body(path, &ctrl, hdr.msg_seq, hdr.attempt, gen, &mut side) {
+            Err(e) => return Err(fatal(path, e)),
+            Ok(Some(d)) => {
+                let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_RETRY, d as u16);
+                continue;
+            }
+            Ok(None) => {
+                if write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_OK, NO_DETAIL).is_err() {
+                    path.mark_stream_dead(c, gen);
+                }
+                path.recv_reorder.insert(hdr.msg_seq, side);
+                continue;
+            }
         }
-        path.res_recv_seq.fetch_add(1, Ordering::Relaxed);
-        return Ok(total);
     }
     Err(fatal(
         path,
@@ -1413,6 +1905,30 @@ mod tests {
         assert_eq!(b.take(KIND_ACK).unwrap().0.msg_seq, 1);
         assert_eq!(b.take(KIND_DATA).unwrap().1, vec![8]);
         assert_eq!(b.take(KIND_DATA), None);
+    }
+
+    #[test]
+    fn framebox_take_where_skips_foreign_frames() {
+        let b = FrameBox::default();
+        b.push(FrameHdr { kind: KIND_DATA, msg_seq: 9, attempt: 0, len: 1 }, vec![9]);
+        b.push(FrameHdr { kind: KIND_DATA, msg_seq: 4, attempt: 0, len: 1 }, vec![4]);
+        // A consumer for message 4 must leave message 9's frame queued
+        // (and in place) rather than cycling it.
+        let (h, p) = b.take_where(KIND_DATA, |h| h.msg_seq <= 4).unwrap();
+        assert_eq!((h.msg_seq, p), (4, vec![4]));
+        assert_eq!(b.take_where(KIND_DATA, |h| h.msg_seq <= 4), None);
+        assert_eq!(b.take(KIND_DATA).unwrap().0.msg_seq, 9);
+    }
+
+    #[test]
+    fn framebox_purges_delivered_data_only() {
+        let b = FrameBox::default();
+        b.push(FrameHdr { kind: KIND_DATA, msg_seq: 1, attempt: 2, len: 0 }, vec![]);
+        b.push(FrameHdr { kind: KIND_ACK, msg_seq: 1, attempt: 0, len: 0 }, vec![]);
+        b.push(FrameHdr { kind: KIND_DATA, msg_seq: 3, attempt: 0, len: 0 }, vec![]);
+        b.purge_data_through(2);
+        assert_eq!(b.take(KIND_DATA).unwrap().0.msg_seq, 3, "newer data survives");
+        assert!(b.take(KIND_ACK).is_some(), "non-data kinds survive");
     }
 
     #[test]

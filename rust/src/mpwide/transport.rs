@@ -241,6 +241,18 @@ impl StreamPair {
             Some(fd) => set_socket_window(fd, bytes),
         }
     }
+
+    /// Apply (or clear) an `SO_SNDTIMEO`-style write deadline on the
+    /// underlying socket — see
+    /// [`ResilienceConfig::write_timeout`](super::config::ResilienceConfig::write_timeout).
+    /// No-op on non-socket transports (the in-memory transport's writes
+    /// never block on a remote peer).
+    pub fn set_send_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        match self.fd {
+            None => Ok(()),
+            Some(fd) => set_socket_send_timeout(fd, timeout),
+        }
+    }
 }
 
 /// Raw `setsockopt`/`getsockopt` bindings (the `libc` crate is
@@ -270,6 +282,7 @@ mod sockopt {
         pub const SOL_SOCKET: c_int = 1;
         pub const SO_SNDBUF: c_int = 7;
         pub const SO_RCVBUF: c_int = 8;
+        pub const SO_SNDTIMEO: c_int = 21;
     }
 
     #[cfg(not(all(
@@ -286,9 +299,25 @@ mod sockopt {
         pub const SOL_SOCKET: c_int = 0xffff;
         pub const SO_SNDBUF: c_int = 0x1001;
         pub const SO_RCVBUF: c_int = 0x1002;
+        pub const SO_SNDTIMEO: c_int = 0x1005;
     }
 
-    pub use values::{SOL_SOCKET, SO_RCVBUF, SO_SNDBUF};
+    pub use values::{SOL_SOCKET, SO_RCVBUF, SO_SNDBUF, SO_SNDTIMEO};
+
+    /// `struct timeval` as `setsockopt(SO_SNDTIMEO)` expects it.
+    /// `tv_usec` is `suseconds_t`: `int` on macOS, `long` elsewhere.
+    #[cfg(target_os = "macos")]
+    pub type Usec = std::ffi::c_int;
+    /// See above.
+    #[cfg(not(target_os = "macos"))]
+    pub type Usec = std::ffi::c_long;
+
+    /// See [`Usec`].
+    #[repr(C)]
+    pub struct Timeval {
+        pub tv_sec: std::ffi::c_long,
+        pub tv_usec: Usec,
+    }
 
     /// `SHUT_RDWR` has value 2 on every supported platform.
     pub const SHUT_RDWR: c_int = 2;
@@ -354,6 +383,48 @@ pub fn set_socket_window(fd: i32, bytes: usize) -> Result<Option<usize>> {
 #[cfg(not(unix))]
 pub fn set_socket_window(_fd: i32, _bytes: usize) -> Result<Option<usize>> {
     Ok(None)
+}
+
+/// Set (or clear, with `None`) `SO_SNDTIMEO` on a raw socket fd: a write
+/// that cannot make progress within the deadline fails with
+/// `WouldBlock`/`TimedOut` instead of riding TCP's own multi-minute
+/// timeout. This is the resilience layer's write-side progress watchdog
+/// (the read side is covered by the ACK watchdog).
+#[cfg(unix)]
+pub fn set_socket_send_timeout(fd: i32, timeout: Option<Duration>) -> Result<()> {
+    use std::ffi::c_void;
+    // A zeroed timeval means "no timeout" to the kernel, which is
+    // exactly the `None` semantics; config validation rejects an
+    // explicit zero Duration for the same reason.
+    let tv = match timeout {
+        None => sockopt::Timeval { tv_sec: 0, tv_usec: 0 },
+        Some(t) => sockopt::Timeval {
+            tv_sec: t.as_secs() as std::ffi::c_long,
+            tv_usec: t.subsec_micros() as sockopt::Usec,
+        },
+    };
+    // SAFETY: fd is a valid open socket owned by the calling StreamPair /
+    // Path; we pass a correctly-sized struct timeval.
+    unsafe {
+        let rc = sockopt::setsockopt(
+            fd,
+            sockopt::SOL_SOCKET,
+            sockopt::SO_SNDTIMEO,
+            &tv as *const sockopt::Timeval as *const c_void,
+            std::mem::size_of::<sockopt::Timeval>() as sockopt::SockLen,
+        );
+        if rc != 0 {
+            return Err(MpwError::Io(std::io::Error::last_os_error()));
+        }
+    }
+    Ok(())
+}
+
+/// Non-unix fallback: write deadlines are unavailable; silently keep the
+/// OS behaviour, exactly like the in-memory transports do.
+#[cfg(not(unix))]
+pub fn set_socket_send_timeout(_fd: i32, _timeout: Option<Duration>) -> Result<()> {
+    Ok(())
 }
 
 /// Force both directions of a raw socket closed (`shutdown(2)`), waking
@@ -643,6 +714,198 @@ pub fn mem_path_pairs_killable(
     let (left, right) = mem_path_pairs(n);
     let kills = left.iter().map(|p| p.kill_switch()).collect();
     (left, right, kills)
+}
+
+// ---------------------------------------------------------------------------
+// Latency-injecting in-memory transport (benchmarks: high-BDP links).
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct DelayChanInner {
+    /// Written chunks, each visible to the reader from its `ready_at`
+    /// instant — a one-way propagation delay with unconstrained
+    /// bandwidth (writes never block), i.e. an idealized long fat pipe.
+    q: std::collections::VecDeque<(Instant, std::collections::VecDeque<u8>)>,
+    closed: bool,
+    killed: bool,
+}
+
+struct DelayChan {
+    inner: Mutex<DelayChanInner>,
+    cv: Condvar,
+    delay: Duration,
+}
+
+impl DelayChan {
+    fn new(delay: Duration) -> DelayChan {
+        DelayChan { inner: Mutex::new(DelayChanInner::default()), cv: Condvar::new(), delay }
+    }
+
+    /// Poison the channel: pending and future reads/writes fail.
+    fn kill(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.killed = true;
+        g.closed = true;
+        self.cv.notify_all();
+    }
+
+    fn push(&self, bufs: &[&[u8]]) -> std::io::Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        if g.killed {
+            return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "channel killed"));
+        }
+        let ready = Instant::now() + self.delay;
+        let mut chunk = std::collections::VecDeque::new();
+        for b in bufs {
+            chunk.extend(b.iter());
+        }
+        g.q.push_back((ready, chunk));
+        self.cv.notify_all();
+        Ok(())
+    }
+}
+
+/// Writer half of a latency-injecting channel; closes on drop.
+struct DelayWriter(Arc<DelayChan>);
+/// Reader half of a latency-injecting channel.
+struct DelayReader(Arc<DelayChan>);
+
+impl Drop for DelayWriter {
+    fn drop(&mut self) {
+        self.0.inner.lock().unwrap().closed = true;
+        self.0.cv.notify_all();
+    }
+}
+
+impl Read for DelayReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let ch = &self.0;
+        let mut g = ch.inner.lock().unwrap();
+        loop {
+            if g.killed && g.q.is_empty() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionAborted,
+                    "channel killed",
+                ));
+            }
+            if let Some(&(ready, _)) = g.q.front() {
+                let now = Instant::now();
+                if ready <= now {
+                    let front = &mut g.q.front_mut().unwrap().1;
+                    let n = buf.len().min(front.len());
+                    for b in buf.iter_mut().take(n) {
+                        *b = front.pop_front().unwrap();
+                    }
+                    if front.is_empty() {
+                        g.q.pop_front();
+                    }
+                    return Ok(n);
+                }
+                // the head chunk is still "in flight": sleep out the
+                // remaining propagation delay (or an earlier wakeup)
+                let (g2, _) = ch.cv.wait_timeout(g, ready - now).unwrap();
+                g = g2;
+                continue;
+            }
+            if g.closed {
+                return Ok(0);
+            }
+            g = ch.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct DelayTx(DelayWriter);
+struct DelayRx(DelayReader);
+
+impl HalfDuplex for DelayTx {
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        self.0 .0.push(&[buf])
+    }
+    fn write_vectored_all(&mut self, bufs: &[&[u8]]) -> std::io::Result<()> {
+        // one lock + one delayed chunk for the whole gather
+        self.0 .0.push(bufs)
+    }
+    fn read_exact(&mut self, _buf: &mut [u8]) -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "write-only half"))
+    }
+    fn read_some(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "write-only half"))
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl HalfDuplex for DelayRx {
+    fn write_all(&mut self, _buf: &[u8]) -> std::io::Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Unsupported, "read-only half"))
+    }
+    fn read_exact(&mut self, buf: &mut [u8]) -> std::io::Result<()> {
+        let mut got = 0usize;
+        while got < buf.len() {
+            let n = Read::read(&mut self.0, &mut buf[got..])?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "channel closed",
+                ));
+            }
+            got += n;
+        }
+        Ok(())
+    }
+    fn read_some(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        Read::read(&mut self.0, buf)
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Like [`mem_pair`] but every write becomes visible to its reader only
+/// `delay` after it happened — a one-way propagation delay, so one
+/// request/response rendezvous costs `2 * delay` (one RTT). Benchmarks
+/// use it to model high-bandwidth-delay-product links without sockets
+/// (bandwidth is unconstrained; only latency is simulated).
+pub fn mem_pair_latency(delay: Duration) -> (StreamPair, StreamPair) {
+    let ab = Arc::new(DelayChan::new(delay)); // a -> b
+    let ba = Arc::new(DelayChan::new(delay)); // b -> a
+    let kill = {
+        let (ab, ba) = (ab.clone(), ba.clone());
+        KillSwitch::new(move || {
+            ab.kill();
+            ba.kill();
+        })
+    };
+    let a = StreamPair {
+        tx: Box::new(DelayTx(DelayWriter(ab.clone()))),
+        rx: Box::new(DelayRx(DelayReader(ba.clone()))),
+        peer: "mem+delay:b".into(),
+        fd: None,
+        kill: kill.clone(),
+    };
+    let b = StreamPair {
+        tx: Box::new(DelayTx(DelayWriter(ba))),
+        rx: Box::new(DelayRx(DelayReader(ab))),
+        peer: "mem+delay:a".into(),
+        fd: None,
+        kill,
+    };
+    (a, b)
+}
+
+/// Create `n` connected latency-injecting in-memory stream pairs (one
+/// path's worth), each with one-way delay `delay`.
+pub fn mem_path_pairs_latency(n: usize, delay: Duration) -> (Vec<StreamPair>, Vec<StreamPair>) {
+    let mut left = Vec::with_capacity(n);
+    let mut right = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (a, b) = mem_pair_latency(delay);
+        left.push(a);
+        right.push(b);
+    }
+    (left, right)
 }
 
 // ---------------------------------------------------------------------------

@@ -182,6 +182,29 @@ pub mod profiles {
         }
     }
 
+    /// Synthetic high-bandwidth-delay-product reference: a clean 10
+    /// Gbit/s route at transcontinental RTT (120 ms → BDP = 150 MB).
+    /// This is the regime where one-message-at-a-time rendezvous
+    /// resilience collapses to `chunk / RTT` and in-flight windowing
+    /// ([`ResilienceConfig::window`]) pays off; the
+    /// `resilience_window` bench pins its link to this profile.
+    ///
+    /// [`ResilienceConfig::window`]:
+    ///     crate::mpwide::config::ResilienceConfig#structfield.window
+    pub fn high_bdp() -> LinkProfile {
+        LinkProfile {
+            name: "high-BDP-reference",
+            rtt: 0.12,
+            capacity: 1.25e9,
+            loss_ab: 1.0e-7,
+            loss_ba: 1.0e-7,
+            bg_ab: 0.05,
+            bg_ba: 0.05,
+            jitter: 0.02,
+            duplex_penalty: 0.05,
+        }
+    }
+
     /// Same-machine / LAN reference (the paper's §1.3.6 constraint: MPWide
     /// has little to gain locally).
     pub fn local_lan() -> LinkProfile {
@@ -208,6 +231,7 @@ pub mod profiles {
             ucl_hector(),
             cosmogrid_lightpath(),
             amsterdam_tokyo(),
+            high_bdp(),
             local_lan(),
         ]
     }

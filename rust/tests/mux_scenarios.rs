@@ -45,7 +45,7 @@ fn msg_for(ch: u32, i: u32, len: usize) -> Vec<u8> {
 fn mux_cfg() -> MuxConfig {
     // small quantum so the bulk message needs many rotations — the
     // starvation property is meaningful at every channel count
-    MuxConfig { chunk_budget: 32 * 1024, high_water: 64 << 20 }
+    MuxConfig { chunk_budget: 32 * 1024, high_water: 64 << 20, ..MuxConfig::default() }
 }
 
 /// Per-stream pacing for every scenario path: rate-limiting the pump
@@ -196,6 +196,68 @@ fn blackout_8_channels() {
 #[test]
 fn blackout_32_channels() {
     run_blackout(32);
+}
+
+// ---------------------------------------------------------------------------
+// Scenario: windowed resilient pipeline under the mux (optionally with a
+// mid-run stream blackout). The pump posts up to `window` delivery-ACKed
+// frames into the path's send window instead of running stop-and-wait;
+// the mux contract (delivery, ordering, fairness) must be unaffected.
+// ---------------------------------------------------------------------------
+
+fn run_windowed(nch: usize, kill_mid_run: bool) {
+    let (l, r, kills) = mem_path_pairs_killable(4);
+    let mut pc = PathConfig::with_streams(4);
+    pc.autotune = false;
+    pc.chunk_size = 32 * 1024;
+    pc.pacing_rate = Some(PACE_PER_STREAM);
+    pc.resilience.enabled = true;
+    pc.resilience.window = 8;
+    let pa = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
+    let pb = Arc::new(Path::from_pairs(r, pc).unwrap());
+    let a = MuxEndpoint::start_cfg(pa, mux_cfg()).unwrap();
+    let b = MuxEndpoint::start_cfg(pb, mux_cfg()).unwrap();
+    let tx = open_all(&a, nch);
+    let rx = open_all(&b, nch);
+    let killer = kill_mid_run.then(|| {
+        let k = kills[2].clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            k.fire();
+        })
+    });
+    produce(&tx);
+    consume(&rx);
+    if let Some(killer) = killer {
+        killer.join().unwrap();
+    }
+    assert_no_starvation(&b, nch);
+    // channel flush drains the path's in-flight send window too
+    for ch in &tx {
+        ch.flush().unwrap();
+    }
+    let st = a.path().status();
+    assert_eq!(st.window_in_flight, 0, "flush left frames in flight: {st:?}");
+    if kill_mid_run {
+        assert!(st.live >= 3, "only the killed stream may be dead: {st:?}");
+    } else {
+        assert_eq!(st.live, 4, "{st:?}");
+    }
+}
+
+#[test]
+fn windowed_clean_8_channels() {
+    run_windowed(8, false);
+}
+
+#[test]
+fn windowed_blackout_8_channels() {
+    run_windowed(8, true);
+}
+
+#[test]
+fn windowed_blackout_32_channels() {
+    run_windowed(32, true);
 }
 
 // ---------------------------------------------------------------------------

@@ -243,6 +243,134 @@ fn ack_timeout_does_not_fire_on_healthy_traffic() {
     assert_eq!(st.live, 2, "{st:?}");
 }
 
+fn windowed_cfg(n: usize, window: usize) -> PathConfig {
+    let mut cfg = resilient_cfg(n);
+    cfg.resilience.window = window;
+    cfg
+}
+
+#[test]
+fn windowed_pipeline_roundtrips_in_order() {
+    // A window of 8 lets every send below return after *posting*; the
+    // receiver must still observe the messages complete and in order,
+    // and a flush must leave nothing in flight.
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let cfg = windowed_cfg(2, 8);
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    const N: u64 = 20;
+    const LEN: usize = 100_000;
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; LEN];
+        let mut expect = vec![0u8; LEN];
+        for i in 0..N {
+            b.recv(&mut buf).unwrap();
+            Rng::new(500 + i).fill_bytes(&mut expect);
+            assert_eq!(buf, expect, "message {i} corrupted or reordered");
+        }
+    });
+    let mut msg = vec![0u8; LEN];
+    for i in 0..N {
+        Rng::new(500 + i).fill_bytes(&mut msg);
+        a.send(&msg).unwrap();
+    }
+    a.flush().unwrap();
+    t.join().unwrap();
+    let st = a.status();
+    assert_eq!(st.window_in_flight, 0, "flush left messages in flight: {st:?}");
+    assert_eq!(st.ack_timeouts, 0, "{st:?}");
+}
+
+#[test]
+fn windowed_selective_retry_survives_mid_window_stream_kill() {
+    // Kill a (non-control) stream while a window's worth of messages is
+    // in flight: only the affected messages are retried, over the
+    // surviving streams, and every byte still arrives intact.
+    let (l, r, kills) = mem_path_pairs_killable(4);
+    let cfg = windowed_cfg(4, 4);
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    const N: u64 = 12;
+    const LEN: usize = 300_000;
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; LEN];
+        let mut expect = vec![0u8; LEN];
+        for i in 0..N {
+            b.recv(&mut buf).unwrap();
+            Rng::new(700 + i).fill_bytes(&mut expect);
+            assert_eq!(buf, expect, "message {i} corrupted across the kill");
+        }
+        b.status()
+    });
+    let mut msg = vec![0u8; LEN];
+    for i in 0..N {
+        if i == 4 {
+            kills[2].fire(); // mid-window, while earlier posts are unacked
+        }
+        Rng::new(700 + i).fill_bytes(&mut msg);
+        a.send(&msg).unwrap();
+    }
+    a.flush().unwrap();
+    let bs = t.join().unwrap();
+    let st = a.status();
+    assert_eq!(st.window_in_flight, 0, "{st:?}");
+    assert!(st.live >= 3, "sender lost more than the killed stream: {st:?}");
+    assert!(bs.live >= 3, "receiver lost more than the killed stream: {bs:?}");
+}
+
+#[test]
+fn windowed_watchdog_fires_on_oldest_unacked_stall() {
+    // With a window, sends *post* and return — a stalled receiver shows
+    // up at the next drain. The watchdog must track the oldest unacked
+    // message and fail the pipeline in bounded time; the poisoned
+    // pipeline must then fail later sends instead of hanging.
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let _keep_peer_alive = r; // a dropped peer would fail fast by EOF instead
+    let mut cfg = windowed_cfg(2, 2);
+    cfg.resilience.ack_timeout = Some(Duration::from_millis(150));
+    let a = Path::from_pairs(l, cfg).unwrap();
+    for _ in 0..2 {
+        // fills the window; nobody ever acks
+        let _ = a.send(&[7u8; 64 * 1024]);
+    }
+    let t0 = Instant::now();
+    assert!(a.flush().is_err(), "nobody ever acked; the drain must not report success");
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "drain did not fail in bounded time: {:?}",
+        t0.elapsed()
+    );
+    let st = a.status();
+    assert!(st.ack_timeouts >= 1, "watchdog never fired: {st:?}");
+    assert!(a.send(&[1u8; 16]).is_err(), "poisoned pipeline accepted a new send");
+}
+
+#[test]
+fn window_of_one_degenerates_to_rendezvous() {
+    // window = 1 must behave exactly like the historic rendezvous mode:
+    // every send blocks for its ACK, so nothing is ever left in flight.
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let cfg = windowed_cfg(2, 1);
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    let mut msg = vec![0u8; 150_000];
+    Rng::new(81).fill_bytes(&mut msg);
+    let m2 = msg.clone();
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 150_000];
+        for _ in 0..3 {
+            b.recv(&mut buf).unwrap();
+        }
+        buf
+    });
+    for _ in 0..3 {
+        a.send(&msg).unwrap();
+        assert_eq!(a.status().window_in_flight, 0, "rendezvous send left data in flight");
+    }
+    assert_eq!(t.join().unwrap(), m2);
+    a.flush().unwrap(); // no-op on an empty window
+}
+
 #[test]
 fn status_reports_preferred_vs_effective_striping() {
     let (l, _r, kills) = mem_path_pairs_killable(3);
