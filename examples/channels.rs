@@ -34,7 +34,7 @@ fn main() -> anyhow::Result<()> {
     // far end: echo the coupling, sink the bulk + telemetry
     let server = std::thread::spawn(move || -> anyhow::Result<(usize, usize)> {
         let path = Arc::new(listener.accept_path()?);
-        let mux = MuxEndpoint::start(path);
+        let mux = MuxEndpoint::start(path)?;
         let coupling = mux.open(COUPLING)?;
         let bulk = mux.open(BULK)?;
         let telemetry = mux.open(TELEMETRY)?;

@@ -1,0 +1,505 @@
+//! `mpwlint` — the in-tree project lint.
+//!
+//! Run with `cargo run --bin mpwlint` from anywhere in the workspace; it
+//! exits non-zero on any violation and is wired into CI as a blocking
+//! step. Plain line scanning, no external deps (same philosophy as the
+//! vendored shims in `rust/vendor/`).
+//!
+//! Three checks:
+//!
+//! 1. **Panic ban** — no `.unwrap()` / `.expect(` in `rust/src/mpwide/**`
+//!    outside `#[cfg(test)]` regions and comments. A checked-in
+//!    allowlist (`rust/mpwlint.allow`) budgets the provably-infallible
+//!    remainder per file, and is shrink-only: the lint fails both when a
+//!    file exceeds its budget *and* when it drops below it, so the
+//!    checked-in number can never silently lag behind reality.
+//! 2. **Lock discipline** — no raw `std::sync` `Mutex`/`Condvar` tokens
+//!    anywhere in `rust/src/**` except `util/lockorder.rs` (and test
+//!    modules). Library code must go through `OrderedMutex` /
+//!    `OrderedCondvar` so the debug-build lock-rank checker observes
+//!    every acquisition (see `docs/CONCURRENCY.md`).
+//! 3. **Protocol drift** — `docs/PROTOCOL.md` carries machine-checkable
+//!    markers of the form
+//!    `<!-- mpwlint-const: <src-file> <NAME> = <value> -->`;
+//!    each is compared against the constant's definition in the source
+//!    tree (numeric where both sides evaluate, textual otherwise), so
+//!    the documented wire format cannot drift from the code.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+struct Violation {
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+fn violation(file: &str, line: usize, msg: String) -> Violation {
+    Violation { file: file.to_string(), line, msg }
+}
+
+fn main() -> ExitCode {
+    // CARGO_MANIFEST_DIR is `<repo>/rust` for this binary.
+    let Some(root) = Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(Path::to_path_buf)
+    else {
+        eprintln!("mpwlint: cannot locate repo root");
+        return ExitCode::FAILURE;
+    };
+    let mut v: Vec<Violation> = Vec::new();
+    check_panics(&root, &mut v);
+    check_raw_sync(&root, &mut v);
+    check_protocol_consts(&root, &mut v);
+    if v.is_empty() {
+        println!("mpwlint: OK (panic ban, lock discipline, protocol constants)");
+        ExitCode::SUCCESS
+    } else {
+        for x in &v {
+            eprintln!("mpwlint: {}:{}: {}", x.file, x.line, x.msg);
+        }
+        eprintln!("mpwlint: {} violation(s)", v.len());
+        ExitCode::FAILURE
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared scanning
+
+/// Tag each line of a source file with its 1-based number and whether it
+/// falls inside a `#[cfg(test)]` region. Regions start at the attribute
+/// and end when the brace depth of the gated block returns to zero —
+/// line-oriented and deliberately naive about braces inside string
+/// literals, which is fine for the test modules this tree contains
+/// (they run to end-of-file).
+fn tag_lines(src: &str) -> Vec<(usize, bool, &str)> {
+    let mut out = Vec::new();
+    let mut in_test = false;
+    let mut depth: i64 = 0;
+    let mut armed = false; // saw the attribute, waiting for the opening brace
+    for (i, line) in src.lines().enumerate() {
+        if !in_test && line.trim_start().starts_with("#[cfg(test)]") {
+            in_test = true;
+            armed = true;
+            depth = 0;
+        }
+        out.push((i + 1, in_test, line));
+        if in_test {
+            for c in line.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        armed = false;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if !armed && depth <= 0 {
+                in_test = false;
+            }
+        }
+    }
+    out
+}
+
+fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rust_files(&p, out);
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+fn rel_to(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+// ---------------------------------------------------------------------------
+// check 1: panic ban in mpwide library code
+
+/// Line numbers of `.unwrap()` / `.expect(` hits in non-test,
+/// non-comment code.
+fn panic_sites(src: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    for (n, in_test, line) in tag_lines(src) {
+        if in_test || is_comment(line) {
+            continue;
+        }
+        if line.contains(".unwrap()") || line.contains(".expect(") {
+            hits.push(n);
+        }
+    }
+    hits
+}
+
+/// Parse the allowlist: `<repo-relative path> <count>` per line, `#`
+/// comments and blank lines ignored.
+fn parse_allowlist(text: &str) -> Result<BTreeMap<String, usize>, (usize, String)> {
+    let mut map = BTreeMap::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (Some(path), Some(count), None) = (it.next(), it.next(), it.next()) else {
+            return Err((i + 1, format!("malformed allowlist line: {line:?}")));
+        };
+        let Ok(count) = count.parse::<usize>() else {
+            return Err((i + 1, format!("bad count in allowlist line: {line:?}")));
+        };
+        map.insert(path.to_string(), count);
+    }
+    Ok(map)
+}
+
+const ALLOWLIST: &str = "rust/mpwlint.allow";
+
+fn check_panics(root: &Path, v: &mut Vec<Violation>) {
+    let allow_path = root.join(ALLOWLIST);
+    let allow_text = fs::read_to_string(&allow_path).unwrap_or_default();
+    let allow = match parse_allowlist(&allow_text) {
+        Ok(a) => a,
+        Err((line, msg)) => {
+            v.push(violation(ALLOWLIST, line, msg));
+            return;
+        }
+    };
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src/mpwide"), &mut files);
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    for path in files {
+        let rel = rel_to(root, &path);
+        let Ok(src) = fs::read_to_string(&path) else {
+            v.push(violation(&rel, 0, "unreadable file".into()));
+            continue;
+        };
+        let hits = panic_sites(&src);
+        let budget = allow.get(&rel).copied().unwrap_or(0);
+        if hits.len() > budget {
+            v.push(violation(
+                &rel,
+                hits[0],
+                format!(
+                    "{} `.unwrap()`/`.expect(` site(s) in library code (allowlist budget {}), at lines {:?}",
+                    hits.len(),
+                    budget,
+                    hits
+                ),
+            ));
+        }
+        seen.insert(rel, hits.len());
+    }
+    // Shrink-only: a budget above reality is as much a failure as one
+    // below it — the allowlist must track the tree downward.
+    for (path, budget) in &allow {
+        let actual = seen.get(path).copied().unwrap_or(0);
+        if actual < *budget {
+            v.push(violation(
+                ALLOWLIST,
+                0,
+                format!("stale entry: {path} allows {budget} but only {actual} remain — shrink it"),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// check 2: raw Mutex/Condvar ban
+
+/// Occurrences of `Mutex`/`Condvar` tokens not written as part of
+/// `OrderedMutex`/`OrderedCondvar`, with line numbers.
+fn raw_sync_sites(src: &str) -> Vec<(usize, String)> {
+    let mut hits = Vec::new();
+    for (n, in_test, line) in tag_lines(src) {
+        if in_test || is_comment(line) {
+            continue;
+        }
+        for tok in ["Mutex", "Condvar"] {
+            let mut from = 0;
+            while let Some(pos) = line[from..].find(tok) {
+                let abs = from + pos;
+                if !line[..abs].ends_with("Ordered") {
+                    hits.push((n, tok.to_string()));
+                }
+                from = abs + tok.len();
+            }
+        }
+    }
+    hits
+}
+
+fn check_raw_sync(root: &Path, v: &mut Vec<Violation>) {
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src"), &mut files);
+    for path in files {
+        let rel = rel_to(root, &path);
+        // lockorder.rs is the one home of the raw primitives; this
+        // binary names the tokens in its own scan patterns.
+        if rel.ends_with("util/lockorder.rs") || rel.ends_with("bin/mpwlint.rs") {
+            continue;
+        }
+        let Ok(src) = fs::read_to_string(&path) else {
+            v.push(violation(&rel, 0, "unreadable file".into()));
+            continue;
+        };
+        for (n, tok) in raw_sync_sites(&src) {
+            v.push(violation(
+                &rel,
+                n,
+                format!("raw `{tok}` in library code — use the lock-ranked wrapper from util::lockorder"),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// check 3: protocol constants vs docs/PROTOCOL.md markers
+
+struct Marker {
+    doc_line: usize,
+    file: String,
+    name: String,
+    expr: String,
+}
+
+/// Extract `<!-- mpwlint-const: <file> <NAME> = <expr> -->` markers.
+fn parse_markers(doc: &str) -> (Vec<Marker>, Vec<(usize, String)>) {
+    let mut markers = Vec::new();
+    let mut errors = Vec::new();
+    for (i, line) in doc.lines().enumerate() {
+        let Some(start) = line.find("<!-- mpwlint-const:") else { continue };
+        let rest = &line[start + "<!-- mpwlint-const:".len()..];
+        let Some(end) = rest.find("-->") else {
+            errors.push((i + 1, "unterminated mpwlint-const marker".into()));
+            continue;
+        };
+        let body = rest[..end].trim();
+        // `<file> <NAME> = <expr>` — expr may contain spaces.
+        let Some((head, expr)) = body.split_once('=') else {
+            errors.push((i + 1, format!("marker missing `=`: {body:?}")));
+            continue;
+        };
+        let mut it = head.split_whitespace();
+        let (Some(file), Some(name), None) = (it.next(), it.next(), it.next()) else {
+            errors.push((i + 1, format!("marker head must be `<file> <NAME>`: {head:?}")));
+            continue;
+        };
+        markers.push(Marker {
+            doc_line: i + 1,
+            file: file.to_string(),
+            name: name.to_string(),
+            expr: expr.trim().to_string(),
+        });
+    }
+    (markers, errors)
+}
+
+/// Find `const NAME: ... = <expr>;` in a source file and return the
+/// right-hand side text.
+fn const_rhs(src: &str, name: &str) -> Option<String> {
+    let needle = format!("const {name}:");
+    for line in src.lines() {
+        let Some(pos) = line.find(&needle) else { continue };
+        let after = &line[pos + needle.len()..];
+        let rhs = after.split_once('=')?.1;
+        let rhs = rhs.split(';').next()?.trim();
+        return Some(rhs.to_string());
+    }
+    None
+}
+
+/// Evaluate a small integer expression: decimal / `0x` hex literals
+/// (optionally with `_` separators and a type suffix), combined with
+/// `+`, `*` and `<<`. Returns `None` for anything else — the caller
+/// falls back to normalized textual comparison.
+fn eval_expr(s: &str) -> Option<u128> {
+    let s = s.trim();
+    if let Some(pos) = s.find("<<") {
+        return Some(eval_sum(&s[..pos])?.checked_shl(eval_expr(&s[pos + 2..])? as u32)?);
+    }
+    eval_sum(s)
+}
+
+fn eval_sum(s: &str) -> Option<u128> {
+    let mut total: u128 = 0;
+    for part in s.split('+') {
+        total = total.checked_add(eval_prod(part)?)?;
+    }
+    Some(total)
+}
+
+fn eval_prod(s: &str) -> Option<u128> {
+    let mut total: u128 = 1;
+    for part in s.split('*') {
+        total = total.checked_mul(eval_atom(part)?)?;
+    }
+    Some(total)
+}
+
+fn eval_atom(s: &str) -> Option<u128> {
+    let t = s.trim().replace('_', "");
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        let hex = hex.trim_end_matches(|c: char| !c.is_ascii_hexdigit());
+        return u128::from_str_radix(hex, 16).ok();
+    }
+    let dec = t.trim_end_matches(|c: char| c.is_ascii_alphabetic());
+    dec.parse::<u128>().ok()
+}
+
+fn normalized(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+const PROTOCOL_DOC: &str = "docs/PROTOCOL.md";
+
+fn check_protocol_consts(root: &Path, v: &mut Vec<Violation>) {
+    let Ok(doc) = fs::read_to_string(root.join(PROTOCOL_DOC)) else {
+        v.push(violation(PROTOCOL_DOC, 0, "missing protocol doc".into()));
+        return;
+    };
+    let (markers, errors) = parse_markers(&doc);
+    for (line, msg) in errors {
+        v.push(violation(PROTOCOL_DOC, line, msg));
+    }
+    if markers.is_empty() {
+        v.push(violation(
+            PROTOCOL_DOC,
+            0,
+            "no mpwlint-const markers found — the drift check would silently pass".into(),
+        ));
+        return;
+    }
+    for m in &markers {
+        let Ok(src) = fs::read_to_string(root.join(&m.file)) else {
+            v.push(violation(PROTOCOL_DOC, m.doc_line, format!("marker points at unreadable file {}", m.file)));
+            continue;
+        };
+        let Some(rhs) = const_rhs(&src, &m.name) else {
+            v.push(violation(
+                PROTOCOL_DOC,
+                m.doc_line,
+                format!("constant `{}` not found in {}", m.name, m.file),
+            ));
+            continue;
+        };
+        let matches = match (eval_expr(&m.expr), eval_expr(&rhs)) {
+            (Some(a), Some(b)) => a == b,
+            _ => normalized(&m.expr) == normalized(&rhs),
+        };
+        if !matches {
+            v.push(violation(
+                PROTOCOL_DOC,
+                m.doc_line,
+                format!("`{}` documented as `{}` but {} defines `{}`", m.name, m.expr, m.file, rhs),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PANIC_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/panics.rs.fixture"
+    ));
+    const RAW_SYNC_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/raw_sync.rs.fixture"
+    ));
+    const DOC_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/doc.md.fixture"
+    ));
+    const CONSTS_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/consts.rs.fixture"
+    ));
+
+    #[test]
+    fn panic_sites_skip_tests_and_comments() {
+        // Fixture layout: unwrap at lines 4 and 8, expect at line 9,
+        // commented unwrap at line 6, test-mod unwrap near the end.
+        assert_eq!(panic_sites(PANIC_FIXTURE), vec![4, 8, 9]);
+    }
+
+    #[test]
+    fn raw_sync_flags_only_unwrapped_primitives() {
+        let hits = raw_sync_sites(RAW_SYNC_FIXTURE);
+        // One raw Mutex (line 5) and one raw Condvar (line 6); the
+        // Ordered* uses and the test-module Mutex are clean.
+        assert_eq!(
+            hits,
+            vec![(5, "Mutex".to_string()), (6, "Condvar".to_string())]
+        );
+    }
+
+    #[test]
+    fn test_region_tracking_ends_with_block() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod t {\n  fn x() {}\n}\nfn b() {}\n";
+        let tags = tag_lines(src);
+        let flags: Vec<bool> = tags.iter().map(|(_, t, _)| *t).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn expr_evaluator() {
+        assert_eq!(eval_expr("18"), Some(18));
+        assert_eq!(eval_expr("1 + 1 + 8 + 4 + 4"), Some(18));
+        assert_eq!(eval_expr("64 << 20"), Some(64 << 20));
+        assert_eq!(eval_expr("0xF5"), Some(0xF5));
+        assert_eq!(eval_expr("2 * 3 + 4"), Some(10));
+        assert_eq!(eval_expr("64usize"), Some(64));
+        assert_eq!(eval_expr("*b\"MPW1\""), None);
+    }
+
+    #[test]
+    fn markers_parse_and_compare() {
+        let (markers, errors) = parse_markers(DOC_FIXTURE);
+        assert!(errors.is_empty(), "{errors:?}");
+        assert_eq!(markers.len(), 4);
+        // The fixture doc and fixture source agree on the first three
+        // markers and deliberately disagree on the fourth.
+        let verdicts: Vec<bool> = markers
+            .iter()
+            .map(|m| {
+                let rhs = const_rhs(CONSTS_FIXTURE, &m.name).expect("const present");
+                match (eval_expr(&m.expr), eval_expr(&rhs)) {
+                    (Some(a), Some(b)) => a == b,
+                    _ => normalized(&m.expr) == normalized(&rhs),
+                }
+            })
+            .collect();
+        assert_eq!(verdicts, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn const_rhs_extraction() {
+        assert_eq!(const_rhs(CONSTS_FIXTURE, "MAGIC").as_deref(), Some("0xF5"));
+        assert_eq!(const_rhs(CONSTS_FIXTURE, "HDR_LEN").as_deref(), Some("1 + 1 + 8 + 4 + 4"));
+        assert_eq!(const_rhs(CONSTS_FIXTURE, "NOPE"), None);
+    }
+
+    #[test]
+    fn allowlist_parses_and_rejects_garbage() {
+        let ok = parse_allowlist("# comment\nrust/src/mpwide/a.rs 3\n\nrust/src/mpwide/b.rs 0\n");
+        assert_eq!(ok.unwrap().get("rust/src/mpwide/a.rs"), Some(&3));
+        assert!(parse_allowlist("too many words here 3").is_err());
+        assert!(parse_allowlist("path notanumber").is_err());
+    }
+}

@@ -51,7 +51,9 @@
 //! | `MPW_CloseChannel`       | [`mpw_close_channel`]       |
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
+
+use crate::util::lockorder::{rank, OrderedMutex};
 
 use super::adapt::{TuneMode, TuneSnapshot};
 use super::config::{PathConfig, ReconnectPolicy};
@@ -89,23 +91,26 @@ struct Context {
     next_channel: i32,
 }
 
-static CTX: OnceLock<Mutex<Context>> = OnceLock::new();
+static CTX: OnceLock<OrderedMutex<Context>> = OnceLock::new();
 
-fn ctx() -> &'static Mutex<Context> {
+fn ctx() -> &'static OrderedMutex<Context> {
     CTX.get_or_init(|| {
-        Mutex::new(Context {
-            paths: HashMap::new(),
-            handles: HashMap::new(),
-            listeners: HashMap::new(),
-            monitors: HashMap::new(),
-            daemons: HashMap::new(),
-            muxes: HashMap::new(),
-            channels: HashMap::new(),
-            busy: HashMap::new(),
-            next_path: 0,
-            next_handle: 0,
-            next_channel: 0,
-        })
+        OrderedMutex::new(
+            rank::API_CTX,
+            Context {
+                paths: HashMap::new(),
+                handles: HashMap::new(),
+                listeners: HashMap::new(),
+                monitors: HashMap::new(),
+                daemons: HashMap::new(),
+                muxes: HashMap::new(),
+                channels: HashMap::new(),
+                busy: HashMap::new(),
+                next_path: 0,
+                next_handle: 0,
+                next_channel: 0,
+            },
+        )
     })
 }
 
@@ -121,7 +126,7 @@ pub fn mpw_init() {
 /// the global table until `mpw_wait`; finalize now owns their cleanup.
 pub fn mpw_finalize() {
     let (paths, handles, listeners, monitors, daemons, muxes, channels) = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         c.next_path = 0;
         c.next_handle = 0;
         c.next_channel = 0;
@@ -166,7 +171,7 @@ pub fn mpw_finalize() {
 
 fn with_path<T>(id: i32, f: impl FnOnce(&Arc<Path>) -> Result<T>) -> Result<T> {
     let p = {
-        let c = ctx().lock().unwrap();
+        let c = ctx().lock();
         c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?
     };
     f(&p)
@@ -188,7 +193,7 @@ fn data_path(c: &Context, id: i32) -> Result<Arc<Path>> {
 
 fn with_data_path<T>(id: i32, f: impl FnOnce(&Arc<Path>) -> Result<T>) -> Result<T> {
     let (p, _guard) = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         let p = data_path(&c, id)?;
         // mark the path busy while the (possibly blocking) operation
         // runs outside the lock, so mpw_open_channel cannot start a mux
@@ -224,7 +229,7 @@ fn mark_busy(c: &mut Context, paths: &[&Arc<Path>]) -> BusyGuard {
 
 impl Drop for BusyGuard {
     fn drop(&mut self) {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         for p in &self.held {
             let k = busy_key(p);
             if let Some(b) = c.busy.get_mut(&k) {
@@ -250,8 +255,8 @@ pub fn mpw_create_path_cfg(host: &str, port: u16, cfg: PathConfig) -> Result<i32
     let spawn_monitor = cfg.resilience.reconnect.enabled;
     let path = Arc::new(Path::connect(host, port, cfg)?);
     let monitor =
-        if spawn_monitor { Some(resilience::spawn_reconnect_monitor(&path)) } else { None };
-    let mut c = ctx().lock().unwrap();
+        if spawn_monitor { Some(resilience::spawn_reconnect_monitor(&path)?) } else { None };
+    let mut c = ctx().lock();
     let id = c.next_path;
     c.next_path += 1;
     c.paths.insert(id, path);
@@ -275,7 +280,7 @@ pub fn mpw_serve_path(port: u16, nstreams: usize) -> Result<i32> {
 pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
     // Hold the context lock only around registry mutation, not accept().
     let mut listener = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         match c.listeners.remove(&port) {
             Some(l) => l,
             None => PathListener::bind(port, cfg.clone())?,
@@ -283,7 +288,7 @@ pub fn mpw_serve_path_cfg(port: u16, cfg: PathConfig) -> Result<i32> {
     };
     let real_port = listener.port();
     let path = listener.accept_path_arc()?;
-    let mut c = ctx().lock().unwrap();
+    let mut c = ctx().lock();
     c.listeners.insert(real_port, listener);
     let id = c.next_path;
     c.next_path += 1;
@@ -300,9 +305,9 @@ pub fn mpw_serve_rejoins(port: u16) -> Result<()> {
     // One critical section: releasing the lock between removing the
     // listener and inserting the daemon would race finalize/init and
     // leak a live daemon into the reset context.
-    let mut c = ctx().lock().unwrap();
+    let mut c = ctx().lock();
     let listener = c.listeners.remove(&port).ok_or(MpwError::UnknownId(port as i32))?;
-    let daemon = listener.into_rejoin_daemon();
+    let daemon = listener.into_rejoin_daemon()?;
     c.daemons.insert(port, daemon);
     Ok(())
 }
@@ -314,7 +319,7 @@ pub fn mpw_serve_rejoins(port: u16) -> Result<()> {
 /// the table and finalize could no longer reach it.
 pub fn mpw_destroy_path(id: i32) -> Result<()> {
     let (path, monitor, mux) = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         let p = c.paths.remove(&id).ok_or(MpwError::UnknownId(id))?;
         let monitor = c.monitors.remove(&id);
         let mux = c.muxes.remove(&id);
@@ -368,7 +373,7 @@ pub fn mpw_barrier(id: i32) -> Result<()> {
 /// `buf` over path `send_id`.
 pub fn mpw_cycle(recv_id: i32, send_id: i32, buf: &[u8], recv_len: usize) -> Result<Vec<u8>> {
     let (pr, ps, _guard) = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         let pr = data_path(&c, recv_id)?;
         let ps = data_path(&c, send_id)?;
         let guard = mark_busy(&mut c, &[&pr, &ps]);
@@ -380,7 +385,7 @@ pub fn mpw_cycle(recv_id: i32, send_id: i32, buf: &[u8], recv_len: usize) -> Res
 /// `MPW_DCycle` (dynamic sizes).
 pub fn mpw_dcycle(recv_id: i32, send_id: i32, buf: &[u8]) -> Result<Vec<u8>> {
     let (pr, ps, _guard) = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         let pr = data_path(&c, recv_id)?;
         let ps = data_path(&c, send_id)?;
         let guard = mark_busy(&mut c, &[&pr, &ps]);
@@ -395,7 +400,7 @@ pub fn mpw_dcycle(recv_id: i32, send_id: i32, buf: &[u8]) -> Result<Vec<u8>> {
 /// `MPW_Relay`: forward all traffic between two paths until both close.
 pub fn mpw_relay(a: i32, b: i32) -> Result<relay::RelayStats> {
     let (pa, pb, _guard) = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         let pa = data_path(&c, a)?;
         let pb = data_path(&c, b)?;
         let guard = mark_busy(&mut c, &[&pa, &pb]);
@@ -412,7 +417,7 @@ pub fn mpw_isend_recv(id: i32, op: NbeOp) -> Result<i32> {
     // miss it and start a mux dispatcher beside a live plain recv.
     // (`NbeHandle::start` only spawns the worker thread; it does no I/O
     // on the caller's side, so holding the registry lock is cheap.)
-    let mut c = ctx().lock().unwrap();
+    let mut c = ctx().lock();
     let p = data_path(&c, id)?;
     let h = NbeHandle::start(p, op);
     let hid = c.next_handle;
@@ -423,7 +428,7 @@ pub fn mpw_isend_recv(id: i32, op: NbeOp) -> Result<i32> {
 
 /// `MPW_Has_NBE_Finished`.
 pub fn mpw_has_nbe_finished(hid: i32) -> Result<bool> {
-    let c = ctx().lock().unwrap();
+    let c = ctx().lock();
     c.handles.get(&hid).map(|(_, h)| h.is_finished()).ok_or(MpwError::UnknownId(hid))
 }
 
@@ -431,7 +436,7 @@ pub fn mpw_has_nbe_finished(hid: i32) -> Result<bool> {
 /// bytes for receiving operations.
 pub fn mpw_wait(hid: i32) -> Result<Option<Vec<u8>>> {
     let (h, _guard) = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         let (path_id, h) = c.handles.remove(&hid).ok_or(MpwError::UnknownId(hid))?;
         // the join below blocks outside the lock while the worker may
         // still be on the path; keep the path marked busy so the mux
@@ -505,14 +510,14 @@ pub fn mpw_set_reconnect_policy(id: i32, policy: ReconnectPolicy) -> Result<()> 
     // One critical section for lookup + policy + monitor bookkeeping:
     // releasing the lock in between would race destroy/finalize and could
     // leave a stale monitor entry under a reused id.
-    let mut c = ctx().lock().unwrap();
+    let mut c = ctx().lock();
     let path = c.paths.get(&id).cloned().ok_or(MpwError::UnknownId(id))?;
     // validation (zero backoff, reconnect-without-framing) lives in
     // Path::set_reconnect_policy
     path.set_reconnect_policy(policy)?;
     if enable {
         if !c.monitors.contains_key(&id) {
-            c.monitors.insert(id, resilience::spawn_reconnect_monitor(&path));
+            c.monitors.insert(id, resilience::spawn_reconnect_monitor(&path)?);
         }
     } else {
         c.monitors.remove(&id);
@@ -536,7 +541,7 @@ pub fn mpw_dns_resolve(host: &str) -> Result<String> {
 /// open the same channel number (like agreeing on a port). Returns a
 /// channel handle id for `mpw_channel_send` / `mpw_channel_recv`.
 pub fn mpw_open_channel(path_id: i32, channel: u32) -> Result<i32> {
-    let mut c = ctx().lock().unwrap();
+    let mut c = ctx().lock();
     let path = c.paths.get(&path_id).cloned().ok_or(MpwError::UnknownId(path_id))?;
     // An unfinished non-blocking handle owns reads/writes on the path;
     // starting the mux dispatcher beside it would interleave plain and
@@ -550,7 +555,16 @@ pub fn mpw_open_channel(path_id: i32, channel: u32) -> Result<i32> {
              calls); finish them before multiplexing"
         )));
     }
-    let opened = c.muxes.entry(path_id).or_insert_with(|| MuxEndpoint::start(path)).open(channel);
+    if fresh {
+        // a spawn failure here leaves the registry untouched: the path
+        // is still usable for plain (non-multiplexed) traffic
+        let endpoint = MuxEndpoint::start(path)?;
+        c.muxes.insert(path_id, endpoint);
+    }
+    let opened = match c.muxes.get(&path_id) {
+        Some(m) => m.open(channel),
+        None => return Err(MpwError::UnknownId(path_id)),
+    };
     let ch = match opened {
         Ok(ch) => ch,
         Err(e) => {
@@ -575,7 +589,7 @@ pub fn mpw_open_channel(path_id: i32, channel: u32) -> Result<i32> {
 fn with_channel(id: i32) -> Result<Channel> {
     // clone the handle out so blocking channel ops never hold the
     // global registry lock
-    let c = ctx().lock().unwrap();
+    let c = ctx().lock();
     c.channels.get(&id).cloned().ok_or(MpwError::UnknownId(id))
 }
 
@@ -596,7 +610,7 @@ pub fn mpw_channel_recv(id: i32) -> Result<Vec<u8>> {
 /// messages, send the CLOSE frame and release the handle id.
 pub fn mpw_close_channel(id: i32) -> Result<()> {
     let ch = {
-        let mut c = ctx().lock().unwrap();
+        let mut c = ctx().lock();
         c.channels.remove(&id).ok_or(MpwError::UnknownId(id))?
     };
     ch.flush()?;
@@ -606,14 +620,15 @@ pub fn mpw_close_channel(id: i32) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Mutex as StdMutex;
 
     // The facade is a process-global; serialize the tests that use it.
-    static API_LOCK: StdMutex<()> = StdMutex::new(());
+    // TEST_HARNESS ranks below every library lock, so holding it across
+    // whole facade calls never trips the lock-order checker.
+    static API_LOCK: OrderedMutex<()> = OrderedMutex::new(rank::TEST_HARNESS, ());
 
     #[test]
     fn unknown_ids_error() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         assert!(matches!(mpw_send(99, b"x"), Err(MpwError::UnknownId(99))));
         assert!(matches!(mpw_barrier(1), Err(MpwError::UnknownId(1))));
@@ -623,7 +638,7 @@ mod tests {
 
     #[test]
     fn end_to_end_over_facade() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         // server thread uses the Path API directly to avoid sharing CTX
         let mut cfg = PathConfig::with_streams(2);
@@ -650,7 +665,7 @@ mod tests {
 
     #[test]
     fn tune_mode_over_facade() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         let mut cfg = PathConfig::with_streams(2);
         cfg.autotune = false;
@@ -682,7 +697,7 @@ mod tests {
 
     #[test]
     fn finalize_drains_inflight_handles_without_wedging() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         let mut cfg = PathConfig::with_streams(1);
         cfg.autotune = false;
@@ -723,7 +738,7 @@ mod tests {
 
     #[test]
     fn path_status_and_reconnect_policy_over_facade() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         let mut cfg = PathConfig::with_streams(2);
         cfg.autotune = false;
@@ -751,7 +766,7 @@ mod tests {
 
     #[test]
     fn serve_rejoins_takes_over_the_listener() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         assert!(mpw_serve_rejoins(59_871).is_err(), "no listener bound on that port");
         let mut cfg = PathConfig::with_streams(1);
@@ -781,7 +796,7 @@ mod tests {
 
     #[test]
     fn channels_over_facade() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         let mut cfg = PathConfig::with_streams(2);
         cfg.autotune = false;
@@ -791,7 +806,7 @@ mod tests {
             // server side uses the library API directly (shared CTX is
             // the client's)
             let p = Arc::new(listener.accept_path().unwrap());
-            let mux = super::super::mux::MuxEndpoint::start(p);
+            let mux = super::super::mux::MuxEndpoint::start(p).unwrap();
             let bulk = mux.open(1).unwrap();
             let ctl = mux.open(2).unwrap();
             let got = bulk.recv().unwrap();
@@ -820,7 +835,7 @@ mod tests {
 
     #[test]
     fn nonblocking_over_facade() {
-        let _g = API_LOCK.lock().unwrap();
+        let _g = API_LOCK.lock();
         mpw_init();
         let mut cfg = PathConfig::with_streams(1);
         cfg.autotune = false;

@@ -49,7 +49,7 @@ pub struct TuneResult {
 
 fn send_ctrl(path: &Path, cmd: u64, value: u64) -> Result<()> {
     let slot = &path.streams[0];
-    let mut tx = slot.tx.lock().unwrap();
+    let mut tx = slot.tx.lock();
     let mut frame = [0u8; 16];
     frame[..8].copy_from_slice(&cmd.to_be_bytes());
     frame[8..].copy_from_slice(&value.to_be_bytes());
@@ -61,7 +61,7 @@ fn send_ctrl(path: &Path, cmd: u64, value: u64) -> Result<()> {
 fn recv_ctrl(path: &Path) -> Result<(u64, u64)> {
     let slot = &path.streams[0];
     let mut frame = [0u8; 16];
-    slot.rx.lock().unwrap().read_exact(&mut frame)?;
+    slot.rx.lock().read_exact(&mut frame)?;
     Ok((
         u64::from_be_bytes(frame[..8].try_into().unwrap()),
         u64::from_be_bytes(frame[8..].try_into().unwrap()),

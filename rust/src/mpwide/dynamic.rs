@@ -32,7 +32,7 @@ impl Path {
     /// layer ships a channel-frame header in front of a payload chunk
     /// with zero copies.
     pub fn dsend_split(&self, head: &[u8], tail: &[u8]) -> Result<()> {
-        let _gate = self.send_gate.lock().unwrap();
+        let _gate = self.send_gate.lock();
         let buf = SplitBuf { head, tail };
         if self.resilient() {
             super::resilience::send(self, buf)?;
@@ -47,7 +47,7 @@ impl Path {
     /// cache is only grown, never shrunk, so steady-state exchanges do not
     /// allocate. Returns the message length.
     pub fn drecv_into(&self, cache: &mut Vec<u8>) -> Result<usize> {
-        let _gate = self.recv_gate.lock().unwrap();
+        let _gate = self.recv_gate.lock();
         if self.resilient() {
             return super::resilience::recv(self, super::resilience::RecvTarget::Dynamic(cache));
         }
@@ -81,7 +81,7 @@ impl Path {
 
     fn send_header(&self, len: u64) -> Result<()> {
         let slot = &self.streams[0];
-        let mut tx = slot.tx.lock().unwrap();
+        let mut tx = slot.tx.lock();
         tx.w.write_all(&len.to_be_bytes())?;
         tx.w.flush()?;
         Ok(())
@@ -90,7 +90,7 @@ impl Path {
     fn recv_header(&self) -> Result<u64> {
         let slot = &self.streams[0];
         let mut hdr = [0u8; 8];
-        slot.rx.lock().unwrap().read_exact(&mut hdr)?;
+        slot.rx.lock().read_exact(&mut hdr)?;
         let len = u64::from_be_bytes(hdr);
         if len > MAX_DYNAMIC {
             return Err(MpwError::Protocol(format!("dynamic message length {len} too large")));
@@ -177,7 +177,7 @@ mod tests {
         // Forge a header directly on stream 0.
         {
             let slot = &a.streams[0];
-            let mut tx = slot.tx.lock().unwrap();
+            let mut tx = slot.tx.lock();
             tx.w.write_all(&(MAX_DYNAMIC + 1).to_be_bytes()).unwrap();
         }
         assert!(b.drecv().is_err());

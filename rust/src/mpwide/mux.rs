@@ -84,12 +84,13 @@
 //!   not need to match the peer).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::errors::{MpwError, Result};
 use super::path::Path;
+use crate::util::lockorder::{rank, OrderedCondvar, OrderedMutex};
 
 /// Sanity byte opening every channel frame.
 pub const MUX_MAGIC: u8 = 0xC4;
@@ -296,13 +297,13 @@ struct MuxState {
 struct MuxInner {
     path: Arc<Path>,
     cfg: MuxConfig,
-    st: Mutex<MuxState>,
+    st: OrderedMutex<MuxState>,
     /// Wakes the sender pump (new outbound work, close, shutdown).
-    send_cv: Condvar,
+    send_cv: OrderedCondvar,
     /// Wakes producers blocked on the high-water mark.
-    space_cv: Condvar,
+    space_cv: OrderedCondvar,
     /// Wakes consumers blocked in `recv`.
-    recv_cv: Condvar,
+    recv_cv: OrderedCondvar,
 }
 
 /// What the pump sends next (selected under the state lock, sent
@@ -324,8 +325,8 @@ enum PumpJob {
 /// let mut cfg = PathConfig::with_streams(2);
 /// cfg.autotune = false;
 /// let (l, r) = mem_path_pairs(2);
-/// let a = MuxEndpoint::start(Arc::new(Path::from_pairs(l, cfg.clone()).unwrap()));
-/// let b = MuxEndpoint::start(Arc::new(Path::from_pairs(r, cfg).unwrap()));
+/// let a = MuxEndpoint::start(Arc::new(Path::from_pairs(l, cfg.clone()).unwrap())).unwrap();
+/// let b = MuxEndpoint::start(Arc::new(Path::from_pairs(r, cfg).unwrap())).unwrap();
 /// // both ends agree on channel ids, like ports
 /// let (tx, rx) = (a.open(1).unwrap(), b.open(1).unwrap());
 /// tx.send(b"solver boundary data").unwrap();
@@ -340,9 +341,10 @@ pub struct MuxEndpoint {
 impl MuxEndpoint {
     /// Wrap `path` with the default [`MuxConfig`]. The endpoint takes
     /// over the path: all further traffic must go through channels, and
-    /// shutting the endpoint down closes the path.
-    pub fn start(path: Arc<Path>) -> MuxEndpoint {
-        MuxEndpoint::start_cfg(path, MuxConfig::default()).expect("default MuxConfig is valid")
+    /// shutting the endpoint down closes the path. Fails only when the
+    /// OS refuses to spawn the worker threads.
+    pub fn start(path: Arc<Path>) -> Result<MuxEndpoint> {
+        MuxEndpoint::start_cfg(path, MuxConfig::default())
     }
 
     /// Wrap `path` with explicit knobs.
@@ -351,32 +353,45 @@ impl MuxEndpoint {
         let inner = Arc::new(MuxInner {
             path,
             cfg,
-            st: Mutex::new(MuxState {
-                chans: HashMap::new(),
-                order: Vec::new(),
-                cursor: 0,
-                delivery_ticket: 0,
-                next_gen: 0,
-                dead: None,
-                shutdown: false,
-            }),
-            send_cv: Condvar::new(),
-            space_cv: Condvar::new(),
-            recv_cv: Condvar::new(),
+            st: OrderedMutex::new(
+                rank::MUX_STATE,
+                MuxState {
+                    chans: HashMap::new(),
+                    order: Vec::new(),
+                    cursor: 0,
+                    delivery_ticket: 0,
+                    next_gen: 0,
+                    dead: None,
+                    shutdown: false,
+                },
+            ),
+            send_cv: OrderedCondvar::new(),
+            space_cv: OrderedCondvar::new(),
+            recv_cv: OrderedCondvar::new(),
         });
         let pump = {
             let inner = inner.clone();
             std::thread::Builder::new()
                 .name("mpwide-mux-pump".into())
-                .spawn(move || pump_loop(&inner))
-                .expect("spawn mux pump")
+                .spawn(move || pump_loop(&inner))?
         };
         let dispatcher = {
             let inner = inner.clone();
             std::thread::Builder::new()
                 .name("mpwide-mux-dispatch".into())
                 .spawn(move || dispatch_loop(&inner))
-                .expect("spawn mux dispatcher")
+        };
+        let dispatcher = match dispatcher {
+            Ok(d) => d,
+            Err(e) => {
+                // Unwind the half-started endpoint: stop the pump (and
+                // release the path) before surfacing the spawn failure.
+                inner.st.lock().shutdown = true;
+                inner.send_cv.notify_all();
+                inner.path.close();
+                let _ = pump.join();
+                return Err(e.into());
+            }
         };
         Ok(MuxEndpoint { inner, pump: Some(pump), dispatcher: Some(dispatcher) })
     }
@@ -389,7 +404,7 @@ impl MuxEndpoint {
     /// Open (or adopt) channel `id`. Both ends must open the same id,
     /// like agreeing on a port; opening twice is an error.
     pub fn open(&self, id: u32) -> Result<Channel> {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = self.inner.st.lock();
         check_alive(&st)?;
         let known = st.chans.contains_key(&id);
         let ch = ensure_chan(&mut st, id);
@@ -411,7 +426,7 @@ impl MuxEndpoint {
 
     /// Statistics of every live channel, ascending by id.
     pub fn channel_stats(&self) -> Vec<ChannelStats> {
-        let st = self.inner.st.lock().unwrap();
+        let st = self.inner.st.lock();
         let mut out: Vec<ChannelStats> = st
             .chans
             .iter()
@@ -430,7 +445,7 @@ impl MuxEndpoint {
 
     /// The fatal error that killed the endpoint, if any.
     pub fn dead_reason(&self) -> Option<String> {
-        self.inner.st.lock().unwrap().dead.clone()
+        self.inner.st.lock().dead.clone()
     }
 
     /// Whether `ch` is a handle of this endpoint (registry cleanup:
@@ -444,7 +459,7 @@ impl MuxEndpoint {
     /// workers. Idempotent.
     pub fn shutdown(&mut self) {
         {
-            let mut st = self.inner.st.lock().unwrap();
+            let mut st = self.inner.st.lock();
             st.shutdown = true;
             self.inner.send_cv.notify_all();
             self.inner.space_cv.notify_all();
@@ -468,7 +483,7 @@ impl Drop for MuxEndpoint {
 
 impl std::fmt::Debug for MuxEndpoint {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let st = self.inner.st.lock().unwrap();
+        let st = self.inner.st.lock();
         f.debug_struct("MuxEndpoint")
             .field("channels", &st.chans.len())
             .field("dead", &st.dead)
@@ -531,7 +546,7 @@ impl Channel {
     /// overtake an earlier one that fell back to parking — regardless of
     /// how the parked waiters' threads are scheduled.
     fn queue_or_park(&self, data: Vec<u8>) -> Result<Option<(Vec<u8>, u64)>> {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = self.inner.st.lock();
         check_alive(&st)?;
         let ch = self
             .chan_mut(&mut st)
@@ -556,7 +571,7 @@ impl Channel {
     /// purpose: those conditions are permanent and every other parked
     /// sender observes them too.
     fn wait_and_enqueue(&self, data: Vec<u8>, ticket: u64) -> Result<()> {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = self.inner.st.lock();
         loop {
             check_alive(&st)?;
             let Some(ch) = self.chan(&st) else {
@@ -568,9 +583,11 @@ impl Channel {
             if ch.park_head == ticket && admit(ch, data.len(), self.inner.cfg.high_water) {
                 break;
             }
-            st = self.inner.space_cv.wait(st).unwrap();
+            st = self.inner.space_cv.wait(st);
         }
-        let ch = self.chan_mut(&mut st).expect("checked in the loop");
+        let Some(ch) = self.chan_mut(&mut st) else {
+            return Err(MpwError::ChannelClosed { channel: self.id });
+        };
         ch.park_head += 1;
         enqueue(ch, data);
         drop(st);
@@ -584,7 +601,7 @@ impl Channel {
     /// Returns [`MpwError::ChannelClosed`] once the channel is closed
     /// (either end) **and** every delivered message has been drained.
     pub fn recv(&self) -> Result<Vec<u8>> {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = self.inner.st.lock();
         loop {
             if let Some(ch) = self.chan_mut(&mut st) {
                 if let Some(msg) = ch.ready.pop_front() {
@@ -600,14 +617,14 @@ impl Channel {
                 return Err(MpwError::ChannelClosed { channel: self.id });
             }
             check_alive(&st)?;
-            st = self.inner.recv_cv.wait(st).unwrap();
+            st = self.inner.recv_cv.wait(st);
         }
     }
 
     /// Like [`Channel::recv`] but non-blocking: `Ok(None)` when no
     /// message is currently available.
     pub fn try_recv(&self) -> Result<Option<Vec<u8>>> {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = self.inner.st.lock();
         if let Some(ch) = self.chan_mut(&mut st) {
             if let Some(msg) = ch.ready.pop_front() {
                 gc_chan(&mut st, self.id);
@@ -635,7 +652,7 @@ impl Channel {
     ///
     /// [`ResilienceConfig::window`]: super::config::ResilienceConfig::window
     pub fn flush(&self) -> Result<()> {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = self.inner.st.lock();
         loop {
             check_alive(&st)?;
             match self.chan(&st) {
@@ -646,7 +663,7 @@ impl Channel {
                     }
                 }
             }
-            st = self.inner.space_cv.wait(st).unwrap();
+            st = self.inner.space_cv.wait(st);
         }
         drop(st);
         // handed to the path may still mean "posted into the send
@@ -657,7 +674,7 @@ impl Channel {
     /// Close the channel: already-queued messages are still sent, then a
     /// CLOSE frame tells the peer no more will follow. Idempotent.
     pub fn close(&self) -> Result<()> {
-        let mut st = self.inner.st.lock().unwrap();
+        let mut st = self.inner.st.lock();
         if let Some(ch) = self.chan_mut(&mut st) {
             ch.local_closed = true;
         }
@@ -883,7 +900,7 @@ fn pump_loop(inner: &Arc<MuxInner>) {
     let mut dirty = false;
     loop {
         let job = {
-            let mut st = inner.st.lock().unwrap();
+            let mut st = inner.st.lock();
             loop {
                 if st.shutdown || st.dead.is_some() {
                     return;
@@ -897,8 +914,8 @@ fn pump_loop(inner: &Arc<MuxInner>) {
                 }
                 st = match inner.cfg.tombstone_ttl {
                     // the lease needs periodic sweeps even while idle
-                    Some(ttl) => inner.send_cv.wait_timeout(st, ttl).unwrap().0,
-                    None => inner.send_cv.wait(st).unwrap(),
+                    Some(ttl) => inner.send_cv.wait_timeout(st, ttl).0,
+                    None => inner.send_cv.wait(st),
                 };
             }
         };
@@ -908,7 +925,7 @@ fn pump_loop(inner: &Arc<MuxInner>) {
             let drained = inner.path.flush();
             dirty = false;
             if let Err(e) = drained {
-                let mut st = inner.st.lock().unwrap();
+                let mut st = inner.st.lock();
                 if !st.shutdown && st.dead.is_none() {
                     st.dead = Some(format!("mux window drain failed: {e}"));
                 }
@@ -939,7 +956,7 @@ fn pump_loop(inner: &Arc<MuxInner>) {
                 inner.path.dsend_split(&hdr, chunk)
             }
         };
-        let mut st = inner.st.lock().unwrap();
+        let mut st = inner.st.lock();
         match job {
             PumpJob::Chunk { id, msg, end, fin } => {
                 if let Some(ch) = st.chans.get_mut(&id) {
@@ -982,7 +999,7 @@ fn dispatch_loop(inner: &Arc<MuxInner>) {
     let mut cache: Vec<u8> = Vec::new();
     loop {
         {
-            let st = inner.st.lock().unwrap();
+            let st = inner.st.lock();
             if st.shutdown || st.dead.is_some() {
                 return;
             }
@@ -990,7 +1007,7 @@ fn dispatch_loop(inner: &Arc<MuxInner>) {
         let n = match inner.path.drecv_into(&mut cache) {
             Ok(n) => n,
             Err(e) => {
-                let mut st = inner.st.lock().unwrap();
+                let mut st = inner.st.lock();
                 if !st.shutdown && st.dead.is_none() {
                     st.dead = Some(format!("mux receive failed: {e}"));
                 }
@@ -1001,7 +1018,7 @@ fn dispatch_loop(inner: &Arc<MuxInner>) {
             }
         };
         if let Err(e) = route_frame(inner, &cache[..n]) {
-            let mut st = inner.st.lock().unwrap();
+            let mut st = inner.st.lock();
             if st.dead.is_none() {
                 st.dead = Some(e.to_string());
             }
@@ -1021,8 +1038,16 @@ fn route_frame(inner: &Arc<MuxInner>, frame: &[u8]) -> Result<()> {
     if frame.len() < MUX_HDR_LEN {
         return Err(MpwError::Protocol(format!("short channel frame ({} bytes)", frame.len())));
     }
-    let hdr = decode_mux_hdr(frame[..MUX_HDR_LEN].try_into().expect("sized slice"))?;
-    let payload = &frame[MUX_HDR_LEN..];
+    let (hdr_bytes, payload) = frame.split_at(MUX_HDR_LEN);
+    let hdr = match <&[u8; MUX_HDR_LEN]>::try_from(hdr_bytes) {
+        Ok(h) => decode_mux_hdr(h)?,
+        Err(_) => {
+            return Err(MpwError::Protocol(format!(
+                "short channel frame ({} bytes)",
+                frame.len()
+            )))
+        }
+    };
     if payload.len() != hdr.len as usize {
         return Err(MpwError::Protocol(format!(
             "channel frame length mismatch: header says {}, message carries {}",
@@ -1030,7 +1055,7 @@ fn route_frame(inner: &Arc<MuxInner>, frame: &[u8]) -> Result<()> {
             payload.len()
         )));
     }
-    let mut st = inner.st.lock().unwrap();
+    let mut st = inner.st.lock();
     match hdr.kind {
         CH_OPEN => {
             ensure_chan(&mut st, hdr.channel);
@@ -1389,8 +1414,8 @@ mod tests {
         pc.resilience.enabled = true;
         let pa = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
         let pb = Arc::new(Path::from_pairs(r, pc).unwrap());
-        let a = MuxEndpoint::start(pa);
-        let b = MuxEndpoint::start(pb);
+        let a = MuxEndpoint::start(pa).unwrap();
+        let b = MuxEndpoint::start(pb).unwrap();
         let tx = a.open(1).unwrap();
         let rx = b.open(1).unwrap();
         let mut msg = vec![0u8; 1 << 20];
@@ -1413,8 +1438,8 @@ mod tests {
         pc.autotune = false;
         let pa = Arc::new(Path::from_pairs(l, pc.clone()).unwrap());
         let pb = Arc::new(Path::from_pairs(r, pc).unwrap());
-        let a = MuxEndpoint::start(pa);
-        let b = MuxEndpoint::start(pb);
+        let a = MuxEndpoint::start(pa).unwrap();
+        let b = MuxEndpoint::start(pb).unwrap();
         let tx = a.open(1).unwrap();
         let rx = b.open(1).unwrap();
         tx.send(b"ok").unwrap();

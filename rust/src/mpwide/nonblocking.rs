@@ -95,7 +95,12 @@ impl NbeHandle {
         if let Some(r) = self.ready.take() {
             return r;
         }
-        let join = self.join.take().expect("wait called twice");
+        let Some(join) = self.join.take() else {
+            // `wait` consumes the handle, so the worker handle can only be
+            // absent if construction was bypassed; report it as a dead worker
+            // rather than panicking in library code.
+            return Err(MpwError::WorkerPanic("non-blocking worker handle missing".into()));
+        };
         join.join().map_err(|_| MpwError::WorkerPanic("non-blocking worker".into()))?
     }
 }

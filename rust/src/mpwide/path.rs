@@ -16,8 +16,10 @@
 //! negotiation round-trip.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::util::lockorder::{rank, OrderedMutex};
 
 use super::adapt::{AdaptiveController, TuneMode, TuneSnapshot, TuningState};
 use super::config::{PathConfig, ReconnectPolicy};
@@ -49,9 +51,9 @@ pub(crate) struct SlotMeta {
 /// One stream of a path: independently lockable halves so a send and a
 /// receive can run concurrently (`MPW_SendRecv`).
 pub(crate) struct StreamSlot {
-    pub tx: Mutex<TxHalf>,
-    pub rx: Mutex<Box<dyn HalfDuplex>>,
-    pub meta: Mutex<SlotMeta>,
+    pub tx: OrderedMutex<TxHalf>,
+    pub rx: OrderedMutex<Box<dyn HalfDuplex>>,
+    pub meta: OrderedMutex<SlotMeta>,
     /// Failure flag (resilience layer); dead streams carry no traffic
     /// until a rejoin replaces their transport.
     pub dead: AtomicBool,
@@ -88,18 +90,18 @@ pub(crate) struct StreamSlot {
 /// ```
 pub struct Path {
     pub(crate) streams: Vec<StreamSlot>,
-    cfg: Mutex<PathConfig>,
+    cfg: OrderedMutex<PathConfig>,
     /// Live performance knobs, consulted per operation (lock-free reads).
     tuning: Arc<TuningState>,
     /// Online tuner fed by the send path when the mode is adaptive.
-    controller: Mutex<AdaptiveController>,
+    controller: OrderedMutex<AdaptiveController>,
     peer: String,
     /// Serializes whole send operations so concurrent sends (e.g. several
     /// non-blocking handles on one path) cannot interleave the byte
     /// streams mid-message.
-    pub(crate) send_gate: Mutex<()>,
+    pub(crate) send_gate: OrderedMutex<()>,
     /// Serializes whole receive operations (same rationale).
-    pub(crate) recv_gate: Mutex<()>,
+    pub(crate) recv_gate: OrderedMutex<()>,
     /// Stream health (rejoin generation, rejoin tally, waiter condvar).
     pub(crate) health: HealthState,
     /// Sticky control stream index for resilient framing.
@@ -130,12 +132,12 @@ pub struct Path {
     /// rejoin so a closed path cannot be resurrected by its monitor.
     closed: AtomicBool,
     /// Reconnect policy consulted by zero-live waits and the monitor.
-    reconnect: Mutex<ReconnectPolicy>,
+    reconnect: OrderedMutex<ReconnectPolicy>,
     /// `host:port` + path uuid of the remote end (connecting side only);
     /// what the reconnect monitor redials.
-    remote: Mutex<Option<(String, u64)>>,
+    remote: OrderedMutex<Option<(String, u64)>>,
     /// Path uuid from the stream handshake (both sides, where known).
-    uuid: Mutex<Option<u64>>,
+    uuid: OrderedMutex<Option<u64>>,
 }
 
 impl std::fmt::Debug for Path {
@@ -176,29 +178,34 @@ impl Path {
             .map(|p| {
                 let (tx, rx, fd, kill) = p.into_parts();
                 StreamSlot {
-                    tx: Mutex::new(TxHalf { w: tx, pacer: Pacer::new(cfg.pacing_rate) }),
-                    rx: Mutex::new(rx),
-                    meta: Mutex::new(SlotMeta { fd, kill }),
+                    tx: OrderedMutex::new(
+                        rank::STREAM_TX,
+                        TxHalf { w: tx, pacer: Pacer::new(cfg.pacing_rate) },
+                    ),
+                    rx: OrderedMutex::new(rank::STREAM_RX, rx),
+                    meta: OrderedMutex::new(rank::STREAM_META, SlotMeta { fd, kill }),
                     dead: AtomicBool::new(false),
                     inbox: FrameBox::default(),
                 }
             })
             .collect();
         let tuning = Arc::new(TuningState::from_config(&cfg));
-        let controller =
-            Mutex::new(AdaptiveController::new(cfg.adapt.clone(), streams.len()));
+        let controller = OrderedMutex::new(
+            rank::CONTROLLER,
+            AdaptiveController::new(cfg.adapt.clone(), streams.len()),
+        );
         let resilient = cfg.resilience.enabled;
         let ack_timeout = cfg.resilience.ack_timeout;
         let write_timeout = cfg.resilience.write_timeout;
         let reconnect = cfg.resilience.reconnect.clone();
         Ok(Path {
             streams,
-            cfg: Mutex::new(cfg),
+            cfg: OrderedMutex::new(rank::PATH_CFG, cfg),
             tuning,
             controller,
             peer,
-            send_gate: Mutex::new(()),
-            recv_gate: Mutex::new(()),
+            send_gate: OrderedMutex::new(rank::SEND_GATE, ()),
+            recv_gate: OrderedMutex::new(rank::RECV_GATE, ()),
             health: HealthState::new(),
             cur_ctrl: AtomicUsize::new(0),
             res_send_seq: AtomicU64::new(0),
@@ -210,9 +217,9 @@ impl Path {
             recv_reorder: resilience::ReorderBuf::default(),
             write_timeout,
             closed: AtomicBool::new(false),
-            reconnect: Mutex::new(reconnect),
-            remote: Mutex::new(None),
-            uuid: Mutex::new(None),
+            reconnect: OrderedMutex::new(rank::RECONNECT_POLICY, reconnect),
+            remote: OrderedMutex::new(rank::PATH_REMOTE, None),
+            uuid: OrderedMutex::new(rank::PATH_UUID, None),
         })
     }
 
@@ -224,8 +231,8 @@ impl Path {
         let (pairs, uuid) = connect_streams(host, port, cfg.nstreams, cfg.connect_timeout)?;
         let autotune = cfg.autotune;
         let path = Path::from_pairs(pairs, cfg)?;
-        *path.remote.lock().unwrap() = Some((format!("{host}:{port}"), uuid));
-        *path.uuid.lock().unwrap() = Some(uuid);
+        *path.remote.lock() = Some((format!("{host}:{port}"), uuid));
+        *path.uuid.lock() = Some(uuid);
         if autotune {
             // Suspend runtime adaptation while the probe protocol runs:
             // the probes must measure each chunk candidate under identical
@@ -253,7 +260,7 @@ impl Path {
     /// (chunk size, pacing) overlaid so it reflects what the path is
     /// actually doing right now.
     pub fn config(&self) -> PathConfig {
-        let mut cfg = self.cfg.lock().unwrap().clone();
+        let mut cfg = self.cfg.lock().clone();
         cfg.chunk_size = self.tuning.chunk();
         cfg.pacing_rate = self.tuning.pacing();
         cfg
@@ -279,7 +286,7 @@ impl Path {
     /// controller's smoothed goodput estimate.
     pub fn tune_snapshot(&self) -> TuneSnapshot {
         let mut s = self.tuning.snapshot();
-        s.ewma_rate = self.controller.lock().unwrap().ewma_rate();
+        s.ewma_rate = self.controller.lock().ewma_rate();
         s
     }
 
@@ -287,7 +294,7 @@ impl Path {
     /// creation-time autotuner so the collapse detector is armed from the
     /// first send).
     pub(crate) fn note_tuned_rate(&self, rate: f64) {
-        self.controller.lock().unwrap().seed_rate(rate);
+        self.controller.lock().seed_rate(rate);
     }
 
     /// `MPW_setChunkSize`: bytes handed to each low-level tcp call.
@@ -295,7 +302,7 @@ impl Path {
         if chunk == 0 {
             return Err(MpwError::Config("chunk_size must be >= 1".into()));
         }
-        self.cfg.lock().unwrap().chunk_size = chunk;
+        self.cfg.lock().chunk_size = chunk;
         self.tuning.set_chunk(chunk);
         Ok(())
     }
@@ -308,10 +315,10 @@ impl Path {
                 return Err(MpwError::Config(format!("pacing rate must be positive, got {r}")));
             }
         }
-        self.cfg.lock().unwrap().pacing_rate = rate;
+        self.cfg.lock().pacing_rate = rate;
         self.tuning.set_pacing(rate);
         for s in &self.streams {
-            s.tx.lock().unwrap().pacer.set_rate(rate);
+            s.tx.lock().pacer.set_rate(rate);
         }
         Ok(())
     }
@@ -320,10 +327,10 @@ impl Path {
     /// clamp it to site limits. Returns the granted value of the last
     /// stream (None for non-socket transports).
     pub fn set_window(&self, bytes: usize) -> Result<Option<usize>> {
-        self.cfg.lock().unwrap().tcp_window = Some(bytes);
+        self.cfg.lock().tcp_window = Some(bytes);
         let mut granted = None;
         for s in &self.streams {
-            let fd = s.meta.lock().unwrap().fd;
+            let fd = s.meta.lock().fd;
             if let Some(fd) = fd {
                 granted = super::transport::set_socket_window(fd, bytes)?;
             }
@@ -333,13 +340,13 @@ impl Path {
 
     /// `MPW_setAutoTuning`.
     pub fn set_autotuning(&self, on: bool) {
-        self.cfg.lock().unwrap().autotune = on;
+        self.cfg.lock().autotune = on;
     }
 
     /// `MPW_Send`: send `buf`, split evenly over the streams. The receiver
     /// must post a `recv` of exactly the same size. Returns bytes sent.
     pub fn send(&self, buf: &[u8]) -> Result<usize> {
-        let _gate = self.send_gate.lock().unwrap();
+        let _gate = self.send_gate.lock();
         self.send_ungated(buf)
     }
 
@@ -354,7 +361,7 @@ impl Path {
     /// [`SplitBuf::slice`] and written with one vectored call each. This
     /// is the mux layer's hot path (channel-frame header + payload).
     pub fn send_split(&self, head: &[u8], tail: &[u8]) -> Result<usize> {
-        let _gate = self.send_gate.lock().unwrap();
+        let _gate = self.send_gate.lock();
         self.send_split_ungated(SplitBuf { head, tail })
     }
 
@@ -406,7 +413,7 @@ impl Path {
         }
         let decision = {
             let snapshot = self.tuning.snapshot();
-            let mut c = self.controller.lock().unwrap();
+            let mut c = self.controller.lock();
             c.observe(bytes, elapsed.as_secs_f64(), &snapshot)
         };
         if decision.is_hold() {
@@ -417,7 +424,7 @@ impl Path {
             // pacers are per-stream state behind the tx locks; the send
             // workers are done by now, so these are uncontended
             for s in &self.streams {
-                s.tx.lock().unwrap().pacer.set_rate(rate);
+                s.tx.lock().pacer.set_rate(rate);
             }
         }
     }
@@ -425,7 +432,7 @@ impl Path {
     /// Write the 2-byte active-stream header on stream 0 (always the
     /// first bytes of a message, ahead of any striped payload).
     fn write_active_header(&self, active: usize, flush: bool) -> Result<()> {
-        let mut tx = self.streams[0].tx.lock().unwrap();
+        let mut tx = self.streams[0].tx.lock();
         tx.w.write_all(&(active as u16).to_be_bytes())?;
         if flush {
             tx.w.flush()?;
@@ -436,7 +443,7 @@ impl Path {
     /// Read the peer's active-stream header from stream 0.
     fn read_active_header(&self) -> Result<usize> {
         let mut hdr = [0u8; ACTIVE_HEADER_LEN];
-        self.streams[0].rx.lock().unwrap().read_exact(&mut hdr)?;
+        self.streams[0].rx.lock().read_exact(&mut hdr)?;
         let n = u16::from_be_bytes(hdr) as usize;
         if n == 0 || n > self.streams.len() {
             return Err(MpwError::Protocol(format!(
@@ -450,7 +457,7 @@ impl Path {
     /// `MPW_Recv`: receive exactly `buf.len()` bytes, merging the incoming
     /// per-stream segments. Returns bytes received.
     pub fn recv(&self, buf: &mut [u8]) -> Result<usize> {
-        let _gate = self.recv_gate.lock().unwrap();
+        let _gate = self.recv_gate.lock();
         self.recv_ungated(buf)
     }
 
@@ -538,7 +545,7 @@ impl Path {
         if !self.resilient {
             return Ok(());
         }
-        let _gate = self.send_gate.lock().unwrap();
+        let _gate = self.send_gate.lock();
         resilience::drain_window(self)
     }
 
@@ -558,7 +565,7 @@ impl Path {
         if self.resilient {
             let mut empty: [u8; 0] = [];
             self.send_recv(&[], &mut empty)?;
-            let _gate = self.send_gate.lock().unwrap();
+            let _gate = self.send_gate.lock();
             return resilience::drain_window(self);
         }
         const TOKEN: u8 = 0xB7;
@@ -567,8 +574,8 @@ impl Path {
         let mut b = [0u8; 1];
         {
             let tx_job = || -> Result<()> {
-                let _gate = self.send_gate.lock().unwrap();
-                let mut tx = slot.tx.lock().unwrap();
+                let _gate = self.send_gate.lock();
+                let mut tx = slot.tx.lock();
                 tx.w.write_all(&[TOKEN])?;
                 tx.w.flush()?;
                 Ok(())
@@ -576,8 +583,8 @@ impl Path {
             let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![Box::new(|| tx_res = tx_job())];
             // token receive runs inline; the pool handles the send half
             crate::util::pool::scope_with_inline(jobs, || -> Result<()> {
-                let _gate = self.recv_gate.lock().unwrap();
-                slot.rx.lock().unwrap().read_exact(&mut b)?;
+                let _gate = self.recv_gate.lock();
+                slot.rx.lock().read_exact(&mut b)?;
                 Ok(())
             })?;
         }
@@ -646,7 +653,7 @@ impl Path {
         if i >= self.streams.len() {
             return;
         }
-        let _g = self.health.sync.lock().unwrap();
+        let _g = self.health.sync.lock();
         if self.health.generation.load(Ordering::SeqCst) != gen_seen {
             return;
         }
@@ -654,7 +661,7 @@ impl Path {
         if slot.dead.swap(true, Ordering::SeqCst) {
             return;
         }
-        slot.meta.lock().unwrap().kill.fire();
+        slot.meta.lock().kill.fire();
         // Eagerly rotate the control stream off the dead slot. Rotation
         // must happen at *death observation* (which both ends make,
         // because the kill propagates), not lazily at the next use: a
@@ -669,7 +676,7 @@ impl Path {
         }
         let live = self.live_stream_indices().len().max(1);
         self.tuning.apply_live_limit(live);
-        self.controller.lock().unwrap().set_ceiling(live);
+        self.controller.lock().set_ceiling(live);
         self.health.cv.notify_all();
     }
 
@@ -692,7 +699,7 @@ impl Path {
         if i >= self.streams.len() {
             return Err(MpwError::Config(format!("stream index {i} out of range")));
         }
-        let _g = self.health.sync.lock().unwrap();
+        let _g = self.health.sync.lock();
         // checked under the health lock: a close() racing this install
         // must not be followed by a resurrecting reinstall
         if self.is_closed() {
@@ -702,7 +709,7 @@ impl Path {
         if !slot.dead.load(Ordering::SeqCst) {
             return Err(MpwError::Protocol(format!("stream {i} is alive; refusing reinstall")));
         }
-        if let Some(win) = self.cfg.lock().unwrap().tcp_window {
+        if let Some(win) = self.cfg.lock().tcp_window {
             let _ = pair.set_window(win);
         }
         // the write deadline is per-socket state: reapply to the fresh fd
@@ -716,22 +723,22 @@ impl Path {
             // KillSwitch must already be unreachable by then — a
             // concurrent shutdown_all_streams may fire the *new* switch
             // (correct: it wants everything closed) but never a stale fd
-            let mut m = slot.meta.lock().unwrap();
+            let mut m = slot.meta.lock();
             m.fd = fd;
             m.kill = kill;
         }
         {
-            let mut txg = slot.tx.lock().unwrap();
+            let mut txg = slot.tx.lock();
             txg.w = tx;
             txg.pacer.set_rate(self.tuning.pacing());
         }
-        *slot.rx.lock().unwrap() = rx;
+        *slot.rx.lock() = rx;
         // frames parked off the dead transport must not replay on the new
         slot.inbox.clear();
         slot.dead.store(false, Ordering::SeqCst);
         let live = self.live_stream_indices().len();
         self.tuning.apply_live_limit(live);
-        self.controller.lock().unwrap().set_ceiling(live);
+        self.controller.lock().set_ceiling(live);
         self.health.rejoined.fetch_add(1, Ordering::SeqCst);
         self.health.generation.fetch_add(1, Ordering::SeqCst);
         self.health.cv.notify_all();
@@ -742,12 +749,12 @@ impl Path {
     /// `AllStreamsDead` when reconnection is disabled, or after the
     /// policy's `rejoin_wait` deadline otherwise.
     pub(crate) fn wait_for_any_live(&self) -> Result<()> {
-        let policy = self.reconnect.lock().unwrap().clone();
+        let policy = self.reconnect.lock().clone();
         if self.is_closed() || !policy.enabled {
             return Err(MpwError::AllStreamsDead);
         }
         let deadline = Instant::now() + policy.rejoin_wait;
-        let mut g = self.health.sync.lock().unwrap();
+        let mut g = self.health.sync.lock();
         loop {
             if self.is_closed() {
                 return Err(MpwError::AllStreamsDead);
@@ -759,14 +766,14 @@ impl Path {
             if now >= deadline {
                 return Err(MpwError::AllStreamsDead);
             }
-            let (g2, _) = self.health.cv.wait_timeout(g, deadline - now).unwrap();
+            let (g2, _) = self.health.cv.wait_timeout(g, deadline - now);
             g = g2;
         }
     }
 
     /// The path's reconnect policy (a snapshot).
     pub fn reconnect_policy(&self) -> ReconnectPolicy {
-        self.reconnect.lock().unwrap().clone()
+        self.reconnect.lock().clone()
     }
 
     /// Replace the reconnect policy at runtime (`MPW_setReconnectPolicy`
@@ -781,25 +788,25 @@ impl Path {
             ..Default::default()
         };
         probe.validate()?;
-        *self.reconnect.lock().unwrap() = policy;
+        *self.reconnect.lock() = policy;
         // wake the monitor so a newly-enabled policy acts promptly
-        let _g = self.health.sync.lock().unwrap();
+        let _g = self.health.sync.lock();
         self.health.cv.notify_all();
         Ok(())
     }
 
     /// Remote endpoint (`host:port`, path uuid) — connecting side only.
     pub fn remote_endpoint(&self) -> Option<(String, u64)> {
-        self.remote.lock().unwrap().clone()
+        self.remote.lock().clone()
     }
 
     /// The path uuid agreed in the stream handshake, where known.
     pub fn path_uuid(&self) -> Option<u64> {
-        *self.uuid.lock().unwrap()
+        *self.uuid.lock()
     }
 
     pub(crate) fn set_path_uuid(&self, uuid: u64) {
-        *self.uuid.lock().unwrap() = Some(uuid);
+        *self.uuid.lock() = Some(uuid);
     }
 
     /// `MPW_PathStatus`: point-in-time health report.
@@ -816,7 +823,7 @@ impl Path {
             ack_timeouts: self.ack_watchdog.fired(),
             window_in_flight: self.send_window.in_flight(),
             resilient: self.resilient,
-            reconnect_enabled: self.reconnect.lock().unwrap().enabled,
+            reconnect_enabled: self.reconnect.lock().enabled,
         }
     }
 
@@ -832,7 +839,7 @@ impl Path {
             // flag set under the health lock: a racing reinstall either
             // completed before this (and its fresh transport is killed by
             // the shutdown below) or observes the flag and refuses
-            let _g = self.health.sync.lock().unwrap();
+            let _g = self.health.sync.lock();
             self.closed.store(true, Ordering::SeqCst);
             self.health.cv.notify_all();
         }
@@ -849,12 +856,12 @@ impl Path {
     /// in reads on healthy streams when a sibling stream fails hard).
     pub(crate) fn shutdown_all_streams(&self) {
         for s in &self.streams {
-            s.meta.lock().unwrap().kill.fire();
+            s.meta.lock().kill.fire();
         }
     }
 
     fn send_worker(slot: &StreamSlot, data: SplitBuf<'_>, chunk: usize) -> Result<()> {
-        let mut tx = slot.tx.lock().unwrap();
+        let mut tx = slot.tx.lock();
         for c in stripe::chunks(0..data.len(), chunk) {
             tx.pacer.acquire(c.len());
             let (h, t) = data.slice(c);
@@ -865,7 +872,7 @@ impl Path {
     }
 
     fn recv_worker(slot: &StreamSlot, data: &mut [u8], chunk: usize) -> Result<()> {
-        let mut rx = slot.rx.lock().unwrap();
+        let mut rx = slot.rx.lock();
         for c in stripe::chunks(0..data.len(), chunk) {
             rx.read_exact(&mut data[c])?;
         }
@@ -951,8 +958,9 @@ impl PathListener {
     /// Convert the listener into a background [`RejoinDaemon`] serving
     /// stream rejoins for every path accepted via
     /// [`PathListener::accept_path_arc`]. Call once all expected paths
-    /// have been accepted.
-    pub fn into_rejoin_daemon(self) -> RejoinDaemon {
+    /// have been accepted. Fails only when the OS refuses to spawn the
+    /// daemon thread.
+    pub fn into_rejoin_daemon(self) -> Result<RejoinDaemon> {
         RejoinDaemon::spawn(self.raw, self.registry)
     }
 }
@@ -1169,7 +1177,7 @@ mod tests {
         let (a, b) = mem_paths(2);
         // forge a header advertising more streams than the path has
         {
-            let mut tx = a.streams[0].tx.lock().unwrap();
+            let mut tx = a.streams[0].tx.lock();
             tx.w.write_all(&9u16.to_be_bytes()).unwrap();
         }
         let mut buf = [0u8; 4];

@@ -236,7 +236,7 @@ fn pump(
     let mut total = 0u64;
     loop {
         let n = {
-            let mut rx = src.rx.lock().unwrap();
+            let mut rx = src.rx.lock();
             match rx.read_some(&mut buf) {
                 Ok(0) => break,
                 Ok(n) => n,
@@ -253,7 +253,7 @@ fn pump(
         if let Some(d) = delay {
             std::thread::sleep(d);
         }
-        let mut tx = dst.tx.lock().unwrap();
+        let mut tx = dst.tx.lock();
         tx.pacer.acquire(n);
         match tx.w.write_all(&buf[..n]) {
             Ok(()) => {}

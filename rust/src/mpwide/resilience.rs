@@ -123,7 +123,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::sync::{Arc, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -131,6 +131,7 @@ use super::errors::{MpwError, Result};
 use super::path::Path;
 use super::stripe::{self, SplitBuf};
 use super::transport::{reconnect_stream, KillSwitch, RawPathListener, StreamPair, REJOIN_ACK};
+use crate::util::lockorder::{rank, OrderedCondvar, OrderedMutex};
 
 /// Sanity byte opening every resilient frame.
 pub const FRAME_MAGIC: u8 = 0xF5;
@@ -270,15 +271,20 @@ pub fn parse_ctrl(p: &[u8]) -> Result<CtrlMsg> {
 /// stream). Whoever holds the rx lock reads whole frames and parks the
 /// ones that are not theirs here; every consumer checks the inbox
 /// before (and immediately after) taking the lock.
-#[derive(Default)]
 pub(crate) struct FrameBox {
-    q: Mutex<VecDeque<(FrameHdr, Vec<u8>)>>,
+    q: OrderedMutex<VecDeque<(FrameHdr, Vec<u8>)>>,
+}
+
+impl Default for FrameBox {
+    fn default() -> Self {
+        FrameBox { q: OrderedMutex::new(rank::FRAME_INBOX, VecDeque::new()) }
+    }
 }
 
 impl FrameBox {
     /// Park a frame for another consumer.
     fn push(&self, hdr: FrameHdr, payload: Vec<u8>) {
-        self.q.lock().unwrap().push_back((hdr, payload));
+        self.q.lock().push_back((hdr, payload));
     }
 
     /// Take the oldest parked frame of `kind`, if any.
@@ -290,7 +296,7 @@ impl FrameBox {
     /// non-matching frames in place (they belong to another consumer —
     /// e.g. a pipelined later message — and must keep their order).
     fn take_where(&self, kind: u8, pred: impl Fn(&FrameHdr) -> bool) -> Option<(FrameHdr, Vec<u8>)> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = self.q.lock();
         let pos = q.iter().position(|(h, _)| h.kind == kind && pred(h))?;
         q.remove(pos)
     }
@@ -299,13 +305,13 @@ impl FrameBox {
     /// delivered, stale duplicates of its segments (reposts that raced
     /// the delivery) can never be consumed and would otherwise leak.
     fn purge_data_through(&self, seq: u64) {
-        self.q.lock().unwrap().retain(|(h, _)| h.kind != KIND_DATA || h.msg_seq > seq);
+        self.q.lock().retain(|(h, _)| h.kind != KIND_DATA || h.msg_seq > seq);
     }
 
     /// Discard every parked frame (stream rejoin: frames parked off the
     /// old transport must not be replayed against the new one).
     pub(crate) fn clear(&self) {
-        self.q.lock().unwrap().clear();
+        self.q.lock().clear();
     }
 }
 
@@ -332,8 +338,8 @@ pub(crate) struct AckWatchdog {
 }
 
 struct WdShared {
-    st: Mutex<WdState>,
-    cv: Condvar,
+    st: OrderedMutex<WdState>,
+    cv: OrderedCondvar,
 }
 
 struct WdState {
@@ -351,44 +357,47 @@ impl AckWatchdog {
     pub(crate) fn new() -> AckWatchdog {
         AckWatchdog {
             shared: Arc::new(WdShared {
-                st: Mutex::new(WdState {
-                    token: 0,
-                    deadline: None,
-                    kill: None,
-                    fired: 0,
-                    spawned: false,
-                    stop: false,
-                }),
-                cv: Condvar::new(),
+                st: OrderedMutex::new(
+                    rank::ACK_WATCHDOG,
+                    WdState {
+                        token: 0,
+                        deadline: None,
+                        kill: None,
+                        fired: 0,
+                        spawned: false,
+                        stop: false,
+                    },
+                ),
+                cv: OrderedCondvar::new(),
             }),
         }
     }
 
     /// Register a deadline; returns the token to pass to `disarm`.
-    /// Spawns the timer thread on first use.
-    pub(crate) fn arm(&self, kill: KillSwitch, timeout: Duration) -> u64 {
-        let mut g = self.shared.st.lock().unwrap();
+    /// Spawns the timer thread on first use (a failed spawn surfaces as
+    /// `Io` and leaves the watchdog unarmed, so a later arm retries).
+    pub(crate) fn arm(&self, kill: KillSwitch, timeout: Duration) -> Result<u64> {
+        let mut g = self.shared.st.lock();
         if !g.spawned {
-            g.spawned = true;
             let shared = self.shared.clone();
             let handle = std::thread::Builder::new()
                 .name("mpwide-ack-watchdog".into())
-                .spawn(move || watchdog_loop(shared))
-                .expect("spawn ack watchdog");
+                .spawn(move || watchdog_loop(shared))?;
             // detached deliberately: the thread exits via the stop flag
             drop(handle);
+            g.spawned = true;
         }
         g.token += 1;
         g.deadline = Some(Instant::now() + timeout);
         g.kill = Some(kill);
         self.shared.cv.notify_all();
-        g.token
+        Ok(g.token)
     }
 
     /// Cancel the deadline registered under `token` (no-op if the
     /// watchdog already fired or a newer wait re-armed).
     pub(crate) fn disarm(&self, token: u64) {
-        let mut g = self.shared.st.lock().unwrap();
+        let mut g = self.shared.st.lock();
         if g.token == token {
             g.deadline = None;
             g.kill = None;
@@ -397,12 +406,12 @@ impl AckWatchdog {
 
     /// How many times the watchdog fired over the path's lifetime.
     pub(crate) fn fired(&self) -> u64 {
-        self.shared.st.lock().unwrap().fired
+        self.shared.st.lock().fired
     }
 
     /// Stop the timer thread (called when the path closes / drops).
     pub(crate) fn stop(&self) {
-        let mut g = self.shared.st.lock().unwrap();
+        let mut g = self.shared.st.lock();
         g.stop = true;
         g.deadline = None;
         g.kill = None;
@@ -417,14 +426,14 @@ impl Default for AckWatchdog {
 }
 
 fn watchdog_loop(shared: Arc<WdShared>) {
-    let mut g = shared.st.lock().unwrap();
+    let mut g = shared.st.lock();
     loop {
         if g.stop {
             return;
         }
         match g.deadline {
             None => {
-                g = shared.cv.wait(g).unwrap();
+                g = shared.cv.wait(g);
             }
             Some(d) => {
                 let now = Instant::now();
@@ -436,9 +445,9 @@ fn watchdog_loop(shared: Arc<WdShared>) {
                     if let Some(k) = kill {
                         k.fire();
                     }
-                    g = shared.st.lock().unwrap();
+                    g = shared.st.lock();
                 } else {
-                    let (g2, _) = shared.cv.wait_timeout(g, d - now).unwrap();
+                    let (g2, _) = shared.cv.wait_timeout(g, d - now);
                     g = g2;
                 }
             }
@@ -458,8 +467,8 @@ fn watchdog_loop(shared: Arc<WdShared>) {
 pub(crate) struct HealthState {
     pub(crate) generation: AtomicU64,
     pub(crate) rejoined: AtomicU64,
-    pub(crate) sync: Mutex<()>,
-    pub(crate) cv: Condvar,
+    pub(crate) sync: OrderedMutex<()>,
+    pub(crate) cv: OrderedCondvar,
 }
 
 impl HealthState {
@@ -467,8 +476,8 @@ impl HealthState {
         HealthState {
             generation: AtomicU64::new(0),
             rejoined: AtomicU64::new(0),
-            sync: Mutex::new(()),
-            cv: Condvar::new(),
+            sync: OrderedMutex::new(rank::HEALTH, ()),
+            cv: OrderedCondvar::new(),
         }
     }
 }
@@ -546,7 +555,7 @@ fn write_frame(
 ) -> Result<()> {
     let hdr = encode_frame_hdr(kind, msg_seq, attempt, payload.len() as u32);
     let slot = &path.streams[s];
-    let mut tx = slot.tx.lock().unwrap();
+    let mut tx = slot.tx.lock();
     if kind == KIND_DATA {
         tx.pacer.acquire(payload.len());
     }
@@ -585,7 +594,7 @@ fn read_raw_frame_where(
     if !path.stream_alive(s) {
         return Err(MpwError::StreamDead { stream: s });
     }
-    let mut rx = path.streams[s].rx.lock().unwrap();
+    let mut rx = path.streams[s].rx.lock();
     if let Some(f) = path.streams[s].inbox.take_where(want, &pred) {
         return Ok(f);
     }
@@ -637,7 +646,7 @@ fn send_segment(
         let (h, t) = data.slice(c);
         write_frame(path, s, KIND_DATA, msg_seq, attempt, SplitBuf { head: h, tail: t }, false)?;
     }
-    path.streams[s].tx.lock().unwrap().w.flush()?;
+    path.streams[s].tx.lock().w.flush()?;
     Ok(())
 }
 
@@ -695,7 +704,7 @@ fn recv_segment(path: &Path, s: usize, msg_seq: u64, attempt: u32, out: &mut [u8
         if !path.stream_alive(s) {
             return Err(MpwError::StreamDead { stream: s });
         }
-        let mut rx = path.streams[s].rx.lock().unwrap();
+        let mut rx = path.streams[s].rx.lock();
         // Re-check after acquiring: the previous lock holder may have
         // parked a frame for us while we waited.
         if let Some((hdr, payload)) = path.streams[s].inbox.take_where(KIND_DATA, ours) {
@@ -1001,8 +1010,11 @@ fn send_rendezvous(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
         // configured progress timeout force-closes the control stream so
         // the wait fails over to the normal retry path.
         let ack = if let Some(t) = path.ack_timeout() {
-            let kill = path.streams[c].meta.lock().unwrap().kill.clone();
-            let token = path.ack_watchdog.arm(kill, t);
+            let kill = path.streams[c].meta.lock().kill.clone();
+            let token = match path.ack_watchdog.arm(kill, t) {
+                Ok(tok) => tok,
+                Err(e) => return Err(fatal(path, e)),
+            };
             let r = wait_ack(path, c, msg_seq, attempt);
             path.ack_watchdog.disarm(token);
             r
@@ -1067,15 +1079,20 @@ struct SendState {
 
 /// Sliding-window state of a path's resilient sender (a Path field;
 /// empty and inert while `window == 1`).
-#[derive(Default)]
 pub(crate) struct SendWindow {
-    st: Mutex<SendState>,
+    st: OrderedMutex<SendState>,
+}
+
+impl Default for SendWindow {
+    fn default() -> Self {
+        SendWindow { st: OrderedMutex::new(rank::SEND_WINDOW, SendState::default()) }
+    }
 }
 
 impl SendWindow {
     /// Number of posted-but-unacknowledged messages.
     pub(crate) fn in_flight(&self) -> usize {
-        self.st.lock().unwrap().outstanding.len()
+        self.st.lock().outstanding.len()
     }
 }
 
@@ -1165,8 +1182,11 @@ fn reap_some(path: &Path, st: &mut SendState) -> Result<()> {
                 if let Some((tok, _, _)) = armed.take() {
                     path.ack_watchdog.disarm(tok);
                 }
-                let kill = path.streams[c].meta.lock().unwrap().kill.clone();
-                armed = Some((path.ack_watchdog.arm(kill, t), oldest, c));
+                let kill = path.streams[c].meta.lock().kill.clone();
+                match path.ack_watchdog.arm(kill, t) {
+                    Ok(tok) => armed = Some((tok, oldest, c)),
+                    Err(e) => break Err(e),
+                }
             }
         }
         let (hdr, payload) = match read_ack_frame(path, c) {
@@ -1192,8 +1212,9 @@ fn reap_some(path: &Path, st: &mut SendState) -> Result<()> {
         };
         if payload[0] == ACK_OK {
             // any attempt counts: delivery is per message, not per attempt
-            let p = st.outstanding.remove(pos).expect("position came from this deque");
-            path.observe_send(p.data.len(), p.t0.elapsed());
+            if let Some(p) = st.outstanding.remove(pos) {
+                path.observe_send(p.data.len(), p.t0.elapsed());
+            }
             continue;
         }
         if hdr.attempt < st.outstanding[pos].attempt {
@@ -1222,7 +1243,7 @@ fn reap_some(path: &Path, st: &mut SendState) -> Result<()> {
 fn send_windowed(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
     let t0 = Instant::now();
     let limit = path.send_window_limit();
-    let mut st = path.send_window.st.lock().unwrap();
+    let mut st = path.send_window.st.lock();
     if let Some(msg) = &st.poisoned {
         return Err(poisoned_err(msg));
     }
@@ -1255,7 +1276,7 @@ fn send_windowed(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
 /// `Path::barrier`, the mux pump's idle drain, and the rendezvous
 /// fallback after a runtime window narrowing.
 pub(crate) fn drain_window(path: &Path) -> Result<()> {
-    let mut st = path.send_window.st.lock().unwrap();
+    let mut st = path.send_window.st.lock();
     if st.outstanding.is_empty() && st.poisoned.is_none() {
         return Ok(());
     }
@@ -1286,24 +1307,29 @@ pub(crate) enum RecvTarget<'a> {
 /// entries because the receiver rejects CTRLs beyond `expected +
 /// MAX_WINDOW` (no sender can legally have more in flight). A Path
 /// field; empty and inert against rendezvous peers.
-#[derive(Default)]
 pub(crate) struct ReorderBuf {
-    q: Mutex<HashMap<u64, Vec<u8>>>,
+    q: OrderedMutex<HashMap<u64, Vec<u8>>>,
+}
+
+impl Default for ReorderBuf {
+    fn default() -> Self {
+        ReorderBuf { q: OrderedMutex::new(rank::RECV_REORDER, HashMap::new()) }
+    }
 }
 
 impl ReorderBuf {
     /// Whether `seq` is already complete in the stash (its sender must
     /// be re-acknowledged, not re-served).
     pub(crate) fn contains(&self, seq: u64) -> bool {
-        self.q.lock().unwrap().contains_key(&seq)
+        self.q.lock().contains_key(&seq)
     }
 
     fn insert(&self, seq: u64, data: Vec<u8>) {
-        self.q.lock().unwrap().insert(seq, data);
+        self.q.lock().insert(seq, data);
     }
 
     fn remove(&self, seq: u64) -> Option<Vec<u8>> {
-        self.q.lock().unwrap().remove(&seq)
+        self.q.lock().remove(&seq)
     }
 }
 
@@ -1590,16 +1616,16 @@ pub struct ReconnectMonitor {
 }
 
 /// Spawn a reconnect monitor for `path`. The monitor holds only a weak
-/// reference: it exits on its own when the path is dropped.
-pub fn spawn_reconnect_monitor(path: &Arc<Path>) -> ReconnectMonitor {
+/// reference: it exits on its own when the path is dropped. Fails only
+/// when the OS refuses to spawn the monitor thread.
+pub fn spawn_reconnect_monitor(path: &Arc<Path>) -> Result<ReconnectMonitor> {
     let weak = Arc::downgrade(path);
     let stop = Arc::new(AtomicBool::new(false));
     let (w2, s2) = (weak.clone(), stop.clone());
     let handle = std::thread::Builder::new()
         .name("mpwide-rejoin".into())
-        .spawn(move || monitor_loop(w2, s2))
-        .expect("spawn reconnect monitor");
-    ReconnectMonitor { stop, weak, handle: Some(handle) }
+        .spawn(move || monitor_loop(w2, s2))?;
+    Ok(ReconnectMonitor { stop, weak, handle: Some(handle) })
 }
 
 /// Per-stream reconnect bookkeeping of the monitor.
@@ -1692,8 +1718,8 @@ fn monitor_loop(weak: Weak<Path>, stop: Arc<AtomicBool>) {
             // checks)
             _ => Duration::from_secs(2),
         };
-        let g = path.health.sync.lock().unwrap();
-        let _ = path.health.cv.wait_timeout(g, wait).unwrap();
+        let g = path.health.sync.lock();
+        let _ = path.health.cv.wait_timeout(g, wait);
         drop(path);
     }
 }
@@ -1702,7 +1728,7 @@ impl Drop for ReconnectMonitor {
     fn drop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(p) = self.weak.upgrade() {
-            let _g = p.health.sync.lock().unwrap();
+            let _g = p.health.sync.lock();
             p.health.cv.notify_all();
         }
         // Detach rather than join: an in-flight reconnect attempt may be
@@ -1719,7 +1745,7 @@ pub fn connect_with_rejoin(
     cfg: super::config::PathConfig,
 ) -> Result<(Arc<Path>, ReconnectMonitor)> {
     let path = Arc::new(Path::connect(host, port, cfg)?);
-    let monitor = spawn_reconnect_monitor(&path);
+    let monitor = spawn_reconnect_monitor(&path)?;
     Ok((path, monitor))
 }
 
@@ -1729,23 +1755,28 @@ pub fn connect_with_rejoin(
 
 /// Accepted paths a listener is willing to rejoin streams into, keyed by
 /// path uuid.
-#[derive(Default)]
 pub struct RejoinRegistry {
-    map: Mutex<HashMap<u64, Weak<Path>>>,
+    map: OrderedMutex<HashMap<u64, Weak<Path>>>,
+}
+
+impl Default for RejoinRegistry {
+    fn default() -> Self {
+        RejoinRegistry { map: OrderedMutex::new(rank::REJOIN_REGISTRY, HashMap::new()) }
+    }
 }
 
 impl RejoinRegistry {
     /// Register a path under its uuid (called by
     /// [`PathListener::accept_path_arc`](super::path::PathListener::accept_path_arc)).
     pub fn register(&self, uuid: u64, path: &Arc<Path>) {
-        let mut m = self.map.lock().unwrap();
+        let mut m = self.map.lock();
         m.retain(|_, w| w.strong_count() > 0);
         m.insert(uuid, Arc::downgrade(path));
     }
 
     /// Look up a registered, still-alive path.
     pub fn lookup(&self, uuid: u64) -> Option<Arc<Path>> {
-        self.map.lock().unwrap().get(&uuid).and_then(Weak::upgrade)
+        self.map.lock().get(&uuid).and_then(Weak::upgrade)
     }
 }
 
@@ -1763,7 +1794,10 @@ pub struct RejoinDaemon {
 }
 
 impl RejoinDaemon {
-    pub(crate) fn spawn(mut raw: RawPathListener, registry: Arc<RejoinRegistry>) -> RejoinDaemon {
+    pub(crate) fn spawn(
+        mut raw: RawPathListener,
+        registry: Arc<RejoinRegistry>,
+    ) -> Result<RejoinDaemon> {
         let stop = Arc::new(AtomicBool::new(false));
         let port = raw.port();
         let s2 = stop.clone();
@@ -1811,9 +1845,8 @@ impl RejoinDaemon {
                         std::thread::sleep(Duration::from_millis(20));
                     }
                 }
-            })
-            .expect("spawn rejoin daemon");
-        RejoinDaemon { stop, port, handle: Some(handle) }
+            })?;
+        Ok(RejoinDaemon { stop, port, handle: Some(handle) })
     }
 
     /// The port the daemon keeps listening on.

@@ -11,10 +11,11 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::os::fd::AsRawFd;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::errors::{MpwError, Result};
+use crate::util::lockorder::{rank, OrderedCondvar, OrderedMutex};
 
 /// Magic bytes opening the per-stream handshake.
 pub const HELLO_MAGIC: [u8; 4] = *b"MPW1";
@@ -548,16 +549,19 @@ struct ChanInner {
     killed: bool,
 }
 
+// Default puts the mutex at MEM_CHAN — the leaf rank; the in-memory
+// transports lock it below every library lock, including inside tx/rx
+// stream guards.
 #[derive(Default)]
 struct Chan {
-    inner: Mutex<ChanInner>,
-    cv: Condvar,
+    inner: OrderedMutex<ChanInner>,
+    cv: OrderedCondvar,
 }
 
 impl Chan {
     /// Poison the channel: pending and future reads/writes fail.
     fn kill(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.killed = true;
         g.closed = true;
         self.cv.notify_all();
@@ -571,7 +575,7 @@ pub struct MemReader(Arc<Chan>);
 
 impl Write for MemWriter {
     fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
-        let mut g = self.0.inner.lock().unwrap();
+        let mut g = self.0.inner.lock();
         if g.killed {
             return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "channel killed"));
         }
@@ -586,14 +590,14 @@ impl Write for MemWriter {
 
 impl Drop for MemWriter {
     fn drop(&mut self) {
-        self.0.inner.lock().unwrap().closed = true;
+        self.0.inner.lock().closed = true;
         self.0.cv.notify_all();
     }
 }
 
 impl Read for MemReader {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
-        let mut g = self.0.inner.lock().unwrap();
+        let mut g = self.0.inner.lock();
         loop {
             if g.killed && g.buf.is_empty() {
                 return Err(std::io::Error::new(
@@ -603,15 +607,15 @@ impl Read for MemReader {
             }
             if !g.buf.is_empty() {
                 let n = buf.len().min(g.buf.len());
-                for b in buf.iter_mut().take(n) {
-                    *b = g.buf.pop_front().unwrap();
+                for (b, v) in buf.iter_mut().zip(g.buf.drain(..n)) {
+                    *b = v;
                 }
                 return Ok(n);
             }
             if g.closed {
                 return Ok(0);
             }
-            g = self.0.cv.wait(g).unwrap();
+            g = self.0.cv.wait(g);
         }
     }
 }
@@ -628,7 +632,7 @@ impl HalfDuplex for MemTx {
     fn write_vectored_all(&mut self, bufs: &[&[u8]]) -> std::io::Result<()> {
         // one lock + one wakeup for the whole gather, mirroring the
         // single-syscall TCP override
-        let mut g = self.0 .0.inner.lock().unwrap();
+        let mut g = self.0 .0.inner.lock();
         if g.killed {
             return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "channel killed"));
         }
@@ -731,26 +735,30 @@ struct DelayChanInner {
 }
 
 struct DelayChan {
-    inner: Mutex<DelayChanInner>,
-    cv: Condvar,
+    inner: OrderedMutex<DelayChanInner>,
+    cv: OrderedCondvar,
     delay: Duration,
 }
 
 impl DelayChan {
     fn new(delay: Duration) -> DelayChan {
-        DelayChan { inner: Mutex::new(DelayChanInner::default()), cv: Condvar::new(), delay }
+        DelayChan {
+            inner: OrderedMutex::new(rank::MEM_CHAN, DelayChanInner::default()),
+            cv: OrderedCondvar::new(),
+            delay,
+        }
     }
 
     /// Poison the channel: pending and future reads/writes fail.
     fn kill(&self) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         g.killed = true;
         g.closed = true;
         self.cv.notify_all();
     }
 
     fn push(&self, bufs: &[&[u8]]) -> std::io::Result<()> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock();
         if g.killed {
             return Err(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "channel killed"));
         }
@@ -772,7 +780,7 @@ struct DelayReader(Arc<DelayChan>);
 
 impl Drop for DelayWriter {
     fn drop(&mut self) {
-        self.0.inner.lock().unwrap().closed = true;
+        self.0.inner.lock().closed = true;
         self.0.cv.notify_all();
     }
 }
@@ -780,7 +788,7 @@ impl Drop for DelayWriter {
 impl Read for DelayReader {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
         let ch = &self.0;
-        let mut g = ch.inner.lock().unwrap();
+        let mut g = ch.inner.lock();
         loop {
             if g.killed && g.q.is_empty() {
                 return Err(std::io::Error::new(
@@ -791,26 +799,28 @@ impl Read for DelayReader {
             if let Some(&(ready, _)) = g.q.front() {
                 let now = Instant::now();
                 if ready <= now {
-                    let front = &mut g.q.front_mut().unwrap().1;
-                    let n = buf.len().min(front.len());
-                    for b in buf.iter_mut().take(n) {
-                        *b = front.pop_front().unwrap();
+                    if let Some((_, front)) = g.q.front_mut() {
+                        let n = buf.len().min(front.len());
+                        for (b, v) in buf.iter_mut().zip(front.drain(..n)) {
+                            *b = v;
+                        }
+                        if front.is_empty() {
+                            g.q.pop_front();
+                        }
+                        return Ok(n);
                     }
-                    if front.is_empty() {
-                        g.q.pop_front();
-                    }
-                    return Ok(n);
+                    continue;
                 }
                 // the head chunk is still "in flight": sleep out the
                 // remaining propagation delay (or an earlier wakeup)
-                let (g2, _) = ch.cv.wait_timeout(g, ready - now).unwrap();
+                let (g2, _) = ch.cv.wait_timeout(g, ready - now);
                 g = g2;
                 continue;
             }
             if g.closed {
                 return Ok(0);
             }
-            g = ch.cv.wait(g).unwrap();
+            g = ch.cv.wait(g);
         }
     }
 }
@@ -972,10 +982,19 @@ impl RawPathListener {
             }
             slot[idx as usize] = Some(s);
             if slot.iter().all(Option::is_some) {
-                let streams = self.pending.remove(&uuid).unwrap();
+                let Some(streams) = self.pending.remove(&uuid) else {
+                    return Err(MpwError::Protocol(format!(
+                        "pending stream set vanished for path {uuid:#x}"
+                    )));
+                };
                 let pairs = streams
                     .into_iter()
-                    .map(|s| StreamPair::from_tcp(s.unwrap()))
+                    .map(|s| match s {
+                        Some(s) => StreamPair::from_tcp(s),
+                        None => Err(MpwError::Protocol(format!(
+                            "incomplete stream set for path {uuid:#x}"
+                        ))),
+                    })
                     .collect::<Result<Vec<_>>>()?;
                 return Ok((pairs, uuid));
             }

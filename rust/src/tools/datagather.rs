@@ -253,8 +253,8 @@ mod tests {
         cfg.autotune = false;
         let pa = Arc::new(Path::from_pairs(l, cfg.clone()).unwrap());
         let pb = Arc::new(Path::from_pairs(r, cfg).unwrap());
-        let a = MuxEndpoint::start(pa);
-        let b = MuxEndpoint::start(pb);
+        let a = MuxEndpoint::start(pa).unwrap();
+        let b = MuxEndpoint::start(pb).unwrap();
         let gather_tx = a.open(1).unwrap();
         let gather_rx = b.open(1).unwrap();
         let solver_a = a.open(2).unwrap();

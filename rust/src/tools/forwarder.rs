@@ -173,7 +173,7 @@ mod tests {
         let (port, fwd) = spawn_channels(1).unwrap();
         let t_a = std::thread::spawn(move || {
             let p = Arc::new(Path::connect("127.0.0.1", port, client_cfg(2)).unwrap());
-            let mux = MuxEndpoint::start(p);
+            let mux = MuxEndpoint::start(p).unwrap();
             let c1 = mux.open(1).unwrap();
             let c2 = mux.open(2).unwrap();
             c1.send(&[7u8; 20_000]).unwrap();
@@ -185,7 +185,7 @@ mod tests {
         let t_b = std::thread::spawn(move || {
             // the far leg deliberately uses a different stream count
             let p = Arc::new(Path::connect("127.0.0.1", port, client_cfg(3)).unwrap());
-            let mux = MuxEndpoint::start(p);
+            let mux = MuxEndpoint::start(p).unwrap();
             let c1 = mux.open(1).unwrap();
             let c2 = mux.open(2).unwrap();
             let bulk = c1.recv().unwrap();

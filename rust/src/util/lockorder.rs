@@ -1,0 +1,479 @@
+//! Lock-order discipline: ranked mutex/condvar wrappers for the
+//! concurrent core.
+//!
+//! Every lock in `mpwide::{path, resilience, mux, transport, api}` is an
+//! [`OrderedMutex`] carrying a **rank** from the global hierarchy in
+//! [`rank`]. The invariant: a thread may only acquire a lock whose rank
+//! is **greater than or equal to** the highest rank it already holds
+//! (equal ranks cover sibling instances such as per-stream slots, which
+//! are never nested on one thread). Any two threads that both respect
+//! the hierarchy cannot deadlock on these locks, because a deadlock
+//! cycle needs at least one edge from a higher rank to a strictly lower
+//! one.
+//!
+//! **Debug builds** keep a per-thread stack of held locks and panic on
+//! the spot when an acquisition would invert the hierarchy (or re-enter
+//! a lock the thread already holds — a guaranteed self-deadlock with
+//! `std::sync::Mutex`). **Release builds** compile every check out and
+//! delegate straight to `std::sync` — the rank metadata is two words per
+//! mutex and the hot path is exactly a `Mutex::lock`.
+//!
+//! The hierarchy itself — which rank belongs to which lock and why the
+//! order is what it is — is documented in `docs/CONCURRENCY.md`. Keep
+//! the two in sync.
+//!
+//! # Poisoning policy
+//!
+//! `lock()` returns the guard directly, not a `LockResult`. A poisoned
+//! lock (some thread panicked inside the critical section) panics with
+//! the lock's rank name. This is deliberate: a panic mid-update may
+//! have left shared state torn, and limping on would convert a loud
+//! failure into silent corruption — the same policy as the
+//! `.lock().unwrap()` idiom this wrapper replaced, minus ~400 unwrap
+//! sites. Threads that must survive a sibling's panic (the pool
+//! workers) catch it at the job boundary, before any shared lock is
+//! reacquired.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// The global lock-rank hierarchy, outermost (lowest rank) first.
+///
+/// A thread holding a lock of rank `r` may only acquire locks of rank
+/// `>= r`. The full rationale lives in `docs/CONCURRENCY.md`; the short
+/// form: ranks follow the call graph from the API facade down through
+/// path orchestration into per-stream state and finally the in-memory
+/// transport queues.
+pub mod rank {
+    /// Test-harness serialization locks (outermost; test code only).
+    pub const TEST_HARNESS: u16 = 0;
+    /// The API facade's global context registry (`api::Context`).
+    pub const API_CTX: u16 = 10;
+    /// Mux endpoint state (`mux::MuxInner::st`). Held while failing the
+    /// path (`shutdown_all_streams` → stream meta), hence above the
+    /// context but below everything path-internal.
+    pub const MUX_STATE: u16 = 20;
+    /// Rejoin registry map (`resilience::RejoinRegistry`). Never held
+    /// across a reinstall — lookups release before path surgery.
+    pub const REJOIN_REGISTRY: u16 = 25;
+    /// A path's send gate (one striped send at a time).
+    pub const SEND_GATE: u16 = 30;
+    /// A path's receive gate (one striped receive at a time).
+    pub const RECV_GATE: u16 = 31;
+    /// The windowed-send bookkeeping (`resilience::SendWindow::st`),
+    /// held across post/reap while gated sends touch stream state.
+    pub const SEND_WINDOW: u16 = 40;
+    /// Stream-health synchronization (`path::HealthState::sync`): death
+    /// marking, reinstall, zero-live waits.
+    pub const HEALTH: u16 = 50;
+    /// The path's mutable config snapshot (`Path::cfg`).
+    pub const PATH_CFG: u16 = 60;
+    /// The runtime reconnect policy (`Path::reconnect`).
+    pub const RECONNECT_POLICY: u16 = 61;
+    /// The remembered remote endpoint (`Path::remote`).
+    pub const PATH_REMOTE: u16 = 62;
+    /// The handshake-agreed path uuid (`Path::uuid`).
+    pub const PATH_UUID: u16 = 63;
+    /// The adaptive controller (`Path::controller`).
+    pub const CONTROLLER: u16 = 70;
+    /// A stream slot's write half (`StreamSlot::tx`).
+    pub const STREAM_TX: u16 = 80;
+    /// A stream slot's read half (`StreamSlot::rx`).
+    pub const STREAM_RX: u16 = 81;
+    /// A stream slot's metadata (fd, kill switch).
+    pub const STREAM_META: u16 = 82;
+    /// Parked-frame inboxes (`resilience::FrameBox`), taken while the
+    /// owning stream's rx half is held.
+    pub const FRAME_INBOX: u16 = 90;
+    /// The windowed receiver's reorder buffer (`resilience::ReorderBuf`).
+    pub const RECV_REORDER: u16 = 91;
+    /// ACK watchdog state (`resilience::WdShared`), armed from send
+    /// paths that hold the gate/window locks.
+    pub const ACK_WATCHDOG: u16 = 95;
+    /// In-memory transport queues (`transport::{Chan, DelayChan}`) —
+    /// innermost library lock: taken from inside stream tx/rx writes,
+    /// reads and kill-switch firing.
+    pub const MEM_CHAN: u16 = 100;
+    /// Worker-pool job queue (`util::pool`). Ranks above every library
+    /// lock: `submit` is called while callers hold gate/window locks,
+    /// and pooled jobs never lock it back (they drop the guard before
+    /// running the job).
+    pub const POOL: u16 = 110;
+    /// Per-`scope` completion state (`util::pool::ScopeState`). Locked
+    /// by pooled workers after a job's own guards are dropped, and by
+    /// the scoping caller while it drains the batch.
+    pub const POOL_SCOPE: u16 = 111;
+
+    /// Human-readable name of a rank, for violation diagnostics.
+    pub fn name(rank: u16) -> &'static str {
+        match rank {
+            TEST_HARNESS => "TEST_HARNESS",
+            API_CTX => "API_CTX",
+            MUX_STATE => "MUX_STATE",
+            REJOIN_REGISTRY => "REJOIN_REGISTRY",
+            SEND_GATE => "SEND_GATE",
+            RECV_GATE => "RECV_GATE",
+            SEND_WINDOW => "SEND_WINDOW",
+            HEALTH => "HEALTH",
+            PATH_CFG => "PATH_CFG",
+            RECONNECT_POLICY => "RECONNECT_POLICY",
+            PATH_REMOTE => "PATH_REMOTE",
+            PATH_UUID => "PATH_UUID",
+            CONTROLLER => "CONTROLLER",
+            STREAM_TX => "STREAM_TX",
+            STREAM_RX => "STREAM_RX",
+            STREAM_META => "STREAM_META",
+            FRAME_INBOX => "FRAME_INBOX",
+            RECV_REORDER => "RECV_REORDER",
+            ACK_WATCHDOG => "ACK_WATCHDOG",
+            MEM_CHAN => "MEM_CHAN",
+            POOL => "POOL",
+            POOL_SCOPE => "POOL_SCOPE",
+            _ => "UNNAMED",
+        }
+    }
+}
+
+#[cfg(debug_assertions)]
+mod held {
+    use std::cell::RefCell;
+
+    thread_local! {
+        /// Locks this thread currently holds, in acquisition order. The
+        /// hierarchy check keeps ranks nondecreasing, so the last entry
+        /// is always the maximum.
+        static HELD: RefCell<Vec<(u16, usize)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Panic if acquiring `(rank, addr)` now would invert the hierarchy
+    /// or re-enter an already-held lock. Does **not** record the lock —
+    /// call [`push`] once the acquisition actually succeeded.
+    pub fn check(rank: u16, addr: usize) {
+        HELD.with(|h| {
+            let v = h.borrow();
+            if v.iter().any(|&(_, a)| a == addr) {
+                panic!(
+                    "lock-order violation: thread re-entered {} lock it already \
+                     holds (guaranteed self-deadlock); see docs/CONCURRENCY.md",
+                    super::rank::name(rank)
+                );
+            }
+            if let Some(&(top, _)) = v.last() {
+                if rank < top {
+                    panic!(
+                        "lock-order violation: acquiring {} (rank {rank}) while \
+                         holding {} (rank {top}); see docs/CONCURRENCY.md",
+                        super::rank::name(rank),
+                        super::rank::name(top)
+                    );
+                }
+            }
+        });
+    }
+
+    pub fn push(rank: u16, addr: usize) {
+        HELD.with(|h| h.borrow_mut().push((rank, addr)));
+    }
+
+    pub fn pop(addr: usize) {
+        HELD.with(|h| {
+            let mut v = h.borrow_mut();
+            if let Some(i) = v.iter().rposition(|&(_, a)| a == addr) {
+                v.remove(i);
+            }
+        });
+    }
+}
+
+/// A mutex with a declared rank in the global hierarchy. See the module
+/// docs for the invariant and the poisoning policy.
+pub struct OrderedMutex<T: ?Sized> {
+    rank: u16,
+    inner: Mutex<T>,
+}
+
+impl<T> OrderedMutex<T> {
+    /// Wrap `value` in a mutex of rank `rank` (a [`rank`] constant).
+    pub const fn new(rank: u16, value: T) -> OrderedMutex<T> {
+        OrderedMutex { rank, inner: Mutex::new(value) }
+    }
+
+    /// Acquire the lock, enforcing the rank hierarchy in debug builds.
+    /// Panics if the lock is poisoned (see the module docs).
+    pub fn lock(&self) -> OrderedGuard<'_, T> {
+        let addr = self as *const OrderedMutex<T> as *const () as usize;
+        #[cfg(debug_assertions)]
+        held::check(self.rank, addr);
+        let inner = match self.inner.lock() {
+            Ok(g) => g,
+            Err(_) => panic!(
+                "{} lock poisoned: a thread panicked while holding it",
+                rank::name(self.rank)
+            ),
+        };
+        #[cfg(debug_assertions)]
+        held::push(self.rank, addr);
+        OrderedGuard { inner: Some(inner), addr }
+    }
+
+    /// The lock's declared rank.
+    pub fn rank(&self) -> u16 {
+        self.rank
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for OrderedMutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedMutex")
+            .field("rank", &rank::name(self.rank))
+            .field("inner", &self.inner)
+            .finish()
+    }
+}
+
+impl<T: Default> Default for OrderedMutex<T> {
+    /// A defaulted lock lands on the innermost rank ([`rank::MEM_CHAN`])
+    /// so it can never mask a violation on real hierarchy locks; the
+    /// concurrent core always names its rank explicitly.
+    fn default() -> OrderedMutex<T> {
+        OrderedMutex::new(rank::MEM_CHAN, T::default())
+    }
+}
+
+/// RAII guard of an [`OrderedMutex`]; releasing it pops the lock from
+/// the thread's held stack.
+///
+/// The inner `Option` is only ever `None` transiently inside
+/// [`OrderedCondvar::wait`]/[`wait_timeout`], which own the guard for
+/// the duration — no external code can observe that state.
+///
+/// [`wait_timeout`]: OrderedCondvar::wait_timeout
+pub struct OrderedGuard<'a, T: ?Sized> {
+    inner: Option<MutexGuard<'a, T>>,
+    #[allow(dead_code)] // release builds: kept so Drop stays uniform
+    addr: usize,
+}
+
+impl<T: ?Sized> std::ops::Deref for OrderedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            Some(g) => g,
+            None => unreachable!("guard emptied outside a condvar wait"),
+        }
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for OrderedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.inner {
+            Some(g) => g,
+            None => unreachable!("guard emptied outside a condvar wait"),
+        }
+    }
+}
+
+impl<T: ?Sized> Drop for OrderedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        held::pop(self.addr);
+    }
+}
+
+/// Condition variable paired with [`OrderedMutex`]. The blocked thread
+/// keeps its slot on the held-rank stack across the wait: it cannot
+/// acquire anything while parked, and it owns the mutex again the
+/// moment `wait` returns.
+///
+/// Like [`OrderedMutex::lock`], the wait methods panic on poisoning
+/// instead of returning a `LockResult` (same policy, same rationale).
+pub struct OrderedCondvar {
+    inner: Condvar,
+}
+
+impl OrderedCondvar {
+    /// A fresh condvar.
+    pub const fn new() -> OrderedCondvar {
+        OrderedCondvar { inner: Condvar::new() }
+    }
+
+    /// Park until notified; the guard is released for the duration and
+    /// re-acquired before returning.
+    pub fn wait<'a, T>(&self, mut guard: OrderedGuard<'a, T>) -> OrderedGuard<'a, T> {
+        let Some(inner) = guard.inner.take() else {
+            unreachable!("guard emptied outside a condvar wait")
+        };
+        match self.inner.wait(inner) {
+            Ok(g) => guard.inner = Some(g),
+            Err(_) => panic!("lock poisoned while parked in a condvar wait"),
+        }
+        guard
+    }
+
+    /// [`wait`](OrderedCondvar::wait) with a timeout.
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: OrderedGuard<'a, T>,
+        dur: Duration,
+    ) -> (OrderedGuard<'a, T>, WaitTimeoutResult) {
+        let Some(inner) = guard.inner.take() else {
+            unreachable!("guard emptied outside a condvar wait")
+        };
+        match self.inner.wait_timeout(inner, dur) {
+            Ok((g, timed_out)) => {
+                guard.inner = Some(g);
+                (guard, timed_out)
+            }
+            Err(_) => panic!("lock poisoned while parked in a condvar wait"),
+        }
+    }
+
+    /// Wake one parked waiter.
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    /// Wake every parked waiter.
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+impl Default for OrderedCondvar {
+    fn default() -> OrderedCondvar {
+        OrderedCondvar::new()
+    }
+}
+
+impl std::fmt::Debug for OrderedCondvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OrderedCondvar").finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn in_order_acquisition_passes() {
+        let outer = OrderedMutex::new(rank::SEND_GATE, 1u32);
+        let inner = OrderedMutex::new(rank::STREAM_TX, 2u32);
+        let a = outer.lock();
+        let b = inner.lock();
+        assert_eq!(*a + *b, 3);
+    }
+
+    #[test]
+    fn equal_rank_siblings_pass() {
+        // Same rank, different instances (e.g. two stream slots probed
+        // sequentially) is allowed; only strict inversions are bugs.
+        let s0 = OrderedMutex::new(rank::STREAM_TX, ());
+        let s1 = OrderedMutex::new(rank::STREAM_TX, ());
+        let _a = s0.lock();
+        let _b = s1.lock();
+    }
+
+    #[test]
+    fn reacquire_after_release_passes() {
+        let m = OrderedMutex::new(rank::HEALTH, 0u8);
+        drop(m.lock());
+        drop(m.lock());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn rank_inversion_panics_in_debug() {
+        let outer = Arc::new(OrderedMutex::new(rank::STREAM_TX, ()));
+        let inner = Arc::new(OrderedMutex::new(rank::SEND_GATE, ()));
+        // a fresh thread: catch_unwind must not leave this test thread's
+        // held stack carrying the panicking acquisition
+        let t = std::thread::spawn(move || {
+            let _g = outer.lock();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _h = inner.lock(); // SEND_GATE while holding STREAM_TX
+            }))
+            .is_err()
+        });
+        assert!(t.join().expect("probe thread"), "inversion must panic in debug builds");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn reentry_panics_in_debug() {
+        let m = Arc::new(OrderedMutex::new(rank::HEALTH, ()));
+        let t = std::thread::spawn(move || {
+            let _g = m.lock();
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _h = m.lock(); // self-deadlock, caught before blocking
+            }))
+            .is_err()
+        });
+        assert!(t.join().expect("probe thread"), "re-entry must panic in debug builds");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn violation_unwinds_cleanly() {
+        // After a caught violation the thread's held stack must be
+        // intact: the failed acquisition was never pushed, and further
+        // in-order locking works.
+        let outer = OrderedMutex::new(rank::HEALTH, ());
+        let inner = OrderedMutex::new(rank::SEND_GATE, ());
+        let deeper = OrderedMutex::new(rank::STREAM_RX, ());
+        let g = outer.lock();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _h = inner.lock();
+        }));
+        assert!(r.is_err());
+        let _d = deeper.lock(); // still fine: HEALTH -> STREAM_RX
+        drop(g);
+        let _again = inner.lock(); // and SEND_GATE alone is fine too
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn release_builds_pass_through() {
+        // Checks compile out: an out-of-order acquisition is silent.
+        let outer = OrderedMutex::new(rank::STREAM_TX, ());
+        let inner = OrderedMutex::new(rank::SEND_GATE, ());
+        let _g = outer.lock();
+        let _h = inner.lock();
+    }
+
+    #[test]
+    fn condvar_roundtrip_keeps_guard_usable() {
+        let m = Arc::new(OrderedMutex::new(rank::HEALTH, false));
+        let cv = Arc::new(OrderedCondvar::new());
+        let (m2, cv2) = (m.clone(), cv.clone());
+        let t = std::thread::spawn(move || {
+            let mut g = m2.lock();
+            *g = true;
+            drop(g);
+            cv2.notify_all();
+        });
+        let mut g = m.lock();
+        while !*g {
+            let (g2, _) = cv.wait_timeout(g, Duration::from_millis(50));
+            g = g2;
+        }
+        assert!(*g);
+        drop(g);
+        t.join().expect("notifier");
+        // the guard returned by the wait still pops its stack slot: a
+        // subsequent lower-rank acquisition on this thread is legal
+        let outer = OrderedMutex::new(rank::SEND_GATE, ());
+        let _o = outer.lock();
+    }
+
+    #[test]
+    fn guard_derefs_both_ways() {
+        let m = OrderedMutex::new(rank::PATH_CFG, vec![1, 2, 3]);
+        {
+            let mut g = m.lock();
+            g.push(4);
+        }
+        assert_eq!(m.lock().len(), 4);
+    }
+}

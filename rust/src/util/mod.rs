@@ -1,5 +1,6 @@
 //! Small self-contained utilities: deterministic RNG, statistics, byte
-//! formatting and a mini property-testing harness.
+//! formatting, a mini property-testing harness and the lock-order
+//! discipline wrappers.
 //!
 //! The build environment is offline, so the usual crates (`rand`,
 //! `proptest`, `criterion`) are unavailable; these modules provide the
@@ -7,10 +8,12 @@
 
 pub mod bytes;
 pub mod json;
+pub mod lockorder;
 pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 
 pub use bytes::{human_bytes, human_rate};
+pub use lockorder::{OrderedCondvar, OrderedGuard, OrderedMutex};
 pub use rng::Rng;

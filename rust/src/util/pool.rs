@@ -15,7 +15,9 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
+
+use crate::util::lockorder::{rank, OrderedCondvar, OrderedMutex};
 
 /// Upper bound on pool size — a backstop against runaway growth, far
 /// above what the test-suite/benches need concurrently.
@@ -30,30 +32,30 @@ struct PoolInner {
 }
 
 struct Pool {
-    inner: Mutex<PoolInner>,
-    cv: Condvar,
+    inner: OrderedMutex<PoolInner>,
+    cv: OrderedCondvar,
 }
 
 static POOL: OnceLock<Pool> = OnceLock::new();
 
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| Pool {
-        inner: Mutex::new(PoolInner { jobs: VecDeque::new(), idle: 0, workers: 0 }),
-        cv: Condvar::new(),
+        inner: OrderedMutex::new(rank::POOL, PoolInner { jobs: VecDeque::new(), idle: 0, workers: 0 }),
+        cv: OrderedCondvar::new(),
     })
 }
 
 fn worker_loop() {
     let p = pool();
-    let mut g = p.inner.lock().unwrap();
+    let mut g = p.inner.lock();
     loop {
         if let Some(job) = g.jobs.pop_front() {
             drop(g);
             job();
-            g = p.inner.lock().unwrap();
+            g = p.inner.lock();
         } else {
             g.idle += 1;
-            g = p.cv.wait(g).unwrap();
+            g = p.cv.wait(g);
             g.idle -= 1;
         }
     }
@@ -61,7 +63,7 @@ fn worker_loop() {
 
 fn submit(job: Job) {
     let p = pool();
-    let mut g = p.inner.lock().unwrap();
+    let mut g = p.inner.lock();
     g.jobs.push_back(job);
     if g.idle == 0 && g.workers < MAX_WORKERS {
         g.workers += 1;
@@ -74,9 +76,19 @@ fn submit(job: Job) {
 }
 
 struct ScopeState {
-    remaining: Mutex<usize>,
-    panicked: Mutex<Option<String>>,
-    done: Condvar,
+    remaining: OrderedMutex<usize>,
+    panicked: OrderedMutex<Option<String>>,
+    done: OrderedCondvar,
+}
+
+impl ScopeState {
+    fn new(n: usize) -> ScopeState {
+        ScopeState {
+            remaining: OrderedMutex::new(rank::POOL_SCOPE, n),
+            panicked: OrderedMutex::new(rank::POOL_SCOPE, None),
+            done: OrderedCondvar::new(),
+        }
+    }
 }
 
 /// Run `jobs` on the pool, blocking until every one has completed.
@@ -89,11 +101,7 @@ pub fn scope<'env>(jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
     }
     // Fast path: a single job runs inline — no handoff, no wakeup.
     let n = jobs.len();
-    let state = Arc::new(ScopeState {
-        remaining: Mutex::new(n),
-        panicked: Mutex::new(None),
-        done: Condvar::new(),
-    });
+    let state = Arc::new(ScopeState::new(n));
     for job in jobs {
         // SAFETY: the closure may borrow data with lifetime 'env, which
         // outlives this function call; we block below until every job
@@ -113,21 +121,21 @@ pub fn scope<'env>(jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
                     .map(|s| s.to_string())
                     .or_else(|| p.downcast_ref::<String>().cloned())
                     .unwrap_or_else(|| "job panicked".into());
-                *state.panicked.lock().unwrap() = Some(msg);
+                *state.panicked.lock() = Some(msg);
             }
-            let mut rem = state.remaining.lock().unwrap();
+            let mut rem = state.remaining.lock();
             *rem -= 1;
             if *rem == 0 {
                 state.done.notify_all();
             }
         }));
     }
-    let mut rem = state.remaining.lock().unwrap();
+    let mut rem = state.remaining.lock();
     while *rem > 0 {
-        rem = state.done.wait(rem).unwrap();
+        rem = state.done.wait(rem);
     }
     drop(rem);
-    let panicked = state.panicked.lock().unwrap().take();
+    let panicked = state.panicked.lock().take();
     if let Some(msg) = panicked {
         panic!("pool job panicked: {msg}");
     }
@@ -144,11 +152,7 @@ pub fn scope_with_inline<'env, R>(
         return inline();
     }
     let n = jobs.len();
-    let state = Arc::new(ScopeState {
-        remaining: Mutex::new(n),
-        panicked: Mutex::new(None),
-        done: Condvar::new(),
-    });
+    let state = Arc::new(ScopeState::new(n));
     for job in jobs {
         // SAFETY: identical argument to `scope` — we block below until
         // every job completed, so 'env borrows cannot escape.
@@ -164,9 +168,9 @@ pub fn scope_with_inline<'env, R>(
                     .map(|s| s.to_string())
                     .or_else(|| p.downcast_ref::<String>().cloned())
                     .unwrap_or_else(|| "job panicked".into());
-                *state.panicked.lock().unwrap() = Some(msg);
+                *state.panicked.lock() = Some(msg);
             }
-            let mut rem = state.remaining.lock().unwrap();
+            let mut rem = state.remaining.lock();
             *rem -= 1;
             if *rem == 0 {
                 state.done.notify_all();
@@ -174,12 +178,12 @@ pub fn scope_with_inline<'env, R>(
         }));
     }
     let out = inline();
-    let mut rem = state.remaining.lock().unwrap();
+    let mut rem = state.remaining.lock();
     while *rem > 0 {
-        rem = state.done.wait(rem).unwrap();
+        rem = state.done.wait(rem);
     }
     drop(rem);
-    let panicked = state.panicked.lock().unwrap().take();
+    let panicked = state.panicked.lock().take();
     if let Some(msg) = panicked {
         panic!("pool job panicked: {msg}");
     }
@@ -188,13 +192,14 @@ pub fn scope_with_inline<'env, R>(
 
 /// Current pool size (diagnostics/tests).
 pub fn workers() -> usize {
-    pool().inner.lock().unwrap().workers
+    pool().inner.lock().workers
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::{Condvar, Mutex};
 
     #[test]
     fn scope_runs_all_jobs_with_borrows() {
@@ -231,14 +236,14 @@ mod tests {
         scope(vec![
             Box::new(move || {
                 let (m, cv) = &*f1;
-                let mut g = m.lock().unwrap();
+                let mut g = m.lock();
                 while !*g {
                     g = cv.wait(g).unwrap();
                 }
             }),
             Box::new(move || {
                 let (m, cv) = &*f2;
-                *m.lock().unwrap() = true;
+                *m.lock() = true;
                 cv.notify_all();
             }),
         ]);

@@ -18,7 +18,12 @@ use mpwide::mpwide::resilience::{
 };
 use mpwide::util::Rng;
 
-const ITERS: usize = 2_000;
+/// Iteration count for the randomized properties. `MPW_FUZZ_ITERS`
+/// overrides the default — the Miri CI job runs these tests with a much
+/// smaller count (interpreted execution is ~100x slower).
+fn iters() -> usize {
+    std::env::var("MPW_FUZZ_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(2_000)
+}
 
 // ---------------------------------------------------------------------------
 // Resilience frame header.
@@ -27,7 +32,7 @@ const ITERS: usize = 2_000;
 #[test]
 fn resilience_frame_hdr_roundtrips_random_values() {
     let mut rng = Rng::new(0xF0A1);
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let kind = [KIND_CTRL, KIND_DATA, KIND_ACK][rng.urange(0, 3)];
         let msg_seq = rng.next_u64();
         let attempt = rng.next_u64() as u32;
@@ -41,7 +46,7 @@ fn resilience_frame_hdr_roundtrips_random_values() {
 #[test]
 fn resilience_frame_hdr_corruption_is_rejected_or_sane() {
     let mut rng = Rng::new(0xF0A2);
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let mut h = encode_frame_hdr(
             [KIND_CTRL, KIND_DATA, KIND_ACK][rng.urange(0, 3)],
             rng.next_u64(),
@@ -61,6 +66,23 @@ fn resilience_frame_hdr_corruption_is_rejected_or_sane() {
     }
 }
 
+#[test]
+fn resilience_frame_hdr_unknown_kinds_rejected() {
+    // The kind byte (offset 1) has exactly three assigned values; every
+    // other value is reserved and must be rejected, not passed through —
+    // a forward-compat frame kind would otherwise be silently
+    // misinterpreted by an old receiver.
+    let good = encode_frame_hdr(KIND_DATA, 7, 0, 16);
+    for kind in 0..=u8::MAX {
+        if (KIND_CTRL..=KIND_ACK).contains(&kind) {
+            continue;
+        }
+        let mut h = good;
+        h[1] = kind;
+        assert!(decode_frame_hdr(&h).is_err(), "reserved frame kind {kind:#04x} must be rejected");
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Resilience CTRL payload.
 // ---------------------------------------------------------------------------
@@ -77,7 +99,7 @@ fn random_ctrl(rng: &mut Rng) -> (u64, Vec<u16>, Vec<u16>) {
 #[test]
 fn ctrl_payload_roundtrips_random_values() {
     let mut rng = Rng::new(0xC7A1);
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let (total, streams, dead) = random_ctrl(&mut rng);
         let p = encode_ctrl(total, &streams, &dead);
         let c = parse_ctrl(&p).expect("valid ctrl must parse");
@@ -90,7 +112,7 @@ fn ctrl_payload_roundtrips_random_values() {
 #[test]
 fn ctrl_payload_every_truncation_is_rejected() {
     let mut rng = Rng::new(0xC7A2);
-    for _ in 0..200 {
+    for _ in 0..(iters() / 10).max(1) {
         let (total, streams, dead) = random_ctrl(&mut rng);
         let p = encode_ctrl(total, &streams, &dead);
         for cut in 0..p.len() {
@@ -108,7 +130,7 @@ fn ctrl_payload_every_truncation_is_rejected() {
 #[test]
 fn ctrl_payload_corruption_never_panics() {
     let mut rng = Rng::new(0xC7A3);
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let (total, streams, dead) = random_ctrl(&mut rng);
         let mut p = encode_ctrl(total, &streams, &dead);
         let flips = rng.urange(1, 5);
@@ -134,7 +156,7 @@ fn ctrl_payload_corruption_never_panics() {
 #[test]
 fn mux_hdr_roundtrips_random_values() {
     let mut rng = Rng::new(0xA0B1);
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let kind = [CH_DATA, CH_FIN][rng.urange(0, 2)];
         let channel = rng.next_u64() as u32;
         let msg_seq = rng.next_u64();
@@ -157,9 +179,25 @@ fn mux_hdr_control_frames_with_payload_rejected() {
 }
 
 #[test]
+fn mux_hdr_unknown_kinds_rejected() {
+    // Same contract as the resilience header: kinds outside
+    // CH_DATA..=CH_CLOSE are reserved and must fail to decode whatever
+    // the rest of the header says.
+    let good = encode_mux_hdr(CH_DATA, 9, 3, 16);
+    for kind in 0..=u8::MAX {
+        if (CH_DATA..=CH_CLOSE).contains(&kind) {
+            continue;
+        }
+        let mut h = good;
+        h[1] = kind;
+        assert!(decode_mux_hdr(&h).is_err(), "reserved mux kind {kind:#04x} must be rejected");
+    }
+}
+
+#[test]
 fn mux_hdr_corruption_is_rejected_or_sane() {
     let mut rng = Rng::new(0xA0B2);
-    for _ in 0..ITERS {
+    for _ in 0..iters() {
         let mut h = encode_mux_hdr(
             [CH_DATA, CH_FIN, CH_OPEN, CH_CLOSE][rng.urange(0, 4)],
             rng.next_u64() as u32,

@@ -294,7 +294,7 @@ fn run_path_flap(nch: usize) {
         move || connect_with_rejoin("127.0.0.1", port, cfg).unwrap()
     });
     let server_path: Arc<Path> = listener.accept_path_arc().unwrap();
-    let daemon = listener.into_rejoin_daemon();
+    let daemon = listener.into_rejoin_daemon().unwrap();
     let (client_path, _monitor) = accept.join().unwrap();
 
     let a = MuxEndpoint::start_cfg(client_path, mux_cfg()).unwrap();

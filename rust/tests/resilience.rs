@@ -65,7 +65,7 @@ fn tcp_stream_death_rejoin_and_reabsorb() {
     });
 
     let server: Arc<Path> = listener.accept_path_arc().unwrap();
-    let daemon = listener.into_rejoin_daemon();
+    let daemon = listener.into_rejoin_daemon().unwrap();
     let mut buf = vec![0u8; LEN];
     let mut expect = vec![0u8; LEN];
 
