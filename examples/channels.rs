@@ -61,7 +61,8 @@ fn main() -> anyhow::Result<()> {
 
     // near end
     let path = Arc::new(Path::connect("127.0.0.1", port, cfg)?);
-    let mux_cfg = MuxConfig { chunk_budget: 128 * 1024, high_water: 64 << 20 };
+    let mux_cfg =
+        MuxConfig { chunk_budget: 128 * 1024, high_water: 64 << 20, ..MuxConfig::default() };
     let mux = MuxEndpoint::start_cfg(path, mux_cfg)?;
     let coupling = mux.open(COUPLING)?;
     let bulk = mux.open(BULK)?;

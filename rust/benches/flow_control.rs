@@ -1,0 +1,220 @@
+//! **Experiment FC1 — receiver-driven credit flow control.**
+//!
+//! Two claims about `MuxConfig::recv_high_water` on the netsim
+//! `high-BDP-reference` link (10 Gbit/s at 120 ms RTT, modeled as an
+//! in-memory transport with the profile's one-way propagation delay):
+//!
+//!   1. **Credit is free when the reader keeps up.** With a generous
+//!      receive high-water, windowed goodput must stay within 5% of the
+//!      pre-credit configuration (`recv_high_water: None`) on the same
+//!      link — the WINDOW_UPDATE machinery may not tax the fast path.
+//!   2. **Credit bounds memory when the reader stalls.** With a small
+//!      high-water and a reader driven by a stalled
+//!      [`ReaderSchedule`], the channel's inbound queue must stay under
+//!      `recv_high_water` plus one message for the whole stall, and the
+//!      resumed reader must drain every queued message.
+//!
+//! Both are asserted, so CI catches credit regressions. `--quick` (or
+//! BENCH_QUICK=1) runs a reduced grid for the bench-smoke job. Results
+//! are emitted as BENCH_flow_control.json.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpwide::benchlib::{banner, BenchJson, Table};
+use mpwide::mpwide::mux::{Channel, MuxConfig, MuxEndpoint};
+use mpwide::mpwide::transport::mem_path_pairs_latency;
+use mpwide::mpwide::{Path, PathConfig};
+use mpwide::netsim::{profiles, ReaderSchedule};
+use mpwide::util::Rng;
+
+const MBF: f64 = 1024.0 * 1024.0;
+const NSTREAMS: usize = 2;
+/// One mux frame per message: budget == message size.
+const MSG: usize = 64 * 1024;
+const WINDOW: usize = 8;
+/// Inbound bound for the stalled-reader case.
+const STALL_HW: usize = 1 << 20;
+
+/// Build one muxed resilient path pair on the high-BDP link, with or
+/// without receiver-driven credit.
+fn endpoints(delay: Duration, recv_high_water: Option<usize>) -> (MuxEndpoint, MuxEndpoint) {
+    let mut cfg = PathConfig::with_streams(NSTREAMS);
+    cfg.autotune = false;
+    cfg.chunk_size = MSG;
+    cfg.resilience.enabled = true;
+    cfg.resilience.window = WINDOW;
+    let (l, r) = mem_path_pairs_latency(NSTREAMS, delay);
+    let a = Arc::new(Path::from_pairs(l, cfg.clone()).expect("left path"));
+    let b = Arc::new(Path::from_pairs(r, cfg).expect("right path"));
+    let mux_cfg = MuxConfig {
+        chunk_budget: MSG,
+        high_water: 256 << 20,
+        recv_high_water,
+        ..MuxConfig::default()
+    };
+    (
+        MuxEndpoint::start_cfg(a, mux_cfg.clone()).expect("mux cfg"),
+        MuxEndpoint::start_cfg(b, mux_cfg).expect("mux cfg"),
+    )
+}
+
+/// Make sure the sender endpoint holds the receiver's initial grant
+/// before timing starts: the receiver side sends one warmup message,
+/// and a channel's credit advert precedes its data on the FIFO wire.
+fn warmup(tx: &Channel, rx: &Channel) {
+    rx.send(b"warmup").unwrap();
+    assert_eq!(tx.recv().unwrap(), b"warmup");
+}
+
+/// Send `msgs` MSG-sized messages over one channel with an always-ready
+/// reader; returns elapsed seconds until the receiver has every byte.
+fn drive_clean(delay: Duration, msgs: usize, recv_high_water: Option<usize>) -> f64 {
+    let (a, b) = endpoints(delay, recv_high_water);
+    let tx = a.open(1).unwrap();
+    let rx = b.open(1).unwrap();
+    warmup(&tx, &rx);
+    let mut payload = vec![0u8; MSG];
+    Rng::new(41_000).fill_bytes(&mut payload[..16]);
+    let t0 = Instant::now();
+    let reader = std::thread::spawn(move || {
+        for i in 0..msgs {
+            let m = rx.recv().unwrap();
+            assert_eq!(m.len(), MSG, "message {i} truncated");
+        }
+    });
+    for _ in 0..msgs {
+        tx.send(&payload).unwrap();
+    }
+    reader.join().unwrap();
+    let elapsed = t0.elapsed().as_secs_f64();
+    tx.flush().unwrap(); // drain in-flight ACKs before teardown
+    elapsed
+}
+
+/// Flood a credited channel whose reader follows a stalled
+/// [`ReaderSchedule`]; returns the peak inbound queue observed during
+/// the stall (the quantity the credit bound must hold down).
+fn drive_stalled(delay: Duration, msgs: usize, stall_secs: f64) -> usize {
+    let (a, b) = endpoints(delay, Some(STALL_HW));
+    let tx = a.open(1).unwrap();
+    let rx = b.open(1).unwrap();
+    warmup(&tx, &rx);
+    let payload = vec![7u8; MSG];
+    let sched = ReaderSchedule::stalled(0.0, stall_secs);
+    let t0 = Instant::now();
+    let reader = std::thread::spawn(move || {
+        for i in 0..msgs {
+            while !sched.should_read(t0.elapsed().as_secs_f64()) {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            let m = rx.recv().unwrap();
+            assert_eq!(m.len(), MSG, "message {i} truncated after the stall");
+        }
+    });
+    // the producer queues everything instantly; the pump may move only
+    // what the (absent) reader's credit admits
+    for _ in 0..msgs {
+        tx.send(&payload).unwrap();
+    }
+    let mut peak = 0usize;
+    while t0.elapsed().as_secs_f64() < stall_secs {
+        if let Some(c) = b.channel_stats().into_iter().find(|c| c.id == 1) {
+            peak = peak.max(c.inbound_queued_bytes);
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    reader.join().unwrap();
+    tx.flush().unwrap();
+    peak
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || matches!(std::env::var("BENCH_QUICK").as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    let msgs = if quick { 16 } else { 48 };
+    let stall_msgs = if quick { 48 } else { 64 };
+    let stall_secs = if quick { 0.6 } else { 1.2 };
+
+    let link = profiles::high_bdp();
+    // the in-memory delay models one-way propagation: RTT / 2
+    let delay = Duration::from_secs_f64(link.rtt / 2.0);
+    let total = (msgs * MSG) as f64;
+    let bound = STALL_HW + MSG;
+
+    banner("FC1: receiver-driven credit on the high-BDP reference link");
+    println!(
+        "{} ({} ms RTT), {NSTREAMS} streams, window {WINDOW}, {msgs} x {} KiB frames{}",
+        link.name,
+        (link.rtt * 1000.0) as u64,
+        MSG / 1024,
+        if quick { " (quick grid)" } else { "" }
+    );
+
+    let base_secs = drive_clean(delay, msgs, None);
+    let base_goodput = total / base_secs;
+    let credit_secs = drive_clean(delay, msgs, Some(64 << 20));
+    let credit_goodput = total / credit_secs;
+    let parity = credit_goodput / base_goodput;
+    let peak = drive_stalled(delay, stall_msgs, stall_secs);
+
+    let mut t = Table::new(&["case", "seconds", "goodput MB/s", "peak inbound"]);
+    t.row(&[
+        "pre-credit (None)".to_string(),
+        format!("{base_secs:.3}"),
+        format!("{:.3}", base_goodput / MBF),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        "credited (64 MiB hw)".to_string(),
+        format!("{credit_secs:.3}"),
+        format!("{:.3}", credit_goodput / MBF),
+        "-".to_string(),
+    ]);
+    t.row(&[
+        format!("stalled reader ({} MiB hw)", STALL_HW >> 20),
+        format!("{stall_secs:.3}"),
+        "-".to_string(),
+        format!("{:.2} MiB", peak as f64 / MBF),
+    ]);
+    t.print();
+    println!("\ncredited / pre-credit goodput: {parity:.3}   (required >= 0.950)");
+    println!(
+        "stalled-reader peak inbound: {peak} bytes   (required <= {bound} = hw + one message)"
+    );
+
+    let mut json = BenchJson::new("flow_control");
+    json.text("scenario", "receiver-driven mux credit on the high-BDP reference link")
+        .text("link", link.name)
+        .num("rtt_ms", link.rtt * 1000.0)
+        .num("nstreams", NSTREAMS as f64)
+        .num("window", WINDOW as f64)
+        .num("messages", msgs as f64)
+        .num("msg_bytes", MSG as f64)
+        .num("baseline_secs", base_secs)
+        .num("credited_secs", credit_secs)
+        .num("baseline_mbps", base_goodput / MBF)
+        .num("credited_mbps", credit_goodput / MBF)
+        .num("goodput_parity", parity)
+        .num("stall_high_water", STALL_HW as f64)
+        .num("stall_peak_inbound", peak as f64)
+        .num("stall_bound", bound as f64)
+        .num("quick", if quick { 1.0 } else { 0.0 });
+    match json.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_flow_control.json: {e}"),
+    }
+
+    let mut failed = false;
+    if parity < 0.95 {
+        eprintln!("FAIL: credited goodput parity {parity:.3} < 0.950");
+        failed = true;
+    }
+    if peak > bound {
+        eprintln!("FAIL: stalled-reader peak inbound {peak} > {bound}");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -182,6 +182,11 @@ pub struct TuningState {
     /// Hard ceiling for `window` — the configured
     /// [`ResilienceConfig::window`](super::config::ResilienceConfig::window).
     window_max: AtomicUsize,
+    /// Message budget most recently advertised by the peer's receiver
+    /// (credit flow control). `usize::MAX` until the first credit frame
+    /// arrives; the effective window never exceeds it, so the tuner
+    /// cannot widen past what the peer's reorder stash can absorb.
+    credit_cap: AtomicUsize,
 }
 
 impl TuningState {
@@ -196,6 +201,7 @@ impl TuningState {
             mode: AtomicU8::new(MODE_STATIC),
             window: AtomicUsize::new(1),
             window_max: AtomicUsize::new(1),
+            credit_cap: AtomicUsize::new(usize::MAX),
         };
         s.set_pacing(pacing);
         s.set_mode(mode);
@@ -225,13 +231,26 @@ impl TuningState {
         self.window_max.load(Ordering::Relaxed)
     }
 
-    /// Set the in-flight window, clamped to `[1, window_max]` — the
-    /// controller may narrow a configured window (congestion: in-flight
-    /// messages just sit in a queue) and re-widen it, but never exceed
-    /// what the path was configured to pipeline.
+    /// Set the in-flight window, clamped to `[1, min(window_max,
+    /// peer credit)]` — the controller may narrow a configured window
+    /// (congestion: in-flight messages just sit in a queue) and
+    /// re-widen it, but never exceed what the path was configured to
+    /// pipeline nor what the peer's receiver advertised room for.
     pub fn set_window(&self, w: usize) {
-        let max = self.window_max.load(Ordering::Relaxed);
+        let max = self
+            .window_max
+            .load(Ordering::Relaxed)
+            .min(self.credit_cap.load(Ordering::Relaxed));
         self.window.store(w.clamp(1, max.max(1)), Ordering::Relaxed);
+    }
+
+    /// Record the peer's advertised message budget and re-clamp the
+    /// current window under it. Called by the resilience layer whenever
+    /// a credit frame (extended ACK or WINDOW_UPDATE) lands.
+    pub fn apply_window_credit(&self, cap: usize) {
+        self.credit_cap.store(cap.max(1), Ordering::Relaxed);
+        let w = self.window.load(Ordering::Relaxed);
+        self.set_window(w);
     }
 
     /// Streams the next operation stripes over.

@@ -128,6 +128,20 @@ pub struct ResilienceConfig {
     /// (default) keeps the OS behaviour. Only effective on socket-backed
     /// streams; the in-memory test transport ignores it.
     pub write_timeout: Option<Duration>,
+    /// Byte high-water for the windowed receiver's reorder stash. With a
+    /// window `> 1` an out-of-order message is stashed until the gap
+    /// fills; the stash is already capped at `MAX_WINDOW` *messages*, but
+    /// 64 stashed multi-MB messages can still exhaust memory. When set,
+    /// the receiver (a) refuses to stash past this many bytes — the
+    /// sender sees a retryable NACK and backs off without marking the
+    /// stream dead — and (b) advertises the remaining byte budget to a
+    /// credit-aware peer (hello version >= 1) in every ACK and in
+    /// dedicated WINDOW_UPDATE frames, so a well-behaved sender never
+    /// hits the hard limit at all. A single message larger than the
+    /// budget is still accepted when the stash is empty (it can always
+    /// be delivered), so this cannot deadlock. `None` (default) keeps
+    /// the message-count bound only.
+    pub recv_stash_high_water: Option<usize>,
     /// Background reconnection of dead streams (connecting end only).
     pub reconnect: ReconnectPolicy,
 }
@@ -139,6 +153,7 @@ impl Default for ResilienceConfig {
             ack_timeout: None,
             window: 1,
             write_timeout: None,
+            recv_stash_high_water: None,
             reconnect: ReconnectPolicy::default(),
         }
     }
@@ -158,6 +173,9 @@ impl ResilienceConfig {
             ack_timeout: Some(Duration::from_secs(600)),
             window: 8,
             write_timeout: None,
+            // 256 MiB: generous for WAN BDPs, small next to a cluster
+            // node's memory; bounds a slow consumer's stash growth.
+            recv_stash_high_water: Some(256 << 20),
             reconnect: ReconnectPolicy { enabled: true, ..Default::default() },
         }
     }
@@ -198,6 +216,13 @@ impl ResilienceConfig {
                     "resilience write_timeout must be positive".into(),
                 ));
             }
+        }
+        if self.recv_stash_high_water == Some(0) {
+            // a zero byte budget would advertise zero credit forever;
+            // "no byte bound" is spelled None, not 0
+            return Err(crate::mpwide::MpwError::Config(
+                "resilience recv_stash_high_water must be positive (use None to disable)".into(),
+            ));
         }
         let r = &self.reconnect;
         if r.base_delay > r.max_delay {
@@ -404,6 +429,19 @@ mod tests {
         assert!(c.validate().is_ok());
         c.resilience.window = crate::mpwide::resilience::MAX_WINDOW + 1;
         assert!(c.validate().is_err(), "window beyond the receiver's reorder bound");
+    }
+
+    #[test]
+    fn resilience_validation_rejects_zero_stash_high_water() {
+        let mut c = PathConfig::default();
+        c.resilience.recv_stash_high_water = Some(0);
+        assert!(c.validate().is_err(), "zero byte credit means no progress, ever");
+        c.resilience.recv_stash_high_water = Some(1 << 20);
+        assert!(c.validate().is_ok());
+        c.resilience.recv_stash_high_water = None;
+        assert!(c.validate().is_ok(), "None disables the byte bound");
+        let w = ResilienceConfig::wan();
+        assert!(w.recv_stash_high_water.is_some(), "wan preset bounds the stash");
     }
 
     #[test]

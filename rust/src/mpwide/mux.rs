@@ -50,10 +50,14 @@
 //!
 //! * A muxed path belongs to the mux: once wrapped, all traffic must go
 //!   through channels (the dispatcher owns the path's receive side).
-//! * Inbound messages queue unboundedly on a channel nobody `recv`s —
-//!   the dispatcher must never block on a slow consumer, or it would
-//!   head-of-line-block every other channel. Pair producers with
-//!   consumers, as every MPWide application already does.
+//! * By default inbound messages queue unboundedly on a channel nobody
+//!   `recv`s — the dispatcher must never block on a slow consumer, or
+//!   it would head-of-line-block every other channel. Set
+//!   [`MuxConfig::recv_high_water`] to bound them instead: the
+//!   dispatcher withholds credit ([`CH_WINDOW_UPDATE`] frames) past the
+//!   mark, the *peer's* pump parks that one channel (others keep
+//!   flowing) and the peer's producers feel its outbound high-water —
+//!   backpressure end to end, no unbounded buffer anywhere.
 //! * Both ends must agree on channel ids (like ports); opening is not
 //!   negotiated. A frame for a never-opened id creates the channel
 //!   state, so open order across the two ends is free. The flip side:
@@ -104,6 +108,13 @@ pub const CH_FIN: u8 = 2;
 pub const CH_OPEN: u8 = 3;
 /// Peer closed the channel; no further frames for this id will follow.
 pub const CH_CLOSE: u8 = 4;
+/// Receiver-driven credit for one channel: the `msg_seq` field carries a
+/// cumulative byte grant — the total payload bytes the sender may have
+/// handed to the wire on this channel. A sender whose peer advertises
+/// credit starts a new message only while its cumulative sent bytes are
+/// below the newest grant; the receiver raises the grant as its
+/// application drains the inbound queue. Zero payload.
+pub const CH_WINDOW_UPDATE: u8 = 5;
 /// Channel frame header size: magic + kind + channel + msg_seq + len.
 pub const MUX_HDR_LEN: usize = 1 + 1 + 4 + 8 + 4;
 /// Upper bound on a single channel frame payload (a corrupted header
@@ -141,7 +152,7 @@ pub fn decode_mux_hdr(h: &[u8; MUX_HDR_LEN]) -> Result<MuxHdr> {
         return Err(MpwError::Protocol(format!("bad channel frame magic {:#04x}", h[0])));
     }
     let kind = h[1];
-    if !(CH_DATA..=CH_CLOSE).contains(&kind) {
+    if !(CH_DATA..=CH_WINDOW_UPDATE).contains(&kind) {
         return Err(MpwError::Protocol(format!("bad channel frame kind {kind}")));
     }
     let channel = u32::from_be_bytes(h[2..6].try_into().unwrap());
@@ -150,7 +161,7 @@ pub fn decode_mux_hdr(h: &[u8; MUX_HDR_LEN]) -> Result<MuxHdr> {
     if len as usize > MAX_MUX_PAYLOAD {
         return Err(MpwError::Protocol(format!("channel frame payload {len} exceeds bound")));
     }
-    if (kind == CH_OPEN || kind == CH_CLOSE) && len != 0 {
+    if (kind == CH_OPEN || kind == CH_CLOSE || kind == CH_WINDOW_UPDATE) && len != 0 {
         return Err(MpwError::Protocol(format!(
             "control channel frame (kind {kind}) carries {len} payload bytes"
         )));
@@ -180,11 +191,30 @@ pub struct MuxConfig {
     /// channel's). Size the lease well above the application's
     /// worst-case open skew.
     pub tombstone_ttl: Option<Duration>,
+    /// Per-channel bound on *inbound* queued-but-not-`recv`ed bytes.
+    /// `None` (the default) keeps the historical behaviour: a channel
+    /// nobody `recv`s grows without bound. `Some(hw)` turns on
+    /// receiver-driven credit: the dispatcher advertises a cumulative
+    /// byte grant per channel ([`CH_WINDOW_UPDATE`] frames), `recv`
+    /// replenishes it, and the *peer's* pump stops starting new
+    /// messages on a channel whose grant is exhausted — the peer's
+    /// producers then park on its own [`MuxConfig::high_water`], so the
+    /// backpressure reaches the remote application instead of this
+    /// process's memory. A stalled reader holds at most `hw` plus one
+    /// message; other channels keep flowing. Both knobs are per
+    /// endpoint and need not match the peer; a legacy peer simply never
+    /// advertises, and this end then applies no send-side gating.
+    pub recv_high_water: Option<usize>,
 }
 
 impl Default for MuxConfig {
     fn default() -> Self {
-        MuxConfig { chunk_budget: 256 * 1024, high_water: 16 << 20, tombstone_ttl: None }
+        MuxConfig {
+            chunk_budget: 256 * 1024,
+            high_water: 16 << 20,
+            tombstone_ttl: None,
+            recv_high_water: None,
+        }
     }
 }
 
@@ -205,6 +235,13 @@ impl MuxConfig {
         }
         if self.tombstone_ttl.is_some_and(|ttl| ttl.is_zero()) {
             return Err(MpwError::Config("mux tombstone_ttl must be positive".into()));
+        }
+        if self.recv_high_water == Some(0) {
+            // a zero grant would park every sending peer forever;
+            // "unbounded" is spelled None, not 0
+            return Err(MpwError::Config(
+                "mux recv_high_water must be positive (use None to disable)".into(),
+            ));
         }
         Ok(())
     }
@@ -244,10 +281,24 @@ struct ChanState {
     partial: Vec<u8>,
     ready: VecDeque<Vec<u8>>,
     next_recv_seq: u64,
+    /// Payload bytes sitting in `ready` (complete messages only —
+    /// `partial` is excluded so a message larger than the receive
+    /// high-water cannot wedge the credit accounting mid-reassembly).
+    ready_bytes: usize,
+    /// Cumulative payload bytes of completed inbound messages (the
+    /// basis of the byte grants this end advertises).
+    recvd_bytes: u64,
+    /// Newest cumulative grant advertised to the peer (monotone; only
+    /// raised — a retransmitted or reordered grant must never shrink
+    /// the peer's budget).
+    last_grant: u64,
     // outbound
     outq: VecDeque<OutMsg>,
     out_bytes: usize,
     next_send_seq: u64,
+    /// Newest cumulative byte grant the peer advertised for this
+    /// channel; compared against `sent_bytes` when credit gating is on.
+    peer_grant: u64,
     /// FIFO tickets for senders parked on the high-water mark: a parked
     /// sender enqueues only when its ticket reaches `park_head`, and the
     /// fast paths stand down while anyone is parked — otherwise a later
@@ -277,6 +328,13 @@ pub struct ChannelStats {
     /// inbound message (endpoint-wide monotonic counter; lets tests and
     /// diagnostics compare delivery *order* across channels).
     pub last_delivery_ticket: u64,
+    /// Inbound bytes queued for `recv` (complete messages plus any
+    /// partially reassembled one) — the quantity
+    /// [`MuxConfig::recv_high_water`] bounds.
+    pub inbound_queued_bytes: usize,
+    /// Newest cumulative byte grant the peer advertised for this
+    /// channel (0 until a credit-aware peer's first WINDOW_UPDATE).
+    pub peer_grant: u64,
 }
 
 struct MuxState {
@@ -292,6 +350,12 @@ struct MuxState {
     /// Fatal path/protocol error, reported to every channel operation.
     dead: Option<String>,
     shutdown: bool,
+    /// The peer has sent at least one WINDOW_UPDATE, proving it runs a
+    /// credit-aware build with a receive high-water configured. Only
+    /// then does the pump gate sends on per-channel grants — gating
+    /// against a peer that never advertises would park every channel
+    /// forever.
+    peer_credit: bool,
 }
 
 struct MuxInner {
@@ -312,6 +376,8 @@ enum PumpJob {
     Open(u32),
     Close(u32),
     Chunk { id: u32, msg: OutMsg, end: usize, fin: bool },
+    /// Advertise a cumulative inbound byte grant for a channel.
+    Credit { id: u32, grant: u64 },
 }
 
 /// One end of a multiplexed path. See the module docs for the model.
@@ -363,6 +429,7 @@ impl MuxEndpoint {
                     next_gen: 0,
                     dead: None,
                     shutdown: false,
+                    peer_credit: false,
                 },
             ),
             send_cv: OrderedCondvar::new(),
@@ -437,6 +504,8 @@ impl MuxEndpoint {
                 queued_bytes: c.out_bytes,
                 ready_msgs: c.ready.len(),
                 last_delivery_ticket: c.last_delivery_ticket,
+                inbound_queued_bytes: c.ready_bytes + c.partial.len(),
+                peer_grant: c.peer_grant,
             })
             .collect();
         out.sort_by_key(|c| c.id);
@@ -605,9 +674,15 @@ impl Channel {
         loop {
             if let Some(ch) = self.chan_mut(&mut st) {
                 if let Some(msg) = ch.ready.pop_front() {
+                    ch.ready_bytes = ch.ready_bytes.saturating_sub(msg.len());
                     gc_chan(&mut st, self.id);
                     drop(st);
                     self.inner.space_cv.notify_all();
+                    if self.inner.cfg.recv_high_water.is_some() {
+                        // freed inbound budget: let the pump consider a
+                        // fresh credit advert for the peer
+                        self.inner.send_cv.notify_all();
+                    }
                     return Ok(msg);
                 }
                 if ch.remote_closed || ch.local_closed {
@@ -627,9 +702,13 @@ impl Channel {
         let mut st = self.inner.st.lock();
         if let Some(ch) = self.chan_mut(&mut st) {
             if let Some(msg) = ch.ready.pop_front() {
+                ch.ready_bytes = ch.ready_bytes.saturating_sub(msg.len());
                 gc_chan(&mut st, self.id);
                 drop(st);
                 self.inner.space_cv.notify_all();
+                if self.inner.cfg.recv_high_water.is_some() {
+                    self.inner.send_cv.notify_all();
+                }
                 return Ok(Some(msg));
             }
             if ch.remote_closed || ch.local_closed {
@@ -861,8 +940,20 @@ fn sweep_tombstones(st: &mut MuxState, ttl: Option<Duration>) {
 /// Select the pump's next frame: scan the rotation from the cursor and
 /// take one budget-bounded unit of work from the first channel that has
 /// any, advancing the cursor past it (the fairness rule).
-fn pick_job(st: &mut MuxState, budget: usize) -> Option<PumpJob> {
+///
+/// Credit rules: with `recv_high_water` set, a due credit advert
+/// preempts the channel's own data (a starved peer needs the grant more
+/// than we need the next chunk). With a credit-advertising peer, a
+/// channel *starts* a new message only while its cumulative sent bytes
+/// are below the peer's newest grant; a started message is always
+/// finished (`off > 0`), so a single message larger than the grant
+/// window cannot wedge the peer's reassembly — exactly the
+/// empty-queue-is-always-admitted rule of the outbound high-water, in
+/// the other direction. A creditless channel is *skipped*, not waited
+/// on: the rotation keeps every other channel flowing.
+fn pick_job(st: &mut MuxState, budget: usize, recv_high_water: Option<usize>) -> Option<PumpJob> {
     let n = st.order.len();
+    let peer_credit = st.peer_credit;
     for k in 0..n {
         let pos = (st.cursor + k) % n;
         let id = st.order[pos];
@@ -872,17 +963,39 @@ fn pick_job(st: &mut MuxState, budget: usize) -> Option<PumpJob> {
             st.cursor = (pos + 1) % n;
             return Some(PumpJob::Open(id));
         }
-        if let Some(msg) = ch.outq.pop_front() {
-            let end = (msg.off + budget).min(msg.data.len());
-            let fin = end == msg.data.len();
-            let take = end - msg.off;
-            ch.out_bytes -= take;
-            ch.sent_bytes += take as u64;
-            ch.in_flight = true;
-            st.cursor = (pos + 1) % n;
-            return Some(PumpJob::Chunk { id, msg, end, fin });
+        if let Some(hw) = recv_high_water {
+            if !ch.remote_closed {
+                let desired = ch
+                    .recvd_bytes
+                    .saturating_add((hw as u64).saturating_sub(ch.ready_bytes as u64))
+                    .max(ch.last_grant);
+                // Re-advertise only on meaningful growth (a quarter of
+                // the budget) — a WINDOW_UPDATE per tiny recv would
+                // spend the wire on bookkeeping. The first advert
+                // (last_grant 0, desired >= hw) always qualifies.
+                if desired - ch.last_grant >= ((hw / 4).max(1)) as u64 {
+                    ch.last_grant = desired;
+                    st.cursor = (pos + 1) % n;
+                    return Some(PumpJob::Credit { id, grant: desired });
+                }
+            }
         }
-        if ch.local_closed && !ch.close_sent && !ch.in_flight {
+        let gated = peer_credit
+            && ch.outq.front().is_some_and(|m| m.off == 0)
+            && ch.sent_bytes >= ch.peer_grant;
+        if !gated {
+            if let Some(msg) = ch.outq.pop_front() {
+                let end = (msg.off + budget).min(msg.data.len());
+                let fin = end == msg.data.len();
+                let take = end - msg.off;
+                ch.out_bytes -= take;
+                ch.sent_bytes += take as u64;
+                ch.in_flight = true;
+                st.cursor = (pos + 1) % n;
+                return Some(PumpJob::Chunk { id, msg, end, fin });
+            }
+        }
+        if ch.local_closed && !ch.close_sent && !ch.in_flight && ch.outq.is_empty() {
             ch.close_sent = true;
             st.cursor = (pos + 1) % n;
             return Some(PumpJob::Close(id));
@@ -906,7 +1019,7 @@ fn pump_loop(inner: &Arc<MuxInner>) {
                     return;
                 }
                 sweep_tombstones(&mut st, inner.cfg.tombstone_ttl);
-                if let Some(job) = pick_job(&mut st, budget) {
+                if let Some(job) = pick_job(&mut st, budget, inner.cfg.recv_high_water) {
                     break Some(job);
                 }
                 if dirty {
@@ -955,6 +1068,10 @@ fn pump_loop(inner: &Arc<MuxInner>) {
                 let hdr = encode_mux_hdr(kind, *id, msg.seq, chunk.len() as u32);
                 inner.path.dsend_split(&hdr, chunk)
             }
+            PumpJob::Credit { id, grant } => {
+                let hdr = encode_mux_hdr(CH_WINDOW_UPDATE, *id, *grant, 0);
+                inner.path.dsend_split(&hdr, &[])
+            }
         };
         let mut st = inner.st.lock();
         match job {
@@ -976,7 +1093,7 @@ fn pump_loop(inner: &Arc<MuxInner>) {
                 // be reused here
                 gc_chan(&mut st, id);
             }
-            PumpJob::Open(_) => {}
+            PumpJob::Open(_) | PumpJob::Credit { .. } => {}
         }
         // flush() waiters watch in_flight/outq through this condvar
         inner.space_cv.notify_all();
@@ -1101,6 +1218,8 @@ fn route_frame(inner: &Arc<MuxInner>, frame: &[u8]) -> Result<()> {
             if hdr.kind == CH_FIN {
                 let msg = std::mem::take(&mut ch.partial);
                 ch.delivered_bytes += msg.len() as u64;
+                ch.recvd_bytes += msg.len() as u64;
+                ch.ready_bytes += msg.len();
                 ch.ready.push_back(msg);
                 ch.next_recv_seq += 1;
                 ch.last_delivery_ticket = ticket;
@@ -1108,6 +1227,19 @@ fn route_frame(inner: &Arc<MuxInner>, frame: &[u8]) -> Result<()> {
                 drop(st);
                 inner.recv_cv.notify_all();
             }
+        }
+        CH_WINDOW_UPDATE => {
+            // proof of a credit-aware peer: from here on the pump gates
+            // each channel's sends on that channel's grant
+            st.peer_credit = true;
+            // advisory: a grant for state we already dropped (both ends
+            // closed and drained) must not resurrect the channel
+            if let Some(ch) = st.chans.get_mut(&hdr.channel) {
+                ch.peer_grant = ch.peer_grant.max(hdr.msg_seq);
+            }
+            drop(st);
+            // the pump may be parked on exhausted credit
+            inner.send_cv.notify_all();
         }
         _ => unreachable!("decode_mux_hdr validated the kind"),
     }
@@ -1363,6 +1495,51 @@ mod tests {
             ..MuxConfig::default()
         };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn zero_recv_high_water_rejected() {
+        let cfg = MuxConfig { recv_high_water: Some(0), ..MuxConfig::default() };
+        assert!(cfg.validate().is_err(), "a zero grant parks every peer forever");
+        let cfg = MuxConfig { recv_high_water: Some(1 << 20), ..MuxConfig::default() };
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn window_update_hdr_roundtrip() {
+        let h = encode_mux_hdr(CH_WINDOW_UPDATE, 9, 123_456_789, 0);
+        let d = decode_mux_hdr(&h).unwrap();
+        assert_eq!(
+            d,
+            MuxHdr { kind: CH_WINDOW_UPDATE, channel: 9, msg_seq: 123_456_789, len: 0 }
+        );
+        // a credit frame must not carry payload
+        let h = encode_mux_hdr(CH_WINDOW_UPDATE, 9, 1, 4);
+        assert!(decode_mux_hdr(&h).is_err());
+    }
+
+    #[test]
+    fn credited_channels_roundtrip_and_report_grants() {
+        // both ends bound their inbound queues; traffic must still flow
+        // and each end must learn the other's grant
+        let cfg = MuxConfig { recv_high_water: Some(1 << 20), ..MuxConfig::default() };
+        let (a, b) = mem_endpoints(2, cfg);
+        let tx = a.open(3).unwrap();
+        let rx = b.open(3).unwrap();
+        let mut msg = vec![0u8; 200_000];
+        Rng::new(77).fill_bytes(&mut msg);
+        for _ in 0..8 {
+            tx.send(&msg).unwrap();
+            assert_eq!(rx.recv().unwrap(), msg);
+        }
+        tx.flush().unwrap();
+        // reverse ping: b's pump sent its first credit advert before this
+        // message (FIFO wire), so once it arrives the grant has landed
+        rx.send(b"done").unwrap();
+        assert_eq!(tx.recv().unwrap(), b"done");
+        let stats = a.channel_stats();
+        let c = stats.iter().find(|c| c.id == 3).expect("channel 3 stats");
+        assert!(c.peer_grant > 0, "peer never advertised credit");
     }
 
     #[test]

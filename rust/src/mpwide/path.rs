@@ -27,7 +27,9 @@ use super::errors::{MpwError, Result};
 use super::pacing::Pacer;
 use super::resilience::{self, FrameBox, HealthState, PathStatus, RejoinDaemon, RejoinRegistry};
 use super::stripe::{self, SplitBuf};
-use super::transport::{connect_streams, HalfDuplex, KillSwitch, RawPathListener, StreamPair};
+use super::transport::{
+    connect_streams, HalfDuplex, KillSwitch, RawPathListener, StreamPair, HELLO_VERSION,
+};
 
 /// Wire size of the per-message active-stream header (u16, big endian,
 /// on stream 0 ahead of the striped payload).
@@ -125,6 +127,21 @@ pub struct Path {
     /// Receiver-side stash for messages a pipelining peer completed out
     /// of turn (see [`resilience::MAX_WINDOW`]).
     pub(crate) recv_reorder: resilience::ReorderBuf,
+    /// Latest credit the peer's receiver advertised (credit flow
+    /// control); the windowed sender posts only against it.
+    pub(crate) send_credit: resilience::SendCredit,
+    /// Whether the peer understands credit frames (hello version >= 1).
+    /// False until proven: sending an extended ACK or a WINDOW_UPDATE
+    /// kind to a legacy peer would be a fatal protocol error over there.
+    /// The connecting side cannot learn the acceptor's version at the
+    /// initial handshake (there is no hello reply), so it starts false
+    /// and flips on the first credit-bearing frame the peer sends us.
+    peer_credit_aware: AtomicBool,
+    /// Monotone id for our outgoing credit adverts (starts at 1; the
+    /// peer's `SendCredit` treats id 0 as "nothing applied yet").
+    credit_advert: AtomicU64,
+    /// Byte budget for the reorder stash (cached from the config).
+    recv_stash_high_water: Option<usize>,
     /// `SO_SNDTIMEO`-style write deadline (cached from the config;
     /// reapplied to every rejoined stream).
     write_timeout: Option<Duration>,
@@ -197,6 +214,7 @@ impl Path {
         let resilient = cfg.resilience.enabled;
         let ack_timeout = cfg.resilience.ack_timeout;
         let write_timeout = cfg.resilience.write_timeout;
+        let recv_stash_high_water = cfg.resilience.recv_stash_high_water;
         let reconnect = cfg.resilience.reconnect.clone();
         Ok(Path {
             streams,
@@ -215,6 +233,14 @@ impl Path {
             ack_watchdog: resilience::AckWatchdog::new(),
             send_window: resilience::SendWindow::default(),
             recv_reorder: resilience::ReorderBuf::default(),
+            send_credit: resilience::SendCredit::default(),
+            // from_pairs is the same-build constructor (tests, in-memory
+            // transports, forwarders): both ends speak the current
+            // revision. The socket constructors override this from the
+            // handshake below.
+            peer_credit_aware: AtomicBool::new(true),
+            credit_advert: AtomicU64::new(1),
+            recv_stash_high_water,
             write_timeout,
             closed: AtomicBool::new(false),
             reconnect: OrderedMutex::new(rank::RECONNECT_POLICY, reconnect),
@@ -231,6 +257,10 @@ impl Path {
         let (pairs, uuid) = connect_streams(host, port, cfg.nstreams, cfg.connect_timeout)?;
         let autotune = cfg.autotune;
         let path = Path::from_pairs(pairs, cfg)?;
+        // The initial connect handshake has no reply, so the acceptor's
+        // protocol version is unknown here; stay conservative until the
+        // peer proves credit-awareness by sending a credit frame.
+        path.set_peer_credit_aware(false);
         *path.remote.lock() = Some((format!("{host}:{port}"), uuid));
         *path.uuid.lock() = Some(uuid);
         if autotune {
@@ -603,6 +633,43 @@ impl Path {
         Ok(t0.elapsed())
     }
 
+    /// Seed the in-flight send window from the measured
+    /// bandwidth-delay product instead of the configured constant: the
+    /// pipeline needs `BDP / message-size` messages in flight to keep a
+    /// long fat link full, and the adaptive tuner's halve/double
+    /// hill-climb takes many round trips to discover that from a coarse
+    /// starting point. Measures RTT with a barrier exchange, takes the
+    /// best goodput estimate available (controller EWMA when the
+    /// adaptive mode has samples, otherwise the aggregate pacing rate),
+    /// and widens/narrows both the live window and its tunable ceiling
+    /// to `ceil(BDP / chunk)`, clamped to `[1,`
+    /// [`resilience::MAX_WINDOW`]`]` and re-clamped under any credit
+    /// the peer has advertised. With no goodput estimate (static mode,
+    /// unpaced) the window is left untouched. Returns the effective
+    /// window. Resilient paths only; call between exchanges — it runs a
+    /// barrier.
+    pub fn seed_window_from_bdp(&self) -> Result<usize> {
+        if !self.resilient {
+            return Err(MpwError::Config(
+                "seed_window_from_bdp needs resilience.enabled (windowing lives there)".into(),
+            ));
+        }
+        let rtt = self.measure_rtt()?;
+        let snap = self.tune_snapshot();
+        let rate = snap
+            .ewma_rate
+            .or_else(|| snap.pacing_rate.map(|r| r * snap.active_streams.max(1) as f64));
+        let Some(rate) = rate else {
+            return Ok(self.send_window_limit());
+        };
+        let bdp = rate.max(0.0) * rtt.as_secs_f64();
+        let msgs = (bdp / snap.chunk_size.max(1) as f64).ceil() as usize;
+        let w = msgs.clamp(1, resilience::MAX_WINDOW);
+        self.tuning.init_window(w);
+        self.tuning.set_window(w); // re-applies the peer-credit clamp
+        Ok(self.tuning.window())
+    }
+
     // -- stream health (resilience layer) -----------------------------------
 
     /// Whether resilient framing is active on this path.
@@ -613,6 +680,36 @@ impl Path {
     /// The configured ACK progress budget, if any (resilient mode).
     pub(crate) fn ack_timeout(&self) -> Option<Duration> {
         self.ack_timeout
+    }
+
+    /// Byte budget for the receive-side reorder stash, if configured.
+    pub(crate) fn recv_stash_high_water(&self) -> Option<usize> {
+        self.recv_stash_high_water
+    }
+
+    /// Whether the peer understands credit frames (extended ACKs and the
+    /// WINDOW_UPDATE kind). Gates every credit emission: a legacy peer
+    /// treats both as fatal protocol errors.
+    pub(crate) fn peer_credit_aware(&self) -> bool {
+        self.peer_credit_aware.load(Ordering::Relaxed)
+    }
+
+    /// Record that the peer just sent us a credit-bearing frame — only a
+    /// version >= 1 build does that, so it is safe to reciprocate.
+    pub(crate) fn note_peer_credit_aware(&self) {
+        self.peer_credit_aware.store(true, Ordering::Relaxed);
+    }
+
+    /// Set credit-awareness from the handshake (socket constructors).
+    pub(crate) fn set_peer_credit_aware(&self, aware: bool) {
+        self.peer_credit_aware.store(aware, Ordering::Relaxed);
+    }
+
+    /// Fresh id for an outgoing credit advert. Strictly increasing, so
+    /// the peer can keep the newest advert regardless of arrival order
+    /// (an advert can travel in an ACK and in a WINDOW_UPDATE frame).
+    pub(crate) fn next_credit_advert_id(&self) -> u64 {
+        self.credit_advert.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Whether stream `i` can currently carry traffic.
@@ -822,6 +919,7 @@ impl Path {
             rejoined: self.health.rejoined.load(Ordering::SeqCst),
             ack_timeouts: self.ack_watchdog.fired(),
             window_in_flight: self.send_window.in_flight(),
+            reorder_stash_bytes: self.recv_reorder.usage().1,
             resilient: self.resilient,
             reconnect_enabled: self.reconnect.lock().enabled,
         }
@@ -916,10 +1014,11 @@ impl PathListener {
     /// Accept the next complete path; runs the autotuner as slave if
     /// configured (must match the connecting side's setting).
     pub fn accept_path(&mut self) -> Result<Path> {
-        let (pairs, uuid) = self.raw.accept_streams()?;
+        let (pairs, uuid, version) = self.raw.accept_streams()?;
         let autotune = self.cfg.autotune;
         let path = Path::from_pairs(pairs, self.cfg.clone())?;
         path.set_path_uuid(uuid);
+        path.set_peer_credit_aware(version >= HELLO_VERSION);
         if autotune {
             // see Path::connect: no runtime adaptation during the probes
             let mode = path.tune_mode();
@@ -935,10 +1034,11 @@ impl PathListener {
     /// [`RejoinDaemon`], reconnecting streams bearing this path's uuid
     /// are routed back into it.
     pub fn accept_path_arc(&mut self) -> Result<Arc<Path>> {
-        let (pairs, uuid) = self.raw.accept_streams()?;
+        let (pairs, uuid, version) = self.raw.accept_streams()?;
         let autotune = self.cfg.autotune;
         let path = Path::from_pairs(pairs, self.cfg.clone())?;
         path.set_path_uuid(uuid);
+        path.set_peer_credit_aware(version >= HELLO_VERSION);
         let path = Arc::new(path);
         if autotune {
             let mode = path.tune_mode();

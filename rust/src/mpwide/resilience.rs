@@ -141,6 +141,11 @@ pub const KIND_CTRL: u8 = 1;
 pub const KIND_DATA: u8 = 2;
 /// See [`KIND_CTRL`].
 pub const KIND_ACK: u8 = 3;
+/// Receiver-credit advertisement (`WINDOW_UPDATE`): the frame's
+/// `msg_seq` carries the advert id and its payload is one
+/// [`WINDOW_UPDATE_LEN`]-byte credit block. Advisory — a lost one is
+/// healed by the credit copy every extended ACK carries.
+pub const KIND_WINDOW_UPDATE: u8 = 4;
 /// Fixed frame header size: magic + kind + msg_seq + attempt + len.
 pub const FRAME_HDR_LEN: usize = 1 + 1 + 8 + 4 + 4;
 /// Upper bound on a single DATA frame payload (a corrupted header must
@@ -151,6 +156,15 @@ const ACK_OK: u8 = 0;
 const ACK_RETRY: u8 = 1;
 /// "No dead stream to report" in an ACK's detail field.
 const NO_DETAIL: u16 = u16::MAX;
+/// `ACK_RETRY` detail: the receiver's reorder stash is byte-full
+/// ([`ResilienceConfig::recv_stash_high_water`](super::config::ResilienceConfig::recv_stash_high_water)),
+/// not a stream failure — the sender must repost later without marking
+/// any stream dead.
+pub const DETAIL_STASH_FULL: u16 = 0xFFFE;
+/// Size of one credit block: advert id + seq limit + byte credit +
+/// message budget. The payload of a `WINDOW_UPDATE` frame, and the tail
+/// of an extended (credit-bearing) ACK.
+pub const WINDOW_UPDATE_LEN: usize = 8 + 8 + 8 + 4;
 
 /// Hard ceiling on [`ResilienceConfig::window`](super::config::ResilienceConfig::window).
 ///
@@ -191,7 +205,7 @@ pub fn decode_frame_hdr(h: &[u8; FRAME_HDR_LEN]) -> Result<FrameHdr> {
         return Err(MpwError::Protocol(format!("bad frame magic {:#04x}", h[0])));
     }
     let kind = h[1];
-    if !(KIND_CTRL..=KIND_ACK).contains(&kind) {
+    if !(KIND_CTRL..=KIND_WINDOW_UPDATE).contains(&kind) {
         return Err(MpwError::Protocol(format!("bad frame kind {kind}")));
     }
     let msg_seq = u64::from_be_bytes(h[2..10].try_into().unwrap());
@@ -258,6 +272,56 @@ pub fn parse_ctrl(p: &[u8]) -> Result<CtrlMsg> {
     Ok(CtrlMsg { total, streams, dead })
 }
 
+/// Decoded credit advertisement (`WINDOW_UPDATE` payload, or the tail
+/// of an extended ACK). All values are **absolute** — a credit block
+/// replaces, never increments, the sender's view — so a lost or
+/// reordered advert is harmless: the newest `advert_id` wins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Credit {
+    /// Monotonic per-direction advert counter; receivers of a credit
+    /// block apply it only if this is newer than the last applied one.
+    pub advert_id: u64,
+    /// Highest `msg_seq` the receiver grants: the sender must not post
+    /// a message with a larger sequence number. `u64::MAX` = no limit.
+    pub seq_limit: u64,
+    /// Free bytes in the receiver's reorder stash. Messages beyond the
+    /// oldest in flight must fit in it; `u64::MAX` = unbounded (no
+    /// byte high-water configured).
+    pub byte_credit: u64,
+    /// The receiver's message budget — a cap on how many messages the
+    /// sender should keep in flight (narrows the adaptive window
+    /// tunable, never widens past [`MAX_WINDOW`]).
+    pub budget_msgs: u32,
+}
+
+/// Encode a credit block.
+pub fn encode_credit(c: &Credit) -> [u8; WINDOW_UPDATE_LEN] {
+    let mut b = [0u8; WINDOW_UPDATE_LEN];
+    b[0..8].copy_from_slice(&c.advert_id.to_be_bytes());
+    b[8..16].copy_from_slice(&c.seq_limit.to_be_bytes());
+    b[16..24].copy_from_slice(&c.byte_credit.to_be_bytes());
+    b[24..28].copy_from_slice(&c.budget_msgs.to_be_bytes());
+    b
+}
+
+/// Decode a credit block.
+pub fn parse_credit(p: &[u8]) -> Result<Credit> {
+    if p.len() != WINDOW_UPDATE_LEN {
+        return Err(MpwError::Protocol(format!("credit block of {} bytes", p.len())));
+    }
+    let mut w = [0u8; 8];
+    w.copy_from_slice(&p[0..8]);
+    let advert_id = u64::from_be_bytes(w);
+    w.copy_from_slice(&p[8..16]);
+    let seq_limit = u64::from_be_bytes(w);
+    w.copy_from_slice(&p[16..24]);
+    let byte_credit = u64::from_be_bytes(w);
+    let mut n = [0u8; 4];
+    n.copy_from_slice(&p[24..28]);
+    let budget_msgs = u32::from_be_bytes(n);
+    Ok(Credit { advert_id, seq_limit, byte_credit, budget_msgs })
+}
+
 // ---------------------------------------------------------------------------
 // Per-stream frame inbox: routing between concurrent frame consumers.
 // ---------------------------------------------------------------------------
@@ -282,9 +346,15 @@ impl Default for FrameBox {
 }
 
 impl FrameBox {
-    /// Park a frame for another consumer.
+    /// Park a frame for another consumer. Credit adverts are absolute
+    /// (newest wins) and their consumer may never come, so at most one
+    /// `WINDOW_UPDATE` is kept per inbox — the parked one is replaced.
     fn push(&self, hdr: FrameHdr, payload: Vec<u8>) {
-        self.q.lock().push_back((hdr, payload));
+        let mut q = self.q.lock();
+        if hdr.kind == KIND_WINDOW_UPDATE {
+            q.retain(|(h, _)| h.kind != KIND_WINDOW_UPDATE);
+        }
+        q.push_back((hdr, payload));
     }
 
     /// Take the oldest parked frame of `kind`, if any.
@@ -509,6 +579,9 @@ pub struct PathStatus {
     /// Messages posted by the windowed sender and not yet acknowledged
     /// (always 0 with `window == 1`).
     pub window_in_flight: usize,
+    /// Bytes currently held in the receiver's reorder stash (messages a
+    /// pipelining peer completed out of turn).
+    pub reorder_stash_bytes: usize,
     /// Whether resilient framing is enabled.
     pub resilient: bool,
     /// Whether background reconnection is enabled.
@@ -620,7 +693,30 @@ fn read_frame(path: &Path, s: usize, want: u8) -> Result<(FrameHdr, Vec<u8>)> {
     }
 }
 
-/// Write an ACK frame on stream `s` (flushes immediately).
+/// Snapshot this end's *receive-side* credit: how far ahead of the
+/// expected sequence the peer may post, and how many stash bytes are
+/// free. Takes (and releases) the reorder-stash lock only — callers
+/// write the resulting block with no credit lock held.
+fn current_credit(path: &Path) -> Credit {
+    let expected = path.res_recv_seq.load(Ordering::Relaxed);
+    let (stash_msgs, stash_bytes) = path.recv_reorder.usage();
+    let free_msgs = MAX_WINDOW.saturating_sub(stash_msgs).max(1);
+    let byte_credit = match path.recv_stash_high_water() {
+        Some(hw) => hw.saturating_sub(stash_bytes) as u64,
+        None => u64::MAX,
+    };
+    Credit {
+        advert_id: path.next_credit_advert_id(),
+        seq_limit: expected.saturating_add(free_msgs as u64),
+        byte_credit,
+        budget_msgs: free_msgs as u32,
+    }
+}
+
+/// Write an ACK frame on stream `s` (flushes immediately). Against a
+/// credit-aware peer the ACK is *extended*: the 3 status bytes are
+/// followed by a fresh credit block, so every acknowledgement also
+/// refreshes the peer's view of this end's receive window.
 fn write_ack(
     path: &Path,
     s: usize,
@@ -630,7 +726,72 @@ fn write_ack(
     detail: u16,
 ) -> Result<()> {
     let d = detail.to_be_bytes();
-    write_frame(path, s, KIND_ACK, msg_seq, attempt, SplitBuf::plain(&[status, d[0], d[1]]), true)
+    if path.peer_credit_aware() {
+        let credit = encode_credit(&current_credit(path));
+        let mut p = [0u8; 3 + WINDOW_UPDATE_LEN];
+        p[0] = status;
+        p[1] = d[0];
+        p[2] = d[1];
+        p[3..].copy_from_slice(&credit);
+        write_frame(path, s, KIND_ACK, msg_seq, attempt, SplitBuf::plain(&p), true)
+    } else {
+        write_frame(
+            path,
+            s,
+            KIND_ACK,
+            msg_seq,
+            attempt,
+            SplitBuf::plain(&[status, d[0], d[1]]),
+            true,
+        )
+    }
+}
+
+/// Send a dedicated `WINDOW_UPDATE` frame on the control stream,
+/// advertising fresh receive-side credit outside the ACK flow (the
+/// stash just shrank and the peer may be blocked on credit). Advisory:
+/// write errors are swallowed — every extended ACK carries the same
+/// information and a dead control stream is handled by its consumers.
+fn advertise_credit(path: &Path) {
+    if !path.peer_credit_aware() {
+        return;
+    }
+    let c = current_credit(path);
+    let Ok(s) = ctrl_stream(path) else { return };
+    let _ = write_frame(
+        path,
+        s,
+        KIND_WINDOW_UPDATE,
+        c.advert_id,
+        0,
+        SplitBuf::plain(&encode_credit(&c)),
+        true,
+    );
+}
+
+/// Apply a credit block received from the peer: update the send-side
+/// credit view (newest advert wins) and narrow the adaptive window
+/// tunable to the peer's message budget. Receiving *any* credit also
+/// proves the peer speaks the credit revision.
+fn apply_peer_credit(path: &Path, c: &Credit) {
+    path.note_peer_credit_aware();
+    if path.send_credit.apply(c) {
+        path.tuning().apply_window_credit((c.budget_msgs as usize).clamp(1, MAX_WINDOW));
+    }
+}
+
+/// Drain any `WINDOW_UPDATE` frames other consumers parked in the
+/// stream inboxes (the receive loop reads frames wanting CTRL and parks
+/// foreign kinds there). At most one per stream thanks to the inbox's
+/// newest-wins dedup.
+fn absorb_window_updates(path: &Path) {
+    for s in &path.streams {
+        while let Some((_, p)) = s.inbox.take(KIND_WINDOW_UPDATE) {
+            if let Ok(c) = parse_credit(&p) {
+                apply_peer_credit(path, &c);
+            }
+        }
+    }
 }
 
 /// Send one stream's segment as chunked DATA frames.
@@ -796,6 +957,22 @@ fn drain_attempt(path: &Path, ctrl: &CtrlMsg, msg_seq: u64, attempt: u32) {
     crate::util::pool::scope(jobs);
 }
 
+/// Validate an ACK payload's length and apply the credit block an
+/// extended (31-byte) ACK carries; legacy 3-byte ACKs pass through
+/// untouched. Any other length is a protocol violation.
+fn absorb_ack_credit(path: &Path, payload: &[u8]) -> Result<()> {
+    match payload.len() {
+        3 => Ok(()),
+        n if n == 3 + WINDOW_UPDATE_LEN => {
+            if let Ok(c) = parse_credit(&payload[3..]) {
+                apply_peer_credit(path, &c);
+            }
+            Ok(())
+        }
+        _ => Err(MpwError::Protocol("malformed ack frame".into())),
+    }
+}
+
 /// Outcome of the sender's ACK wait.
 enum AckOutcome {
     /// Receiver confirmed full delivery.
@@ -818,9 +995,7 @@ fn wait_ack(path: &Path, s: usize, msg_seq: u64, attempt: u32) -> Result<AckOutc
                 hdr.msg_seq
             )));
         }
-        if payload.len() != 3 {
-            return Err(MpwError::Protocol("malformed ack frame".into()));
-        }
+        absorb_ack_credit(path, &payload)?;
         if payload[0] == ACK_OK {
             // any attempt counts: delivery is per message, not per attempt
             return Ok(AckOutcome::Delivered);
@@ -849,6 +1024,14 @@ fn read_ack_frame(path: &Path, s: usize) -> Result<(FrameHdr, Vec<u8>)> {
         let (hdr, payload) = read_raw_frame(path, s, KIND_ACK)?;
         if hdr.kind == KIND_ACK {
             return Ok((hdr, payload));
+        }
+        if hdr.kind == KIND_WINDOW_UPDATE {
+            // the receiver refreshed our credit outside the ACK flow:
+            // apply in place, keep waiting for the ACK proper
+            if let Ok(c) = parse_credit(&payload) {
+                apply_peer_credit(path, &c);
+            }
+            continue;
         }
         if hdr.kind == KIND_CTRL
             && (hdr.msg_seq < path.res_recv_seq.load(Ordering::Relaxed)
@@ -1096,6 +1279,51 @@ impl SendWindow {
     }
 }
 
+/// The sender's view of the peer's advertised receive credit (a Path
+/// field). Starts unlimited — against a legacy (pre-credit) peer no
+/// advert ever arrives and the hard [`MAX_WINDOW`] bound remains the
+/// only constraint, which is exactly the pre-credit protocol.
+pub(crate) struct SendCredit {
+    st: OrderedMutex<Credit>,
+}
+
+impl Default for SendCredit {
+    fn default() -> Self {
+        SendCredit {
+            st: OrderedMutex::new(
+                rank::SEND_CREDIT,
+                Credit {
+                    advert_id: 0,
+                    seq_limit: u64::MAX,
+                    byte_credit: u64::MAX,
+                    budget_msgs: MAX_WINDOW as u32,
+                },
+            ),
+        }
+    }
+}
+
+impl SendCredit {
+    /// Apply an advert if it is newer than the last applied one
+    /// (adverts are absolute; out-of-order stale ones are dropped).
+    /// Returns whether it was applied.
+    fn apply(&self, c: &Credit) -> bool {
+        let mut g = self.st.lock();
+        if c.advert_id > g.advert_id {
+            *g = *c;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current `(seq_limit, byte_credit)` pair.
+    fn limits(&self) -> (u64, u64) {
+        let g = self.st.lock();
+        (g.seq_limit, g.byte_credit)
+    }
+}
+
 fn poisoned_err(msg: &str) -> MpwError {
     MpwError::Protocol(format!("windowed send pipeline failed: {msg}"))
 }
@@ -1203,8 +1431,8 @@ fn reap_some(path: &Path, st: &mut SendState) -> Result<()> {
             }
             Err(e) => break Err(e),
         };
-        if payload.len() != 3 {
-            break Err(MpwError::Protocol("malformed ack frame".into()));
+        if let Err(e) = absorb_ack_credit(path, &payload) {
+            break Err(e);
         }
         let pos = match st.outstanding.iter().position(|p| p.seq == hdr.msg_seq) {
             Some(p) => p,
@@ -1221,7 +1449,13 @@ fn reap_some(path: &Path, st: &mut SendState) -> Result<()> {
             continue; // NACK for an attempt we already abandoned
         }
         let detail = u16::from_be_bytes([payload[1], payload[2]]);
-        if detail != NO_DETAIL && (detail as usize) < path.nstreams() {
+        if detail == DETAIL_STASH_FULL {
+            // The receiver's reorder stash is byte-full — no stream
+            // failed. Back off briefly so the repost below does not turn
+            // into a NACK storm while the peer's consumer catches up
+            // (fresh credit arrives with every ACK it sends).
+            std::thread::sleep(Duration::from_millis(1));
+        } else if detail != NO_DETAIL && (detail as usize) < path.nstreams() {
             path.mark_stream_dead(detail as usize, gen);
         }
         // Selective retry: only the NACKed message goes out again.
@@ -1237,17 +1471,44 @@ fn reap_some(path: &Path, st: &mut SendState) -> Result<()> {
     result
 }
 
-/// Pipelined resilient send: reap until the window has a free slot,
-/// post the message (keeping an owned copy for retransmission), and
-/// return without waiting for its ACK.
+/// Whether the peer's advertised credit admits posting one more message
+/// of `len` bytes right now. The oldest in-flight message is excluded
+/// from the byte accounting: it is delivered in order, straight into
+/// the peer caller's buffer, and never enters the reorder stash.
+/// Liveness: an empty pipeline always admits — posting is the only way
+/// to provoke the ACKs that carry fresh credit.
+fn credit_allows(path: &Path, st: &SendState, len: usize) -> bool {
+    if st.outstanding.is_empty() {
+        return true;
+    }
+    let (seq_limit, byte_credit) = path.send_credit.limits();
+    if path.res_send_seq.load(Ordering::Relaxed) > seq_limit {
+        return false;
+    }
+    if byte_credit < u64::MAX {
+        let stashable =
+            st.outstanding.iter().skip(1).map(|p| p.data.len() as u64).sum::<u64>() + len as u64;
+        if stashable > byte_credit {
+            return false;
+        }
+    }
+    true
+}
+
+/// Pipelined resilient send: reap until the window has a free slot and
+/// the peer's credit admits the message, post it (keeping an owned copy
+/// for retransmission), and return without waiting for its ACK. The
+/// window limit is re-read per round — a credit advert can narrow the
+/// tunable while we block.
 fn send_windowed(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
     let t0 = Instant::now();
-    let limit = path.send_window_limit();
     let mut st = path.send_window.st.lock();
     if let Some(msg) = &st.poisoned {
         return Err(poisoned_err(msg));
     }
-    while st.outstanding.len() >= limit {
+    absorb_window_updates(path);
+    while st.outstanding.len() >= path.send_window_limit() || !credit_allows(path, &st, buf.len())
+    {
         if let Err(e) = reap_some(path, &mut st) {
             poison(&mut st, &e);
             return Err(fatal(path, e));
@@ -1308,12 +1569,20 @@ pub(crate) enum RecvTarget<'a> {
 /// MAX_WINDOW` (no sender can legally have more in flight). A Path
 /// field; empty and inert against rendezvous peers.
 pub(crate) struct ReorderBuf {
-    q: OrderedMutex<HashMap<u64, Vec<u8>>>,
+    q: OrderedMutex<StashState>,
+}
+
+/// Stash map plus its running byte total (the byte high-water check and
+/// the credit adverts both need the total without a walk).
+#[derive(Default)]
+struct StashState {
+    map: HashMap<u64, Vec<u8>>,
+    bytes: usize,
 }
 
 impl Default for ReorderBuf {
     fn default() -> Self {
-        ReorderBuf { q: OrderedMutex::new(rank::RECV_REORDER, HashMap::new()) }
+        ReorderBuf { q: OrderedMutex::new(rank::RECV_REORDER, StashState::default()) }
     }
 }
 
@@ -1321,15 +1590,43 @@ impl ReorderBuf {
     /// Whether `seq` is already complete in the stash (its sender must
     /// be re-acknowledged, not re-served).
     pub(crate) fn contains(&self, seq: u64) -> bool {
-        self.q.lock().contains_key(&seq)
+        self.q.lock().map.contains_key(&seq)
+    }
+
+    /// Whether `additional` more bytes fit under `budget`. An empty
+    /// stash always fits: a single message larger than the budget must
+    /// still be acceptable or it could never be delivered at all.
+    fn fits(&self, additional: usize, budget: Option<usize>) -> bool {
+        match budget {
+            None => true,
+            Some(b) => {
+                let g = self.q.lock();
+                g.map.is_empty() || g.bytes.saturating_add(additional) <= b
+            }
+        }
     }
 
     fn insert(&self, seq: u64, data: Vec<u8>) {
-        self.q.lock().insert(seq, data);
+        let mut g = self.q.lock();
+        g.bytes += data.len();
+        if let Some(old) = g.map.insert(seq, data) {
+            g.bytes -= old.len();
+        }
     }
 
     fn remove(&self, seq: u64) -> Option<Vec<u8>> {
-        self.q.lock().remove(&seq)
+        let mut g = self.q.lock();
+        let v = g.map.remove(&seq);
+        if let Some(v) = &v {
+            g.bytes -= v.len();
+        }
+        v
+    }
+
+    /// `(messages, bytes)` currently stashed.
+    pub(crate) fn usage(&self) -> (usize, usize) {
+        let g = self.q.lock();
+        (g.map.len(), g.bytes)
     }
 }
 
@@ -1436,6 +1733,10 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
     if let Some(data) = path.recv_reorder.remove(msg_seq) {
         let total = deliver_stashed(&mut target, data).map_err(|e| fatal(path, e))?;
         finish_delivery(path, msg_seq);
+        // The stash just shrank and no ACK is due (the message was
+        // acknowledged when stashed): push the freed credit to a peer
+        // that may be blocked on it.
+        advertise_credit(path);
         return Ok(total);
     }
     // Beyond the rendezvous budget, each round may also complete one of
@@ -1578,6 +1879,17 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
                 ctrl.total
             ));
             return Err(fatal(path, e));
+        }
+        // Byte high-water on the stash: reject the out-of-turn message
+        // *before* buffering it — NACK with the stash-full detail (no
+        // stream died; the sender reposts once credit frees up) and
+        // drain the attempt so the sender's parked segment writers can
+        // reach their ACK wait. Checked at CTRL time so memory stays
+        // bounded by the budget plus one in-order message.
+        if !path.recv_reorder.fits(ctrl.total as usize, path.recv_stash_high_water()) {
+            let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_RETRY, DETAIL_STASH_FULL);
+            drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
+            continue;
         }
         let mut side = vec![0u8; ctrl.total as usize];
         match recv_attempt_body(path, &ctrl, hdr.msg_seq, hdr.attempt, gen, &mut side) {
@@ -1808,7 +2120,7 @@ impl RejoinDaemon {
                     return;
                 }
                 match raw.accept_hello() {
-                    Ok((stream, uuid, idx, n)) => {
+                    Ok((stream, uuid, idx, n, _version)) => {
                         if s2.load(Ordering::Relaxed) {
                             return;
                         }

@@ -19,8 +19,16 @@ use crate::util::lockorder::{rank, OrderedCondvar, OrderedMutex};
 
 /// Magic bytes opening the per-stream handshake.
 pub const HELLO_MAGIC: [u8; 4] = *b"MPW1";
-/// Handshake size: magic + path uuid + stream idx + nstreams + reserved.
+/// Handshake size: magic + path uuid + stream idx + nstreams + version
+/// byte + reserved.
 pub const HELLO_LEN: usize = 4 + 8 + 2 + 2 + 8;
+/// Protocol revision this build advertises at hello offset 16.
+/// Pre-credit builds wrote the byte as reserved-zero, so version 0 means
+/// a legacy peer; version 1 peers understand credit
+/// (`WINDOW_UPDATE` frames and extended, credit-bearing ACKs). The
+/// decoder ignores unknown *higher* versions' extra semantics — the
+/// revision only ever unlocks additive behavior.
+pub const HELLO_VERSION: u8 = 1;
 
 /// One direction of a stream. Implemented by `TcpStream` (via the blanket
 /// impl) and the in-memory test transport.
@@ -456,21 +464,25 @@ pub fn encode_hello(path_uuid: u64, stream_idx: u16, nstreams: u16) -> [u8; HELL
     h[4..12].copy_from_slice(&path_uuid.to_be_bytes());
     h[12..14].copy_from_slice(&stream_idx.to_be_bytes());
     h[14..16].copy_from_slice(&nstreams.to_be_bytes());
+    h[16] = HELLO_VERSION;
     h
 }
 
-/// Decode and validate a hello header.
-pub fn decode_hello(h: &[u8; HELLO_LEN]) -> Result<(u64, u16, u16)> {
+/// Decode and validate a hello header. The fourth element is the peer's
+/// protocol version (offset 16; legacy peers wrote the byte as
+/// reserved-zero, so they decode as version 0).
+pub fn decode_hello(h: &[u8; HELLO_LEN]) -> Result<(u64, u16, u16, u8)> {
     if h[0..4] != HELLO_MAGIC {
         return Err(MpwError::Protocol(format!("bad magic {:?}", &h[0..4])));
     }
     let uuid = u64::from_be_bytes(h[4..12].try_into().unwrap());
     let idx = u16::from_be_bytes(h[12..14].try_into().unwrap());
     let n = u16::from_be_bytes(h[14..16].try_into().unwrap());
+    let version = h[16];
     if n == 0 || idx >= n {
         return Err(MpwError::Protocol(format!("bad stream index {idx}/{n}")));
     }
-    Ok((uuid, idx, n))
+    Ok((uuid, idx, n, version))
 }
 
 /// Connect one TCP stream with retry until `timeout` (endpoints of a
@@ -927,7 +939,10 @@ pub fn mem_path_pairs_latency(n: usize, delay: Duration) -> (Vec<StreamPair>, Ve
 /// clients may connect concurrently (e.g. both sides of a forwarder).
 pub struct RawPathListener {
     listener: TcpListener,
-    pending: HashMap<u64, Vec<Option<TcpStream>>>,
+    /// Partially assembled paths plus the minimum protocol version seen
+    /// across their hellos (every stream of a path comes from one build,
+    /// but min() is the conservative merge if they ever disagree).
+    pending: HashMap<u64, (Vec<Option<TcpStream>>, u8)>,
 }
 
 impl RawPathListener {
@@ -951,26 +966,29 @@ impl RawPathListener {
     /// connects and then goes silent cannot wedge the acceptor (and the
     /// rejoin daemon's stop path) forever; the socket is restored to
     /// blocking mode before being returned.
-    pub fn accept_hello(&mut self) -> Result<(TcpStream, u64, u16, u16)> {
+    pub fn accept_hello(&mut self) -> Result<(TcpStream, u64, u16, u16, u8)> {
         let (mut s, _) = self.listener.accept()?;
         s.set_read_timeout(Some(Duration::from_secs(10)))?;
         let mut hello = [0u8; HELLO_LEN];
         Read::read_exact(&mut s, &mut hello)?;
         s.set_read_timeout(None)?;
-        let (uuid, idx, n) = decode_hello(&hello)?;
-        Ok((s, uuid, idx, n))
+        let (uuid, idx, n, version) = decode_hello(&hello)?;
+        Ok((s, uuid, idx, n, version))
     }
 
     /// Block until one complete path (all `nstreams` streams, ordered by
-    /// stream index) has arrived; returns its streams and uuid.
-    pub fn accept_streams(&mut self) -> Result<(Vec<StreamPair>, u64)> {
+    /// stream index) has arrived; returns its streams, uuid, and the
+    /// peer's protocol version (minimum across the path's hellos).
+    pub fn accept_streams(&mut self) -> Result<(Vec<StreamPair>, u64, u8)> {
         loop {
-            let (s, uuid, idx, n) = self.accept_hello()?;
-            let slot = self.pending.entry(uuid).or_insert_with(|| {
+            let (s, uuid, idx, n, version) = self.accept_hello()?;
+            let entry = self.pending.entry(uuid).or_insert_with(|| {
                 let mut v = Vec::with_capacity(n as usize);
                 v.resize_with(n as usize, || None);
-                v
+                (v, version)
             });
+            entry.1 = entry.1.min(version);
+            let slot = &mut entry.0;
             if slot.len() != n as usize {
                 return Err(MpwError::Protocol(format!(
                     "stream count mismatch for path {uuid:#x}: {} vs {n}",
@@ -982,7 +1000,7 @@ impl RawPathListener {
             }
             slot[idx as usize] = Some(s);
             if slot.iter().all(Option::is_some) {
-                let Some(streams) = self.pending.remove(&uuid) else {
+                let Some((streams, peer_version)) = self.pending.remove(&uuid) else {
                     return Err(MpwError::Protocol(format!(
                         "pending stream set vanished for path {uuid:#x}"
                     )));
@@ -996,7 +1014,7 @@ impl RawPathListener {
                         ))),
                     })
                     .collect::<Result<Vec<_>>>()?;
-                return Ok((pairs, uuid));
+                return Ok((pairs, uuid, peer_version));
             }
         }
     }
@@ -1076,8 +1094,14 @@ mod tests {
     #[test]
     fn hello_roundtrip() {
         let h = encode_hello(0xDEAD_BEEF, 3, 8);
-        let (uuid, idx, n) = decode_hello(&h).unwrap();
+        let (uuid, idx, n, version) = decode_hello(&h).unwrap();
         assert_eq!((uuid, idx, n), (0xDEAD_BEEF, 3, 8));
+        assert_eq!(version, HELLO_VERSION);
+        // a legacy hello (reserved-zero byte 16) decodes as version 0
+        let mut legacy = h;
+        legacy[16] = 0;
+        let (_, _, _, version) = decode_hello(&legacy).unwrap();
+        assert_eq!(version, 0);
     }
 
     #[test]
@@ -1164,11 +1188,12 @@ mod tests {
         let t = std::thread::spawn(move || {
             connect_streams("127.0.0.1", port, 3, Duration::from_secs(5)).unwrap()
         });
-        let (server_side, uuid) = listener.accept_streams().unwrap();
+        let (server_side, uuid, version) = listener.accept_streams().unwrap();
         let (client_side, client_uuid) = t.join().unwrap();
         assert_eq!(server_side.len(), 3);
         assert_eq!(client_side.len(), 3);
         assert_eq!(uuid, client_uuid, "both ends must agree on the path uuid");
+        assert_eq!(version, HELLO_VERSION, "same-build peer advertises the current revision");
     }
 
     #[test]
@@ -1178,7 +1203,7 @@ mod tests {
         let t = std::thread::spawn(move || {
             connect_streams("127.0.0.1", port, 1, Duration::from_secs(5)).unwrap()
         });
-        let (server_side, _) = listener.accept_streams().unwrap();
+        let (server_side, _, _) = listener.accept_streams().unwrap();
         let (client_side, _) = t.join().unwrap();
         let granted = client_side[0].set_window(1 << 20).unwrap();
         assert!(granted.is_some());
@@ -1247,7 +1272,7 @@ mod tests {
             )
             .unwrap()
         });
-        let (mut s, uuid, idx, n) = listener.accept_hello().unwrap();
+        let (mut s, uuid, idx, n, _version) = listener.accept_hello().unwrap();
         assert_eq!((uuid, idx, n), (0xABCD, 1, 4));
         Write::write_all(&mut s, &[REJOIN_ACK]).unwrap();
         let _ = t.join().unwrap();
@@ -1258,7 +1283,7 @@ mod tests {
         let t = std::thread::spawn(move || {
             reconnect_stream(&format!("127.0.0.1:{port}"), 0xABCD, 1, 4, Duration::from_secs(5))
         });
-        let (s2, _, _, _) = listener.accept_hello().unwrap();
+        let (s2, _, _, _, _) = listener.accept_hello().unwrap();
         drop(s2);
         assert!(t.join().unwrap().is_err());
     }
@@ -1273,8 +1298,8 @@ mod tests {
         let t2 = std::thread::spawn(move || {
             connect_streams("127.0.0.1", port, 2, Duration::from_secs(5)).unwrap()
         });
-        let (p1, u1) = listener.accept_streams().unwrap();
-        let (p2, u2) = listener.accept_streams().unwrap();
+        let (p1, u1, _) = listener.accept_streams().unwrap();
+        let (p2, u2, _) = listener.accept_streams().unwrap();
         assert_ne!(u1, u2);
         assert_eq!(p1.len(), 2);
         assert_eq!(p2.len(), 2);

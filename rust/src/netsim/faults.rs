@@ -133,9 +133,58 @@ impl FaultSchedule {
     }
 }
 
+/// A consumer-side pacing profile: when the *application* on the
+/// receiving end actually calls `recv`. Flow-control tests and the
+/// `flow_control` bench drive a slow or stalled reader with this instead
+/// of ad-hoc sleeps — the interesting failure mode of an unbounded
+/// inbound queue is not a broken link (that is [`FaultSchedule`]'s job)
+/// but a healthy link feeding a reader that has wandered off.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReaderSchedule {
+    /// The reader stops consuming at this time (seconds); `f64::INFINITY`
+    /// means it never stalls.
+    pub stall_from: f64,
+    /// The reader resumes at this time; `f64::INFINITY` means it never
+    /// comes back (the never-reader case).
+    pub stall_until: f64,
+}
+
+impl ReaderSchedule {
+    /// A reader that keeps up: consumes whenever data is available.
+    pub fn always() -> ReaderSchedule {
+        ReaderSchedule { stall_from: f64::INFINITY, stall_until: f64::INFINITY }
+    }
+
+    /// A reader that stalls in `[from, until)` and then resumes; pass
+    /// `f64::INFINITY` for `until` to model a reader that never returns.
+    pub fn stalled(from: f64, until: f64) -> ReaderSchedule {
+        assert!(from < until, "stall must have positive duration");
+        ReaderSchedule { stall_from: from, stall_until: until }
+    }
+
+    /// Whether the reader consumes at time `t`.
+    pub fn should_read(&self, t: f64) -> bool {
+        !(self.stall_from..self.stall_until).contains(&t)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reader_schedule_windows() {
+        let r = ReaderSchedule::always();
+        assert!(r.should_read(0.0) && r.should_read(1e9));
+        let r = ReaderSchedule::stalled(2.0, 5.0);
+        assert!(r.should_read(1.9));
+        assert!(!r.should_read(2.0));
+        assert!(!r.should_read(4.99));
+        assert!(r.should_read(5.0));
+        let never = ReaderSchedule::stalled(1.0, f64::INFINITY);
+        assert!(never.should_read(0.5));
+        assert!(!never.should_read(1e12), "a never-reader stays stalled");
+    }
 
     #[test]
     fn blackout_orders_events() {

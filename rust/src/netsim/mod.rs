@@ -29,7 +29,7 @@ pub mod network;
 pub mod simpath;
 pub mod tcp_model;
 
-pub use faults::{FaultEvent, FaultSchedule};
+pub use faults::{FaultEvent, FaultSchedule, ReaderSchedule};
 pub use link::{profiles, Direction, LinkProfile};
 pub use network::{simulate_duplex, simulate_oneway, OneWayResult};
 pub use simpath::{AdaptiveSimPath, DriftingLink, LinkPhase, SimPath, SimTransferResult};

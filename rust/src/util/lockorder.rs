@@ -63,6 +63,10 @@ pub mod rank {
     /// The windowed-send bookkeeping (`resilience::SendWindow::st`),
     /// held across post/reap while gated sends touch stream state.
     pub const SEND_WINDOW: u16 = 40;
+    /// Peer-advertised send credit (`resilience::SendCredit::st`).
+    /// Acquired from the windowed sender (while SEND_WINDOW is held) and
+    /// from ACK/WINDOW_UPDATE absorption; never held across I/O.
+    pub const SEND_CREDIT: u16 = 41;
     /// Stream-health synchronization (`path::HealthState::sync`): death
     /// marking, reinstall, zero-live waits.
     pub const HEALTH: u16 = 50;
@@ -114,6 +118,7 @@ pub mod rank {
             SEND_GATE => "SEND_GATE",
             RECV_GATE => "RECV_GATE",
             SEND_WINDOW => "SEND_WINDOW",
+            SEND_CREDIT => "SEND_CREDIT",
             HEALTH => "HEALTH",
             PATH_CFG => "PATH_CFG",
             RECONNECT_POLICY => "RECONNECT_POLICY",

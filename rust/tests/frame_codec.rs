@@ -9,12 +9,13 @@
 //! anything it accepts must satisfy the documented invariants.
 
 use mpwide::mpwide::mux::{
-    decode_mux_hdr, encode_mux_hdr, MuxHdr, CH_CLOSE, CH_DATA, CH_FIN, CH_OPEN, MAX_MUX_PAYLOAD,
-    MUX_HDR_LEN,
+    decode_mux_hdr, encode_mux_hdr, MuxHdr, CH_CLOSE, CH_DATA, CH_FIN, CH_OPEN,
+    CH_WINDOW_UPDATE, MAX_MUX_PAYLOAD, MUX_HDR_LEN,
 };
 use mpwide::mpwide::resilience::{
-    decode_frame_hdr, encode_ctrl, encode_frame_hdr, parse_ctrl, FrameHdr, FRAME_HDR_LEN,
-    KIND_ACK, KIND_CTRL, KIND_DATA, MAX_FRAME_PAYLOAD,
+    decode_frame_hdr, encode_credit, encode_ctrl, encode_frame_hdr, parse_credit, parse_ctrl,
+    Credit, FrameHdr, FRAME_HDR_LEN, KIND_ACK, KIND_CTRL, KIND_DATA, KIND_WINDOW_UPDATE,
+    MAX_FRAME_PAYLOAD, WINDOW_UPDATE_LEN,
 };
 use mpwide::util::Rng;
 
@@ -33,7 +34,7 @@ fn iters() -> usize {
 fn resilience_frame_hdr_roundtrips_random_values() {
     let mut rng = Rng::new(0xF0A1);
     for _ in 0..iters() {
-        let kind = [KIND_CTRL, KIND_DATA, KIND_ACK][rng.urange(0, 3)];
+        let kind = [KIND_CTRL, KIND_DATA, KIND_ACK, KIND_WINDOW_UPDATE][rng.urange(0, 4)];
         let msg_seq = rng.next_u64();
         let attempt = rng.next_u64() as u32;
         let len = rng.range(0, MAX_FRAME_PAYLOAD as u64 + 1) as u32;
@@ -48,7 +49,7 @@ fn resilience_frame_hdr_corruption_is_rejected_or_sane() {
     let mut rng = Rng::new(0xF0A2);
     for _ in 0..iters() {
         let mut h = encode_frame_hdr(
-            [KIND_CTRL, KIND_DATA, KIND_ACK][rng.urange(0, 3)],
+            [KIND_CTRL, KIND_DATA, KIND_ACK, KIND_WINDOW_UPDATE][rng.urange(0, 4)],
             rng.next_u64(),
             rng.next_u64() as u32,
             rng.range(0, MAX_FRAME_PAYLOAD as u64 + 1) as u32,
@@ -60,7 +61,11 @@ fn resilience_frame_hdr_corruption_is_rejected_or_sane() {
         }
         // must never panic; anything accepted must honour the invariants
         if let Ok(d) = decode_frame_hdr(&h) {
-            assert!((KIND_CTRL..=KIND_ACK).contains(&d.kind), "kind {} escaped", d.kind);
+            assert!(
+                (KIND_CTRL..=KIND_WINDOW_UPDATE).contains(&d.kind),
+                "kind {} escaped",
+                d.kind
+            );
             assert!(d.len as usize <= MAX_FRAME_PAYLOAD, "len {} escaped the bound", d.len);
         }
     }
@@ -68,13 +73,13 @@ fn resilience_frame_hdr_corruption_is_rejected_or_sane() {
 
 #[test]
 fn resilience_frame_hdr_unknown_kinds_rejected() {
-    // The kind byte (offset 1) has exactly three assigned values; every
+    // The kind byte (offset 1) has exactly four assigned values; every
     // other value is reserved and must be rejected, not passed through —
     // a forward-compat frame kind would otherwise be silently
     // misinterpreted by an old receiver.
     let good = encode_frame_hdr(KIND_DATA, 7, 0, 16);
     for kind in 0..=u8::MAX {
-        if (KIND_CTRL..=KIND_ACK).contains(&kind) {
+        if (KIND_CTRL..=KIND_WINDOW_UPDATE).contains(&kind) {
             continue;
         }
         let mut h = good;
@@ -172,7 +177,7 @@ fn mux_hdr_roundtrips_random_values() {
 
 #[test]
 fn mux_hdr_control_frames_with_payload_rejected() {
-    for kind in [CH_OPEN, CH_CLOSE] {
+    for kind in [CH_OPEN, CH_CLOSE, CH_WINDOW_UPDATE] {
         let h = encode_mux_hdr(kind, 3, 0, 1);
         assert!(decode_mux_hdr(&h).is_err(), "control frame with payload must be rejected");
     }
@@ -181,11 +186,11 @@ fn mux_hdr_control_frames_with_payload_rejected() {
 #[test]
 fn mux_hdr_unknown_kinds_rejected() {
     // Same contract as the resilience header: kinds outside
-    // CH_DATA..=CH_CLOSE are reserved and must fail to decode whatever
-    // the rest of the header says.
+    // CH_DATA..=CH_WINDOW_UPDATE are reserved and must fail to decode
+    // whatever the rest of the header says.
     let good = encode_mux_hdr(CH_DATA, 9, 3, 16);
     for kind in 0..=u8::MAX {
-        if (CH_DATA..=CH_CLOSE).contains(&kind) {
+        if (CH_DATA..=CH_WINDOW_UPDATE).contains(&kind) {
             continue;
         }
         let mut h = good;
@@ -199,7 +204,7 @@ fn mux_hdr_corruption_is_rejected_or_sane() {
     let mut rng = Rng::new(0xA0B2);
     for _ in 0..iters() {
         let mut h = encode_mux_hdr(
-            [CH_DATA, CH_FIN, CH_OPEN, CH_CLOSE][rng.urange(0, 4)],
+            [CH_DATA, CH_FIN, CH_OPEN, CH_CLOSE, CH_WINDOW_UPDATE][rng.urange(0, 5)],
             rng.next_u64() as u32,
             rng.next_u64(),
             0,
@@ -210,11 +215,68 @@ fn mux_hdr_corruption_is_rejected_or_sane() {
             h[pos] ^= rng.range(1, 256) as u8;
         }
         if let Ok(d) = decode_mux_hdr(&h) {
-            assert!((CH_DATA..=CH_CLOSE).contains(&d.kind), "kind {} escaped", d.kind);
+            assert!((CH_DATA..=CH_WINDOW_UPDATE).contains(&d.kind), "kind {} escaped", d.kind);
             assert!(d.len as usize <= MAX_MUX_PAYLOAD, "len {} escaped the bound", d.len);
-            if d.kind == CH_OPEN || d.kind == CH_CLOSE {
+            if d.kind == CH_OPEN || d.kind == CH_CLOSE || d.kind == CH_WINDOW_UPDATE {
                 assert_eq!(d.len, 0, "control frame with payload accepted");
             }
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Resilience WINDOW_UPDATE credit block.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn credit_block_roundtrips_random_values() {
+    let mut rng = Rng::new(0xCBA1);
+    for _ in 0..iters() {
+        let c = Credit {
+            advert_id: rng.next_u64(),
+            seq_limit: rng.next_u64(),
+            byte_credit: rng.next_u64(),
+            budget_msgs: rng.next_u64() as u32,
+        };
+        let p = encode_credit(&c);
+        assert_eq!(p.len(), WINDOW_UPDATE_LEN);
+        let d = parse_credit(&p).expect("valid credit block must parse");
+        assert_eq!(d, c);
+    }
+}
+
+#[test]
+fn credit_block_every_truncation_is_rejected() {
+    let c = Credit { advert_id: 7, seq_limit: 99, byte_credit: 1 << 30, budget_msgs: 16 };
+    let p = encode_credit(&c);
+    for cut in 0..p.len() {
+        assert!(parse_credit(&p[..cut]).is_err(), "truncated credit ({cut} bytes) must not parse");
+    }
+    // oversized payloads are equally malformed — the block is fixed-width
+    let mut long = p.to_vec();
+    long.push(0);
+    assert!(parse_credit(&long).is_err(), "oversized credit block must not parse");
+}
+
+#[test]
+fn credit_block_corruption_never_panics() {
+    // Every field is a plain big-endian integer, so any fixed-width
+    // 28-byte buffer parses to *some* credit; the property here is
+    // totality (no panic) and width-strictness under corruption.
+    let mut rng = Rng::new(0xCBA2);
+    for _ in 0..iters() {
+        let c = Credit {
+            advert_id: rng.next_u64(),
+            seq_limit: rng.next_u64(),
+            byte_credit: rng.next_u64(),
+            budget_msgs: rng.next_u64() as u32,
+        };
+        let mut p = encode_credit(&c);
+        let flips = rng.urange(1, 5);
+        for _ in 0..flips {
+            let pos = rng.urange(0, p.len());
+            p[pos] ^= rng.range(1, 256) as u8;
+        }
+        let _ = parse_credit(&p);
     }
 }

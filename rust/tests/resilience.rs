@@ -372,6 +372,123 @@ fn window_of_one_degenerates_to_rendezvous() {
 }
 
 #[test]
+fn stash_high_water_bounds_reorder_buffer_and_completes() {
+    // Regression for the unbounded reorder stash: with
+    // `recv_stash_high_water` set, a windowed sender racing 4 streams
+    // against a deliberately slow receiver must keep the receiver's
+    // out-of-order stash under the byte bound at all times (frames that
+    // don't fit are NACKed and retried after backoff) — and every
+    // message must still arrive intact and in order.
+    const HW: usize = 64 * 1024;
+    const LEN: usize = 50_000; // fits the stash alone, two never do
+    const N: u64 = 24;
+    let (l, r, _kills) = mem_path_pairs_killable(4);
+    let mut cfg = windowed_cfg(4, 8);
+    cfg.resilience.recv_stash_high_water = Some(HW);
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; LEN];
+        let mut expect = vec![0u8; LEN];
+        let mut peak = 0usize;
+        for i in 0..N {
+            b.recv(&mut buf).unwrap();
+            Rng::new(900 + i).fill_bytes(&mut expect);
+            assert_eq!(buf, expect, "message {i} corrupted under the stash bound");
+            peak = peak.max(b.status().reorder_stash_bytes);
+            if i % 4 == 0 {
+                // a slow consumer is what builds the stash up
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        (peak, b.status())
+    });
+    let mut msg = vec![0u8; LEN];
+    for i in 0..N {
+        Rng::new(900 + i).fill_bytes(&mut msg);
+        a.send(&msg).unwrap();
+    }
+    a.flush().unwrap();
+    let (peak, bs) = t.join().unwrap();
+    assert!(peak <= HW, "reorder stash exceeded its high-water: {peak} > {HW}");
+    assert_eq!(bs.reorder_stash_bytes, 0, "stash not drained: {bs:?}");
+    assert_eq!(a.status().window_in_flight, 0, "{:?}", a.status());
+}
+
+#[test]
+fn stash_high_water_smaller_than_one_message_never_deadlocks() {
+    // The empty-stash-always-fits rule: a bound smaller than a single
+    // message must degrade to at-most-one-stashed-message, not wedge
+    // the pipeline (the sender would otherwise never get credit for any
+    // message).
+    const LEN: usize = 100_000;
+    const N: u64 = 8;
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let mut cfg = windowed_cfg(2, 4);
+    cfg.resilience.recv_stash_high_water = Some(16 * 1024); // < one message
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; LEN];
+        let mut expect = vec![0u8; LEN];
+        for i in 0..N {
+            b.recv(&mut buf).unwrap();
+            Rng::new(1100 + i).fill_bytes(&mut expect);
+            assert_eq!(buf, expect, "message {i} corrupted under an undersized bound");
+        }
+    });
+    let mut msg = vec![0u8; LEN];
+    for i in 0..N {
+        Rng::new(1100 + i).fill_bytes(&mut msg);
+        a.send(&msg).unwrap();
+    }
+    a.flush().unwrap();
+    t.join().unwrap();
+}
+
+#[test]
+fn seed_window_from_bdp_widens_window_from_pacing_rate() {
+    // With no adaptive samples, the seeding falls back to the aggregate
+    // pacing rate; an (absurdly) fast configured rate makes BDP/chunk
+    // exceed MAX_WINDOW for any positive measured RTT, so the clamp is
+    // the deterministic expectation.
+    use mpwide::mpwide::resilience::MAX_WINDOW;
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let mut cfg = windowed_cfg(2, 1);
+    cfg.pacing_rate = Some(1e16);
+    let a = Path::from_pairs(l, cfg.clone()).unwrap();
+    let b = Path::from_pairs(r, cfg).unwrap();
+    let t = std::thread::spawn(move || {
+        b.barrier().unwrap();
+        b
+    });
+    let w = a.seed_window_from_bdp().unwrap();
+    let b = t.join().unwrap();
+    assert_eq!(w, MAX_WINDOW, "BDP seeding did not widen the window");
+    // the widened pipeline still carries traffic
+    let t = std::thread::spawn(move || {
+        let mut buf = vec![0u8; 50_000];
+        for _ in 0..4 {
+            b.recv(&mut buf).unwrap();
+        }
+    });
+    for _ in 0..4 {
+        a.send(&[5u8; 50_000]).unwrap();
+    }
+    a.flush().unwrap();
+    t.join().unwrap();
+}
+
+#[test]
+fn seed_window_from_bdp_rejects_non_resilient_paths() {
+    let (l, _r, _kills) = mem_path_pairs_killable(2);
+    let mut cfg = PathConfig::with_streams(2);
+    cfg.autotune = false;
+    let a = Path::from_pairs(l, cfg).unwrap();
+    assert!(matches!(a.seed_window_from_bdp(), Err(MpwError::Config(_))));
+}
+
+#[test]
 fn status_reports_preferred_vs_effective_striping() {
     let (l, _r, kills) = mem_path_pairs_killable(3);
     let a = Path::from_pairs(l, resilient_cfg(3)).unwrap();
