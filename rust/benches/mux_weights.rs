@@ -1,0 +1,301 @@
+//! **Experiment MX2 — weighted DRR scheduling over one shared path.**
+//!
+//! Three bulk channels with weights {1, 2, 4} and a weight-1
+//! small-message probe channel share ONE paced 2-stream path. The mux
+//! pump runs deficit round-robin: each channel's turn is worth
+//! `weight × chunk_budget` bytes per rotation, so the bulk channels'
+//! goodput must split 1:2:4 while the probe — one tiny message at a
+//! time, echoed by the peer — waits at most one full rotation for its
+//! turn.
+//!
+//! Reported (and asserted, so CI catches scheduler regressions):
+//!   * **weight proportionality** — over a mid-run measurement window
+//!     in which every bulk channel stays backlogged, each pairwise
+//!     goodput ratio is within 25% of the corresponding weight ratio;
+//!   * **bounded probe latency** — p99 probe round-trip ≤ one full
+//!     rotation (`Σ weights × chunk_budget` at the *measured* path
+//!     rate, so OS sleep overshoot in the pacer cannot skew the bound);
+//!   * every bulk channel's payload arrives complete.
+//!
+//! `--quick` (or BENCH_QUICK=1) shrinks the backlogs for the CI
+//! bench-smoke job. Results are emitted as BENCH_mux_weights.json.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mpwide::benchlib::{banner, BenchJson, Table};
+use mpwide::mpwide::mux::{Channel, ChannelOptions, MuxConfig, MuxEndpoint};
+use mpwide::mpwide::transport::mem_path_pairs;
+use mpwide::mpwide::{Path, PathConfig};
+use mpwide::util::stats;
+
+const MBF: f64 = 1024.0 * 1024.0;
+const NSTREAMS: usize = 2;
+const PACE_PER_STREAM: f64 = 8.0 * MBF; // 16 MB/s path
+const CHUNK_BUDGET: usize = 64 * 1024;
+const BULK_WEIGHTS: [u32; 3] = [1, 2, 4];
+const PROBE_WEIGHT: u32 = 1;
+const PROBE_CH: u32 = 0;
+const MSG: usize = 256 * 1024;
+const PROBE_MSG: usize = 1024;
+
+fn endpoints() -> (MuxEndpoint, MuxEndpoint) {
+    let mut cfg = PathConfig::with_streams(NSTREAMS);
+    cfg.autotune = false;
+    cfg.chunk_size = 1 << 20;
+    cfg.pacing_rate = Some(PACE_PER_STREAM);
+    let (l, r) = mem_path_pairs(NSTREAMS);
+    let a = Arc::new(Path::from_pairs(l, cfg.clone()).expect("left path"));
+    let b = Arc::new(Path::from_pairs(r, cfg).expect("right path"));
+    let mux_cfg =
+        MuxConfig { chunk_budget: CHUNK_BUDGET, high_water: 256 << 20, ..MuxConfig::default() };
+    (
+        MuxEndpoint::start_cfg(a, mux_cfg.clone()).expect("mux cfg"),
+        MuxEndpoint::start_cfg(b, mux_cfg).expect("mux cfg"),
+    )
+}
+
+/// Per-bulk-channel sent-bytes snapshot (chunk granularity, sender side).
+fn bulk_sent(ep: &MuxEndpoint) -> [u64; 3] {
+    let stats = ep.channel_stats();
+    let mut out = [0u64; 3];
+    for (i, slot) in out.iter_mut().enumerate() {
+        *slot = stats
+            .iter()
+            .find(|c| c.id == i as u32 + 1)
+            .map(|c| c.sent_bytes)
+            .unwrap_or(0);
+    }
+    out
+}
+
+struct RunResult {
+    /// Measured per-bulk-channel goodput over the window, bytes/s.
+    goodput: [f64; 3],
+    /// Aggregate path rate over the window (bulk channels), bytes/s.
+    path_rate: f64,
+    /// Probe round-trip samples, seconds (warmup discarded).
+    probe_rtt: Vec<f64>,
+}
+
+/// Drive the weighted contention run: backlog each bulk channel in
+/// proportion to its weight, echo the probe continuously, and measure
+/// goodput between a post-warmup snapshot and an 80%-drained snapshot
+/// (all bulk channels hold backlog throughout, so cumulative sent-byte
+/// deltas are exactly the scheduler's shares).
+fn drive(unit: usize) -> RunResult {
+    let (a, b) = endpoints();
+    let probe_tx = a
+        .open_opts(PROBE_CH, ChannelOptions { weight: PROBE_WEIGHT, rate: None })
+        .expect("probe open");
+    let bulk_tx: Vec<Channel> = BULK_WEIGHTS
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            a.open_opts(i as u32 + 1, ChannelOptions { weight: w, rate: None }).expect("bulk open")
+        })
+        .collect();
+    let probe_rx = b.open(PROBE_CH).expect("probe rx");
+    let bulk_rx: Vec<Channel> = (0..3).map(|i| b.open(i + 1).expect("bulk rx")).collect();
+
+    let backlog: Vec<usize> =
+        BULK_WEIGHTS.iter().map(|&w| (w as usize * unit / MSG).max(2) * MSG).collect();
+    let heavy_backlog = backlog[2] as u64;
+    let payload = vec![0x6Bu8; MSG];
+    for (ch, &bytes) in bulk_tx.iter().zip(&backlog) {
+        for _ in 0..bytes / MSG {
+            ch.send(&payload).expect("bulk send");
+        }
+    }
+
+    let stop = AtomicBool::new(false);
+    let (window, probe_rtt) = std::thread::scope(|s| {
+        // bulk receivers drain their whole backlog
+        let mut drains = Vec::new();
+        for (ch, &bytes) in bulk_rx.iter().zip(&backlog) {
+            let ch = ch.clone();
+            drains.push(s.spawn(move || {
+                let mut got = 0usize;
+                while got < bytes {
+                    got += ch.recv().expect("bulk recv").len();
+                }
+                assert_eq!(got, bytes, "channel {} over-delivered", ch.id());
+            }));
+        }
+        // peer echoes the probe until the probe channel closes
+        let echo = s.spawn(move || {
+            while let Ok(m) = probe_rx.recv() {
+                if probe_rx.send(&m).is_err() {
+                    break;
+                }
+            }
+        });
+        // probe: one message at a time, so every iteration queues into a
+        // random point of the rotation and waits for the probe's turn
+        let prober = {
+            let stop = &stop;
+            let probe_tx = probe_tx.clone();
+            s.spawn(move || {
+                let msg = vec![0x11u8; PROBE_MSG];
+                let mut rtt = Vec::new();
+                while !stop.load(Ordering::Relaxed) {
+                    let t0 = Instant::now();
+                    probe_tx.send(&msg).expect("probe send");
+                    let echo = probe_tx.recv().expect("probe echo");
+                    assert_eq!(echo.len(), PROBE_MSG);
+                    rtt.push(t0.elapsed().as_secs_f64());
+                }
+                rtt
+            })
+        };
+
+        // warmup: every bulk channel has completed at least two turns
+        let deadline = Instant::now() + Duration::from_secs(600);
+        loop {
+            let sent = bulk_sent(&a);
+            let warm = BULK_WEIGHTS
+                .iter()
+                .zip(sent)
+                .all(|(&w, s)| s >= 2 * u64::from(w) * CHUNK_BUDGET as u64);
+            if warm {
+                break;
+            }
+            assert!(Instant::now() < deadline, "pump made no progress: {sent:?}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let t_start = Instant::now();
+        let sent_start = bulk_sent(&a);
+        // measurement window ends when the heaviest channel nears its
+        // backlog's end — every channel is still backlogged at both edges
+        let sent_end = loop {
+            let sent = bulk_sent(&a);
+            if sent[2] >= heavy_backlog * 8 / 10 {
+                break sent;
+            }
+            assert!(Instant::now() < deadline, "pump stalled mid-run: {sent:?}");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        let dt = t_start.elapsed().as_secs_f64();
+        stop.store(true, Ordering::Relaxed);
+        let mut rtt = prober.join().expect("prober panicked");
+        // the first samples include channel-open and warmup transients
+        rtt.drain(..rtt.len().min(5));
+        for d in drains {
+            d.join().expect("drain panicked");
+        }
+        probe_tx.close().expect("probe close");
+        echo.join().expect("echo panicked");
+        ((sent_start, sent_end, dt), rtt)
+    });
+
+    let (sent_start, sent_end, dt) = window;
+    let mut goodput = [0f64; 3];
+    for i in 0..3 {
+        goodput[i] = (sent_end[i] - sent_start[i]) as f64 / dt;
+    }
+    let path_rate = goodput.iter().sum::<f64>();
+    RunResult { goodput, path_rate, probe_rtt }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || matches!(std::env::var("BENCH_QUICK").as_deref(), Ok(v) if !v.is_empty() && v != "0");
+    // backlog unit: each bulk channel queues weight × unit bytes, so
+    // all three drain around the same time under proportional scheduling
+    let unit: usize = if quick { 3 << 20 } else { 8 << 20 };
+
+    banner("MX2: weighted DRR (1:2:4 bulk + weight-1 probe) over one shared path");
+    println!(
+        "{NSTREAMS} streams x {:.0} MB/s pacing, {CHUNK_BUDGET}-byte budget, \
+         bulk backlogs {:?} MiB{}",
+        PACE_PER_STREAM / MBF,
+        BULK_WEIGHTS.map(|w| (w as usize * unit) >> 20),
+        if quick { " (quick)" } else { "" }
+    );
+
+    let r = drive(unit);
+
+    // pairwise goodput ratios vs weight ratios
+    let mut worst_dev = 0f64;
+    for i in 0..3 {
+        for j in 0..3 {
+            if i == j {
+                continue;
+            }
+            let want = f64::from(BULK_WEIGHTS[i]) / f64::from(BULK_WEIGHTS[j]);
+            let got = r.goodput[i] / r.goodput[j];
+            worst_dev = worst_dev.max((got / want - 1.0).abs());
+        }
+    }
+    // one full rotation at the measured path rate: every channel burns
+    // its whole quantum between two probe turns
+    let total_weight: u32 = PROBE_WEIGHT + BULK_WEIGHTS.iter().sum::<u32>();
+    let rotation = f64::from(total_weight) * CHUNK_BUDGET as f64 / r.path_rate;
+    let p99 = stats::percentile(&r.probe_rtt, 99.0);
+
+    let mut t = Table::new(&["channel", "weight", "goodput MB/s", "share"]);
+    for (i, &w) in BULK_WEIGHTS.iter().enumerate() {
+        t.row(&[
+            format!("bulk {}", i + 1),
+            format!("{w}"),
+            format!("{:.2}", r.goodput[i] / MBF),
+            format!("{:.3}", r.goodput[i] / r.path_rate),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nworst pairwise deviation from weight ratio: {:.1}% (required <= 25%)",
+        worst_dev * 100.0
+    );
+    println!(
+        "probe p99 rtt: {:.1} ms over {} samples (required <= rotation {:.1} ms)",
+        p99 * 1e3,
+        r.probe_rtt.len(),
+        rotation * 1e3
+    );
+
+    let mut json = BenchJson::new("mux_weights");
+    json.text("scenario", "DRR weights 1:2:4 + weight-1 probe over one paced 2-stream path")
+        .num("nstreams", NSTREAMS as f64)
+        .num("chunk_budget", CHUNK_BUDGET as f64)
+        .num("pace_per_stream_mbps", PACE_PER_STREAM / MBF)
+        .num("goodput_w1_mbps", r.goodput[0] / MBF)
+        .num("goodput_w2_mbps", r.goodput[1] / MBF)
+        .num("goodput_w4_mbps", r.goodput[2] / MBF)
+        .num("worst_ratio_deviation", worst_dev)
+        .num("probe_p99_ms", p99 * 1e3)
+        .num("rotation_ms", rotation * 1e3)
+        .num("probe_samples", r.probe_rtt.len() as f64)
+        .num("quick", if quick { 1.0 } else { 0.0 })
+        .series("probe_rtt_ms", &r.probe_rtt.iter().map(|&x| x * 1e3).collect::<Vec<_>>());
+    match json.write() {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_mux_weights.json: {e}"),
+    }
+
+    let mut failed = false;
+    if worst_dev > 0.25 {
+        eprintln!(
+            "FAIL: goodput ratios deviate {:.1}% from weight ratios (limit 25%): {:?}",
+            worst_dev * 100.0,
+            r.goodput
+        );
+        failed = true;
+    }
+    if p99 > rotation {
+        eprintln!(
+            "FAIL: probe p99 rtt {:.1} ms exceeds one rotation {:.1} ms",
+            p99 * 1e3,
+            rotation * 1e3
+        );
+        failed = true;
+    }
+    if r.probe_rtt.len() < 10 {
+        eprintln!("FAIL: too few probe samples ({}) for a meaningful p99", r.probe_rtt.len());
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

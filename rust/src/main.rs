@@ -3,8 +3,8 @@
 //! Subcommands map to the tools and applications the paper ships:
 //!
 //! ```text
-//! mpwide mpwtest-serve --port P --streams N        MPWTest slave endpoint
-//! mpwide mpwtest HOST --port P --streams N         MPWTest master (benchmark)
+//! mpwide mpwtest-serve --port P --streams N [--channels]   MPWTest slave endpoint
+//! mpwide mpwtest HOST --port P --streams N [--weights 1,2,4]   MPWTest master
 //! mpwide forward --port P --streams N [--delay-ms D]   Forwarder (Fig 3)
 //! mpwide cp-serve --port P --dir DIR --streams N   mpw-cp receiving end
 //! mpwide cp FILE HOST [NAME] --port P --streams N  mpw-cp sender
@@ -48,23 +48,70 @@ fn main() -> Result<()> {
             let port = args.opt_parse("port", 6010u16);
             let mut listener = PathListener::bind(port, client_cfg(&args))?;
             eprintln!("MPWTest slave on port {}", listener.port());
-            let path = listener.accept_path()?;
-            mpwtest::run_slave(&path)?;
+            if args.flag("channels") {
+                // multi-channel slave: echo one weighted suite per channel
+                let path = listener.accept_path_arc()?;
+                mpwtest::run_slave_channels(path)?;
+            } else {
+                let path = listener.accept_path()?;
+                mpwtest::run_slave(&path)?;
+            }
         }
         "mpwtest" => {
             let host = args.pos(0).context("usage: mpwide mpwtest HOST --port P")?;
             let port = args.opt_parse("port", 6010u16);
             let path = Path::connect(host, port, client_cfg(&args))?;
-            let rows = mpwtest::run_master(&path, &mpwtest::SIZES, mpwtest::default_reps)?;
-            println!("{:>12} {:>8} {:>12} {:>14}", "size", "reps", "secs/xchg", "rate/dir");
-            for r in rows {
+            if let Some(ws) = args.opt("weights") {
+                // weighted multi-channel mode: one concurrent echo suite
+                // per weight, over channels 1..=N of one muxed path (the
+                // slave must run with --channels)
+                let weights = ws
+                    .split(',')
+                    .map(|w| w.trim().parse::<u32>())
+                    .collect::<std::result::Result<Vec<_>, _>>()
+                    .context("--weights expects a comma-separated list of integers")?;
+                let specs: Vec<mpwtest::ChannelSpec> = weights
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &w)| mpwtest::ChannelSpec {
+                        channel: i as u32 + 1,
+                        weight: w,
+                        rate: None,
+                    })
+                    .collect();
+                let rows = mpwtest::run_master_channels(
+                    std::sync::Arc::new(path),
+                    &specs,
+                    &mpwtest::SIZES,
+                    mpwtest::default_reps,
+                )?;
                 println!(
-                    "{:>12} {:>8} {:>12.5} {:>14}",
-                    r.size,
-                    r.reps,
-                    r.seconds,
-                    human_rate(r.rate)
+                    "{:>8} {:>7} {:>12} {:>8} {:>12} {:>14}",
+                    "channel", "weight", "size", "reps", "secs/xchg", "rate/dir"
                 );
+                for r in rows {
+                    println!(
+                        "{:>8} {:>7} {:>12} {:>8} {:>12.5} {:>14}",
+                        r.channel,
+                        r.weight,
+                        r.size,
+                        r.reps,
+                        r.seconds,
+                        human_rate(r.rate)
+                    );
+                }
+            } else {
+                let rows = mpwtest::run_master(&path, &mpwtest::SIZES, mpwtest::default_reps)?;
+                println!("{:>12} {:>8} {:>12} {:>14}", "size", "reps", "secs/xchg", "rate/dir");
+                for r in rows {
+                    println!(
+                        "{:>12} {:>8} {:>12.5} {:>14}",
+                        r.size,
+                        r.reps,
+                        r.seconds,
+                        human_rate(r.rate)
+                    );
+                }
             }
         }
         "forward" => {
@@ -227,8 +274,10 @@ const HELP: &str = r#"mpwide — light-weight message passing over wide area net
 Usage: mpwide <command> [args] [--options]
 
 Commands:
-  mpwtest-serve --port P --streams N    benchmark slave endpoint
-  mpwtest HOST --port P --streams N     benchmark master (prints table)
+  mpwtest-serve --port P --streams N [--channels]   benchmark slave endpoint
+  mpwtest HOST --port P --streams N [--weights 1,2,4]  benchmark master
+                                        (--weights: concurrent weighted
+                                         channel suites over one muxed path)
   forward --port P --streams N [--delay-ms D]   user-space forwarder
   cp-serve --port P --dir DIR           mpw-cp receiving end
   cp FILE HOST [NAME] --port P --streams N --chunk C   mpw-cp sender

@@ -45,10 +45,13 @@
 //!
 //! | Extension                | Here                        |
 //! |--------------------------|-----------------------------|
-//! | `MPW_OpenChannel`        | [`mpw_open_channel`]        |
+//! | `MPW_OpenChannel`        | [`mpw_open_channel`] / [`mpw_open_channel_opts`] |
 //! | `MPW_ChannelSend`        | [`mpw_channel_send`]        |
 //! | `MPW_ChannelRecv`        | [`mpw_channel_recv`]        |
 //! | `MPW_CloseChannel`       | [`mpw_close_channel`]       |
+//! | `MPW_setChannelWeight`   | [`mpw_channel_set_weight`]  |
+//! | `MPW_setChannelRate`     | [`mpw_channel_set_rate`]    |
+//! | `MPW_ChannelStats`       | [`mpw_channel_stats`]       |
 
 use std::collections::HashMap;
 use std::sync::{Arc, OnceLock};
@@ -58,7 +61,7 @@ use crate::util::lockorder::{rank, OrderedMutex};
 use super::adapt::{TuneMode, TuneSnapshot};
 use super::config::{PathConfig, ReconnectPolicy};
 use super::errors::{MpwError, Result};
-use super::mux::{Channel, MuxEndpoint};
+use super::mux::{Channel, ChannelOptions, ChannelStats, MuxEndpoint};
 use super::nonblocking::{NbeHandle, NbeOp};
 use super::path::{Path, PathListener};
 use super::relay;
@@ -541,6 +544,19 @@ pub fn mpw_dns_resolve(host: &str) -> Result<String> {
 /// open the same channel number (like agreeing on a port). Returns a
 /// channel handle id for `mpw_channel_send` / `mpw_channel_recv`.
 pub fn mpw_open_channel(path_id: i32, channel: u32) -> Result<i32> {
+    mpw_open_channel_opts(path_id, channel, ChannelOptions::default())
+}
+
+/// `MPW_OpenChannel` with scheduling options (mux extension): like
+/// [`mpw_open_channel`] but sets the channel's DRR `weight` and optional
+/// token-bucket `rate` cap at open time. Weights shape how the sender
+/// pump splits the shared path between channels (a weight-4 channel gets
+/// ~4× the bytes per rotation of a weight-1 sibling); both are local to
+/// this endpoint's send side and invisible on the wire.
+pub fn mpw_open_channel_opts(path_id: i32, channel: u32, opts: ChannelOptions) -> Result<i32> {
+    // validate before touching the registry: a bad option must not
+    // spawn (or roll back) a mux endpoint
+    opts.validate()?;
     let mut c = ctx().lock();
     let path = c.paths.get(&path_id).cloned().ok_or(MpwError::UnknownId(path_id))?;
     // An unfinished non-blocking handle owns reads/writes on the path;
@@ -562,7 +578,7 @@ pub fn mpw_open_channel(path_id: i32, channel: u32) -> Result<i32> {
         c.muxes.insert(path_id, endpoint);
     }
     let opened = match c.muxes.get(&path_id) {
-        Some(m) => m.open(channel),
+        Some(m) => m.open_opts(channel, opts),
         None => return Err(MpwError::UnknownId(path_id)),
     };
     let ch = match opened {
@@ -604,6 +620,38 @@ pub fn mpw_channel_send(id: i32, buf: &[u8]) -> Result<()> {
 /// channel (blocking; message-oriented like `MPW_DRecv`).
 pub fn mpw_channel_recv(id: i32) -> Result<Vec<u8>> {
     with_channel(id)?.recv()
+}
+
+/// `MPW_setChannelWeight` (mux extension): change a live channel's DRR
+/// scheduling weight (1..=[`MAX_WEIGHT`](super::mux::MAX_WEIGHT)). Takes
+/// effect at the channel's next pump turn.
+pub fn mpw_channel_set_weight(id: i32, weight: u32) -> Result<()> {
+    with_channel(id)?.set_weight(weight)
+}
+
+/// `MPW_setChannelRate` (mux extension): cap (or uncap, with `None`) a
+/// live channel's send rate in bytes/second. The token bucket restarts
+/// with a fresh burst allowance.
+pub fn mpw_channel_set_rate(id: i32, rate: Option<f64>) -> Result<()> {
+    with_channel(id)?.set_rate(rate)
+}
+
+/// `MPW_ChannelStats` (mux extension): per-channel observability
+/// snapshot for a multiplexed path — queued/sent bytes, scheduling
+/// weight and the current DRR deficit, one row per live channel.
+pub fn mpw_channel_stats(path_id: i32) -> Result<Vec<ChannelStats>> {
+    // snapshotting under the registry lock is fine: channel_stats only
+    // takes the mux state lock, which ranks above API_CTX, and copies
+    let c = ctx().lock();
+    if !c.paths.contains_key(&path_id) {
+        return Err(MpwError::UnknownId(path_id));
+    }
+    match c.muxes.get(&path_id) {
+        Some(m) => Ok(m.channel_stats()),
+        None => Err(MpwError::Config(format!(
+            "path {path_id} is not multiplexed; open a channel first"
+        ))),
+    }
 }
 
 /// `MPW_CloseChannel` (mux extension): flush the channel's queued
@@ -830,6 +878,54 @@ mod tests {
         mpw_close_channel(bulk).unwrap();
         assert!(mpw_channel_send(bulk, b"x").is_err(), "handle released");
         assert_eq!(t.join().unwrap(), vec![3u8; 50_000]);
+        mpw_finalize();
+    }
+
+    #[test]
+    fn weighted_channels_over_facade() {
+        let _g = API_LOCK.lock();
+        mpw_init();
+        let mut cfg = PathConfig::with_streams(2);
+        cfg.autotune = false;
+        let mut listener = PathListener::bind(0, cfg.clone()).unwrap();
+        let port = listener.port();
+        let t = std::thread::spawn(move || {
+            let p = Arc::new(listener.accept_path().unwrap());
+            let mux = super::super::mux::MuxEndpoint::start(p).unwrap();
+            let bulk = mux.open(1).unwrap();
+            let got = bulk.recv().unwrap();
+            bulk.send(b"ok").unwrap();
+            bulk.flush().unwrap();
+            assert!(matches!(bulk.recv(), Err(MpwError::ChannelClosed { .. })));
+            got
+        });
+        let path_id = mpw_create_path_cfg("127.0.0.1", port, cfg).unwrap();
+        // stats on a not-yet-multiplexed path is a config error, not a panic
+        assert!(matches!(mpw_channel_stats(path_id), Err(MpwError::Config(_))));
+        // a bad option never multiplexes the path
+        let bad = ChannelOptions { weight: 0, rate: None };
+        assert!(mpw_open_channel_opts(path_id, 1, bad).is_err());
+        assert!(
+            matches!(mpw_channel_stats(path_id), Err(MpwError::Config(_))),
+            "rejected options must not mark the path as multiplexed"
+        );
+        let opts = ChannelOptions { weight: 4, rate: None };
+        let bulk = mpw_open_channel_opts(path_id, 1, opts).unwrap();
+        let stats = mpw_channel_stats(path_id).unwrap();
+        assert_eq!(stats.iter().find(|s| s.id == 1).unwrap().weight, 4);
+        mpw_channel_set_weight(bulk, 7).unwrap();
+        assert!(mpw_channel_set_weight(bulk, 0).is_err());
+        mpw_channel_set_rate(bulk, Some(64.0 * 1024.0 * 1024.0)).unwrap();
+        mpw_channel_set_rate(bulk, None).unwrap();
+        assert!(mpw_channel_set_rate(bulk, Some(-1.0)).is_err());
+        let stats = mpw_channel_stats(path_id).unwrap();
+        assert_eq!(stats.iter().find(|s| s.id == 1).unwrap().weight, 7);
+        mpw_channel_send(bulk, &[9u8; 10_000]).unwrap();
+        assert_eq!(mpw_channel_recv(bulk).unwrap(), b"ok");
+        mpw_close_channel(bulk).unwrap();
+        assert!(mpw_channel_set_weight(bulk, 2).is_err(), "handle released");
+        assert!(matches!(mpw_channel_stats(99), Err(MpwError::UnknownId(99))));
+        assert_eq!(t.join().unwrap(), vec![9u8; 10_000]);
         mpw_finalize();
     }
 

@@ -14,10 +14,15 @@
 //! theirs) and runs two background workers:
 //!
 //! * the **sender pump** drains per-channel outbound queues onto the
-//!   path, interleaving channels **round-robin with a chunk budget**
-//!   ([`MuxConfig::chunk_budget`]): a bulk file transfer is cut into
-//!   budget-sized frames between which every other channel gets a turn,
-//!   so it cannot starve a latency-sensitive coupling;
+//!   path with a **deficit-round-robin scheduler**: each rotation turn a
+//!   channel accrues a byte allowance of
+//!   `weight × chunk_budget` ([`ChannelOptions::weight`] ×
+//!   [`MuxConfig::chunk_budget`]) and sends budget-sized frames until
+//!   the allowance runs out, so a weight-4 bulk channel gets ~4× the
+//!   bytes per rotation of a weight-1 channel while neither can starve
+//!   a latency-sensitive coupling; an optional per-channel token-bucket
+//!   [`ChannelOptions::rate`] cap pins one channel below the path rate
+//!   without slowing its siblings;
 //! * the **dispatcher** reads frames off the path and routes them into
 //!   per-channel inbound queues by channel id.
 //!
@@ -38,10 +43,17 @@
 //!   order (verified by per-message sequence numbers; a violation is a
 //!   protocol error, not silent reordering). No ordering is promised
 //!   *across* channels — that independence is the point.
-//! * **Fairness**: the pump gives every channel with queued data one
-//!   budget-sized turn per rotation; a channel's wait for the wire is
-//!   bounded by `(channels - 1) × chunk_budget` bytes regardless of how
-//!   much bulk data another channel has queued.
+//! * **Weighted fairness**: per rotation, every channel with queued
+//!   data and a live turn sends up to `weight × chunk_budget` bytes
+//!   (deficit round-robin: unspent allowance smaller than the next
+//!   frame carries over to the channel's next turn, so long-run byte
+//!   shares converge to the weight ratios even when frame sizes do not
+//!   divide the quantum). A channel's wait for the wire is bounded by
+//!   one rotation — `Σ other weights × chunk_budget` bytes and at most
+//!   `Σ other weights × FRAME_COST_DIVISOR` frames — regardless of how
+//!   much bulk data the other channels have queued. A channel gated by
+//!   credit or by its own rate cap forfeits its turn without burning
+//!   (or accruing) deficit; the rotation moves on.
 //! * **Backpressure**: [`Channel::send`] blocks once the channel's
 //!   queued-but-unsent bytes exceed [`MuxConfig::high_water`], so one
 //!   producer cannot balloon the process.
@@ -72,8 +84,12 @@
 //!   (a protocol error); synchronize reuse at the application level,
 //!   e.g. over a control channel.
 //! * Fairness is byte-based, not deadline-based: a channel's latency is
-//!   bounded by one full rotation of budget-sized frames, which on a
-//!   slow link can still be long — size `chunk_budget` for the link.
+//!   bounded by one full rotation of weighted quanta, which on a slow
+//!   link can still be long — size `chunk_budget` (and the weights of
+//!   bulk channels) for the link. Weights and rate caps are
+//!   endpoint-local scheduler state: nothing about them travels on the
+//!   wire, the two ends need not agree, and each end shapes only its
+//!   own send direction.
 //! * Over a **resilient** path every frame is a delivery-ACKed path
 //!   message. With the default
 //!   [`ResilienceConfig::window`](super::config::ResilienceConfig::window)
@@ -93,6 +109,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::errors::{MpwError, Result};
+use super::pacing::Pacer;
 use super::path::Path;
 use crate::util::lockorder::{rank, OrderedCondvar, OrderedMutex};
 
@@ -120,6 +137,68 @@ pub const MUX_HDR_LEN: usize = 1 + 1 + 4 + 8 + 4;
 /// Upper bound on a single channel frame payload (a corrupted header
 /// must not trigger an absurd allocation).
 pub const MAX_MUX_PAYLOAD: usize = 64 << 20;
+/// Upper bound on [`ChannelOptions::weight`]. Weights are endpoint-local
+/// scheduler state — nothing about them travels on the wire — so this
+/// bound exists only to keep `weight × chunk_budget` quanta sane.
+pub const MAX_WEIGHT: u32 = 1024;
+/// Minimum deficit one frame burns, expressed as a divisor of
+/// [`MuxConfig::chunk_budget`]: every frame costs at least
+/// `chunk_budget / FRAME_COST_DIVISOR` allowance even when its payload
+/// is smaller. Without this floor a torrent of tiny messages would turn
+/// a byte quantum into an unbounded number of wire frames per turn
+/// (each frame has real per-frame wire cost); with it one turn is at
+/// most `weight × FRAME_COST_DIVISOR` frames.
+pub const FRAME_COST_DIVISOR: usize = 16;
+
+/// Per-channel scheduling options for [`MuxEndpoint::open_opts`].
+///
+/// Both knobs shape only this endpoint's **send** direction and are
+/// invisible on the wire; the peer sets its own.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChannelOptions {
+    /// Deficit-round-robin weight, `1..=MAX_WEIGHT`: the channel's byte
+    /// allowance per rotation turn is `weight × chunk_budget`, so a
+    /// weight-4 channel gets ~4× the bytes per rotation of a weight-1
+    /// channel. Changeable live via [`Channel::set_weight`].
+    pub weight: u32,
+    /// Optional token-bucket rate cap in bytes/second (burst allowance
+    /// `max(1% of rate, 64 KiB)`, as for path pacing): the pump skips
+    /// the channel's turn — without burning its deficit — while the
+    /// bucket is empty, pinning the channel below the path rate while
+    /// siblings use the headroom. `None` (the default) means unlimited.
+    /// Changeable live via [`Channel::set_rate`]. Control frames
+    /// (OPEN/CLOSE/credit) are never rate-gated.
+    pub rate: Option<f64>,
+}
+
+impl Default for ChannelOptions {
+    fn default() -> Self {
+        ChannelOptions { weight: 1, rate: None }
+    }
+}
+
+impl ChannelOptions {
+    /// Validate the knobs.
+    pub fn validate(&self) -> Result<()> {
+        if self.weight == 0 {
+            return Err(MpwError::Config("channel weight must be >= 1".into()));
+        }
+        if self.weight > MAX_WEIGHT {
+            return Err(MpwError::Config(format!(
+                "channel weight {} exceeds MAX_WEIGHT {MAX_WEIGHT}",
+                self.weight
+            )));
+        }
+        if let Some(r) = self.rate {
+            if !r.is_finite() || r <= 0.0 {
+                return Err(MpwError::Config(format!(
+                    "channel rate cap must be finite and positive (got {r})"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
 
 /// Decoded channel frame header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -172,8 +251,9 @@ pub fn decode_mux_hdr(h: &[u8; MUX_HDR_LEN]) -> Result<MuxHdr> {
 /// Mux tuning knobs.
 #[derive(Debug, Clone)]
 pub struct MuxConfig {
-    /// Largest payload the pump sends from one channel before giving
-    /// every other channel a turn — the fairness quantum. Bigger values
+    /// Largest payload of one channel frame, and the unit of the DRR
+    /// fairness quantum: a channel's byte allowance per rotation turn is
+    /// its [`ChannelOptions::weight`] × `chunk_budget`. Bigger values
     /// amortize per-frame overhead; smaller values tighten the latency
     /// bound for small messages sharing the path with bulk transfers.
     pub chunk_budget: usize,
@@ -296,6 +376,22 @@ struct ChanState {
     outq: VecDeque<OutMsg>,
     out_bytes: usize,
     next_send_seq: u64,
+    // deficit-round-robin scheduling (see pick_job)
+    /// DRR weight ([`ChannelOptions::weight`]); quantum per rotation
+    /// turn is `weight × chunk_budget`. `ensure_chan` initializes it to
+    /// 1 (the struct-Default 0 is never observed by the scheduler,
+    /// which clamps with `max(1)` anyway).
+    weight: u32,
+    /// Unspent byte allowance carried between rotation turns, bounded
+    /// by two quanta.
+    deficit: u64,
+    /// The channel is mid-turn: it holds the pump's attention until its
+    /// deficit runs out, its queue drains, or a gate ends the turn.
+    turn_active: bool,
+    /// Optional token-bucket rate cap ([`ChannelOptions::rate`]). Only
+    /// ever probed with the non-blocking [`Pacer::try_acquire`] — the
+    /// pump must never sleep while holding the state lock.
+    pacer: Option<Pacer>,
     /// Newest cumulative byte grant the peer advertised for this
     /// channel; compared against `sent_bytes` when credit gating is on.
     peer_grant: u64,
@@ -335,6 +431,12 @@ pub struct ChannelStats {
     /// Newest cumulative byte grant the peer advertised for this
     /// channel (0 until a credit-aware peer's first WINDOW_UPDATE).
     pub peer_grant: u64,
+    /// The channel's deficit-round-robin weight
+    /// ([`ChannelOptions::weight`]).
+    pub weight: u32,
+    /// Unspent DRR byte allowance carried into the channel's next
+    /// rotation turn.
+    pub deficit: u64,
 }
 
 struct MuxState {
@@ -471,6 +573,14 @@ impl MuxEndpoint {
     /// Open (or adopt) channel `id`. Both ends must open the same id,
     /// like agreeing on a port; opening twice is an error.
     pub fn open(&self, id: u32) -> Result<Channel> {
+        self.open_opts(id, ChannelOptions::default())
+    }
+
+    /// [`MuxEndpoint::open`] with explicit scheduling options: a DRR
+    /// weight and an optional token-bucket rate cap for this end's send
+    /// direction (see [`ChannelOptions`]).
+    pub fn open_opts(&self, id: u32, opts: ChannelOptions) -> Result<Channel> {
+        opts.validate()?;
         let mut st = self.inner.st.lock();
         check_alive(&st)?;
         let known = st.chans.contains_key(&id);
@@ -480,6 +590,8 @@ impl MuxEndpoint {
         }
         ch.locally_opened = true;
         ch.tombstone_since = None; // adopted: the lease no longer applies
+        ch.weight = opts.weight;
+        ch.pacer = opts.rate.map(|r| Pacer::new(Some(r)));
         if known {
             // the peer evidently knows the channel already (its frames
             // created the state) — no OPEN needed
@@ -506,6 +618,8 @@ impl MuxEndpoint {
                 last_delivery_ticket: c.last_delivery_ticket,
                 inbound_queued_bytes: c.ready_bytes + c.partial.len(),
                 peer_grant: c.peer_grant,
+                weight: c.weight.max(1),
+                deficit: c.deficit,
             })
             .collect();
         out.sort_by_key(|c| c.id);
@@ -765,6 +879,38 @@ impl Channel {
         Ok(())
     }
 
+    /// Change this channel's DRR scheduling weight live (see
+    /// [`ChannelOptions::weight`]). Takes effect from the channel's next
+    /// rotation turn; already-accrued deficit is kept.
+    pub fn set_weight(&self, weight: u32) -> Result<()> {
+        ChannelOptions { weight, rate: None }.validate()?;
+        let mut st = self.inner.st.lock();
+        check_alive(&st)?;
+        let ch = self
+            .chan_mut(&mut st)
+            .ok_or(MpwError::ChannelClosed { channel: self.id })?;
+        ch.weight = weight;
+        drop(st);
+        self.inner.send_cv.notify_all();
+        Ok(())
+    }
+
+    /// Replace this channel's token-bucket rate cap live (see
+    /// [`ChannelOptions::rate`]); `None` removes the cap. The bucket
+    /// restarts with a fresh burst allowance.
+    pub fn set_rate(&self, rate: Option<f64>) -> Result<()> {
+        ChannelOptions { weight: 1, rate }.validate()?;
+        let mut st = self.inner.st.lock();
+        check_alive(&st)?;
+        let ch = self
+            .chan_mut(&mut st)
+            .ok_or(MpwError::ChannelClosed { channel: self.id })?;
+        ch.pacer = rate.map(|r| Pacer::new(Some(r)));
+        drop(st);
+        self.inner.send_cv.notify_all();
+        Ok(())
+    }
+
     /// Start a non-blocking send (`MPW_ISendRecv` pattern): the message
     /// is queued and flushed by the pump while the caller computes.
     /// When there is room below the high-water mark — the common case —
@@ -850,7 +996,7 @@ fn ensure_chan(st: &mut MuxState, id: u32) -> &mut ChanState {
     let ch = st.chans.entry(id).or_insert_with(|| {
         order.push(id);
         created = true;
-        ChanState { gen, ..ChanState::default() }
+        ChanState { gen, weight: 1, ..ChanState::default() }
     });
     if created {
         st.next_gen += 1;
@@ -937,23 +1083,49 @@ fn sweep_tombstones(st: &mut MuxState, ttl: Option<Duration>) {
     }
 }
 
-/// Select the pump's next frame: scan the rotation from the cursor and
-/// take one budget-bounded unit of work from the first channel that has
-/// any, advancing the cursor past it (the fairness rule).
+/// Select the pump's next frame with deficit round-robin: scan the
+/// rotation from the cursor; the first channel with eligible work opens
+/// (or continues) a **turn**. Opening a turn accrues one quantum of
+/// byte allowance — `weight × chunk_budget`, carried deficit included,
+/// capped at two quanta — and the channel then keeps the cursor until
+/// its allowance cannot cover the next frame, its queue drains (deficit
+/// resets: an idle channel must not hoard allowance), or a gate ends
+/// the turn. Unspent allowance smaller than the next frame carries over
+/// to the channel's next turn, so long-run byte shares converge to the
+/// weight ratios even when frame sizes do not divide the quantum.
+/// Every frame burns at least `chunk_budget / FRAME_COST_DIVISOR`
+/// allowance (see [`FRAME_COST_DIVISOR`]), bounding a turn in frames as
+/// well as bytes.
 ///
-/// Credit rules: with `recv_high_water` set, a due credit advert
+/// Gates compose without burning deficit:
+///
+/// * **Credit** (with a credit-advertising peer): a channel *starts* a
+///   new message only while its cumulative sent bytes are below the
+///   peer's newest grant; a started message is always finished
+///   (`off > 0`), so a single message larger than the grant window
+///   cannot wedge the peer's reassembly. A creditless channel forfeits
+///   its turn — deficit kept, nothing accrued — and is skipped, not
+///   waited on: the rotation keeps every other channel flowing.
+/// * **Rate cap**: a channel whose token bucket cannot cover the next
+///   frame forfeits its turn the same way; the earliest refill time
+///   among such channels is returned so the pump can bound its idle
+///   wait instead of relying on an external wakeup. The bucket is only
+///   probed with the non-blocking [`Pacer::try_acquire`] — the pump
+///   never sleeps under the state lock.
+///
+/// Control frames are unchanged from the flat scheduler: a pending OPEN
+/// precedes data, and with `recv_high_water` set a due credit advert
 /// preempts the channel's own data (a starved peer needs the grant more
-/// than we need the next chunk). With a credit-advertising peer, a
-/// channel *starts* a new message only while its cumulative sent bytes
-/// are below the peer's newest grant; a started message is always
-/// finished (`off > 0`), so a single message larger than the grant
-/// window cannot wedge the peer's reassembly — exactly the
-/// empty-queue-is-always-admitted rule of the outbound high-water, in
-/// the other direction. A creditless channel is *skipped*, not waited
-/// on: the rotation keeps every other channel flowing.
-fn pick_job(st: &mut MuxState, budget: usize, recv_high_water: Option<usize>) -> Option<PumpJob> {
+/// than we need the next chunk). Neither touches the deficit.
+fn pick_job(
+    st: &mut MuxState,
+    budget: usize,
+    recv_high_water: Option<usize>,
+) -> (Option<PumpJob>, Option<Duration>) {
     let n = st.order.len();
     let peer_credit = st.peer_credit;
+    let frame_floor = (budget / FRAME_COST_DIVISOR).max(1) as u64;
+    let mut next_ready: Option<Duration> = None;
     for k in 0..n {
         let pos = (st.cursor + k) % n;
         let id = st.order[pos];
@@ -961,7 +1133,7 @@ fn pick_job(st: &mut MuxState, budget: usize, recv_high_water: Option<usize>) ->
         if ch.locally_opened && !ch.open_sent {
             ch.open_sent = true;
             st.cursor = (pos + 1) % n;
-            return Some(PumpJob::Open(id));
+            return (Some(PumpJob::Open(id)), next_ready);
         }
         if let Some(hw) = recv_high_water {
             if !ch.remote_closed {
@@ -976,32 +1148,76 @@ fn pick_job(st: &mut MuxState, budget: usize, recv_high_water: Option<usize>) ->
                 if desired - ch.last_grant >= ((hw / 4).max(1)) as u64 {
                     ch.last_grant = desired;
                     st.cursor = (pos + 1) % n;
-                    return Some(PumpJob::Credit { id, grant: desired });
+                    return (Some(PumpJob::Credit { id, grant: desired }), next_ready);
                 }
             }
         }
-        let gated = peer_credit
+        let credit_gated = peer_credit
             && ch.outq.front().is_some_and(|m| m.off == 0)
             && ch.sent_bytes >= ch.peer_grant;
-        if !gated {
-            if let Some(msg) = ch.outq.pop_front() {
-                let end = (msg.off + budget).min(msg.data.len());
-                let fin = end == msg.data.len();
-                let take = end - msg.off;
-                ch.out_bytes -= take;
-                ch.sent_bytes += take as u64;
-                ch.in_flight = true;
-                st.cursor = (pos + 1) % n;
-                return Some(PumpJob::Chunk { id, msg, end, fin });
+        if credit_gated {
+            // forfeit the turn: deficit kept, nothing accrued
+            ch.turn_active = false;
+        }
+        let head = if credit_gated { None } else { ch.outq.front() };
+        if let Some((end, take, fin)) = head.map(|m| {
+            let end = (m.off + budget).min(m.data.len());
+            (end, end - m.off, end == m.data.len())
+        }) {
+            let quantum = u64::from(ch.weight.max(1)) * budget as u64;
+            let cost = (take as u64).max(frame_floor);
+            // Speculative turn accounting: the quantum is committed only
+            // if the frame actually goes out, so a rate-gated channel
+            // neither accrues nor burns allowance while it waits.
+            let allowance = if ch.turn_active {
+                ch.deficit
+            } else {
+                ch.deficit.saturating_add(quantum).min(quantum.saturating_mul(2))
+            };
+            if cost <= allowance {
+                match ch.pacer.as_mut().and_then(|p| p.try_acquire(take)) {
+                    Some(ready) => {
+                        // rate-gated: forfeit the turn, remember when the
+                        // bucket refills so the pump's wait is bounded
+                        ch.turn_active = false;
+                        next_ready = Some(match next_ready {
+                            Some(cur) => cur.min(ready),
+                            None => ready,
+                        });
+                    }
+                    None => {
+                        if let Some(msg) = ch.outq.pop_front() {
+                            ch.out_bytes -= take;
+                            ch.sent_bytes += take as u64;
+                            ch.in_flight = true;
+                            let left = allowance - cost;
+                            if (fin && ch.outq.is_empty()) || left == 0 {
+                                // queue drained or allowance spent: the
+                                // turn ends, the rotation moves on
+                                ch.deficit = if fin && ch.outq.is_empty() { 0 } else { left };
+                                ch.turn_active = false;
+                                st.cursor = (pos + 1) % n;
+                            } else {
+                                ch.deficit = left;
+                                ch.turn_active = true;
+                                st.cursor = pos;
+                            }
+                            return (Some(PumpJob::Chunk { id, msg, end, fin }), next_ready);
+                        }
+                    }
+                }
+            } else {
+                // mid-turn exhaustion: carry the remainder to the next turn
+                ch.turn_active = false;
             }
         }
         if ch.local_closed && !ch.close_sent && !ch.in_flight && ch.outq.is_empty() {
             ch.close_sent = true;
             st.cursor = (pos + 1) % n;
-            return Some(PumpJob::Close(id));
+            return (Some(PumpJob::Close(id)), next_ready);
         }
     }
-    None
+    (None, next_ready)
 }
 
 fn pump_loop(inner: &Arc<MuxInner>) {
@@ -1019,15 +1235,26 @@ fn pump_loop(inner: &Arc<MuxInner>) {
                     return;
                 }
                 sweep_tombstones(&mut st, inner.cfg.tombstone_ttl);
-                if let Some(job) = pick_job(&mut st, budget, inner.cfg.recv_high_water) {
+                let (job, rate_hint) = pick_job(&mut st, budget, inner.cfg.recv_high_water);
+                if let Some(job) = job {
                     break Some(job);
                 }
                 if dirty {
                     break None; // drain the path window outside the lock
                 }
-                st = match inner.cfg.tombstone_ttl {
-                    // the lease needs periodic sweeps even while idle
-                    Some(ttl) => inner.send_cv.wait_timeout(st, ttl).0,
+                // Idle: wake on new work, the periodic tombstone sweep,
+                // or the earliest rate-gated channel's bucket refill —
+                // whichever comes first. The refill bound matters: no
+                // external event announces "tokens have accrued", so
+                // without it a rate-capped channel would stall until the
+                // next unrelated send.
+                let wait = match (inner.cfg.tombstone_ttl, rate_hint) {
+                    (Some(ttl), Some(ready)) => Some(ttl.min(ready)),
+                    (Some(ttl), None) => Some(ttl),
+                    (None, ready) => ready,
+                };
+                st = match wait {
+                    Some(d) => inner.send_cv.wait_timeout(st, d).0,
                     None => inner.send_cv.wait(st),
                 };
             }
@@ -1635,6 +1862,241 @@ mod tests {
             assert!(t0.elapsed().as_secs() < 10, "recv hung on a dead path");
         }
         assert!(b.dead_reason().is_some());
+    }
+
+    /// Bare scheduler state for driving `pick_job` directly — no path,
+    /// no workers, every "send" completes instantly in the test loop.
+    fn synth_state() -> MuxState {
+        MuxState {
+            chans: HashMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            delivery_ticket: 0,
+            next_gen: 0,
+            dead: None,
+            shutdown: false,
+            peer_credit: false,
+        }
+    }
+
+    /// Mirror the pump's post-send bookkeeping for a synthetic pick:
+    /// clear `in_flight`, reinsert an unfinished message.
+    fn complete_chunk(st: &mut MuxState, id: u32, msg: OutMsg, end: usize, fin: bool) {
+        let ch = st.chans.get_mut(&id).unwrap();
+        ch.in_flight = false;
+        if !fin {
+            let mut msg = msg;
+            msg.off = end;
+            ch.outq.push_front(msg);
+        }
+    }
+
+    #[test]
+    fn channel_options_validate() {
+        assert!(ChannelOptions::default().validate().is_ok());
+        assert_eq!(ChannelOptions::default().weight, 1);
+        assert!(ChannelOptions { weight: 0, rate: None }.validate().is_err());
+        assert!(ChannelOptions { weight: MAX_WEIGHT + 1, rate: None }.validate().is_err());
+        assert!(ChannelOptions { weight: MAX_WEIGHT, rate: Some(1e6) }.validate().is_ok());
+        assert!(ChannelOptions { weight: 1, rate: Some(0.0) }.validate().is_err());
+        assert!(ChannelOptions { weight: 1, rate: Some(-1.0) }.validate().is_err());
+        assert!(ChannelOptions { weight: 1, rate: Some(f64::NAN) }.validate().is_err());
+        assert!(ChannelOptions { weight: 1, rate: Some(f64::INFINITY) }.validate().is_err());
+    }
+
+    #[test]
+    fn open_opts_sets_weight_and_live_changes_are_validated() {
+        let (a, b) = mem_endpoints(1, MuxConfig::default());
+        assert!(a.open_opts(1, ChannelOptions { weight: 0, rate: None }).is_err());
+        // a rejected open must not burn the id
+        let tx = a.open_opts(1, ChannelOptions { weight: 4, rate: None }).unwrap();
+        let rx = b.open(1).unwrap();
+        tx.send(b"hi").unwrap();
+        assert_eq!(rx.recv().unwrap(), b"hi");
+        let stats = a.channel_stats();
+        assert_eq!(stats.iter().find(|c| c.id == 1).unwrap().weight, 4);
+        tx.set_weight(7).unwrap();
+        assert_eq!(a.channel_stats()[0].weight, 7);
+        assert!(tx.set_weight(0).is_err());
+        assert!(tx.set_weight(MAX_WEIGHT + 1).is_err());
+        assert!(tx.set_rate(Some(-5.0)).is_err());
+        tx.set_rate(Some(1e9)).unwrap();
+        tx.set_rate(None).unwrap();
+        // the default-weight peer reports weight 1
+        assert_eq!(b.channel_stats()[0].weight, 1);
+    }
+
+    #[test]
+    fn rate_capped_channel_is_paced_and_siblings_are_not() {
+        // fast unpaced mem path; channel 1 pinned to 2 MB/s, channel 2
+        // free — the cap must bite without dragging the sibling down
+        let (a, b) = mem_endpoints(2, MuxConfig::default());
+        let rate = 2.0 * 1024.0 * 1024.0;
+        let capped = a.open_opts(1, ChannelOptions { weight: 1, rate: Some(rate) }).unwrap();
+        let free = a.open(2).unwrap();
+        let rx_capped = b.open(1).unwrap();
+        let rx_free = b.open(2).unwrap();
+        let capped_msg = vec![9u8; 1 << 20]; // 1 MB at 2 MB/s ≈ 0.47 s after burst
+        let big = vec![3u8; 4 << 20];
+        capped.send(&capped_msg).unwrap();
+        free.send(&big).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(rx_free.recv().unwrap(), big);
+        let t_free = t0.elapsed().as_secs_f64();
+        assert_eq!(rx_capped.recv().unwrap(), capped_msg);
+        let t_capped = t0.elapsed().as_secs_f64();
+        assert!(t_capped > 0.25, "rate cap never bit: capped channel done in {t_capped}s");
+        assert!(
+            t_free < t_capped,
+            "free channel ({t_free}s) was dragged behind the capped one ({t_capped}s)"
+        );
+    }
+
+    #[test]
+    fn tiny_message_turn_is_frame_bounded() {
+        // A weight-1 channel fed thousands of tiny messages must not turn
+        // its byte quantum into an unbounded run of wire frames: the
+        // per-frame cost floor bounds one turn at FRAME_COST_DIVISOR
+        // frames.
+        let budget = 16 * 1024;
+        let mut st = synth_state();
+        for id in 0..2u32 {
+            let ch = ensure_chan(&mut st, id);
+            ch.locally_opened = true;
+            ch.open_sent = true;
+        }
+        {
+            let ch = st.chans.get_mut(&0).unwrap();
+            for _ in 0..2000 {
+                enqueue(ch, vec![1u8; 8]);
+            }
+        }
+        {
+            let ch = st.chans.get_mut(&1).unwrap();
+            enqueue(ch, vec![2u8; 1 << 20]);
+        }
+        let mut run = 0usize;
+        let mut worst = 0usize;
+        for _ in 0..4000 {
+            let (job, _) = pick_job(&mut st, budget, None);
+            match job {
+                Some(PumpJob::Chunk { id, msg, end, fin }) => {
+                    complete_chunk(&mut st, id, msg, end, fin);
+                    if id == 0 {
+                        run += 1;
+                        worst = worst.max(run);
+                    } else {
+                        run = 0;
+                    }
+                }
+                Some(_) => {}
+                None => break,
+            }
+        }
+        assert!(worst > 1, "cost floor too aggressive: no tiny-message batching at all");
+        assert!(
+            worst <= FRAME_COST_DIVISOR,
+            "tiny-message turn ran {worst} consecutive frames (bound {FRAME_COST_DIVISOR})"
+        );
+    }
+
+    #[test]
+    fn drr_picker_shares_follow_weights() {
+        use crate::util::prop;
+        // Mixed weights × message sizes × credit-gated channels: at the
+        // moment the first ungated channel runs dry, every ungated
+        // channel's charged cost (bytes, floored per frame) divided by
+        // its weight must agree within tolerance; gated channels send
+        // nothing; queue accounting and deficit bounds hold throughout.
+        prop::check("drr-picker-shares", 20, |rng| {
+            let budget = 8 * 1024usize;
+            let frame_floor = (budget / FRAME_COST_DIVISOR).max(1) as u64;
+            let backlog = 2usize << 20;
+            let nch = rng.urange(2, 7);
+            let mut st = synth_state();
+            let weights: Vec<u32> = (0..nch).map(|_| [1u32, 2, 4, 8][rng.urange(0, 4)]).collect();
+            // channel 0 is always ungated so the run terminates
+            let gated: Vec<bool> = (0..nch).map(|i| i != 0 && rng.chance(0.25)).collect();
+            st.peer_credit = true;
+            for i in 0..nch {
+                let ch = ensure_chan(&mut st, i as u32);
+                ch.locally_opened = true;
+                ch.open_sent = true;
+                ch.weight = weights[i];
+                ch.peer_grant = if gated[i] { 0 } else { u64::MAX };
+                let mut left = backlog;
+                let mut msgs = 0;
+                while left > 0 {
+                    // bounded message count: the last slot takes the rest
+                    let sz = if msgs == 63 {
+                        left
+                    } else {
+                        prop::message_size(rng, budget).clamp(1, left)
+                    };
+                    enqueue(ch, vec![0u8; sz]);
+                    left -= sz;
+                    msgs += 1;
+                }
+            }
+            let mut cost = vec![0u64; nch];
+            let mut dry = false;
+            for _ in 0..200_000 {
+                let (job, _) = pick_job(&mut st, budget, None);
+                let Some(job) = job else { break };
+                match job {
+                    PumpJob::Chunk { id, msg, end, fin } => {
+                        let take = (end - msg.off) as u64;
+                        cost[id as usize] += take.max(frame_floor);
+                        complete_chunk(&mut st, id, msg, end, fin);
+                        if !gated[id as usize]
+                            && st.chans.get(&id).is_some_and(|c| c.outq.is_empty())
+                        {
+                            dry = true;
+                        }
+                    }
+                    PumpJob::Open(_) | PumpJob::Close(_) | PumpJob::Credit { .. } => {}
+                }
+                if dry {
+                    break;
+                }
+            }
+            if !dry {
+                return Err("picker wedged: no ungated channel ever drained".into());
+            }
+            // structural invariants after the run
+            for (i, w) in weights.iter().enumerate() {
+                let ch = &st.chans[&(i as u32)];
+                let queued: usize = ch.outq.iter().map(|m| m.data.len() - m.off).sum();
+                if ch.out_bytes != queued {
+                    return Err(format!("chan {i}: out_bytes {} != queued {queued}", ch.out_bytes));
+                }
+                let quantum = u64::from(*w) * budget as u64;
+                if ch.deficit > quantum * 2 {
+                    return Err(format!("chan {i}: deficit {} exceeds 2 quanta", ch.deficit));
+                }
+            }
+            for i in 0..nch {
+                if gated[i] && cost[i] != 0 {
+                    return Err(format!("credit-gated chan {i} sent {} cost units", cost[i]));
+                }
+                if !gated[i] && cost[i] == 0 {
+                    return Err(format!("ungated chan {i} starved (weights {weights:?})"));
+                }
+            }
+            // weight-normalized shares agree across ungated channels
+            let shares: Vec<f64> = (0..nch)
+                .filter(|&i| !gated[i])
+                .map(|i| cost[i] as f64 / f64::from(weights[i]))
+                .collect();
+            let lo = shares.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = shares.iter().cloned().fold(0.0, f64::max);
+            if hi / lo > 1.35 {
+                return Err(format!(
+                    "normalized shares diverge: {shares:?} (weights {weights:?}, gated {gated:?})"
+                ));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -39,22 +39,58 @@ impl Pacer {
         self.rate
     }
 
-    /// Block until `bytes` may be sent without exceeding the pacing rate.
-    pub fn acquire(&mut self, bytes: usize) {
-        let Some(rate) = self.rate else { return };
+    /// Refill the bucket from wall-clock time elapsed since the last
+    /// refill, clamped to the burst allowance.
+    fn refill(&mut self, rate: f64) {
         let now = Instant::now();
         self.tokens = (self.tokens + now.duration_since(self.last).as_secs_f64() * rate)
             .min(self.burst);
         self.last = now;
+    }
+
+    /// Block until `bytes` may be sent without exceeding the pacing rate.
+    pub fn acquire(&mut self, bytes: usize) {
+        let Some(rate) = self.rate else { return };
+        self.refill(rate);
         if self.tokens >= bytes as f64 {
             self.tokens -= bytes as f64;
             return;
         }
         let deficit = bytes as f64 - self.tokens;
         let wait = deficit / rate;
+        let parked = Instant::now();
         std::thread::sleep(Duration::from_secs_f64(wait));
-        self.tokens = 0.0;
-        self.last = Instant::now();
+        let end = Instant::now();
+        let slept = end.duration_since(parked).as_secs_f64();
+        self.tokens = Self::settle_after_sleep(self.tokens, bytes as f64, slept, rate, self.burst);
+        self.last = end;
+    }
+
+    /// Post-sleep token accounting, factored out so the oversleep case is
+    /// unit-testable: budget accrues from the sleep that *actually
+    /// happened* (`slept` seconds), not from the deficit we asked for.
+    /// On coarse-timer hosts the OS routinely oversleeps, and discarding
+    /// that accrual makes the long-run achieved rate systematically
+    /// undershoot the configured rate.
+    fn settle_after_sleep(tokens: f64, bytes: f64, slept: f64, rate: f64, burst: f64) -> f64 {
+        (tokens + slept * rate - bytes).min(burst)
+    }
+
+    /// Non-blocking variant of [`acquire`](Self::acquire) for callers
+    /// that must not sleep (the mux pump holds shared scheduler state):
+    /// debit the bucket and return `None` when `bytes` are admitted now,
+    /// otherwise leave the bucket untouched and return how long until
+    /// enough tokens will have accrued. Callers park on their own
+    /// condvar with that duration as the timeout and retry.
+    pub fn try_acquire(&mut self, bytes: usize) -> Option<Duration> {
+        let Some(rate) = self.rate else { return None };
+        self.refill(rate);
+        if self.tokens >= bytes as f64 {
+            self.tokens -= bytes as f64;
+            return None;
+        }
+        let deficit = bytes as f64 - self.tokens;
+        Some(Duration::from_secs_f64(deficit / rate))
     }
 
     /// Pure helper for the simulator: time (seconds) a paced stream needs
@@ -73,10 +109,18 @@ impl Pacer {
 pub const MIN_ADAPTIVE_RATE: f64 = 1024.0 * 1024.0; // 1 MB/s
 
 /// Split a path-level pacing budget (bytes/second) across `active`
-/// streams, clamped to [`MIN_ADAPTIVE_RATE`]. Used by the
-/// [`adapt`](super::adapt) controller when it re-paces a live path.
+/// streams. Used by the [`adapt`](super::adapt) controller when it
+/// re-paces a live path.
+///
+/// The aggregate never exceeds `max(total, MIN_ADAPTIVE_RATE)`: when the
+/// fair share `total / active` would fall below [`MIN_ADAPTIVE_RATE`],
+/// the floor is applied to the *path* budget and then split — not to
+/// each stream individually, which would let `active` streams exceed the
+/// user's cap by up to `active ×` in aggregate. The never-wedge intent
+/// is preserved: a transiently bad goodput estimate can pace the path
+/// down to a 1 MB/s aggregate, never to a crawl.
 pub fn per_stream_rate(total: f64, active: usize) -> f64 {
-    (total / active.max(1) as f64).max(MIN_ADAPTIVE_RATE)
+    total.max(MIN_ADAPTIVE_RATE) / active.max(1) as f64
 }
 
 #[cfg(test)]
@@ -133,8 +177,78 @@ mod tests {
     #[test]
     fn per_stream_rate_splits_and_floors() {
         assert_eq!(per_stream_rate(32.0 * MIN_ADAPTIVE_RATE, 4), 8.0 * MIN_ADAPTIVE_RATE);
-        // floor binds for tiny budgets and is safe for active = 0
-        assert_eq!(per_stream_rate(1.0, 16), MIN_ADAPTIVE_RATE);
+        // when the budget binds, the floor applies to the path and is
+        // split — each of 16 streams gets 1/16 of MIN_ADAPTIVE_RATE, not
+        // a full MIN_ADAPTIVE_RATE each
+        assert_eq!(per_stream_rate(1.0, 16), MIN_ADAPTIVE_RATE / 16.0);
+        // safe for active = 0
         assert_eq!(per_stream_rate(5.0 * MIN_ADAPTIVE_RATE, 0), 5.0 * MIN_ADAPTIVE_RATE);
+    }
+
+    #[test]
+    fn per_stream_rate_never_exceeds_aggregate_cap() {
+        // regression: the old floor was per stream, so a 2 MB/s budget
+        // over 8 streams yielded 8 MB/s aggregate — 4x the user's cap
+        for &active in &[1usize, 2, 8, 64] {
+            for &total in &[0.5, 1.0, 2.0, 7.5] {
+                let budget = total * MIN_ADAPTIVE_RATE;
+                let aggregate = per_stream_rate(budget, active) * active as f64;
+                let cap = budget.max(MIN_ADAPTIVE_RATE);
+                assert!(
+                    aggregate <= cap * (1.0 + 1e-9),
+                    "active={active} budget={budget}: aggregate {aggregate} > cap {cap}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oversleep_budget_is_retained() {
+        // regression for the acquire() tail: tokens after the sleep must
+        // reflect the sleep that actually happened, not be zeroed. At
+        // 1 MB/s with an empty bucket, acquiring 100_000 bytes asks for a
+        // 0.1 s sleep; if the OS delivers 0.12 s, the extra 0.02 s is
+        // 20_000 bytes of budget the next acquire must see.
+        let rate = 1_000_000.0;
+        let burst = 64.0 * 1024.0;
+        let t = Pacer::settle_after_sleep(0.0, 100_000.0, 0.12, rate, burst);
+        assert!((t - 20_000.0).abs() < 1e-6, "retained {t}, want 20000");
+        // a wild oversleep is clamped to the burst allowance
+        let t = Pacer::settle_after_sleep(0.0, 100_000.0, 0.25, rate, burst);
+        assert!((t - burst).abs() < 1e-6, "retained {t}, want burst {burst}");
+        // an exact sleep leaves nothing over (the only case the old
+        // zero-the-bucket code got right)
+        let t = Pacer::settle_after_sleep(25_000.0, 100_000.0, 0.075, rate, burst);
+        assert!(t.abs() < 1e-6, "retained {t}, want 0");
+        // an early wakeup leaves the bucket in debt rather than minting
+        // budget that was never accrued
+        let t = Pacer::settle_after_sleep(0.0, 100_000.0, 0.05, rate, burst);
+        assert!((t + 50_000.0).abs() < 1e-6, "retained {t}, want -50000");
+    }
+
+    #[test]
+    fn try_acquire_admits_and_gates_without_sleeping() {
+        let rate = 1_000_000.0;
+        let mut p = Pacer::new(Some(rate));
+        // the initial burst (max(1% rate, 64 KiB) = 64 KiB) admits freely
+        assert_eq!(p.try_acquire(32 * 1024), None);
+        assert_eq!(p.try_acquire(32 * 1024), None);
+        // the bucket is now ~empty: a large ask is gated, never slept,
+        // and the hint approximates deficit / rate
+        let t0 = Instant::now();
+        let wait = p.try_acquire(500_000);
+        assert!(t0.elapsed() < Duration::from_millis(50), "try_acquire slept");
+        let wait = match wait {
+            Some(w) => w.as_secs_f64(),
+            None => panic!("empty bucket admitted 500 KB"),
+        };
+        assert!(wait > 0.3 && wait < 0.6, "wait hint {wait}");
+        // a gated ask must not debit the bucket: a small ask after real
+        // accrual still succeeds
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(p.try_acquire(8 * 1024), None);
+        // unlimited pacers never gate
+        let mut free = Pacer::new(None);
+        assert_eq!(free.try_acquire(usize::MAX / 2), None);
     }
 }

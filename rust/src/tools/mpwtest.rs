@@ -3,15 +3,31 @@
 //! full-duplex `MPW_SendRecv` exchanges over a range of message sizes and
 //! reports throughput per size; the slave echoes. This is the harness
 //! behind the MPWide rows of Table 1.
+//!
+//! Besides the classic whole-path suite ([`run_master`]/[`run_slave`]),
+//! the tool has a **multi-channel mode**
+//! ([`run_master_channels`]/[`run_slave_channels`]): the path is wrapped
+//! in a [`MuxEndpoint`] and N echo suites run concurrently over channels
+//! with distinct DRR weights (and optional rate caps), reporting one row
+//! per (channel, size). That is the scenario the weighted pump scheduler
+//! exists for — bulk and control traffic sharing one tuned WAN path —
+//! and the per-channel rates make the weight ratios directly observable.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::mpwide::errors::{MpwError, Result};
+use crate::mpwide::mux::{ChannelOptions, MuxEndpoint};
 use crate::mpwide::path::Path;
 
 /// Message sizes exercised by the suite (1 KB … 64 MB).
 pub const SIZES: [usize; 7] =
     [1 << 10, 16 << 10, 256 << 10, 1 << 20, 4 << 20, 16 << 20, 64 << 20];
+
+/// Channel id the multi-channel mode reserves for its control plane
+/// (plan announcement and the completion handshake). User suites must
+/// use other ids.
+pub const CONTROL_CHANNEL: u32 = u32::MAX;
 
 /// One row of the benchmark report.
 #[derive(Debug, Clone)]
@@ -26,13 +42,58 @@ pub struct TestRow {
     pub rate: f64,
 }
 
+/// One channel of the multi-channel suite (see [`run_master_channels`]).
+#[derive(Debug, Clone)]
+pub struct ChannelSpec {
+    /// Channel id (must not be [`CONTROL_CHANNEL`]).
+    pub channel: u32,
+    /// DRR scheduling weight for the channel, mirrored by the slave so
+    /// both directions are shaped alike.
+    pub weight: u32,
+    /// Optional token-bucket rate cap for the master's send side.
+    pub rate: Option<f64>,
+}
+
+/// One row of the multi-channel report: a [`TestRow`] measurement plus
+/// the channel identity it ran on.
+#[derive(Debug, Clone)]
+pub struct ChannelRow {
+    /// Channel id the row was measured on.
+    pub channel: u32,
+    /// The channel's DRR weight during the run.
+    pub weight: u32,
+    /// Message size per direction, bytes.
+    pub size: usize,
+    /// Repetitions measured (excluding the untimed warmup exchange).
+    pub reps: usize,
+    /// Mean seconds per echo exchange.
+    pub seconds: f64,
+    /// Duplex throughput, bytes/second (size / seconds, per direction).
+    pub rate: f64,
+}
+
+/// Reject a repetition policy that would divide by zero (and ship a
+/// zero-rep entry to the slave): every size must run at least once.
+fn validate_reps(sizes: &[usize], reps_for: &impl Fn(usize) -> usize) -> Result<()> {
+    for &s in sizes {
+        if reps_for(s) == 0 {
+            return Err(MpwError::Config(format!(
+                "mpwtest reps for size {s} must be >= 1"
+            )));
+        }
+    }
+    Ok(())
+}
+
 /// Master side: run the suite over an established path. `reps_for` maps
-/// a size to a repetition count (fewer reps for huge messages).
+/// a size to a repetition count (fewer reps for huge messages); it must
+/// be >= 1 for every size.
 pub fn run_master(
     path: &Path,
     sizes: &[usize],
     reps_for: impl Fn(usize) -> usize,
 ) -> Result<Vec<TestRow>> {
+    validate_reps(sizes, &reps_for)?;
     let mut rows = Vec::with_capacity(sizes.len());
     // announce the plan: count, then (size, reps) pairs
     let mut plan = Vec::new();
@@ -58,7 +119,9 @@ pub fn run_master(
     Ok(rows)
 }
 
-/// Slave side: obey the master's plan, echoing exchanges.
+/// Slave side: obey the master's plan, echoing exchanges. A plan with a
+/// zero-rep entry is a protocol error — a well-formed master validates
+/// its policy before announcing it.
 pub fn run_slave(path: &Path) -> Result<()> {
     let plan = path.drecv()?;
     if plan.len() < 4 {
@@ -72,6 +135,11 @@ pub fn run_slave(path: &Path) -> Result<()> {
         let off = 4 + k * 12;
         let size = u64::from_be_bytes(plan[off..off + 8].try_into().unwrap()) as usize;
         let reps = u32::from_be_bytes(plan[off + 8..off + 12].try_into().unwrap()) as usize;
+        if reps == 0 {
+            return Err(MpwError::Protocol(format!(
+                "MPWTest plan has zero reps for size {size}"
+            )));
+        }
         let msg = vec![0xA5u8; size];
         let mut buf = vec![0u8; size];
         path.barrier()?;
@@ -90,6 +158,243 @@ pub fn default_reps(size: usize) -> usize {
         s if s <= 16 << 20 => 5,
         _ => 2,
     }
+}
+
+/// One suite of the decoded multi-channel plan.
+struct SuitePlan {
+    channel: u32,
+    weight: u32,
+    /// `(size, reps)` pairs, reps excluding the warmup exchange.
+    sizes: Vec<(usize, usize)>,
+}
+
+/// Decode and validate the multi-channel plan (see
+/// [`run_master_channels`] for the wire layout).
+fn parse_channel_plan(plan: &[u8]) -> Result<Vec<SuitePlan>> {
+    let bad = |what: &str| MpwError::Protocol(format!("malformed MPWTest channel plan: {what}"));
+    if plan.len() < 4 {
+        return Err(bad("short header"));
+    }
+    let n = u32::from_be_bytes(plan[0..4].try_into().unwrap()) as usize;
+    if n == 0 {
+        return Err(bad("zero suites"));
+    }
+    let mut off = 4;
+    let mut suites = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        if plan.len() < off + 12 {
+            return Err(bad("truncated suite header"));
+        }
+        let channel = u32::from_be_bytes(plan[off..off + 4].try_into().unwrap());
+        let weight = u32::from_be_bytes(plan[off + 4..off + 8].try_into().unwrap());
+        let n_sizes = u32::from_be_bytes(plan[off + 8..off + 12].try_into().unwrap()) as usize;
+        off += 12;
+        if channel == CONTROL_CHANNEL {
+            return Err(bad("suite on the control channel"));
+        }
+        if (ChannelOptions { weight, rate: None }).validate().is_err() {
+            return Err(bad("suite weight out of range"));
+        }
+        if n_sizes == 0 {
+            return Err(bad("suite with zero sizes"));
+        }
+        let mut sizes = Vec::with_capacity(n_sizes.min(1024));
+        for _ in 0..n_sizes {
+            if plan.len() < off + 12 {
+                return Err(bad("truncated size entry"));
+            }
+            let size = u64::from_be_bytes(plan[off..off + 8].try_into().unwrap()) as usize;
+            let reps = u32::from_be_bytes(plan[off + 8..off + 12].try_into().unwrap()) as usize;
+            off += 12;
+            if reps == 0 {
+                return Err(MpwError::Protocol(format!(
+                    "MPWTest channel plan has zero reps for size {size}"
+                )));
+            }
+            sizes.push((size, reps));
+        }
+        if suites.iter().any(|s: &SuitePlan| s.channel == channel) {
+            return Err(bad("duplicate channel id"));
+        }
+        suites.push(SuitePlan { channel, weight, sizes });
+    }
+    if off != plan.len() {
+        return Err(bad("trailing bytes"));
+    }
+    Ok(suites)
+}
+
+/// Multi-channel master: wrap `path` in a mux endpoint and run one echo
+/// suite per [`ChannelSpec`] **concurrently**, each channel opened with
+/// its own DRR weight (and optional rate cap). Returns one
+/// [`ChannelRow`] per (spec, size).
+///
+/// Control plane (channel [`CONTROL_CHANNEL`]): the master announces a
+/// plan of `[n_suites u32]` then per suite
+/// `[channel u32][weight u32][n_sizes u32]` followed by `n_sizes` ×
+/// `[size u64][reps u32]` entries; the slave mirrors the weights on its
+/// side, echoes `warmup + reps` exchanges per (channel, size), then
+/// reports `done` back on the control channel. Each per-size loop
+/// starts with one untimed warmup exchange that doubles as a
+/// per-channel barrier.
+pub fn run_master_channels(
+    path: Arc<Path>,
+    specs: &[ChannelSpec],
+    sizes: &[usize],
+    reps_for: impl Fn(usize) -> usize + Sync,
+) -> Result<Vec<ChannelRow>> {
+    validate_reps(sizes, &reps_for)?;
+    if specs.is_empty() {
+        return Err(MpwError::Config("mpwtest channel mode needs at least one spec".into()));
+    }
+    if sizes.is_empty() {
+        return Err(MpwError::Config("mpwtest channel mode needs at least one size".into()));
+    }
+    for (i, s) in specs.iter().enumerate() {
+        if s.channel == CONTROL_CHANNEL {
+            return Err(MpwError::Config(format!(
+                "channel id {} is reserved for the control plane",
+                CONTROL_CHANNEL
+            )));
+        }
+        ChannelOptions { weight: s.weight, rate: s.rate }.validate()?;
+        if specs[..i].iter().any(|p| p.channel == s.channel) {
+            return Err(MpwError::Config(format!("duplicate channel id {}", s.channel)));
+        }
+    }
+    let mux = MuxEndpoint::start(path)?;
+    let ctl = mux.open(CONTROL_CHANNEL)?;
+    let mut plan = Vec::new();
+    plan.extend_from_slice(&(specs.len() as u32).to_be_bytes());
+    for s in specs {
+        plan.extend_from_slice(&s.channel.to_be_bytes());
+        plan.extend_from_slice(&s.weight.to_be_bytes());
+        plan.extend_from_slice(&(sizes.len() as u32).to_be_bytes());
+        for &size in sizes {
+            plan.extend_from_slice(&(size as u64).to_be_bytes());
+            plan.extend_from_slice(&(reps_for(size) as u32).to_be_bytes());
+        }
+    }
+    ctl.send(&plan)?;
+    let mut chans = Vec::with_capacity(specs.len());
+    for s in specs {
+        chans.push(mux.open_opts(s.channel, ChannelOptions { weight: s.weight, rate: s.rate })?);
+    }
+    let reps_for = &reps_for;
+    let results: Vec<Result<Vec<ChannelRow>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .zip(chans)
+            .map(|(spec, ch)| {
+                scope.spawn(move || -> Result<Vec<ChannelRow>> {
+                    let mut rows = Vec::with_capacity(sizes.len());
+                    for &size in sizes {
+                        let reps = reps_for(size);
+                        let msg = vec![0x5Au8; size];
+                        // untimed warmup doubles as a per-channel barrier
+                        ch.send(&msg)?;
+                        let _ = ch.recv()?;
+                        let t0 = Instant::now();
+                        for _ in 0..reps {
+                            ch.send(&msg)?;
+                            let echo = ch.recv()?;
+                            if echo.len() != size {
+                                return Err(MpwError::Protocol(format!(
+                                    "channel {} echoed {} bytes for a {size}-byte message",
+                                    spec.channel,
+                                    echo.len()
+                                )));
+                            }
+                        }
+                        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+                        rows.push(ChannelRow {
+                            channel: spec.channel,
+                            weight: spec.weight,
+                            size,
+                            reps,
+                            seconds: dt,
+                            rate: size as f64 / dt,
+                        });
+                    }
+                    ch.close()?;
+                    Ok(rows)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(MpwError::WorkerPanic("mpwtest master suite thread".into())),
+            })
+            .collect()
+    });
+    let mut out = Vec::with_capacity(specs.len() * sizes.len());
+    for r in results {
+        out.extend(r?);
+    }
+    // the slave confirms it observed every close before we tear the
+    // path down (dropping the endpoint is abrupt)
+    let done = ctl.recv()?;
+    if done.as_slice() != b"done" {
+        return Err(MpwError::Protocol("unexpected MPWTest completion token".into()));
+    }
+    Ok(out)
+}
+
+/// Multi-channel slave: obey the master's channel plan, echoing each
+/// suite on its own channel (weights mirrored so the echo direction is
+/// scheduled like the request direction), then report `done` on the
+/// control channel and wait for the master to tear the path down.
+pub fn run_slave_channels(path: Arc<Path>) -> Result<()> {
+    let mux = MuxEndpoint::start(path)?;
+    let ctl = mux.open(CONTROL_CHANNEL)?;
+    let suites = parse_channel_plan(&ctl.recv()?)?;
+    let mut chans = Vec::with_capacity(suites.len());
+    for s in &suites {
+        chans.push(mux.open_opts(s.channel, ChannelOptions { weight: s.weight, rate: None })?);
+    }
+    let results: Vec<Result<()>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = suites
+            .iter()
+            .zip(chans)
+            .map(|(suite, ch)| {
+                scope.spawn(move || -> Result<()> {
+                    for &(_size, reps) in &suite.sizes {
+                        // warmup + timed reps, echoing byte-for-byte
+                        for _ in 0..=reps {
+                            let m = ch.recv()?;
+                            ch.send(&m)?;
+                        }
+                    }
+                    // the master closes once it has every echo
+                    match ch.recv() {
+                        Err(MpwError::ChannelClosed { .. }) => Ok(()),
+                        Ok(_) => Err(MpwError::Protocol(
+                            "unexpected extra message after an MPWTest suite".into(),
+                        )),
+                        Err(e) => Err(e),
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(MpwError::WorkerPanic("mpwtest slave suite thread".into())),
+            })
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    ctl.send(b"done")?;
+    ctl.flush()?;
+    // hold the endpoint open until the master drops its end (path
+    // close), so the done frame and late credit traffic are never cut off
+    while ctl.recv().is_ok() {}
+    Ok(())
 }
 
 #[cfg(test)]
@@ -132,5 +437,96 @@ mod tests {
         let t = std::thread::spawn(move || run_slave(&b));
         a.dsend(&[1, 2, 3]).unwrap();
         assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn master_rejects_zero_reps_before_announcing() {
+        // regression: a zero-rep policy used to divide by zero (NaN/inf
+        // rows) after shipping the bad plan; now it is a typed config
+        // error and nothing touches the wire (no slave is running here)
+        let (a, _b) = mem_paths(1);
+        match run_master(&a, &[1024, 4096], |s| usize::from(s != 4096)) {
+            Err(MpwError::Config(msg)) => assert!(msg.contains("4096"), "msg: {msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn slave_rejects_zero_rep_plan() {
+        // regression: the slave used to accept a zero-rep entry silently
+        let (a, b) = mem_paths(1);
+        let t = std::thread::spawn(move || run_slave(&b));
+        let mut plan = Vec::new();
+        plan.extend_from_slice(&1u32.to_be_bytes());
+        plan.extend_from_slice(&1024u64.to_be_bytes());
+        plan.extend_from_slice(&0u32.to_be_bytes());
+        a.dsend(&plan).unwrap();
+        match t.join().unwrap() {
+            Err(MpwError::Protocol(msg)) => assert!(msg.contains("zero reps"), "msg: {msg}"),
+            other => panic!("expected Protocol error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn channel_suite_reports_per_channel_rows() {
+        let (a, b) = mem_paths(2);
+        let t = std::thread::spawn(move || run_slave_channels(Arc::new(b)));
+        let specs = [
+            ChannelSpec { channel: 1, weight: 1, rate: None },
+            ChannelSpec { channel: 2, weight: 4, rate: None },
+        ];
+        let rows =
+            run_master_channels(Arc::new(a), &specs, &[1024, 32 * 1024], |_| 2).unwrap();
+        t.join().unwrap().unwrap();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.seconds > 0.0 && r.rate > 0.0, "bad row {r:?}");
+            assert_eq!(r.reps, 2);
+        }
+        let w_of = |ch: u32| rows.iter().find(|r| r.channel == ch).unwrap().weight;
+        assert_eq!(w_of(1), 1);
+        assert_eq!(w_of(2), 4);
+    }
+
+    #[test]
+    fn channel_master_rejects_bad_specs() {
+        let dup = [
+            ChannelSpec { channel: 3, weight: 1, rate: None },
+            ChannelSpec { channel: 3, weight: 2, rate: None },
+        ];
+        let ctl = [ChannelSpec { channel: CONTROL_CHANNEL, weight: 1, rate: None }];
+        let zero_w = [ChannelSpec { channel: 1, weight: 0, rate: None }];
+        for specs in [&dup[..], &ctl[..], &zero_w[..]] {
+            let (a, _b) = mem_paths(1);
+            assert!(run_master_channels(Arc::new(a), specs, &[1024], |_| 1).is_err());
+        }
+        // zero reps is rejected before anything touches the wire
+        let ok = [ChannelSpec { channel: 1, weight: 1, rate: None }];
+        let (a, _b) = mem_paths(1);
+        assert!(run_master_channels(Arc::new(a), &ok, &[1024], |_| 0).is_err());
+    }
+
+    #[test]
+    fn channel_plan_parser_rejects_malformed_plans() {
+        assert!(parse_channel_plan(&[]).is_err(), "empty");
+        assert!(parse_channel_plan(&0u32.to_be_bytes()).is_err(), "zero suites");
+        let mut p = Vec::new();
+        p.extend_from_slice(&1u32.to_be_bytes());
+        p.extend_from_slice(&5u32.to_be_bytes()); // channel
+        p.extend_from_slice(&1u32.to_be_bytes()); // weight
+        p.extend_from_slice(&1u32.to_be_bytes()); // n_sizes
+        p.extend_from_slice(&1024u64.to_be_bytes());
+        p.extend_from_slice(&2u32.to_be_bytes());
+        let suites = parse_channel_plan(&p).unwrap();
+        assert_eq!(suites.len(), 1);
+        assert_eq!(suites[0].sizes, vec![(1024, 2)]);
+        // flipping reps to zero must fail
+        let n = p.len();
+        p[n - 4..].copy_from_slice(&0u32.to_be_bytes());
+        assert!(parse_channel_plan(&p).is_err(), "zero reps");
+        // trailing garbage must fail
+        p[n - 4..].copy_from_slice(&2u32.to_be_bytes());
+        p.push(0);
+        assert!(parse_channel_plan(&p).is_err(), "trailing bytes");
     }
 }

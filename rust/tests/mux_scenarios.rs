@@ -21,7 +21,7 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use mpwide::mpwide::mux::{Channel, MuxConfig, MuxEndpoint};
+use mpwide::mpwide::mux::{Channel, ChannelOptions, MuxConfig, MuxEndpoint};
 use mpwide::mpwide::resilience::connect_with_rejoin;
 use mpwide::mpwide::transport::mem_path_pairs_killable;
 use mpwide::mpwide::{Path, PathConfig, PathListener};
@@ -483,6 +483,101 @@ fn credited_never_reader_leaves_siblings_flowing() {
     // teardown with a parked sender and an undrained inbound queue must
     // not deadlock: MuxEndpoint::shutdown is abrupt by contract (both
     // endpoints drop here while channel 0 still holds queued bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Scenario: weighted DRR scheduling (`ChannelOptions { weight }`). Three
+// equally-backlogged channels with weights {1, 2, 4} share one paced
+// path; while all three still hold backlog, the pump's cumulative
+// per-channel sent bytes must be in weight proportion (each channel's
+// share can be off by at most one rotation quantum). Also composes the
+// weights with receiver credit: a stalled-reader channel forfeits its
+// turns no matter how heavy its weight, so siblings keep flowing and
+// the inbound bound holds.
+// ---------------------------------------------------------------------------
+
+const W_WEIGHTS: [u32; 3] = [1, 2, 4];
+const W_MSG: usize = 1 << 20;
+const W_BACKLOG: usize = 12 << 20; // per channel
+
+#[test]
+fn weighted_shares_follow_weights_end_to_end() {
+    let (l, r, _kills) = mem_path_pairs_killable(2);
+    let mut pc = PathConfig::with_streams(2);
+    pc.autotune = false;
+    pc.chunk_size = 64 * 1024;
+    pc.pacing_rate = Some(PACE_PER_STREAM);
+    let a = MuxEndpoint::start_cfg(Arc::new(Path::from_pairs(l, pc.clone()).unwrap()), mux_cfg())
+        .unwrap();
+    let b =
+        MuxEndpoint::start_cfg(Arc::new(Path::from_pairs(r, pc).unwrap()), mux_cfg()).unwrap();
+    let tx: Vec<Channel> = W_WEIGHTS
+        .iter()
+        .enumerate()
+        .map(|(ci, &w)| a.open_opts(ci as u32, ChannelOptions { weight: w, rate: None }).unwrap())
+        .collect();
+    let _rx = open_all(&b, W_WEIGHTS.len());
+    for (ci, ch) in tx.iter().enumerate() {
+        for i in 0..(W_BACKLOG / W_MSG) as u32 {
+            ch.send(&msg_for(ci as u32, i, W_MSG)).unwrap();
+        }
+    }
+    // sample once the heaviest channel is a third through its backlog —
+    // late enough for many full rotations, early enough that every
+    // channel is still backlogged (shares stay comparable)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let stats = loop {
+        let stats = a.channel_stats();
+        let heavy = stats.iter().find(|c| c.id == 2).expect("channel 2 missing").sent_bytes;
+        if heavy >= (W_BACKLOG / 3) as u64 {
+            break stats;
+        }
+        assert!(Instant::now() < deadline, "pump made no progress: {stats:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    let mut norm = Vec::new();
+    for (ci, &w) in W_WEIGHTS.iter().enumerate() {
+        let c = stats.iter().find(|c| c.id == ci as u32).expect("channel stats missing");
+        assert_eq!(c.weight, w, "stats must report the open-time weight");
+        assert!(c.queued_bytes > 0, "channel {ci} drained; shares no longer comparable");
+        norm.push(c.sent_bytes as f64 / f64::from(w));
+    }
+    let (lo, hi) =
+        norm.iter().fold((f64::INFINITY, 0.0f64), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    assert!(lo > 0.0, "a backlogged channel sent nothing: {norm:?}");
+    assert!(
+        hi / lo < 1.6,
+        "weight-normalized shares diverged: {norm:?} (weights {W_WEIGHTS:?})"
+    );
+}
+
+#[test]
+fn credited_parked_heavy_channel_keeps_siblings_flowing() {
+    let (_a, b, tx, rx) = credited_pair(3);
+    // a live weight change: channel 0 becomes 64x heavier than its
+    // siblings, then its reader stalls — credit gating must dominate
+    // the weight (a creditless channel forfeits its turn without
+    // burning deficit, however large its quantum)
+    tx[0].set_weight(64).unwrap();
+    let peak = with_peak_monitor(&b, || {
+        for i in 0..CREDIT_N {
+            tx[0].send(&msg_for(0, i, CREDIT_MSG)).unwrap();
+        }
+        for round in 0..8u32 {
+            for ci in 1..3u32 {
+                tx[ci as usize].send(&msg_for(ci, round, SMALL_LEN)).unwrap();
+                assert_eq!(
+                    rx[ci as usize].recv().unwrap(),
+                    msg_for(ci, round, SMALL_LEN),
+                    "channel {ci} starved behind a parked weight-64 channel"
+                );
+            }
+        }
+    });
+    assert!(
+        peak <= CREDIT_HW + CREDIT_MSG,
+        "parked heavy channel grew past the credit bound: {peak}"
+    );
 }
 
 #[test]
