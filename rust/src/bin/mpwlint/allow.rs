@@ -1,0 +1,200 @@
+//! The sectioned, shrink-only allowlist (`rust/mpwlint.allow`).
+//!
+//! Format:
+//!
+//! ```text
+//! # comments and blank lines are ignored
+//! [panics]
+//! rust/src/mpwide/foo.rs 3
+//! [swallow]
+//! rust/src/mpwide/bar.rs 1
+//! [blocking]
+//! ```
+//!
+//! Semantics — shrink-only **by entry**, not just by count:
+//!
+//! * a file over its budget fails (new debt is rejected);
+//! * a file under its budget fails as *stale*, reporting the exact
+//!   allowlist line to edit and the count to shrink it to;
+//! * an entry burned down to zero is kept as a `<path> 0` tombstone —
+//!   the line is never deleted, so a path that once carried debt can
+//!   never silently reacquire it (a tombstoned path with fresh sites is
+//!   an over-budget failure like any other).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::scan::{violation, Violation};
+
+pub const ALLOWLIST: &str = "rust/mpwlint.allow";
+pub const SECTIONS: [&str; 3] = ["panics", "swallow", "blocking"];
+
+pub struct Entry {
+    pub budget: usize,
+    /// 1-based line in the allowlist file, for stale-entry reporting.
+    pub line: usize,
+}
+
+#[derive(Default)]
+pub struct Allowlist {
+    pub sections: BTreeMap<String, BTreeMap<String, Entry>>,
+}
+
+impl Allowlist {
+    pub fn budget(&self, section: &str, path: &str) -> usize {
+        self.sections
+            .get(section)
+            .and_then(|s| s.get(path))
+            .map_or(0, |e| e.budget)
+    }
+}
+
+pub fn parse(text: &str) -> Result<Allowlist, (usize, String)> {
+    let mut out = Allowlist::default();
+    let mut cur: Option<String> = None;
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|r| r.strip_suffix(']')) {
+            if !SECTIONS.contains(&name) {
+                return Err((i + 1, format!("unknown allowlist section [{name}]")));
+            }
+            if out.sections.contains_key(name) {
+                return Err((i + 1, format!("duplicate allowlist section [{name}]")));
+            }
+            out.sections.insert(name.to_string(), BTreeMap::new());
+            cur = Some(name.to_string());
+            continue;
+        }
+        let Some(section) = &cur else {
+            return Err((i + 1, format!("entry before any [section] header: {line:?}")));
+        };
+        let mut it = line.split_whitespace();
+        let (Some(path), Some(count), None) = (it.next(), it.next(), it.next()) else {
+            return Err((i + 1, format!("malformed allowlist line: {line:?}")));
+        };
+        let Ok(count) = count.parse::<usize>() else {
+            return Err((i + 1, format!("bad count in allowlist line: {line:?}")));
+        };
+        let entries = out.sections.get_mut(section).expect("current section exists");
+        if entries
+            .insert(path.to_string(), Entry { budget: count, line: i + 1 })
+            .is_some()
+        {
+            return Err((i + 1, format!("duplicate entry for {path} in [{section}]")));
+        }
+    }
+    Ok(out)
+}
+
+pub fn load(root: &Path, v: &mut Vec<Violation>) -> Allowlist {
+    let text = fs::read_to_string(root.join(ALLOWLIST)).unwrap_or_default();
+    match parse(&text) {
+        Ok(a) => a,
+        Err((line, msg)) => {
+            v.push(violation(ALLOWLIST, line, msg));
+            Allowlist::default()
+        }
+    }
+}
+
+/// Compare per-file site counts against one section's budgets, both
+/// directions: over-budget fails at the offending file, under-budget
+/// fails at the allowlist with the exact line to shrink.
+pub fn check_section(
+    allow: &Allowlist,
+    section: &str,
+    seen: &BTreeMap<String, (usize, usize)>, // path -> (count, first line)
+    what: &str,
+    v: &mut Vec<Violation>,
+) {
+    for (path, (count, first_line)) in seen {
+        let budget = allow.budget(section, path);
+        if *count > budget {
+            v.push(violation(
+                path,
+                *first_line,
+                format!(
+                    "{count} {what} site(s) but [{section}] budget is {budget} — \
+                     burn the new site(s) down (the allowlist is shrink-only)"
+                ),
+            ));
+        }
+    }
+    check_stale(allow, section, seen, v);
+}
+
+/// The under-budget direction alone: every entry whose budget exceeds
+/// reality is *stale* and names the exact allowlist line to shrink.
+pub fn check_stale(
+    allow: &Allowlist,
+    section: &str,
+    seen: &BTreeMap<String, (usize, usize)>,
+    v: &mut Vec<Violation>,
+) {
+    if let Some(entries) = allow.sections.get(section) {
+        for (path, e) in entries {
+            let actual = seen.get(path).map_or(0, |(c, _)| *c);
+            if actual < e.budget {
+                v.push(violation(
+                    ALLOWLIST,
+                    e.line,
+                    format!(
+                        "stale [{section}] entry: {path} allows {} but only {actual} remain — \
+                         shrink line {} to `{path} {actual}` (keep the line: entries are \
+                         tombstoned at 0, never deleted)",
+                        e.budget, e.line
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sectioned_allowlist_parses() {
+        let a = parse(
+            "# header\n[panics]\nrust/src/mpwide/a.rs 3\nrust/src/mpwide/b.rs 0\n\n[swallow]\nrust/src/mpwide/a.rs 1\n[blocking]\n",
+        )
+        .unwrap();
+        assert_eq!(a.budget("panics", "rust/src/mpwide/a.rs"), 3);
+        assert_eq!(a.budget("panics", "rust/src/mpwide/b.rs"), 0);
+        assert_eq!(a.budget("swallow", "rust/src/mpwide/a.rs"), 1);
+        assert_eq!(a.budget("blocking", "rust/src/mpwide/a.rs"), 0);
+        // line numbers recorded for stale reporting
+        assert_eq!(a.sections["panics"]["rust/src/mpwide/a.rs"].line, 3);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("rust/src/x.rs 3\n").is_err(), "entry before section");
+        assert!(parse("[nonsense]\n").is_err(), "unknown section");
+        assert!(parse("[panics]\npath notanumber\n").is_err());
+        assert!(parse("[panics]\ntoo many words 3\n").is_err());
+        assert!(parse("[panics]\na.rs 1\na.rs 2\n").is_err(), "duplicate entry");
+        assert!(parse("[panics]\n[panics]\n").is_err(), "duplicate section");
+    }
+
+    #[test]
+    fn check_reports_both_directions() {
+        let a = parse("[panics]\na.rs 2\nb.rs 1\n").unwrap();
+        let mut seen = BTreeMap::new();
+        seen.insert("a.rs".to_string(), (3, 10)); // over budget
+        // b.rs burned down to 0 -> stale entry at allowlist line 3
+        let mut v = Vec::new();
+        check_section(&a, "panics", &seen, "panic", &mut v);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].file, "a.rs");
+        assert_eq!(v[0].line, 10);
+        assert_eq!(v[1].file, ALLOWLIST);
+        assert_eq!(v[1].line, 3);
+        assert!(v[1].msg.contains("`b.rs 0`"), "{}", v[1].msg);
+    }
+}

@@ -1,0 +1,108 @@
+//! Pass: blocking-call-under-lock — token lists and the per-line probe.
+//!
+//! The lock-graph analyzer (`lockgraph`) tracks which guards are live on
+//! each line; this module decides whether the line *blocks*: socket
+//! reads/writes, `Pacer::acquire`, `thread::sleep`, joins, accepts and
+//! the library's own composite blocking helpers. Sleeping or doing I/O
+//! while holding a *coordination* lock is how week-long WAN runs wedge,
+//! so every hit must be either restructured (drop the guard first) or
+//! budgeted in the `[blocking]` allowlist section.
+//!
+//! Ranks whose documented purpose IS serializing blocking I/O are
+//! exempt: the send/recv gates exist to make whole-message I/O atomic,
+//! and the per-stream halves / in-memory channels are the I/O itself.
+
+pub const BLOCKING_TOKENS: [&str; 17] = [
+    ".join()",
+    "thread::sleep",
+    "::sleep(",
+    ".acquire(",
+    ".read_exact(",
+    ".read_some(",
+    ".write_all(",
+    ".write_vectored_all(",
+    ".connect(",
+    "TcpStream::connect",
+    ".accept()",
+    ".recv_msg(",
+    ".flush()",
+    ".wait()",
+    "wait_for_any_live(",
+    "measure_rtt(",
+    "connect_retry(",
+];
+
+/// Substrings removed before the token scan — non-blocking lookalikes.
+pub const NONBLOCKING_EXCEPTIONS: [&str; 1] = [".try_acquire("];
+
+/// Rank names whose guards may legally be held across blocking calls.
+pub const EXEMPT_RANKNAMES: [&str; 6] =
+    ["SEND_GATE", "RECV_GATE", "STREAM_TX", "STREAM_RX", "STREAM_META", "MEM_CHAN"];
+
+pub fn is_exempt(rankname: &str) -> bool {
+    EXEMPT_RANKNAMES.contains(&rankname)
+}
+
+/// First blocking token on a (stripped) line, if any.
+pub fn blocking_token(stripped: &str) -> Option<&'static str> {
+    let mut s = stripped.to_string();
+    for exc in NONBLOCKING_EXCEPTIONS {
+        s = s.replace(exc, "");
+    }
+    BLOCKING_TOKENS.into_iter().find(|tok| s.contains(tok))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lockgraph::{analyze_file, build_rank_map, parse_rank_consts, Analysis};
+
+    #[test]
+    fn tokens_and_exceptions() {
+        assert_eq!(blocking_token("std::thread::sleep(d);"), Some("thread::sleep"));
+        assert_eq!(blocking_token("let _ = h.join();"), Some(".join()"));
+        assert_eq!(blocking_token("pacer.acquire(n);"), Some(".acquire("));
+        assert_eq!(blocking_token("pacer.try_acquire(n);"), None);
+        assert_eq!(blocking_token("w.write_all(&buf)?;"), Some(".write_all("));
+        assert_eq!(blocking_token("st.chans.len()"), None);
+        assert!(is_exempt("SEND_GATE"));
+        assert!(!is_exempt("MUX_STATE"));
+    }
+
+    const BAD_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/blocking_bad.rs.fixture"
+    ));
+    const OK_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/blocking_ok.rs.fixture"
+    ));
+
+    fn run(src: &str) -> (Vec<crate::scan::Violation>, Analysis) {
+        let ranks = parse_rank_consts(src);
+        assert!(!ranks.is_empty(), "fixture must define rank consts");
+        let sources = vec![("fixture.rs".to_string(), src.to_string())];
+        let mut v = Vec::new();
+        let rmap = build_rank_map(&sources, &ranks, &mut v);
+        let mut analysis = Analysis::default();
+        analyze_file("fixture.rs", src, &rmap, &mut analysis, &mut v);
+        (v, analysis)
+    }
+
+    #[test]
+    fn sleep_under_coordination_lock_is_flagged() {
+        let (v, analysis) = run(BAD_FIXTURE);
+        assert!(v.is_empty(), "lock-order itself is clean: {v:?}");
+        assert_eq!(analysis.blocking.len(), 1, "{:?}", analysis.blocking);
+        let (_, line, msg) = &analysis.blocking[0];
+        assert_eq!(*line, 10);
+        assert!(msg.contains("thread::sleep") && msg.contains("COORD"), "{msg}");
+    }
+
+    #[test]
+    fn dropped_guards_and_exempt_ranks_pass() {
+        let (v, analysis) = run(OK_FIXTURE);
+        assert!(v.is_empty(), "{v:?}");
+        assert!(analysis.blocking.is_empty(), "{:?}", analysis.blocking);
+    }
+}

@@ -1,0 +1,204 @@
+//! Pass: protocol-constant drift — `docs/PROTOCOL.md` carries
+//! machine-checkable markers of the form
+//! `<!-- mpwlint-const: <src-file> <NAME> = <value> -->`; each is
+//! compared against the constant's definition in the source tree
+//! (numeric where both sides evaluate, textual otherwise), so the
+//! documented wire format cannot drift from the code.
+
+use std::fs;
+use std::path::Path;
+
+use crate::scan::{violation, Violation};
+
+pub struct Marker {
+    pub doc_line: usize,
+    pub file: String,
+    pub name: String,
+    pub expr: String,
+}
+
+/// Extract `<!-- mpwlint-const: <file> <NAME> = <expr> -->` markers.
+pub fn parse_markers(doc: &str) -> (Vec<Marker>, Vec<(usize, String)>) {
+    let mut markers = Vec::new();
+    let mut errors = Vec::new();
+    for (i, line) in doc.lines().enumerate() {
+        let Some(start) = line.find("<!-- mpwlint-const:") else { continue };
+        let rest = &line[start + "<!-- mpwlint-const:".len()..];
+        let Some(end) = rest.find("-->") else {
+            errors.push((i + 1, "unterminated mpwlint-const marker".into()));
+            continue;
+        };
+        let body = rest[..end].trim();
+        // `<file> <NAME> = <expr>` — expr may contain spaces.
+        let Some((head, expr)) = body.split_once('=') else {
+            errors.push((i + 1, format!("marker missing `=`: {body:?}")));
+            continue;
+        };
+        let mut it = head.split_whitespace();
+        let (Some(file), Some(name), None) = (it.next(), it.next(), it.next()) else {
+            errors.push((i + 1, format!("marker head must be `<file> <NAME>`: {head:?}")));
+            continue;
+        };
+        markers.push(Marker {
+            doc_line: i + 1,
+            file: file.to_string(),
+            name: name.to_string(),
+            expr: expr.trim().to_string(),
+        });
+    }
+    (markers, errors)
+}
+
+/// Find `const NAME: ... = <expr>;` in a source file and return the
+/// right-hand side text.
+pub fn const_rhs(src: &str, name: &str) -> Option<String> {
+    let needle = format!("const {name}:");
+    for line in src.lines() {
+        let Some(pos) = line.find(&needle) else { continue };
+        let after = &line[pos + needle.len()..];
+        let rhs = after.split_once('=')?.1;
+        let rhs = rhs.split(';').next()?.trim();
+        return Some(rhs.to_string());
+    }
+    None
+}
+
+/// Evaluate a small integer expression: decimal / `0x` hex literals
+/// (optionally with `_` separators and a type suffix), combined with
+/// `+`, `*` and `<<`. Returns `None` for anything else — the caller
+/// falls back to normalized textual comparison.
+pub fn eval_expr(s: &str) -> Option<u128> {
+    let s = s.trim();
+    if let Some(pos) = s.find("<<") {
+        return eval_sum(&s[..pos])?.checked_shl(eval_expr(&s[pos + 2..])? as u32);
+    }
+    eval_sum(s)
+}
+
+fn eval_sum(s: &str) -> Option<u128> {
+    let mut total: u128 = 0;
+    for part in s.split('+') {
+        total = total.checked_add(eval_prod(part)?)?;
+    }
+    Some(total)
+}
+
+fn eval_prod(s: &str) -> Option<u128> {
+    let mut total: u128 = 1;
+    for part in s.split('*') {
+        total = total.checked_mul(eval_atom(part)?)?;
+    }
+    Some(total)
+}
+
+fn eval_atom(s: &str) -> Option<u128> {
+    let t = s.trim().replace('_', "");
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        let hex = hex.trim_end_matches(|c: char| !c.is_ascii_hexdigit());
+        return u128::from_str_radix(hex, 16).ok();
+    }
+    let dec = t.trim_end_matches(|c: char| c.is_ascii_alphabetic());
+    dec.parse::<u128>().ok()
+}
+
+pub fn normalized(s: &str) -> String {
+    s.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+const PROTOCOL_DOC: &str = "docs/PROTOCOL.md";
+
+pub fn check(root: &Path, v: &mut Vec<Violation>) {
+    let Ok(doc) = fs::read_to_string(root.join(PROTOCOL_DOC)) else {
+        v.push(violation(PROTOCOL_DOC, 0, "missing protocol doc".into()));
+        return;
+    };
+    let (markers, errors) = parse_markers(&doc);
+    for (line, msg) in errors {
+        v.push(violation(PROTOCOL_DOC, line, msg));
+    }
+    if markers.is_empty() {
+        v.push(violation(
+            PROTOCOL_DOC,
+            0,
+            "no mpwlint-const markers found — the drift check would silently pass".into(),
+        ));
+        return;
+    }
+    for m in &markers {
+        let Ok(src) = fs::read_to_string(root.join(&m.file)) else {
+            v.push(violation(PROTOCOL_DOC, m.doc_line, format!("marker points at unreadable file {}", m.file)));
+            continue;
+        };
+        let Some(rhs) = const_rhs(&src, &m.name) else {
+            v.push(violation(
+                PROTOCOL_DOC,
+                m.doc_line,
+                format!("constant `{}` not found in {}", m.name, m.file),
+            ));
+            continue;
+        };
+        let matches = match (eval_expr(&m.expr), eval_expr(&rhs)) {
+            (Some(a), Some(b)) => a == b,
+            _ => normalized(&m.expr) == normalized(&rhs),
+        };
+        if !matches {
+            v.push(violation(
+                PROTOCOL_DOC,
+                m.doc_line,
+                format!("`{}` documented as `{}` but {} defines `{}`", m.name, m.expr, m.file, rhs),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/doc.md.fixture"
+    ));
+    const CONSTS_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/consts.rs.fixture"
+    ));
+
+    #[test]
+    fn expr_evaluator() {
+        assert_eq!(eval_expr("18"), Some(18));
+        assert_eq!(eval_expr("1 + 1 + 8 + 4 + 4"), Some(18));
+        assert_eq!(eval_expr("64 << 20"), Some(64 << 20));
+        assert_eq!(eval_expr("0xF5"), Some(0xF5));
+        assert_eq!(eval_expr("2 * 3 + 4"), Some(10));
+        assert_eq!(eval_expr("64usize"), Some(64));
+        assert_eq!(eval_expr("*b\"MPW1\""), None);
+    }
+
+    #[test]
+    fn markers_parse_and_compare() {
+        let (markers, errors) = parse_markers(DOC_FIXTURE);
+        assert!(errors.is_empty(), "{errors:?}");
+        assert_eq!(markers.len(), 4);
+        // The fixture doc and fixture source agree on the first three
+        // markers and deliberately disagree on the fourth.
+        let verdicts: Vec<bool> = markers
+            .iter()
+            .map(|m| {
+                let rhs = const_rhs(CONSTS_FIXTURE, &m.name).expect("const present");
+                match (eval_expr(&m.expr), eval_expr(&rhs)) {
+                    (Some(a), Some(b)) => a == b,
+                    _ => normalized(&m.expr) == normalized(&rhs),
+                }
+            })
+            .collect();
+        assert_eq!(verdicts, vec![true, true, true, false]);
+    }
+
+    #[test]
+    fn const_rhs_extraction() {
+        assert_eq!(const_rhs(CONSTS_FIXTURE, "MAGIC").as_deref(), Some("0xF5"));
+        assert_eq!(const_rhs(CONSTS_FIXTURE, "HDR_LEN").as_deref(), Some("1 + 1 + 8 + 4 + 4"));
+        assert_eq!(const_rhs(CONSTS_FIXTURE, "NOPE"), None);
+    }
+}

@@ -1,0 +1,909 @@
+//! Pass: static lock-acquisition graph.
+//!
+//! Three stages, all line-oriented over comment/literal-stripped source
+//! (`scan::strip_line`):
+//!
+//! 1. **Rank map** — every `OrderedMutex::new(rank::X, ..)` construction
+//!    is bound to the field/binding name on its left; the tree-wide
+//!    invariant is that each *name* maps to exactly one rank
+//!    (unique-name discipline — ambiguity is itself a lint failure, so
+//!    `.lock()` receivers can be resolved by their final path segment).
+//!    Constructions with no visible binding (e.g. inside `get_or_init`)
+//!    are covered by a `// mpwlint-lock: <name> = <RANK>` annotation in
+//!    the same file.
+//! 2. **Guard tracking** — per file, a lexical walk tracks which guards
+//!    are live (`let`-bound guards scoped by brace depth, temporaries
+//!    for `match`/`if let` scrutinees, condvar waits consuming and
+//!    rebinding their guard, `drop(g)` releasing early, and
+//!    spawn-closure barriers resetting the held set inside a new
+//!    thread's body). Each `.lock()` under a held guard records an
+//!    acquisition edge `held-rank -> new-rank`; an edge to a *lower*
+//!    rank is a rank inversion and fails immediately. Blocking probes
+//!    (see `blocking`) run against the same held set.
+//! 3. **Graph checks** — the name-level edge graph must be acyclic
+//!    (catches equal-rank ABBA orders the runtime checker permits) and
+//!    self-edge-free; the rank constants are cross-checked against the
+//!    `mpwlint-rank` markers in `docs/CONCURRENCY.md` so code and docs
+//!    cannot drift. `--emit-lockgraph` serializes the edge set as DOT.
+//!
+//! Limits (documented in CONCURRENCY.md §1): the walk is lexical, not
+//! interprocedural — a helper that blocks while its *caller* holds a
+//! guard is invisible here and remains the runtime checker's and
+//! TSan's job. The pass proves ordering for every path it can see,
+//! including ones no test executes.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::Path;
+
+use crate::allow::{self, Allowlist};
+use crate::blocking;
+use crate::scan::{
+    is_ident, is_lint_exempt, leading_ident, rel_to, rust_files, strip_line, tag_lines,
+    trailing_ident, violation, Violation,
+};
+
+pub const LOCKORDER: &str = "rust/src/util/lockorder.rs";
+pub const CONCURRENCY_DOC: &str = "docs/CONCURRENCY.md";
+
+// ---------------------------------------------------------------------------
+// rank constants and doc markers
+
+/// Parse `pub const NAME: u16 = N;` lines (the `lockorder::rank` table).
+pub fn parse_rank_consts(src: &str) -> BTreeMap<String, u16> {
+    let mut out = BTreeMap::new();
+    for line in src.lines() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("pub const ") else { continue };
+        let Some((name, rest)) = rest.split_once(':') else { continue };
+        let Some((ty, rhs)) = rest.split_once('=') else { continue };
+        if ty.trim() != "u16" {
+            continue;
+        }
+        let Some(valtxt) = rhs.split(';').next() else { continue };
+        if let Ok(val) = valtxt.trim().parse::<u16>() {
+            out.insert(name.trim().to_string(), val);
+        }
+    }
+    out
+}
+
+/// Cross-check `<!-- mpwlint-rank: NAME = N -->` markers in
+/// `docs/CONCURRENCY.md` against the rank constants, both directions:
+/// every marker must match a constant, every constant must be marked.
+pub fn check_rank_markers(doc: &str, ranks: &BTreeMap<String, u16>, v: &mut Vec<Violation>) {
+    const TAG: &str = "<!-- mpwlint-rank:";
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for (i, line) in doc.lines().enumerate() {
+        let Some(start) = line.find(TAG) else { continue };
+        let rest = &line[start + TAG.len()..];
+        let Some(end) = rest.find("-->") else {
+            v.push(violation(CONCURRENCY_DOC, i + 1, "unterminated mpwlint-rank marker".into()));
+            continue;
+        };
+        let body = rest[..end].trim();
+        let Some((name, val)) = body.split_once('=') else {
+            v.push(violation(CONCURRENCY_DOC, i + 1, format!("marker missing `=`: {body:?}")));
+            continue;
+        };
+        let (name, val) = (name.trim(), val.trim());
+        let Ok(val) = val.parse::<u16>() else {
+            v.push(violation(CONCURRENCY_DOC, i + 1, format!("bad rank value in marker: {body:?}")));
+            continue;
+        };
+        match ranks.get(name) {
+            None => v.push(violation(
+                CONCURRENCY_DOC,
+                i + 1,
+                format!("marker documents unknown rank `{name}` — not in {LOCKORDER}"),
+            )),
+            Some(actual) if *actual != val => v.push(violation(
+                CONCURRENCY_DOC,
+                i + 1,
+                format!("rank `{name}` documented as {val} but {LOCKORDER} defines {actual}"),
+            )),
+            _ => {}
+        }
+        if !seen.insert(name.to_string()) {
+            v.push(violation(CONCURRENCY_DOC, i + 1, format!("duplicate mpwlint-rank marker for `{name}`")));
+        }
+    }
+    for (name, val) in ranks {
+        if !seen.contains(name) {
+            v.push(violation(
+                CONCURRENCY_DOC,
+                0,
+                format!(
+                    "rank `{name}` ({val}) has no mpwlint-rank marker — add \
+                     `<!-- mpwlint-rank: {name} = {val} -->` to the rank table"
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rank map: lock name -> rank
+
+pub struct RankMap {
+    /// name -> (rank name, rank value)
+    pub resolve: BTreeMap<String, (String, u16)>,
+}
+
+/// Binding name to the left of an `OrderedMutex::new(` construction:
+/// a struct-literal field (`name: `), or a `let`/`static` binding
+/// (`let [mut] name [: Ty] = `).
+fn construction_binding(head: &str) -> Option<String> {
+    let t = head.trim_end();
+    if let Some(t2) = t.strip_suffix(':') {
+        return trailing_ident(t2).map(str::to_string);
+    }
+    let t2 = t.strip_suffix('=')?;
+    let toks: Vec<&str> = t2.split_whitespace().collect();
+    let kw = toks.iter().position(|&w| w == "let" || w == "static")?;
+    let mut j = kw + 1;
+    if toks.get(j) == Some(&"mut") {
+        j += 1;
+    }
+    let name = toks.get(j)?.split(':').next()?;
+    if is_ident(name) {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// Find `rank::NAME` on the (stripped) line starting at `from`, or on
+/// one of the next few stripped lines (multi-line constructions).
+fn rank_arg(stripped: &[(usize, bool, String)], idx: usize, from: usize) -> Option<String> {
+    let mut look: &str = &stripped[idx].2[from..];
+    for step in 0..5 {
+        if let Some(p) = look.find("rank::") {
+            return leading_ident(&look[p + "rank::".len()..]).map(str::to_string);
+        }
+        look = &stripped.get(idx + 1 + step)?.2;
+    }
+    None
+}
+
+/// Build the tree-wide lock-name → rank map from every
+/// `OrderedMutex::new` construction plus `mpwlint-lock` annotations.
+/// Ambiguous names (two ranks), unknown ranks and unannotated anonymous
+/// constructions are violations.
+pub fn build_rank_map(
+    sources: &[(String, String)],
+    ranks: &BTreeMap<String, u16>,
+    v: &mut Vec<Violation>,
+) -> RankMap {
+    // name -> rankname -> sites
+    let mut cand: BTreeMap<String, BTreeMap<String, Vec<(String, usize)>>> = BTreeMap::new();
+    for (rel, src) in sources {
+        let tagged = tag_lines(src);
+        let mut stripped: Vec<(usize, bool, String)> = Vec::with_capacity(tagged.len());
+        let mut bc = false;
+        for (n, t, raw) in &tagged {
+            stripped.push((*n, *t, strip_line(raw, &mut bc)));
+        }
+        // annotations: `// mpwlint-lock: <name> = <RANK>` (raw lines —
+        // they live in comments)
+        let mut file_annotated_ranks: BTreeSet<String> = BTreeSet::new();
+        for (n, _, raw) in &tagged {
+            let Some(p) = raw.find("mpwlint-lock:") else { continue };
+            let rest = &raw[p + "mpwlint-lock:".len()..];
+            let Some((name, rankpart)) = rest.split_once('=') else {
+                v.push(violation(rel, *n, "malformed mpwlint-lock annotation (expected `name = RANK`)".into()));
+                continue;
+            };
+            let name = name.trim();
+            let Some(rank) = leading_ident(rankpart) else {
+                v.push(violation(rel, *n, "malformed mpwlint-lock annotation (expected `name = RANK`)".into()));
+                continue;
+            };
+            if !is_ident(name) {
+                v.push(violation(rel, *n, format!("mpwlint-lock annotation name `{name}` is not an identifier")));
+                continue;
+            }
+            cand.entry(name.to_string())
+                .or_default()
+                .entry(rank.to_string())
+                .or_default()
+                .push((rel.clone(), *n));
+            file_annotated_ranks.insert(rank.to_string());
+        }
+        for idx in 0..stripped.len() {
+            let (n, in_test, _) = (stripped[idx].0, stripped[idx].1, ());
+            if in_test {
+                continue;
+            }
+            let mut from = 0;
+            loop {
+                let s = &stripped[idx].2;
+                let Some(p) = s[from..].find("OrderedMutex::new(") else { break };
+                let abs = from + p;
+                let end = abs + "OrderedMutex::new(".len();
+                let rank = rank_arg(&stripped, idx, end);
+                let binding = construction_binding(&stripped[idx].2[..abs]);
+                match (rank, binding) {
+                    (None, _) => v.push(violation(
+                        rel,
+                        n,
+                        "OrderedMutex construction without a visible `rank::` argument".into(),
+                    )),
+                    (Some(rank), Some(name)) => {
+                        cand.entry(name).or_default().entry(rank).or_default().push((rel.clone(), n));
+                    }
+                    (Some(rank), None) => {
+                        // anonymous (e.g. inside get_or_init) — fine if a
+                        // same-file annotation covers this rank
+                        if !file_annotated_ranks.contains(&rank) {
+                            v.push(violation(
+                                rel,
+                                n,
+                                format!(
+                                    "anonymous OrderedMutex::new(rank::{rank}) — bind it to a \
+                                     name or add `// mpwlint-lock: <name> = {rank}`"
+                                ),
+                            ));
+                        }
+                    }
+                }
+                from = end;
+            }
+        }
+    }
+    let mut resolve = BTreeMap::new();
+    for (name, by_rank) in cand {
+        if by_rank.len() > 1 {
+            let detail: Vec<String> = by_rank
+                .iter()
+                .map(|(rk, sites)| format!("{rk} at {}:{}", sites[0].0, sites[0].1))
+                .collect();
+            let first = by_rank.values().next().and_then(|s| s.first()).cloned();
+            let (f, l) = first.unwrap_or_default();
+            v.push(violation(
+                &f,
+                l,
+                format!(
+                    "ambiguous lock name `{name}` maps to multiple ranks ({}) — rename the \
+                     fields so every lock name is tree-wide unique",
+                    detail.join(", ")
+                ),
+            ));
+            continue;
+        }
+        let (rankname, sites) = by_rank.into_iter().next().expect("non-empty");
+        match ranks.get(&rankname) {
+            Some(val) => {
+                resolve.insert(name, (rankname, *val));
+            }
+            None => {
+                let (f, l) = sites[0].clone();
+                v.push(violation(&f, l, format!("unknown rank `{rankname}` for lock `{name}`")));
+            }
+        }
+    }
+    RankMap { resolve }
+}
+
+// ---------------------------------------------------------------------------
+// guard tracking
+
+#[derive(Clone)]
+struct Guard {
+    name: String,
+    rankname: String,
+    rankval: u16,
+    /// Brace depth at which the binding lives; popped when the scope
+    /// closes below it.
+    depth: i64,
+    /// `barriers.len()` at bind time — a guard bound outside a spawn
+    /// closure is not "held" by the code inside it.
+    barrier_idx: usize,
+}
+
+#[derive(Default)]
+pub struct Analysis {
+    /// (held rank name, acquired rank name) -> acquisition sites.
+    pub edges: BTreeMap<(String, String), Vec<(String, usize)>>,
+    /// Blocking calls under a non-exempt guard: (file, line, message).
+    pub blocking: Vec<(String, usize, String)>,
+}
+
+/// `self.inner.st` -> `st`; `ctx()` -> `ctx`.
+fn last_segment(expr: &str) -> &str {
+    let seg = expr.rsplit('.').next().unwrap_or(expr);
+    seg.strip_suffix("()").unwrap_or(seg)
+}
+
+/// The receiver expression ending at byte `end` (exclusive): the
+/// longest suffix of identifier/`.`/`()` characters.
+fn receiver_before(s: &str, end: usize) -> &str {
+    let b = s.as_bytes();
+    let mut i = end;
+    while i > 0 {
+        let c = b[i - 1];
+        if c.is_ascii_alphanumeric() || c == b'_' || c == b'.' || c == b'(' || c == b')' {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    &s[i..end]
+}
+
+/// Guard binding to the left of a `.lock()` receiver: `let [mut] g =`
+/// binds a new guard, a bare `g =` re-locks into an existing one.
+enum Bind {
+    Let(String),
+    Reassign(String),
+}
+
+fn bind_before(before: &str) -> Option<Bind> {
+    let t = before.trim_end();
+    let t = t.strip_suffix('=')?;
+    if t.ends_with(|c: char| "=<>!+-*/&|^".contains(c)) {
+        return None; // `==`, `+=`, `<=`, ... are not bindings
+    }
+    let toks: Vec<&str> = t.split_whitespace().collect();
+    match toks.as_slice() {
+        ["let", name] | ["let", "mut", name] => {
+            let name = name.split(':').next()?;
+            is_ident(name).then(|| Bind::Let(name.to_string()))
+        }
+        [name] => is_ident(name).then(|| Bind::Reassign(name.to_string())),
+        _ => None,
+    }
+}
+
+/// First condvar-wait argument on the line: the guard identifier in
+/// `.wait(g)` / `.wait_timeout(g, ..)` / `.wait_while(g, ..)`. Waits
+/// with no guard argument (`handle.wait()`) are not condvar waits.
+fn wait_arg(s: &str) -> Option<String> {
+    for pat in [".wait_timeout(", ".wait_while(", ".wait("] {
+        if let Some(p) = s.find(pat) {
+            if let Some(id) = leading_ident(&s[p + pat.len()..]) {
+                return Some(id.to_string());
+            }
+        }
+    }
+    None
+}
+
+/// Walk one file, recording acquisition edges, rank inversions,
+/// unresolvable lock names and blocking-under-lock hits.
+pub fn analyze_file(
+    rel: &str,
+    src: &str,
+    rmap: &RankMap,
+    out: &mut Analysis,
+    v: &mut Vec<Violation>,
+) {
+    let tagged = tag_lines(src);
+    let mut bc = false;
+    let mut depth: i64 = 0;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut barriers: Vec<i64> = Vec::new();
+    for (n, in_test, raw) in tagged {
+        let s = strip_line(raw, &mut bc);
+        if in_test {
+            // still track braces so depth stays consistent
+            depth += brace_delta(&s);
+            continue;
+        }
+        let depth_at_start = depth;
+        let mut line_temps: Vec<Guard> = Vec::new();
+
+        // `drop(g)` releases a guard early
+        let mut from = 0;
+        while let Some(p) = s[from..].find("drop(") {
+            let abs = from + p;
+            let inner = &s[abs + "drop(".len()..];
+            if let Some(id) = leading_ident(inner) {
+                if inner[id.len()..].starts_with(')') {
+                    if let Some(i) = guards.iter().rposition(|g| g.name == id) {
+                        guards.remove(i);
+                    }
+                }
+            }
+            from = abs + "drop(".len();
+        }
+
+        // guard rename / move: a plain `a = b;` or `let a = b;` where
+        // `b` is a live guard
+        if let Some((lhs, rhs)) = plain_move(&s) {
+            if let Some(g) = guards.iter_mut().find(|g| g.name == rhs) {
+                g.name = lhs;
+            }
+        }
+
+        // condvar waits: the guard is consumed and (usually) rebound
+        if let Some(warg) = wait_arg(&s) {
+            let held_now: Vec<&Guard> = guards
+                .iter()
+                .filter(|g| g.barrier_idx == barriers.len() && g.name != warg)
+                .filter(|g| !blocking::is_exempt(&g.rankname))
+                .collect();
+            if let Some(top) = held_now.last() {
+                out.blocking.push((
+                    rel.to_string(),
+                    n,
+                    format!("condvar wait while holding {}", top.rankname),
+                ));
+            }
+            let t = s.trim_start();
+            if t.starts_with("let _ =") || t.starts_with("let _=") || t.starts_with("drop(") {
+                // `let _ = cv.wait_timeout(g, ..)` / `drop(cv.wait*(g))`
+                // discard the returned guard — it is gone
+                if let Some(i) = guards.iter().rposition(|g| g.name == warg) {
+                    guards.remove(i);
+                }
+            } else if let Some(newname) = tuple_rebind(t) {
+                // `let (g2, _) = cv.wait_timeout(g, ..)`
+                if let Some(g) = guards.iter_mut().find(|g| g.name == warg) {
+                    g.name = newname;
+                }
+            }
+            // plain `g = cv.wait(g);` rebinds to the same name: no-op
+        }
+
+        // lock sites, left to right
+        let mut from = 0;
+        while let Some(p) = s[from..].find(".lock()") {
+            let abs = from + p;
+            from = abs + ".lock()".len();
+            let recv = receiver_before(&s, abs);
+            let seg = last_segment(recv);
+            let Some((rankname, rankval)) = rmap.resolve.get(seg) else {
+                v.push(violation(
+                    rel,
+                    n,
+                    format!(
+                        "cannot resolve the rank of `{recv}.lock()` (name `{seg}` has no \
+                         OrderedMutex construction or mpwlint-lock annotation)"
+                    ),
+                ));
+                continue;
+            };
+            let held: Vec<&Guard> = guards
+                .iter()
+                .filter(|g| g.barrier_idx == barriers.len())
+                .chain(line_temps.iter())
+                .collect();
+            if let Some(top) = held.iter().max_by_key(|g| g.rankval) {
+                out.edges
+                    .entry((top.rankname.clone(), rankname.clone()))
+                    .or_default()
+                    .push((rel.to_string(), n));
+                if *rankval < top.rankval {
+                    v.push(violation(
+                        rel,
+                        n,
+                        format!(
+                            "rank inversion: acquiring {rankname}({rankval}) while holding \
+                             {}({})",
+                            top.rankname, top.rankval
+                        ),
+                    ));
+                }
+            }
+            let after = &s[abs + ".lock()".len()..];
+            let before = &s[..abs - recv.len()];
+            match bind_before(before) {
+                Some(Bind::Let(name)) if after.starts_with(';') => {
+                    if name != "_" {
+                        guards.retain(|g| g.name != name);
+                        guards.push(Guard {
+                            name,
+                            rankname: rankname.clone(),
+                            rankval: *rankval,
+                            depth: depth_at_start,
+                            barrier_idx: barriers.len(),
+                        });
+                    }
+                }
+                Some(Bind::Reassign(name)) if after.starts_with(';') => {
+                    if let Some(g) = guards.iter_mut().find(|g| g.name == name) {
+                        g.rankname = rankname.clone();
+                        g.rankval = *rankval;
+                    } else {
+                        guards.push(Guard {
+                            name,
+                            rankname: rankname.clone(),
+                            rankval: *rankval,
+                            depth: depth_at_start,
+                            barrier_idx: barriers.len(),
+                        });
+                    }
+                }
+                _ if s.trim_end().ends_with('{') => {
+                    // `match x.lock() {` / `if let .. = x.lock() {`: the
+                    // scrutinee temporary lives for the whole block
+                    guards.push(Guard {
+                        name: format!("<temp {seg}>"),
+                        rankname: rankname.clone(),
+                        rankval: *rankval,
+                        depth: depth_at_start + 1,
+                        barrier_idx: barriers.len(),
+                    });
+                }
+                _ => {
+                    // expression temporary: held to the end of this line
+                    line_temps.push(Guard {
+                        name: format!("<line {seg}>"),
+                        rankname: rankname.clone(),
+                        rankval: *rankval,
+                        depth: depth_at_start + 1,
+                        barrier_idx: barriers.len(),
+                    });
+                }
+            }
+        }
+
+        // blocking probes against everything held on this line
+        let held: Vec<&Guard> = guards
+            .iter()
+            .filter(|g| g.barrier_idx == barriers.len())
+            .chain(line_temps.iter())
+            .filter(|g| !blocking::is_exempt(&g.rankname))
+            .collect();
+        if let Some(top) = held.last() {
+            if let Some(tok) = blocking::blocking_token(&s) {
+                out.blocking.push((
+                    rel.to_string(),
+                    n,
+                    format!("`{}` while holding {}", tok.trim_matches(|c| c == '.' || c == '('), top.rankname),
+                ));
+            }
+        }
+
+        // spawn-closure barrier: code inside a freshly spawned thread's
+        // closure starts with an empty held set
+        let spawned =
+            s.contains("spawn(") || s.contains("submit(") || s.contains("Builder::new()");
+        let opens_closure =
+            s.contains("move |") || (s.contains('|') && s.trim_end().ends_with('{'));
+        if spawned && opens_closure {
+            barriers.push(depth_at_start + 1);
+        }
+        depth += brace_delta(&s);
+        guards.retain(|g| g.depth <= depth);
+        barriers.retain(|b| *b <= depth);
+        let nb = barriers.len();
+        for g in &mut guards {
+            g.barrier_idx = g.barrier_idx.min(nb);
+        }
+    }
+}
+
+fn brace_delta(s: &str) -> i64 {
+    let mut d = 0;
+    for c in s.chars() {
+        match c {
+            '{' => d += 1,
+            '}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// `a = b;` / `let [mut] a = b;` with both sides plain identifiers.
+fn plain_move(s: &str) -> Option<(String, String)> {
+    let t = s.trim();
+    let t = t.strip_suffix(';')?;
+    let (lhs, rhs) = t.split_once('=')?;
+    let rhs = rhs.trim();
+    let mut lhs = lhs.trim();
+    if let Some(r) = lhs.strip_prefix("let ") {
+        lhs = r.trim_start().strip_prefix("mut ").unwrap_or(r).trim();
+    }
+    (is_ident(lhs) && is_ident(rhs)).then(|| (lhs.to_string(), rhs.to_string()))
+}
+
+/// `let (g2, _) = ...` — the first tuple element rebinds the guard.
+fn tuple_rebind(trimmed: &str) -> Option<String> {
+    let rest = trimmed.strip_prefix("let (").or_else(|| trimmed.strip_prefix("let("))?;
+    leading_ident(rest).map(str::to_string)
+}
+
+// ---------------------------------------------------------------------------
+// graph checks and DOT output
+
+/// The name-level acquisition graph must have no self-edges (a lock
+/// name acquired while an instance of the same name is held — the
+/// cross-instance order is unprovable statically) and no cycles
+/// (equal-rank ABBA orders that the pointwise rank check permits).
+pub fn check_cycles(analysis: &Analysis, v: &mut Vec<Violation>) {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for ((a, b), sites) in &analysis.edges {
+        if a == b {
+            let (f, l) = &sites[0];
+            v.push(violation(
+                f,
+                *l,
+                format!(
+                    "self-edge: `{a}` acquired while an instance of `{a}` is already held — \
+                     cross-instance ordering cannot be proven statically"
+                ),
+            ));
+            continue;
+        }
+        adj.entry(a.as_str()).or_default().insert(b.as_str());
+    }
+    // DFS, white/gray/black
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+    fn dfs<'a>(
+        node: &'a str,
+        adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(node, 1);
+        stack.push(node);
+        if let Some(next) = adj.get(node) {
+            for &m in next {
+                match color.get(m).copied().unwrap_or(0) {
+                    0 => {
+                        if let Some(cycle) = dfs(m, adj, color, stack) {
+                            return Some(cycle);
+                        }
+                    }
+                    1 => {
+                        let start = stack.iter().position(|&x| x == m).unwrap_or(0);
+                        let mut cycle: Vec<String> =
+                            stack[start..].iter().map(|s| s.to_string()).collect();
+                        cycle.push(m.to_string());
+                        return Some(cycle);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        stack.pop();
+        color.insert(node, 2);
+        None
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for node in nodes {
+        if color.get(node).copied().unwrap_or(0) == 0 {
+            let mut stack = Vec::new();
+            if let Some(cycle) = dfs(node, &adj, &mut color, &mut stack) {
+                let first_edge = (cycle[0].clone(), cycle[1].clone());
+                let (f, l) = analysis
+                    .edges
+                    .get(&first_edge)
+                    .and_then(|s| s.first())
+                    .cloned()
+                    .unwrap_or_default();
+                v.push(violation(
+                    &f,
+                    l,
+                    format!(
+                        "lock-acquisition cycle: {} — some thread orders these locks the \
+                         other way around (deadlock)",
+                        cycle.join(" -> ")
+                    ),
+                ));
+                return; // one cycle report is enough to fail the build
+            }
+        }
+    }
+}
+
+/// Serialize the acquisition graph as Graphviz DOT (CI artifact; the
+/// CONCURRENCY.md thread-inventory diagram is drawn from this).
+pub fn dot(ranks: &BTreeMap<String, u16>, rmap: &RankMap, analysis: &Analysis) -> String {
+    let mut used: BTreeMap<&str, u16> = BTreeMap::new();
+    for (rankname, val) in rmap.resolve.values() {
+        used.insert(rankname.as_str(), *val);
+    }
+    for ((a, b), _) in &analysis.edges {
+        for r in [a, b] {
+            if let Some(val) = ranks.get(r.as_str()) {
+                used.insert(r.as_str(), *val);
+            }
+        }
+    }
+    let mut nodes: Vec<(&str, u16)> = used.into_iter().collect();
+    nodes.sort_by_key(|(name, val)| (*val, name.to_string()));
+    let mut out = String::new();
+    out.push_str("// Lock-acquisition graph extracted by `mpwlint --emit-lockgraph`.\n");
+    out.push_str("// Nodes are lock ranks (util::lockorder::rank); an edge A -> B means\n");
+    out.push_str("// some code path acquires B while holding A. Render with:\n");
+    out.push_str("//   dot -Tsvg lockgraph.dot -o lockgraph.svg\n");
+    out.push_str("digraph mpwide_locks {\n");
+    out.push_str("  rankdir=LR;\n");
+    out.push_str("  node [shape=box, fontname=\"monospace\"];\n");
+    for (name, val) in &nodes {
+        out.push_str(&format!("  \"{name} ({val})\";\n"));
+    }
+    for ((a, b), sites) in &analysis.edges {
+        let av = ranks.get(a.as_str()).copied().unwrap_or(0);
+        let bv = ranks.get(b.as_str()).copied().unwrap_or(0);
+        out.push_str(&format!(
+            "  \"{a} ({av})\" -> \"{b} ({bv})\" [label=\"{} site(s)\"];\n",
+            sites.len()
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+// ---------------------------------------------------------------------------
+// top-level pass
+
+pub struct Graph {
+    pub ranks: BTreeMap<String, u16>,
+    pub rmap: RankMap,
+    pub analysis: Analysis,
+}
+
+pub fn check(root: &Path, allow: &Allowlist, v: &mut Vec<Violation>) -> Graph {
+    let mut empty = Graph {
+        ranks: BTreeMap::new(),
+        rmap: RankMap { resolve: BTreeMap::new() },
+        analysis: Analysis::default(),
+    };
+    let Ok(lo) = fs::read_to_string(root.join(LOCKORDER)) else {
+        v.push(violation(LOCKORDER, 0, "missing lockorder.rs — cannot build the rank table".into()));
+        return empty;
+    };
+    let ranks = parse_rank_consts(&lo);
+    if ranks.is_empty() {
+        v.push(violation(LOCKORDER, 0, "no `pub const NAME: u16 = ..;` rank constants found".into()));
+        return empty;
+    }
+    match fs::read_to_string(root.join(CONCURRENCY_DOC)) {
+        Ok(doc) => check_rank_markers(&doc, &ranks, v),
+        Err(_) => v.push(violation(CONCURRENCY_DOC, 0, "missing concurrency doc".into())),
+    }
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src"), &mut files);
+    let mut sources: Vec<(String, String)> = Vec::new();
+    for path in files {
+        let rel = rel_to(root, &path);
+        if is_lint_exempt(&rel) {
+            continue;
+        }
+        let Ok(src) = fs::read_to_string(&path) else {
+            v.push(violation(&rel, 0, "unreadable file".into()));
+            continue;
+        };
+        sources.push((rel, src));
+    }
+    let rmap = build_rank_map(&sources, &ranks, v);
+    let mut analysis = Analysis::default();
+    for (rel, src) in &sources {
+        analyze_file(rel, src, &rmap, &mut analysis, v);
+    }
+    check_cycles(&analysis, v);
+    // blocking hits against the [blocking] allowlist section
+    let mut seen: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for (file, line, _) in &analysis.blocking {
+        let e = seen.entry(file.clone()).or_insert((0, *line));
+        e.0 += 1;
+    }
+    for (file, line, msg) in &analysis.blocking {
+        let budget = allow.budget("blocking", file);
+        if seen.get(file).map_or(0, |(c, _)| *c) > budget {
+            v.push(violation(
+                file,
+                *line,
+                format!("{msg} — blocking under a coordination lock ([blocking] budget {budget})"),
+            ));
+        }
+    }
+    allow::check_stale(allow, "blocking", &seen, v);
+    empty.ranks = ranks;
+    empty.rmap = rmap;
+    empty.analysis = analysis;
+    empty
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OK_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/lockgraph_ok.rs.fixture"
+    ));
+    const BAD_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/lockgraph_bad.rs.fixture"
+    ));
+    const CYCLE_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/lockgraph_cycle.rs.fixture"
+    ));
+
+    fn run(src: &str) -> (Vec<Violation>, Analysis) {
+        // fixtures are self-contained: they carry their own rank consts
+        let ranks = parse_rank_consts(src);
+        assert!(!ranks.is_empty(), "fixture must define rank consts");
+        let sources = vec![("fixture.rs".to_string(), src.to_string())];
+        let mut v = Vec::new();
+        let rmap = build_rank_map(&sources, &ranks, &mut v);
+        let mut analysis = Analysis::default();
+        analyze_file("fixture.rs", src, &rmap, &mut analysis, &mut v);
+        check_cycles(&analysis, &mut v);
+        (v, analysis)
+    }
+
+    #[test]
+    fn clean_fixture_passes_with_downward_edges() {
+        let (v, analysis) = run(OK_FIXTURE);
+        let msgs: Vec<&str> = v.iter().map(|x| x.msg.as_str()).collect();
+        assert!(v.is_empty(), "unexpected violations: {msgs:?}");
+        assert!(
+            analysis.edges.contains_key(&("OUTER".to_string(), "INNER".to_string())),
+            "expected OUTER -> INNER edge, got {:?}",
+            analysis.edges.keys().collect::<Vec<_>>()
+        );
+        // guard dropped before the re-lock: no INNER -> OUTER edge
+        assert!(!analysis.edges.contains_key(&("INNER".to_string(), "OUTER".to_string())));
+    }
+
+    #[test]
+    fn rank_inversion_is_detected() {
+        let (v, _) = run(BAD_FIXTURE);
+        assert!(
+            v.iter().any(|x| x.msg.contains("rank inversion")
+                && x.msg.contains("OUTER(10)")
+                && x.msg.contains("INNER(20)")),
+            "expected an inversion violation, got: {:?}",
+            v.iter().map(|x| &x.msg).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn equal_rank_abba_cycle_is_detected() {
+        let (v, _) = run(CYCLE_FIXTURE);
+        assert!(
+            v.iter().any(|x| x.msg.contains("lock-acquisition cycle")),
+            "expected a cycle violation, got: {:?}",
+            v.iter().map(|x| &x.msg).collect::<Vec<_>>()
+        );
+        // equal values: the pointwise rank check must NOT fire
+        assert!(!v.iter().any(|x| x.msg.contains("rank inversion")));
+    }
+
+    #[test]
+    fn rank_consts_parse() {
+        let ranks = parse_rank_consts("pub const A: u16 = 10;\npub const B: u16 = 20;\nconst C: u32 = 9;\n");
+        assert_eq!(ranks.len(), 2);
+        assert_eq!(ranks["A"], 10);
+        assert_eq!(ranks["B"], 20);
+    }
+
+    #[test]
+    fn rank_markers_check_both_directions() {
+        let mut ranks = BTreeMap::new();
+        ranks.insert("A".to_string(), 10u16);
+        ranks.insert("B".to_string(), 20u16);
+        let mut v = Vec::new();
+        check_rank_markers(
+            "| 10 | `A` | <!-- mpwlint-rank: A = 10 -->\n| 99 | `B` | <!-- mpwlint-rank: B = 99 -->\n<!-- mpwlint-rank: C = 5 -->\n",
+            &ranks,
+            &mut v,
+        );
+        let msgs: Vec<&str> = v.iter().map(|x| x.msg.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("documented as 99")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("unknown rank `C`")), "{msgs:?}");
+        // A is fine; B has a (wrong) marker, so no "missing marker" for it
+        assert!(!msgs.iter().any(|m| m.contains("no mpwlint-rank marker")), "{msgs:?}");
+    }
+
+    #[test]
+    fn dot_output_is_deterministic() {
+        let (_, analysis) = run(OK_FIXTURE);
+        let ranks = parse_rank_consts(OK_FIXTURE);
+        let sources = vec![("fixture.rs".to_string(), OK_FIXTURE.to_string())];
+        let mut v = Vec::new();
+        let rmap = build_rank_map(&sources, &ranks, &mut v);
+        let d = dot(&ranks, &rmap, &analysis);
+        assert!(d.starts_with("// Lock-acquisition graph"));
+        assert!(d.contains("digraph mpwide_locks"));
+        assert!(d.contains("\"OUTER (10)\" -> \"INNER (20)\""), "{d}");
+    }
+}

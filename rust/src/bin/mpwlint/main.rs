@@ -1,0 +1,107 @@
+//! `mpwlint` — the in-tree project lint.
+//!
+//! Run with `cargo run --bin mpwlint` from anywhere in the workspace; it
+//! exits non-zero on any violation and is wired into CI as a blocking
+//! step. Plain line scanning, no external deps (same philosophy as the
+//! vendored shims in `rust/vendor/`).
+//!
+//! Six passes:
+//!
+//! 1. **Panic ban** (`panics`) — no `.unwrap()` / `.expect(` in
+//!    `rust/src/mpwide/**` outside `#[cfg(test)]` regions and comments,
+//!    budgeted by the `[panics]` allowlist section.
+//! 2. **Lock discipline** (`rawsync`) — no raw `std::sync`
+//!    `Mutex`/`Condvar` tokens anywhere in `rust/src/**` except
+//!    `util/lockorder.rs` (and test modules).
+//! 3. **Protocol drift** (`consts`) — `docs/PROTOCOL.md`
+//!    `mpwlint-const` markers vs. the constants in the source tree.
+//! 4. **Static lock graph** (`lockgraph`) — every `OrderedMutex`
+//!    construction and `.lock()`/`.wait*` site is parsed, live guards
+//!    are tracked lexically, and the cross-rank acquisition graph must
+//!    be inversion-free and acyclic. Rank constants are cross-checked
+//!    against the `mpwlint-rank` markers in `docs/CONCURRENCY.md`.
+//!    `--emit-lockgraph <path>` additionally writes the graph as DOT.
+//! 5. **Blocking under lock** (`blocking` + `lockgraph`) — socket I/O,
+//!    sleeps, joins and `Pacer::acquire` while a non-exempt guard is
+//!    live, budgeted by the `[blocking]` allowlist section.
+//! 6. **Swallowed results** (`swallow`) — `let _ =` in non-test
+//!    `mpwide`/`util` code needs a `// swallow-ok:` justification and a
+//!    `[swallow]` budget.
+//!
+//! The allowlist (`rust/mpwlint.allow`) is sectioned and shrink-only
+//! *by entry*: burned-down entries become `<path> 0` tombstones rather
+//! than being deleted, so old debt cannot silently reappear.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+mod allow;
+mod blocking;
+mod consts;
+mod lockgraph;
+mod panics;
+mod rawsync;
+mod scan;
+mod swallow;
+
+use scan::Violation;
+
+fn main() -> ExitCode {
+    // CARGO_MANIFEST_DIR is `<repo>/rust` for this binary.
+    let Some(root) = Path::new(env!("CARGO_MANIFEST_DIR")).parent().map(Path::to_path_buf)
+    else {
+        eprintln!("mpwlint: cannot locate repo root");
+        return ExitCode::FAILURE;
+    };
+    let mut emit_dot: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--emit-lockgraph" => {
+                let Some(p) = args.next() else {
+                    eprintln!("mpwlint: --emit-lockgraph needs a path argument");
+                    return ExitCode::FAILURE;
+                };
+                emit_dot = Some(PathBuf::from(p));
+            }
+            other => {
+                eprintln!("mpwlint: unknown argument {other:?} (supported: --emit-lockgraph <path>)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let mut v: Vec<Violation> = Vec::new();
+    let allowlist = allow::load(&root, &mut v);
+    panics::check(&root, &allowlist, &mut v);
+    rawsync::check(&root, &mut v);
+    consts::check(&root, &mut v);
+    let graph = lockgraph::check(&root, &allowlist, &mut v);
+    swallow::check(&root, &allowlist, &mut v);
+
+    if let Some(path) = emit_dot {
+        let dot = lockgraph::dot(&graph.ranks, &graph.rmap, &graph.analysis);
+        if let Err(e) = fs::write(&path, dot) {
+            eprintln!("mpwlint: cannot write {}: {e}", path.display());
+            return ExitCode::FAILURE;
+        }
+        println!("mpwlint: wrote lock graph to {}", path.display());
+    }
+
+    if v.is_empty() {
+        println!(
+            "mpwlint: OK (panic ban, lock discipline, protocol constants, lock graph \
+             [{} locks, {} edges], blocking-under-lock, swallowed results)",
+            graph.rmap.resolve.len(),
+            graph.analysis.edges.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        for x in &v {
+            eprintln!("mpwlint: {}:{}: {}", x.file, x.line, x.msg);
+        }
+        eprintln!("mpwlint: {} violation(s)", v.len());
+        ExitCode::FAILURE
+    }
+}

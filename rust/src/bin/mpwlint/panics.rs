@@ -1,0 +1,60 @@
+//! Pass: panic ban — no `.unwrap()` / `.expect(` in `rust/src/mpwide/**`
+//! outside `#[cfg(test)]` regions and comments, budgeted by the
+//! `[panics]` allowlist section (provably-infallible codec `try_into`s).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::allow::{self, Allowlist};
+use crate::scan::{is_comment, rel_to, rust_files, tag_lines, violation, Violation};
+
+/// Line numbers of `.unwrap()` / `.expect(` hits in non-test,
+/// non-comment code.
+pub fn panic_sites(src: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    for (n, in_test, line) in tag_lines(src) {
+        if in_test || is_comment(line) {
+            continue;
+        }
+        if line.contains(".unwrap()") || line.contains(".expect(") {
+            hits.push(n);
+        }
+    }
+    hits
+}
+
+pub fn check(root: &Path, allow: &Allowlist, v: &mut Vec<Violation>) {
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src/mpwide"), &mut files);
+    let mut seen: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for path in files {
+        let rel = rel_to(root, &path);
+        let Ok(src) = fs::read_to_string(&path) else {
+            v.push(violation(&rel, 0, "unreadable file".into()));
+            continue;
+        };
+        let hits = panic_sites(&src);
+        if !hits.is_empty() {
+            seen.insert(rel, (hits.len(), hits[0]));
+        }
+    }
+    allow::check_section(allow, "panics", &seen, "`.unwrap()`/`.expect(`", v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PANIC_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/panics.rs.fixture"
+    ));
+
+    #[test]
+    fn panic_sites_skip_tests_and_comments() {
+        // Fixture layout: unwrap at lines 4 and 8, expect at line 9,
+        // commented unwrap at line 6, test-mod unwrap near the end.
+        assert_eq!(panic_sites(PANIC_FIXTURE), vec![4, 8, 9]);
+    }
+}

@@ -1,0 +1,74 @@
+//! Pass: raw `std::sync` `Mutex`/`Condvar` ban — everything in
+//! `rust/src/**` except `util/lockorder.rs` (and test modules) must use
+//! `OrderedMutex`/`OrderedCondvar` so the debug-build lock-rank checker
+//! observes every acquisition (see `docs/CONCURRENCY.md`).
+
+use std::fs;
+use std::path::Path;
+
+use crate::scan::{is_comment, is_lint_exempt, rel_to, rust_files, tag_lines, violation, Violation};
+
+/// Occurrences of `Mutex`/`Condvar` tokens not written as part of
+/// `OrderedMutex`/`OrderedCondvar`, with line numbers.
+pub fn raw_sync_sites(src: &str) -> Vec<(usize, String)> {
+    let mut hits = Vec::new();
+    for (n, in_test, line) in tag_lines(src) {
+        if in_test || is_comment(line) {
+            continue;
+        }
+        for tok in ["Mutex", "Condvar"] {
+            let mut from = 0;
+            while let Some(pos) = line[from..].find(tok) {
+                let abs = from + pos;
+                if !line[..abs].ends_with("Ordered") {
+                    hits.push((n, tok.to_string()));
+                }
+                from = abs + tok.len();
+            }
+        }
+    }
+    hits
+}
+
+pub fn check(root: &Path, v: &mut Vec<Violation>) {
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src"), &mut files);
+    for path in files {
+        let rel = rel_to(root, &path);
+        if is_lint_exempt(&rel) {
+            continue;
+        }
+        let Ok(src) = fs::read_to_string(&path) else {
+            v.push(violation(&rel, 0, "unreadable file".into()));
+            continue;
+        };
+        for (n, tok) in raw_sync_sites(&src) {
+            v.push(violation(
+                &rel,
+                n,
+                format!("raw `{tok}` in library code — use the lock-ranked wrapper from util::lockorder"),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const RAW_SYNC_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/raw_sync.rs.fixture"
+    ));
+
+    #[test]
+    fn raw_sync_flags_only_unwrapped_primitives() {
+        let hits = raw_sync_sites(RAW_SYNC_FIXTURE);
+        // One raw Mutex (line 5) and one raw Condvar (line 6); the
+        // Ordered* uses and the test-module Mutex are clean.
+        assert_eq!(
+            hits,
+            vec![(5, "Mutex".to_string()), (6, "Condvar".to_string())]
+        );
+    }
+}

@@ -1,0 +1,227 @@
+//! Shared scanning helpers: file discovery, test-region tagging and
+//! literal/comment stripping. Everything is line-oriented — the same
+//! deliberately naive philosophy as the original single-file lint.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn violation(file: &str, line: usize, msg: String) -> Violation {
+    Violation { file: file.to_string(), line, msg }
+}
+
+/// Tag each line of a source file with its 1-based number and whether it
+/// falls inside a `#[cfg(test)]` region. Regions start at the attribute
+/// and end when the brace depth of the gated block returns to zero —
+/// line-oriented and deliberately naive about braces inside string
+/// literals, which is fine for the test modules this tree contains
+/// (they run to end-of-file).
+pub fn tag_lines(src: &str) -> Vec<(usize, bool, &str)> {
+    let mut out = Vec::new();
+    let mut in_test = false;
+    let mut depth: i64 = 0;
+    let mut armed = false; // saw the attribute, waiting for the opening brace
+    for (i, line) in src.lines().enumerate() {
+        if !in_test && line.trim_start().starts_with("#[cfg(test)]") {
+            in_test = true;
+            armed = true;
+            depth = 0;
+        }
+        out.push((i + 1, in_test, line));
+        if in_test {
+            for c in line.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        armed = false;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if !armed && depth <= 0 {
+                in_test = false;
+            }
+        }
+    }
+    out
+}
+
+pub fn is_comment(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+pub fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rust_files(&p, out);
+        } else if p.extension().map_or(false, |x| x == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+pub fn rel_to(root: &Path, p: &Path) -> String {
+    p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/")
+}
+
+/// Files the lock-discipline passes never scan: the home of the raw
+/// primitives and this lint itself (which names the banned tokens in
+/// its own patterns).
+pub fn is_lint_exempt(rel: &str) -> bool {
+    rel.ends_with("util/lockorder.rs") || rel.contains("bin/mpwlint")
+}
+
+/// Blank out string/char-literal contents and comments so token scans
+/// cannot match inside them. Returns the stripped line and the updated
+/// block-comment state. String delimiters are kept (as `"` / `' '`) so
+/// column arithmetic stays roughly aligned with the raw line.
+pub fn strip_line(line: &str, in_block_comment: &mut bool) -> String {
+    let b = line.as_bytes();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    let n = b.len();
+    while i < n {
+        if *in_block_comment {
+            if b[i..].starts_with(b"*/") {
+                *in_block_comment = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if b[i..].starts_with(b"/*") {
+            *in_block_comment = true;
+            i += 2;
+            continue;
+        }
+        if b[i..].starts_with(b"//") {
+            break; // rest of line is a comment
+        }
+        match b[i] {
+            b'"' => {
+                // string literal: skip to the closing quote, honoring escapes
+                out.push('"');
+                i += 1;
+                while i < n {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                out.push('"');
+            }
+            b'\'' => {
+                // char literal like 'x', '\n', '{' — but also lifetimes 'a.
+                // A char literal iff a closing quote appears right after
+                // the (possibly escaped) payload.
+                let mut j = i + 1;
+                if j < n && b[j] == b'\\' {
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+                if j < n && b[j] == b'\'' {
+                    out.push_str("' '");
+                    i = j + 1;
+                } else {
+                    out.push('\'');
+                    i += 1;
+                }
+            }
+            c => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+pub fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && !s.as_bytes()[0].is_ascii_digit()
+        && s.bytes().all(|c| c.is_ascii_alphanumeric() || c == b'_')
+}
+
+/// Leading identifier of `s` (after optional whitespace), if any.
+pub fn leading_ident(s: &str) -> Option<&str> {
+    let t = s.trim_start();
+    let end = t
+        .bytes()
+        .position(|c| !(c.is_ascii_alphanumeric() || c == b'_'))
+        .unwrap_or(t.len());
+    let id = &t[..end];
+    if is_ident(id) {
+        Some(id)
+    } else {
+        None
+    }
+}
+
+/// Trailing identifier of `s` (before optional whitespace), if any.
+pub fn trailing_ident(s: &str) -> Option<&str> {
+    let t = s.trim_end();
+    let b = t.as_bytes();
+    let mut i = t.len();
+    while i > 0 && (b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'_') {
+        i -= 1;
+    }
+    let id = &t[i..];
+    if is_ident(id) {
+        Some(id)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_region_tracking_ends_with_block() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod t {\n  fn x() {}\n}\nfn b() {}\n";
+        let tags = tag_lines(src);
+        let flags: Vec<bool> = tags.iter().map(|(_, t, _)| *t).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn strip_line_blanks_strings_and_comments() {
+        let mut bc = false;
+        assert_eq!(strip_line("a.lock(); // b.lock()", &mut bc), "a.lock(); ");
+        assert_eq!(strip_line("let s = \"x.lock()\";", &mut bc), "let s = \"\";");
+        assert_eq!(strip_line("before /* a.lock()", &mut bc), "before ");
+        assert!(bc);
+        assert_eq!(strip_line("still */ after", &mut bc), " after");
+        assert!(!bc);
+        // lifetimes survive, char literals are blanked
+        assert_eq!(strip_line("fn f<'a>(c: char) { x('{') }", &mut bc), "fn f<'a>(c: char) { x(' ') }");
+    }
+
+    #[test]
+    fn ident_helpers() {
+        assert_eq!(leading_ident("  foo, bar"), Some("foo"));
+        assert_eq!(leading_ident(" 9x"), None);
+        assert_eq!(trailing_ident("let mut g "), Some("g"));
+        assert_eq!(trailing_ident("a.b"), Some("b"));
+        assert!(is_ident("wd_st"));
+        assert!(!is_ident("a.b"));
+    }
+}

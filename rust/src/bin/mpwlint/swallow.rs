@@ -1,0 +1,129 @@
+//! Pass: swallowed-`Result` ban — `let _ =` in non-test library code
+//! (`rust/src/mpwide/**` and `rust/src/util/**`) silently discards
+//! whatever the right-hand side reports; over a week-long WAN run that
+//! is how errors disappear. Every site must either propagate a typed
+//! `MpwError`, or carry a `// swallow-ok: <reason>` justification
+//! comment (same line or the comment block directly above) *and* fit
+//! its file's `[swallow]` allowlist budget, which is shrink-only.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use crate::allow::{self, Allowlist};
+use crate::scan::{is_comment, is_lint_exempt, rel_to, rust_files, tag_lines, violation, Violation};
+
+const MARKER: &str = "swallow-ok:";
+
+/// Is there a `let _ =` discard on this (raw) line?
+fn discards(line: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = line[from..].find("let _") {
+        let abs = from + p;
+        let before_ok = abs == 0
+            || !line.as_bytes()[abs - 1].is_ascii_alphanumeric() && line.as_bytes()[abs - 1] != b'_';
+        let rest = line[abs + "let _".len()..].trim_start();
+        if before_ok && rest.starts_with('=') && !rest.starts_with("==") {
+            return true;
+        }
+        from = abs + "let _".len();
+    }
+    false
+}
+
+/// `(line, justified)` for every `let _ =` site in non-test code.
+/// A site is justified by a `swallow-ok:` marker on the same line or in
+/// the contiguous `//` comment block directly above it.
+pub fn swallow_sites(src: &str) -> Vec<(usize, bool)> {
+    let tagged = tag_lines(src);
+    let mut out = Vec::new();
+    for (idx, (n, in_test, raw)) in tagged.iter().enumerate() {
+        if *in_test || is_comment(raw) {
+            continue;
+        }
+        if !discards(raw) {
+            continue;
+        }
+        let mut justified = raw.contains(MARKER);
+        let mut j = idx;
+        while j > 0 && is_comment(tagged[j - 1].2) {
+            j -= 1;
+            if tagged[j].2.contains(MARKER) {
+                justified = true;
+            }
+        }
+        out.push((*n, justified));
+    }
+    out
+}
+
+pub fn check(root: &Path, allow: &Allowlist, v: &mut Vec<Violation>) {
+    let mut files = Vec::new();
+    rust_files(&root.join("rust/src/mpwide"), &mut files);
+    rust_files(&root.join("rust/src/util"), &mut files);
+    let mut seen: BTreeMap<String, (usize, usize)> = BTreeMap::new();
+    for path in files {
+        let rel = rel_to(root, &path);
+        if is_lint_exempt(&rel) {
+            continue;
+        }
+        let Ok(src) = fs::read_to_string(&path) else {
+            v.push(violation(&rel, 0, "unreadable file".into()));
+            continue;
+        };
+        for (n, justified) in swallow_sites(&src) {
+            if justified {
+                let e = seen.entry(rel.clone()).or_insert((0, n));
+                e.0 += 1;
+            } else {
+                v.push(violation(
+                    &rel,
+                    n,
+                    "swallowed `Result`: `let _ =` in library code — propagate a typed \
+                     `MpwError`, or justify with `// swallow-ok: <reason>` and a [swallow] \
+                     allowlist budget"
+                        .into(),
+                ));
+            }
+        }
+    }
+    allow::check_section(allow, "swallow", &seen, "justified `let _ =`", v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BAD_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/swallow_bad.rs.fixture"
+    ));
+    const OK_FIXTURE: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mpwlint/swallow_ok.rs.fixture"
+    ));
+
+    #[test]
+    fn unjustified_discard_is_flagged() {
+        let sites = swallow_sites(BAD_FIXTURE);
+        // one bare site (line 4) and one with an unrelated comment (line 7)
+        assert_eq!(sites, vec![(4, false), (7, false)]);
+    }
+
+    #[test]
+    fn justified_and_test_discards_pass() {
+        let sites = swallow_sites(OK_FIXTURE);
+        // inline marker (line 4) and comment-block marker (line 8);
+        // the test-module discard is not a site at all
+        assert_eq!(sites, vec![(4, true), (8, true)]);
+    }
+
+    #[test]
+    fn discard_detection() {
+        assert!(discards("    let _ = foo();"));
+        assert!(discards("let _= foo();"));
+        assert!(!discards("let _x = foo();"));
+        assert!(!discards("outlet _ = 3;"), "word boundary before `let`");
+        assert!(!discards("let x = foo();"));
+    }
+}

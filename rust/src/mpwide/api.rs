@@ -96,6 +96,9 @@ struct Context {
 
 static CTX: OnceLock<OrderedMutex<Context>> = OnceLock::new();
 
+// mpwlint-lock: ctx = API_CTX — the construction below is anonymous
+// (inside `get_or_init`), so the lock-graph pass learns the rank of
+// `ctx().lock()` sites from this annotation instead.
 fn ctx() -> &'static OrderedMutex<Context> {
     CTX.get_or_init(|| {
         OrderedMutex::new(
@@ -163,6 +166,8 @@ pub fn mpw_finalize() {
     }
     for (_, (_path_id, h)) in handles {
         if h.is_finished() {
+            // swallow-ok: finalize tears the world down; the completed
+            // result has no caller left to report to (C API contract).
             let _ = h.wait(); // join + discard the completed result
         }
         // unfinished handles detach on drop and exit promptly now that

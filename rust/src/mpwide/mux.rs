@@ -558,6 +558,8 @@ impl MuxEndpoint {
                 inner.st.lock().shutdown = true;
                 inner.send_cv.notify_all();
                 inner.path.close();
+                // swallow-ok: already unwinding a spawn failure; a pump
+                // panic here cannot be acted on beyond the Err below.
                 let _ = pump.join();
                 return Err(e.into());
             }
@@ -649,11 +651,23 @@ impl MuxEndpoint {
             self.inner.recv_cv.notify_all();
         }
         self.inner.path.close();
+        // A worker panic is endpoint death with a cause worth keeping:
+        // record it (first cause wins) so `dead_reason` can surface it.
         if let Some(h) = self.pump.take() {
-            let _ = h.join();
+            if h.join().is_err() {
+                let mut st = self.inner.st.lock();
+                if st.dead.is_none() {
+                    st.dead = Some("mux pump panicked".into());
+                }
+            }
         }
         if let Some(h) = self.dispatcher.take() {
-            let _ = h.join();
+            if h.join().is_err() {
+                let mut st = self.inner.st.lock();
+                if st.dead.is_none() {
+                    st.dead = Some("mux dispatcher panicked".into());
+                }
+            }
         }
     }
 }

@@ -114,7 +114,7 @@ impl Drop for NbeHandle {
         // operation resolves or the path's streams are closed —
         // `Path::close` (or `mpw_finalize`, which calls it) unwedges an
         // abandoned worker deliberately.
-        let _ = self.join.take();
+        self.join = None;
     }
 }
 

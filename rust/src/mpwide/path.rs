@@ -806,12 +806,15 @@ impl Path {
         if !slot.dead.load(Ordering::SeqCst) {
             return Err(MpwError::Protocol(format!("stream {i} is alive; refusing reinstall")));
         }
+        // Socket options are applied at connect time (`connect_stream`);
+        // a fresh fd needs the same treatment, and a failure is just as
+        // fatal to the rejoin as it would have been to the connect.
         if let Some(win) = self.cfg.lock().tcp_window {
-            let _ = pair.set_window(win);
+            pair.set_window(win)?;
         }
         // the write deadline is per-socket state: reapply to the fresh fd
         if let Some(t) = self.write_timeout {
-            let _ = pair.set_send_timeout(Some(t));
+            pair.set_send_timeout(Some(t))?;
         }
         let (tx, rx, fd, kill) = pair.into_parts();
         {

@@ -336,12 +336,12 @@ pub fn parse_credit(p: &[u8]) -> Result<Credit> {
 /// ones that are not theirs here; every consumer checks the inbox
 /// before (and immediately after) taking the lock.
 pub(crate) struct FrameBox {
-    q: OrderedMutex<VecDeque<(FrameHdr, Vec<u8>)>>,
+    frames: OrderedMutex<VecDeque<(FrameHdr, Vec<u8>)>>,
 }
 
 impl Default for FrameBox {
     fn default() -> Self {
-        FrameBox { q: OrderedMutex::new(rank::FRAME_INBOX, VecDeque::new()) }
+        FrameBox { frames: OrderedMutex::new(rank::FRAME_INBOX, VecDeque::new()) }
     }
 }
 
@@ -350,7 +350,7 @@ impl FrameBox {
     /// (newest wins) and their consumer may never come, so at most one
     /// `WINDOW_UPDATE` is kept per inbox — the parked one is replaced.
     fn push(&self, hdr: FrameHdr, payload: Vec<u8>) {
-        let mut q = self.q.lock();
+        let mut q = self.frames.lock();
         if hdr.kind == KIND_WINDOW_UPDATE {
             q.retain(|(h, _)| h.kind != KIND_WINDOW_UPDATE);
         }
@@ -366,7 +366,7 @@ impl FrameBox {
     /// non-matching frames in place (they belong to another consumer —
     /// e.g. a pipelined later message — and must keep their order).
     fn take_where(&self, kind: u8, pred: impl Fn(&FrameHdr) -> bool) -> Option<(FrameHdr, Vec<u8>)> {
-        let mut q = self.q.lock();
+        let mut q = self.frames.lock();
         let pos = q.iter().position(|(h, _)| h.kind == kind && pred(h))?;
         q.remove(pos)
     }
@@ -375,13 +375,13 @@ impl FrameBox {
     /// delivered, stale duplicates of its segments (reposts that raced
     /// the delivery) can never be consumed and would otherwise leak.
     fn purge_data_through(&self, seq: u64) {
-        self.q.lock().retain(|(h, _)| h.kind != KIND_DATA || h.msg_seq > seq);
+        self.frames.lock().retain(|(h, _)| h.kind != KIND_DATA || h.msg_seq > seq);
     }
 
     /// Discard every parked frame (stream rejoin: frames parked off the
     /// old transport must not be replayed against the new one).
     pub(crate) fn clear(&self) {
-        self.q.lock().clear();
+        self.frames.lock().clear();
     }
 }
 
@@ -408,7 +408,7 @@ pub(crate) struct AckWatchdog {
 }
 
 struct WdShared {
-    st: OrderedMutex<WdState>,
+    wd_st: OrderedMutex<WdState>,
     cv: OrderedCondvar,
 }
 
@@ -427,7 +427,7 @@ impl AckWatchdog {
     pub(crate) fn new() -> AckWatchdog {
         AckWatchdog {
             shared: Arc::new(WdShared {
-                st: OrderedMutex::new(
+                wd_st: OrderedMutex::new(
                     rank::ACK_WATCHDOG,
                     WdState {
                         token: 0,
@@ -447,7 +447,7 @@ impl AckWatchdog {
     /// Spawns the timer thread on first use (a failed spawn surfaces as
     /// `Io` and leaves the watchdog unarmed, so a later arm retries).
     pub(crate) fn arm(&self, kill: KillSwitch, timeout: Duration) -> Result<u64> {
-        let mut g = self.shared.st.lock();
+        let mut g = self.shared.wd_st.lock();
         if !g.spawned {
             let shared = self.shared.clone();
             let handle = std::thread::Builder::new()
@@ -467,7 +467,7 @@ impl AckWatchdog {
     /// Cancel the deadline registered under `token` (no-op if the
     /// watchdog already fired or a newer wait re-armed).
     pub(crate) fn disarm(&self, token: u64) {
-        let mut g = self.shared.st.lock();
+        let mut g = self.shared.wd_st.lock();
         if g.token == token {
             g.deadline = None;
             g.kill = None;
@@ -476,12 +476,12 @@ impl AckWatchdog {
 
     /// How many times the watchdog fired over the path's lifetime.
     pub(crate) fn fired(&self) -> u64 {
-        self.shared.st.lock().fired
+        self.shared.wd_st.lock().fired
     }
 
     /// Stop the timer thread (called when the path closes / drops).
     pub(crate) fn stop(&self) {
-        let mut g = self.shared.st.lock();
+        let mut g = self.shared.wd_st.lock();
         g.stop = true;
         g.deadline = None;
         g.kill = None;
@@ -496,7 +496,7 @@ impl Default for AckWatchdog {
 }
 
 fn watchdog_loop(shared: Arc<WdShared>) {
-    let mut g = shared.st.lock();
+    let mut g = shared.wd_st.lock();
     loop {
         if g.stop {
             return;
@@ -515,7 +515,7 @@ fn watchdog_loop(shared: Arc<WdShared>) {
                     if let Some(k) = kill {
                         k.fire();
                     }
-                    g = shared.st.lock();
+                    g = shared.wd_st.lock();
                 } else {
                     let (g2, _) = shared.cv.wait_timeout(g, d - now);
                     g = g2;
@@ -605,6 +605,8 @@ fn ctrl_stream(path: &Path) -> Result<usize> {
             None => return Err(MpwError::AllStreamsDead),
             Some(i) => {
                 // CAS so concurrent rotations settle on one choice.
+                // swallow-ok: losing the CAS race is benign — the loop
+                // re-reads whichever value won.
                 let _ = path.cur_ctrl.compare_exchange(c, i, Ordering::SeqCst, Ordering::SeqCst);
             }
         }
@@ -758,6 +760,8 @@ fn advertise_credit(path: &Path) {
     }
     let c = current_credit(path);
     let Ok(s) = ctrl_stream(path) else { return };
+    // swallow-ok: advisory frame (see doc comment) — every extended ACK
+    // carries the same credit information.
     let _ = write_frame(
         path,
         s,
@@ -1043,6 +1047,8 @@ fn read_ack_frame(path: &Path, s: usize) -> Result<(FrameHdr, Vec<u8>)> {
             // — the peer's segment workers may be parked on TCP
             // backpressure and cannot reach their own ack wait until
             // those bytes are consumed
+            // swallow-ok: a lost re-ack is recovered by the sender's
+            // retry loop resending the attempt.
             let _ = write_ack(path, s, hdr.msg_seq, hdr.attempt, ACK_OK, NO_DETAIL);
             if let Ok(ctrl) = parse_ctrl(&payload) {
                 drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
@@ -1263,19 +1269,19 @@ struct SendState {
 /// Sliding-window state of a path's resilient sender (a Path field;
 /// empty and inert while `window == 1`).
 pub(crate) struct SendWindow {
-    st: OrderedMutex<SendState>,
+    win_st: OrderedMutex<SendState>,
 }
 
 impl Default for SendWindow {
     fn default() -> Self {
-        SendWindow { st: OrderedMutex::new(rank::SEND_WINDOW, SendState::default()) }
+        SendWindow { win_st: OrderedMutex::new(rank::SEND_WINDOW, SendState::default()) }
     }
 }
 
 impl SendWindow {
     /// Number of posted-but-unacknowledged messages.
     pub(crate) fn in_flight(&self) -> usize {
-        self.st.lock().outstanding.len()
+        self.win_st.lock().outstanding.len()
     }
 }
 
@@ -1284,13 +1290,13 @@ impl SendWindow {
 /// advert ever arrives and the hard [`MAX_WINDOW`] bound remains the
 /// only constraint, which is exactly the pre-credit protocol.
 pub(crate) struct SendCredit {
-    st: OrderedMutex<Credit>,
+    credit_st: OrderedMutex<Credit>,
 }
 
 impl Default for SendCredit {
     fn default() -> Self {
         SendCredit {
-            st: OrderedMutex::new(
+            credit_st: OrderedMutex::new(
                 rank::SEND_CREDIT,
                 Credit {
                     advert_id: 0,
@@ -1308,7 +1314,7 @@ impl SendCredit {
     /// (adverts are absolute; out-of-order stale ones are dropped).
     /// Returns whether it was applied.
     fn apply(&self, c: &Credit) -> bool {
-        let mut g = self.st.lock();
+        let mut g = self.credit_st.lock();
         if c.advert_id > g.advert_id {
             *g = *c;
             true
@@ -1319,7 +1325,7 @@ impl SendCredit {
 
     /// Current `(seq_limit, byte_credit)` pair.
     fn limits(&self) -> (u64, u64) {
-        let g = self.st.lock();
+        let g = self.credit_st.lock();
         (g.seq_limit, g.byte_credit)
     }
 }
@@ -1502,7 +1508,7 @@ fn credit_allows(path: &Path, st: &SendState, len: usize) -> bool {
 /// tunable while we block.
 fn send_windowed(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
     let t0 = Instant::now();
-    let mut st = path.send_window.st.lock();
+    let mut st = path.send_window.win_st.lock();
     if let Some(msg) = &st.poisoned {
         return Err(poisoned_err(msg));
     }
@@ -1537,7 +1543,7 @@ fn send_windowed(path: &Path, buf: SplitBuf<'_>) -> Result<usize> {
 /// `Path::barrier`, the mux pump's idle drain, and the rendezvous
 /// fallback after a runtime window narrowing.
 pub(crate) fn drain_window(path: &Path) -> Result<()> {
-    let mut st = path.send_window.st.lock();
+    let mut st = path.send_window.win_st.lock();
     if st.outstanding.is_empty() && st.poisoned.is_none() {
         return Ok(());
     }
@@ -1569,7 +1575,7 @@ pub(crate) enum RecvTarget<'a> {
 /// MAX_WINDOW` (no sender can legally have more in flight). A Path
 /// field; empty and inert against rendezvous peers.
 pub(crate) struct ReorderBuf {
-    q: OrderedMutex<StashState>,
+    stash: OrderedMutex<StashState>,
 }
 
 /// Stash map plus its running byte total (the byte high-water check and
@@ -1582,7 +1588,7 @@ struct StashState {
 
 impl Default for ReorderBuf {
     fn default() -> Self {
-        ReorderBuf { q: OrderedMutex::new(rank::RECV_REORDER, StashState::default()) }
+        ReorderBuf { stash: OrderedMutex::new(rank::RECV_REORDER, StashState::default()) }
     }
 }
 
@@ -1590,7 +1596,7 @@ impl ReorderBuf {
     /// Whether `seq` is already complete in the stash (its sender must
     /// be re-acknowledged, not re-served).
     pub(crate) fn contains(&self, seq: u64) -> bool {
-        self.q.lock().map.contains_key(&seq)
+        self.stash.lock().map.contains_key(&seq)
     }
 
     /// Whether `additional` more bytes fit under `budget`. An empty
@@ -1600,14 +1606,14 @@ impl ReorderBuf {
         match budget {
             None => true,
             Some(b) => {
-                let g = self.q.lock();
+                let g = self.stash.lock();
                 g.map.is_empty() || g.bytes.saturating_add(additional) <= b
             }
         }
     }
 
     fn insert(&self, seq: u64, data: Vec<u8>) {
-        let mut g = self.q.lock();
+        let mut g = self.stash.lock();
         g.bytes += data.len();
         if let Some(old) = g.map.insert(seq, data) {
             g.bytes -= old.len();
@@ -1615,7 +1621,7 @@ impl ReorderBuf {
     }
 
     fn remove(&self, seq: u64) -> Option<Vec<u8>> {
-        let mut g = self.q.lock();
+        let mut g = self.stash.lock();
         let v = g.map.remove(&seq);
         if let Some(v) = &v {
             g.bytes -= v.len();
@@ -1625,7 +1631,7 @@ impl ReorderBuf {
 
     /// `(messages, bytes)` currently stashed.
     pub(crate) fn usage(&self) -> (usize, usize) {
-        let g = self.q.lock();
+        let g = self.stash.lock();
         (g.map.len(), g.bytes)
     }
 }
@@ -1766,6 +1772,8 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
             // message — our ack was lost: re-acknowledge, then drain the
             // retransmission so the sender is not left parked on
             // backpressure mid-resend
+            // swallow-ok: a lost re-ack is recovered by the sender's
+            // retry loop resending the attempt.
             let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_OK, NO_DETAIL);
             drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
             continue;
@@ -1804,6 +1812,8 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
         // the reconnect.
         for &d in &ctrl.dead {
             if (d as usize) < path.nstreams() && path.stream_alive(d as usize) {
+                // swallow-ok: only fails on an out-of-range index, which
+                // the guard above already excludes.
                 let _ = path.inject_stream_failure(d as usize);
             }
         }
@@ -1816,6 +1826,8 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
         // streams, and its retry barrier cannot complete (nor the NACK be
         // read) until someone consumes those bytes.
         if let Some(&d) = ctrl.streams.iter().find(|&&i| !path.stream_alive(i as usize)) {
+            // swallow-ok: a lost NACK leaves the sender to hit its own
+            // I/O error or ack timeout; the retry converges either way.
             let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_RETRY, d);
             drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
             continue;
@@ -1854,6 +1866,8 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
             match recv_attempt_body(path, &ctrl, msg_seq, hdr.attempt, gen, buf) {
                 Err(e) => return Err(fatal(path, e)),
                 Ok(Some(d)) => {
+                    // swallow-ok: a lost NACK leaves the sender to hit
+                    // its own I/O error or ack timeout; retry converges.
                     let _ = write_ack(path, c, msg_seq, hdr.attempt, ACK_RETRY, d as u16);
                     continue;
                 }
@@ -1887,6 +1901,8 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
         // reach their ACK wait. Checked at CTRL time so memory stays
         // bounded by the budget plus one in-order message.
         if !path.recv_reorder.fits(ctrl.total as usize, path.recv_stash_high_water()) {
+            // swallow-ok: a lost stash-full NACK degrades to the
+            // sender's ack timeout; the repost converges either way.
             let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_RETRY, DETAIL_STASH_FULL);
             drain_attempt(path, &ctrl, hdr.msg_seq, hdr.attempt);
             continue;
@@ -1895,6 +1911,8 @@ pub(crate) fn recv(path: &Path, mut target: RecvTarget<'_>) -> Result<usize> {
         match recv_attempt_body(path, &ctrl, hdr.msg_seq, hdr.attempt, gen, &mut side) {
             Err(e) => return Err(fatal(path, e)),
             Ok(Some(d)) => {
+                // swallow-ok: a lost NACK leaves the sender to hit its
+                // own I/O error or ack timeout; retry converges.
                 let _ = write_ack(path, c, hdr.msg_seq, hdr.attempt, ACK_RETRY, d as u16);
                 continue;
             }
@@ -2031,7 +2049,7 @@ fn monitor_loop(weak: Weak<Path>, stop: Arc<AtomicBool>) {
             _ => Duration::from_secs(2),
         };
         let g = path.health.sync.lock();
-        let _ = path.health.cv.wait_timeout(g, wait);
+        drop(path.health.cv.wait_timeout(g, wait));
         drop(path);
     }
 }
@@ -2045,7 +2063,7 @@ impl Drop for ReconnectMonitor {
         }
         // Detach rather than join: an in-flight reconnect attempt may be
         // mid connect_timeout; the thread exits at its next stop check.
-        let _ = self.handle.take();
+        self.handle = None;
     }
 }
 
@@ -2145,6 +2163,9 @@ impl RejoinDaemon {
                                 let mut stream = stream;
                                 if std::io::Write::write_all(&mut stream, &[REJOIN_ACK]).is_ok() {
                                     if let Ok(pair) = StreamPair::from_tcp(stream) {
+                                        // swallow-ok: a failed install leaves
+                                        // the slot dead; the peer's monitor
+                                        // retries on its own schedule.
                                         let _ = path.reinstall_stream(idx, pair);
                                     }
                                 }
@@ -2171,7 +2192,11 @@ impl RejoinDaemon {
         if let Some(h) = self.handle.take() {
             self.stop.store(true, Ordering::Relaxed);
             // Nudge the blocking accept with a throwaway connection.
+            // swallow-ok: a refused nudge means the listener is already
+            // past accept; the join below still completes.
             let _ = std::net::TcpStream::connect(("127.0.0.1", self.port));
+            // swallow-ok: daemon thread panics have nowhere to surface
+            // from a destructor-driven stop.
             let _ = h.join();
         }
     }

@@ -447,6 +447,8 @@ pub fn shutdown_fd(fd: i32) {
     // SAFETY: shutdown on an invalid/closed fd returns EBADF/ENOTCONN,
     // which we deliberately ignore; no memory is touched.
     unsafe {
+        // swallow-ok: EBADF/ENOTCONN on an already-closed fd is the
+        // expected race (see doc comment).
         let _ = sockopt::shutdown(fd, sockopt::SHUT_RDWR);
     }
 }

@@ -32,7 +32,7 @@ struct PoolInner {
 }
 
 struct Pool {
-    inner: OrderedMutex<PoolInner>,
+    pool_st: OrderedMutex<PoolInner>,
     cv: OrderedCondvar,
 }
 
@@ -40,19 +40,19 @@ static POOL: OnceLock<Pool> = OnceLock::new();
 
 fn pool() -> &'static Pool {
     POOL.get_or_init(|| Pool {
-        inner: OrderedMutex::new(rank::POOL, PoolInner { jobs: VecDeque::new(), idle: 0, workers: 0 }),
+        pool_st: OrderedMutex::new(rank::POOL, PoolInner { jobs: VecDeque::new(), idle: 0, workers: 0 }),
         cv: OrderedCondvar::new(),
     })
 }
 
 fn worker_loop() {
     let p = pool();
-    let mut g = p.inner.lock();
+    let mut g = p.pool_st.lock();
     loop {
         if let Some(job) = g.jobs.pop_front() {
             drop(g);
             job();
-            g = p.inner.lock();
+            g = p.pool_st.lock();
         } else {
             g.idle += 1;
             g = p.cv.wait(g);
@@ -63,7 +63,7 @@ fn worker_loop() {
 
 fn submit(job: Job) {
     let p = pool();
-    let mut g = p.inner.lock();
+    let mut g = p.pool_st.lock();
     g.jobs.push_back(job);
     if g.idle == 0 && g.workers < MAX_WORKERS {
         g.workers += 1;
@@ -192,7 +192,7 @@ pub fn scope_with_inline<'env, R>(
 
 /// Current pool size (diagnostics/tests).
 pub fn workers() -> usize {
-    pool().inner.lock().workers
+    pool().pool_st.lock().workers
 }
 
 #[cfg(test)]
